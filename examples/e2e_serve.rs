@@ -1,0 +1,32 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): serve a mixed stream of
+//! tensor-operator requests through the full system — L3 coordinator
+//! scheduling every p-GEMM via the §5 explorer, simulating cycles and
+//! traffic on the MPRA model, and executing functional tiles through the
+//! AOT-compiled Pallas kernels on PJRT with inline numeric verification.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serve [N] [workers]
+//! ```
+
+use gta::runtime::default_artifact_dir;
+use gta::serve::run_mixed_stream;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    println!("serving {n} mixed requests on {workers} workers…\n");
+    let summary = run_mixed_stream(dir, n, workers)?;
+    print!("{}", summary.render());
+
+    // hard gates: every functional tile must verify
+    assert_eq!(summary.verified_failed, 0, "numeric verification failed");
+    assert_eq!(summary.functional, summary.verified_ok);
+    println!("\ne2e OK: all {} functional tiles numerically exact", summary.verified_ok);
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the five-minute tour of the GTA library.
+//!
+//! ```bash
+//! make artifacts          # once: AOT-compile the Pallas kernels
+//! cargo run --release --example quickstart
+//! ```
+
+use gta::ops::classify::{classify, OpClass};
+use gta::precision::Precision;
+use gta::report;
+use gta::sim::{gta::GtaSim, vpu::VpuSim, Platform};
+use gta::{scheduler, GtaConfig, PGemm, TensorOp};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe a tensor operator: one Alexnet conv layer as a p-GEMM.
+    let conv3 = PGemm::new(384, 169, 2304, Precision::Int8);
+    println!("operator: conv3 as p-GEMM {}x{}x{} INT8", conv3.m, conv3.n, conv3.k);
+    println!(
+        "  arithmetic intensity {:.1}, class {:?}",
+        conv3.arithmetic_intensity(),
+        classify(&TensorOp::PGemm(conv3))
+    );
+    assert_eq!(classify(&TensorOp::PGemm(conv3)), OpClass::PGemm);
+
+    // 2. Explore the §5 scheduling space on a 16-lane GTA and pick the
+    //    least-sum-of-squares schedule.
+    let cfg = GtaConfig::lanes16();
+    let cands = scheduler::explore(&conv3, &cfg);
+    let best = scheduler::select(&cands);
+    println!(
+        "\nschedule: explored {} candidates; selected {} on a {}x{} lane grid, k-seg {}",
+        cands.len(),
+        best.config.dataflow.name(),
+        best.config.arrangement.lane_rows,
+        best.config.arrangement.lane_cols,
+        best.config.k_segments,
+    );
+    println!(
+        "  -> {} cycles, {} bytes of memory traffic, {:.0}% utilization",
+        best.report.cycles,
+        best.report.memory_access(),
+        best.report.utilization * 100.0
+    );
+
+    // 3. Compare against the original VPU on the same operator.
+    let gta = GtaSim::table1();
+    let vpu = VpuSim::default();
+    let op = TensorOp::PGemm(conv3);
+    let (g, v) = (gta.run(&op), vpu.run(&op));
+    println!(
+        "\nGTA vs Ara on this layer: {:.1}x fewer cycles, {:.1}x less memory traffic",
+        v.cycles as f64 / g.cycles as f64,
+        v.memory_access() as f64 / g.memory_access() as f64
+    );
+
+    // 4. Table 3 — the derived SIMD gains.
+    println!();
+    print!("{}", report::render_table3());
+
+    // 5. Functional numerics through PJRT (skipped if artifacts absent).
+    let dir = gta::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = gta::runtime::Engine::load_filtered(&dir, |n| n == "mpra_gemm_i8_64")?;
+        let a = vec![2i32; 64 * 64];
+        let b = vec![3i32; 64 * 64];
+        let out = engine.execute(
+            "mpra_gemm_i8_64",
+            &[gta::runtime::HostTensor::I32(a), gta::runtime::HostTensor::I32(b)],
+        )?;
+        let c0 = out[0].as_i32().unwrap()[0];
+        println!("\nfunctional check via PJRT: (2·3)·64 = {c0} ✓");
+        assert_eq!(c0, 2 * 3 * 64);
+    } else {
+        println!("\n(run `make artifacts` to enable the functional PJRT path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Schedule-space explorer: regenerates the Fig. 9 scatter — the joint
+//! precision × dataflow × array-resize space for one Alexnet conv layer —
+//! and renders it as an ASCII scatter plus a CSV dump for plotting.
+
+use gta::report;
+use std::io::Write as _;
+
+fn main() -> anyhow::Result<()> {
+    let pts = report::fig9();
+
+    // CSV for external plotting
+    let csv_path = std::path::Path::new("target/fig9_schedule_space.csv");
+    std::fs::create_dir_all("target").ok();
+    let mut f = std::fs::File::create(csv_path)?;
+    writeln!(f, "precision,dataflow,arrangement,k_segments,cycles_ratio,mem_ratio,selected")?;
+    for p in &pts {
+        writeln!(
+            f,
+            "{},{},{},{},{:.6},{:.6},{}",
+            p.precision, p.dataflow, p.arrangement, p.k_segments, p.cycles_ratio, p.mem_ratio, p.selected
+        )?;
+    }
+    println!("wrote {} candidates to {}", pts.len(), csv_path.display());
+
+    // ASCII scatter per precision (log-ish bucketing)
+    for prec in ["INT8", "FP16", "FP32"] {
+        println!("\n=== {prec}: cycles-ratio (x) vs memory-ratio (y), * = selected ===");
+        let mine: Vec<_> = pts.iter().filter(|p| p.precision == prec).collect();
+        let max_c = mine.iter().map(|p| p.cycles_ratio).fold(1.0f64, f64::max);
+        let max_m = mine.iter().map(|p| p.mem_ratio).fold(1.0f64, f64::max);
+        const W: usize = 64;
+        const H: usize = 16;
+        let mut grid = vec![vec![' '; W + 1]; H + 1];
+        for p in &mine {
+            let x = ((p.cycles_ratio.ln() / max_c.ln().max(1e-9)) * W as f64) as usize;
+            let y = ((p.mem_ratio.ln() / max_m.ln().max(1e-9)) * H as f64) as usize;
+            let cell = &mut grid[H - y.min(H)][x.min(W)];
+            *cell = if p.selected {
+                '*'
+            } else if *cell == ' ' {
+                match p.dataflow.as_str() {
+                    "WS" => 'w',
+                    "IS" => 'i',
+                    "OS" => 'o',
+                    _ => 's',
+                }
+            } else {
+                *cell
+            };
+        }
+        for row in &grid {
+            println!("  |{}", row.iter().collect::<String>());
+        }
+        println!("  +{}", "-".repeat(W + 1));
+        println!(
+            "  1.0 .. {:.1}x cycles; {} candidates (w=WS i=IS o=OS s=SIMD)",
+            max_c,
+            mine.len()
+        );
+        // the Fig 9 headline: the distribution is nonlinear in precision
+        let sel = mine.iter().find(|p| p.selected).unwrap();
+        println!(
+            "  selected: {} {} kseg={} at ({:.2}x cycles, {:.2}x mem)",
+            sel.dataflow, sel.arrangement, sel.k_segments, sel.cycles_ratio, sel.mem_ratio
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,170 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax≥0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained after.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # INT64 limb path needs i64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+S = jax.ShapeDtypeStruct
+
+
+def entries():
+    """name -> (fn, [input ShapeDtypeStructs], doc).
+
+    Shapes are the tile sizes the rust coordinator dispatches; it pads
+    workload tiles up to these artifact shapes (runtime/artifacts.rs).
+    """
+    i32, i64, f32, bf16 = jnp.int32, jnp.int64, jnp.float32, jnp.bfloat16
+    e = {}
+    e["mpra_gemm_i8_64"] = (
+        model.mpra_gemm_fn(1),
+        [S((64, 64), i32), S((64, 64), i32)],
+        "INT8 GEMM tile on the 1-limb MPRA path",
+    )
+    e["mpra_gemm_i16_64"] = (
+        model.mpra_gemm_fn(2),
+        [S((64, 64), i32), S((64, 64), i32)],
+        "INT16 GEMM tile on the 2-limb MPRA path",
+    )
+    e["mpra_gemm_i32_64"] = (
+        model.mpra_gemm_fn(4),
+        [S((64, 64), i32), S((64, 64), i32)],
+        "INT32 GEMM tile on the 4-limb MPRA path",
+    )
+    e["mpra_gemm_i64_32"] = (
+        model.mpra_gemm_fn(8),
+        [S((32, 32), i64), S((32, 32), i64)],
+        "INT64 GEMM tile on the 8-limb MPRA path",
+    )
+    e["bignum_mul_64"] = (
+        model.bignum_fn(),
+        [S((64,), i32), S((64,), i32)],
+        "BNM: 64-limb (512-bit) pre-carry big-number product",
+    )
+    e["matmul_f32_128"] = (
+        model.matmul_f32_fn(),
+        [S((128, 128), f32), S((128, 128), f32)],
+        "f32 GEMM tile (FP mantissa path building block)",
+    )
+    e["alexnet_conv_i8"] = (
+        model.alexnet_conv_int8_fn(c=64, hw=15, k=64, r=3),
+        [S((64, 15, 15), i32), S((64, 64, 3, 3), i32)],
+        "ALI: Alexnet-style INT8 conv layer via im2col + 1-limb MPRA GEMM",
+    )
+    e["ffl_bf16"] = (
+        model.ffl_bf16_fn(),
+        [S((16, 256), f32), S((256, 1024), f32), S((1024, 256), f32)],
+        "FFL: GPT-3 feed-forward slice, BP16-quantized operands, f32 I/O",
+    )
+    e["pca_cov_f32"] = (
+        model.pca_cov_fn(),
+        [S((256, 64), f32)],
+        "PCA: covariance GEMM XtX/(n-1)",
+    )
+    e["nerf_mlp_f32"] = (
+        model.nerf_mlp_fn(),
+        [S((128, 64), f32), S((64, 256), f32), S((256, 64), f32)],
+        "Nerf: MLP block, two f32 GEMMs + relu",
+    )
+    e["rgb_convert_i8"] = (
+        model.rgb_convert_int8_fn(),
+        [S((3, 3), i32), S((3, 1024), i32)],
+        "RGB: SRGB2XYZ 3x3 colour matrix over a 1024-pixel panel, INT8",
+    )
+    e["fir_i16"] = (
+        model.fir_int16_fn(n=256, taps=64),
+        [S((319,), i32), S((64,), i32)],
+        "FFE: 64-tap FIR over 256 samples, INT16 (2-limb MPRA path)",
+    )
+    e["md_update_i32"] = (
+        model.md_update_int32_fn(),
+        [S((64, 64), i32), S((64, 32), i32), S((32, 64), i32)],
+        "MD: blocked-LU trailing update A22 -= A21@A12, INT32 (4-limb)",
+    )
+    return e
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {
+        "int32": "s32",
+        "int64": "s64",
+        "float32": "f32",
+        "bfloat16": "bf16",
+    }[jnp.dtype(dt).name]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    names = entries()
+    only = set(args.only.split(",")) if args.only else None
+    if only and os.path.exists(manifest_path):
+        # partial rebuild: keep the existing entries we are not touching
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    for name, (fn, specs, doc) in names.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        abstract = jax.eval_shape(fn, *specs)
+        manifest[name] = {
+            "doc": doc,
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+                for s in specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_tag(o.dtype)}
+                for o in abstract
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

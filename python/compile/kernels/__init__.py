@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .bignum import bignum_mul  # noqa: F401
+from .mpra_gemm import mpra_gemm  # noqa: F401
+from .tiled_matmul import tiled_matmul  # noqa: F401

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: big-number multiplication as a limb outer product.
+
+The BNM workload (Table 2) — arbitrary-precision multiplication for
+scientific computing / encryption — is the purest form of the paper's §3.1
+similarity: a big-number product is the polynomial product of its limb
+vectors, i.e. an outer product (a rank-1 p-GEMM) followed by anti-diagonal
+accumulation. The carry chain belongs to the accumulator (Fig. 3) and is
+performed by the coordinator (rust/src/precision/accumulator.rs) /
+ref.carry_propagate — exactly the paper's split between array and
+accumulator.
+
+interpret=True for CPU PJRT (see mpra_gemm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bignum_kernel(a_ref, b_ref, o_ref, *, l: int):
+    """c[k] = Σ_{i+j=k} a_i·b_j, computed as a shifted rank-1 GEMM.
+
+    The outer product is the p-GEMM the scheduler maps onto the array
+    (M=L, N=L, K=1); the anti-diagonal sum is the systolic column-direction
+    accumulation. Implemented with a static unroll over the L rows — each
+    row is one "partial product flowing downward" (Fig. 1b).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    outer = a[:, None] * b[None, :]  # (L, L) limb cross-products
+    acc = jnp.zeros((2 * l - 1,), o_ref.dtype)
+    for i in range(l):
+        # row i lands at output positions i .. i+L-1 (shift by one limb per
+        # row — the systolic skew)
+        acc = acc.at[i : i + l].add(outer[i])
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bignum_mul(
+    a_limbs: jnp.ndarray, b_limbs: jnp.ndarray, *, interpret: bool = True
+) -> jnp.ndarray:
+    """Pre-carry limb product of two L-limb big numbers (int32 limbs 0..255).
+
+    Output is (2L-1,) int32 column sums; max column value L·255² < 2^31 for
+    L up to ~33000 limbs, far beyond the artifact sizes.
+    """
+    (l,) = a_limbs.shape
+    assert a_limbs.shape == b_limbs.shape
+    if l == 1:
+        # degenerate single-limb case: one PE, one product
+        def kernel(a_ref, b_ref, o_ref):
+            o_ref[...] = a_ref[...] * b_ref[...]
+
+    else:
+        kernel = functools.partial(_bignum_kernel, l=l)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((2 * l - 1,), a_limbs.dtype),
+        interpret=interpret,
+    )(a_limbs, b_limbs)

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: the MPRA datapath as a limb-decomposed GEMM.
+
+This is the functional model of the paper's §3.1 insight: an ``8n``-bit
+multiplication *is* an ``n×n`` matrix of 8-bit limb cross-products, so a
+multi-precision GEMM maps onto the same systolic schedule as an ordinary
+GEMM. The kernel computes ``C = A @ B`` for INT8/16/32/64 operands using
+ONLY 8-bit × 8-bit limb products (each ≤ 16 bits), the way the MPRA's 8-bit
+PEs do, and shift-adds them in the accumulator (Fig. 3).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on the TPU-style
+programming model the limb cross-products are expressed as extra
+contraction work so the MXU performs them; BlockSpec tiles the A/B panels
+through VMEM the way the systolic array streams SRAM panels. The dataflow
+choice (WS/IS/OS) of the real hardware is a *scheduling* property — the
+rust simulator models its cycles/traffic; numerically all dataflows
+produce this kernel's result.
+
+interpret=True is mandatory: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mpra_kernel(x_ref, y_ref, o_ref, *, n_limbs: int, width: int):
+    """One (bm × bk) · (bk × bn) tile of the limb GEMM.
+
+    Grid is (M/bm, N/bn, K/bk); the K axis revisits o_ref, accumulating —
+    the Output-Stationary pattern (the C tile is the resident operand).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+
+    def limb(v, i):
+        # Little-endian limbs; the TOP limb is sign-extended (arithmetic
+        # shift, no mask) so that signed operands recompose exactly —
+        # the signed-MSB limb scheme the multi-precision accumulator
+        # (Fig. 3) implements in hardware. Lower limbs are unsigned.
+        return v >> (8 * i) if i == n_limbs - 1 else (v >> (8 * i)) & 0xFF
+
+    # n² limb cross-products; each 8b×8b product fits in 16 bits, exactly
+    # what a single 8-bit PE emits. Terms shifted past the accumulator
+    # width vanish mod 2^width and are skipped (the hardware never wires
+    # them).
+    for i in range(n_limbs):
+        xi = limb(x, i)
+        for j in range(n_limbs):
+            shift = 8 * (i + j)
+            if shift >= width:
+                continue
+            yj = limb(y, j)
+            # the MXU contraction: limb panel × limb panel
+            prod = jax.lax.dot_general(
+                xi,
+                yj,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=o_ref.dtype,
+            )
+            acc = acc + (prod << shift)
+    o_ref[...] = o_ref[...] + acc
+
+
+def _block(m: int, b: int) -> int:
+    """Largest divisor of m not exceeding b (block sizes must tile evenly)."""
+    b = min(m, b)
+    while m % b:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_limbs", "bm", "bk", "bn", "interpret")
+)
+def mpra_gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    n_limbs: int,
+    bm: int = 32,
+    bk: int = 32,
+    bn: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``C = A @ B`` (mod 2^width) computed from 8-bit limb products.
+
+    a: (M, K), b: (K, N); int32 or int64. ``n_limbs`` is the precision in
+    limbs (INT8→1 … INT64→8); values wider than 8·n_limbs bits are valid —
+    extra limbs are simply zero — but the hardware analogue would occupy
+    more PEs.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert a.dtype == b.dtype and a.dtype in (jnp.int32, jnp.int64)
+    width = jnp.iinfo(a.dtype).bits
+    bm, bk, bn = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_mpra_kernel, n_limbs=n_limbs, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,157 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is checked against the corresponding function here (pytest + hypothesis).
+Nothing in this file uses Pallas; it is plain jnp so that an independent
+code path validates the kernels.
+
+Precision model (shared with rust/src/precision):
+  an ``8n``-bit integer is ``n`` unsigned 8-bit limbs, little-endian;
+  FP mantissas map to INT8/12/24/53 (BP16/FP16/FP32/FP64), i.e. 1/2/3/7 limbs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Number of 8-bit limbs per supported precision tag. Mirrors
+# rust/src/precision/mod.rs::Precision::limbs().
+LIMBS = {
+    "int8": 1,
+    "int16": 2,
+    "int32": 4,
+    "int64": 8,
+    "bp16": 1,   # bfloat16 mantissa ≈ INT8
+    "fp16": 2,   # INT12 mantissa -> 2 limbs
+    "fp32": 3,   # INT24 mantissa -> 3 limbs
+    "fp64": 7,   # INT53 mantissa -> 7 limbs
+}
+
+
+def limb_decompose(x: jnp.ndarray, n_limbs: int) -> jnp.ndarray:
+    """Split integers into unsigned 8-bit limbs (little-endian).
+
+    Returns an array with a trailing limb axis of length ``n_limbs``.
+    Works for signed inputs: limbs are the two's-complement bit pattern,
+    so ``limb_recompose(limb_decompose(x, n)) == x (mod 2^(8n))``.
+    """
+    limbs = [(x >> (8 * i)) & 0xFF for i in range(n_limbs)]
+    return jnp.stack(limbs, axis=-1)
+
+
+def limb_recompose(limbs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`limb_decompose` (modulo the accumulator width)."""
+    n = limbs.shape[-1]
+    acc = jnp.zeros(limbs.shape[:-1], dtype=limbs.dtype)
+    for i in range(n):
+        acc = acc + (limbs[..., i] << (8 * i))
+    return acc
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Full-precision GEMM oracle (the thing the MPRA must reproduce)."""
+    return a @ b
+
+
+def mpra_gemm_ref(a: jnp.ndarray, b: jnp.ndarray, n_limbs: int) -> jnp.ndarray:
+    """Limb-decomposed GEMM, written the way §3.1 of the paper describes it.
+
+    Each scalar product a_ik * b_kj is expanded into the n² cross-products of
+    its 8-bit limbs; cross-products at the same shift amount are summed down
+    the "column direction" exactly as the systolic array does. Because limbs
+    are the two's-complement bit pattern, the result equals ``a @ b`` under
+    the accumulator's wrap-around (mod 2^width) semantics.
+    """
+    width = jnp.iinfo(a.dtype).bits
+
+    def limb(v, i):
+        # top limb sign-extended, lower limbs unsigned — the signed-MSB
+        # limb scheme (matches the kernel and the Fig. 3 accumulator)
+        return v >> (8 * i) if i == n_limbs - 1 else (v >> (8 * i)) & 0xFF
+
+    acc = jnp.zeros((a.shape[0], b.shape[1]), dtype=a.dtype)
+    for i in range(n_limbs):
+        ai = limb(a, i)
+        for j in range(n_limbs):
+            shift = 8 * (i + j)
+            if shift >= width:
+                continue  # vanishes modulo 2^width
+            bj = limb(b, j)
+            acc = acc + ((ai @ bj) << shift)
+    return acc
+
+
+def bignum_mul_ref(a_limbs: jnp.ndarray, b_limbs: jnp.ndarray) -> jnp.ndarray:
+    """Schoolbook big-number product, *pre carry propagation*.
+
+    ``c[k] = sum_{i+j=k} a_i * b_j`` — the polynomial (limb) product the
+    paper's Fig. 1 places on the array; carries are the accumulator's job
+    (Fig. 3) and are applied by the rust coordinator / `carry_propagate`.
+    """
+    la, lb = a_limbs.shape[-1], b_limbs.shape[-1]
+    out = jnp.zeros(a_limbs.shape[:-1] + (la + lb - 1,), dtype=a_limbs.dtype)
+    for i in range(la):
+        out = out.at[..., i : i + lb].add(a_limbs[..., i : i + 1] * b_limbs)
+    return out
+
+
+def carry_propagate(c) -> "jnp.ndarray":
+    """Normalize a pre-carry limb product back to 8-bit limbs.
+
+    Sequential by nature (matches the accumulator's carry chain); only used
+    by tests — the rust side has its own implementation.
+    """
+    import numpy as np
+
+    c = np.asarray(c, dtype=np.int64)
+    out = np.zeros(c.shape[-1] + 8, dtype=np.int64)
+    carry = 0
+    for k in range(c.shape[-1]):
+        v = int(c[k]) + carry
+        out[k] = v & 0xFF
+        carry = v >> 8
+    k = c.shape[-1]
+    while carry and k < out.shape[0]:
+        out[k] = carry & 0xFF
+        carry >>= 8
+        k += 1
+    return jnp.asarray(out, dtype=jnp.int64)
+
+
+def im2col(x: jnp.ndarray, r: int, s: int) -> jnp.ndarray:
+    """(C,H,W) -> (C*R*S, OH*OW) patch matrix (valid padding, stride 1).
+
+    Layout: for channel c, kernel offset (dr, ds) -> row c*R*S + dr*S + ds.
+    Must match model.py's im2col (the L2 model reuses this function).
+    """
+    c, h, w = x.shape
+    oh, ow = h - r + 1, w - s + 1
+    rows = []
+    for ch in range(c):
+        for dr in range(r):
+            for ds in range(s):
+                rows.append(x[ch, dr : dr + oh, ds : ds + ow].reshape(-1))
+    return jnp.stack(rows, axis=0)
+
+
+def conv_im2col_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Direct convolution oracle for the im2col-GEMM lowering.
+
+    x: (C, H, W), w: (K, C, R, S), valid padding, stride 1 -> (K, OH, OW).
+    """
+    k, c, r, s = w.shape
+    oh, ow = x.shape[1] - r + 1, x.shape[2] - s + 1
+    cols = im2col(x, r, s)  # (C*R*S, OH*OW)
+    out = w.reshape(k, -1) @ cols
+    return out.reshape(k, oh, ow)
+
+
+def ffl_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """GPT-style feed-forward layer oracle: relu(x@W1)@W2."""
+    return jnp.maximum(x @ w1, 0.0) @ w2
+
+
+def pca_cov_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Covariance GEMM oracle: centered Xᵀ X / (n-1)."""
+    xc = x - x.mean(axis=0, keepdims=True)
+    return (xc.T @ xc) / (x.shape[0] - 1)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: VMEM-tiled f32 GEMM (the MXU hot path for FP workloads).
+
+Used by the L2 workload models (Alexnet conv im2col, GPT-3 FFL, PCA, Nerf
+MLP) for the floating-point precisions, where the MPRA's role is mantissa
+multiplication and the functional result is an ordinary GEMM. BlockSpec
+expresses the HBM↔VMEM panel schedule that the paper's systolic array does
+with its SRAM streams: the C tile is output-stationary across the K grid
+axis; A/B panels are double-buffered by the pipeline machinery.
+
+interpret=True for CPU PJRT (see mpra_gemm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """Output-stationary tile: the C block stays resident across the K grid
+    axis (the OS dataflow of the paper); A/B panels stream past it."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=o_ref.dtype,
+    )
+
+
+def _block(m: int, b: int) -> int:
+    """Largest divisor of m not exceeding b (blocks must tile evenly)."""
+    b = min(m, b)
+    while m % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def tiled_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 64,
+    bk: int = 64,
+    bn: int = 64,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """``a @ b`` with explicit VMEM tiling; bf16/f32 in, f32 accumulate."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bk, bn = _block(m, bm), _block(k, bk), _block(n, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,151 @@
+"""L2: JAX compute graphs for the paper's workloads, calling the L1 kernels.
+
+Each entry here is a jit-able function over fixed example shapes; aot.py
+lowers them once to HLO text and the rust coordinator executes them via
+PJRT. Python never runs on the request path.
+
+The functions mirror the p-GEMM decompositions in Table 2:
+  BNM  -> bignum_mul (limb outer-product p-GEMM)
+  RGB  -> 3x3 colour-matrix GEMM, INT8 (mpra_gemm, 1 limb)
+  ALI  -> Alexnet conv via im2col GEMM, INT8
+  ALT/Nerf -> f32 GEMMs (tiled_matmul)
+  FFL  -> GPT-3 feed-forward, BP16 mantissa (bf16 in, f32 accum)
+  PCA  -> covariance GEMM, f64 modelled at f32 artifact precision with the
+          limb path carrying the FP64-mantissa (7-limb) case for integers
+  MD   -> blocked matrix decomposition GEMM update, INT32 fixed-point
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bignum_mul, mpra_gemm, tiled_matmul
+from .kernels.ref import im2col
+
+
+# ----------------------------------------------------------------- p-GEMM --
+def mpra_gemm_fn(n_limbs: int):
+    """Raw MPRA GEMM entry (one per integer precision)."""
+
+    def fn(a, b):
+        return (mpra_gemm(a, b, n_limbs=n_limbs),)
+
+    return fn
+
+
+def matmul_f32_fn():
+    """Raw f32 tiled GEMM entry (FP workload building block)."""
+
+    def fn(a, b):
+        return (tiled_matmul(a, b),)
+
+    return fn
+
+
+def bignum_fn():
+    """BNM: pre-carry limb product (carries done by the rust accumulator)."""
+
+    def fn(a_limbs, b_limbs):
+        return (bignum_mul(a_limbs, b_limbs),)
+
+    return fn
+
+
+# -------------------------------------------------------------- workloads --
+def alexnet_conv_int8_fn(c: int, hw: int, k: int, r: int):
+    """ALI: one Alexnet conv layer, INT8, lowered to im2col GEMM.
+
+    x: (C, H, W) int32 holding int8 values; w: (K, C, R, S). The GEMM runs
+    through the MPRA limb kernel with n_limbs=1 — the paper's INT8 inference
+    path. M=K_out, N=OH*OW, K=C*R*S.
+    """
+
+    def fn(x, w):
+        cols = im2col(x, r, r)  # (C*R*S, OH*OW)
+        wmat = w.reshape(k, c * r * r)
+        out = mpra_gemm(wmat, cols, n_limbs=1)
+        return (out,)
+
+    return fn
+
+
+def ffl_bf16_fn():
+    """FFL: GPT-3 feed-forward slice, BP16 (bf16) weights, f32 accumulate.
+
+    BP16's mantissa is 8 bits == one limb — the MPRA's best case (Table 3:
+    16x SIMD gain). I/O is f32 (the runtime's host format); operands are
+    quantized through bf16 on entry, exactly what the BP16 datapath sees.
+    """
+
+    def fn(x, w1, w2):
+        q = lambda t: t.astype(jnp.bfloat16).astype(jnp.float32)
+        h = tiled_matmul(q(x), q(w1))
+        h = jnp.maximum(h, 0.0)
+        out = tiled_matmul(q(h), q(w2))
+        return (out,)
+
+    return fn
+
+
+def pca_cov_fn():
+    """PCA: covariance GEMM XᵀX/(n-1) after centering."""
+
+    def fn(x):
+        xc = x - x.mean(axis=0, keepdims=True)
+        cov = tiled_matmul(xc.T, xc) / (x.shape[0] - 1)
+        return (cov,)
+
+    return fn
+
+
+def nerf_mlp_fn():
+    """Nerf: one positional-encoding MLP block (two f32 GEMMs + relu)."""
+
+    def fn(x, w1, w2):
+        h = jnp.maximum(tiled_matmul(x, w1), 0.0)
+        return (tiled_matmul(h, w2),)
+
+    return fn
+
+
+def md_update_int32_fn():
+    """MD: blocked LU-style trailing-update GEMM, INT32 fixed point.
+
+    A_22 -= A_21 @ A_12 is the GEMM that dominates blocked decompositions;
+    runs through the 4-limb MPRA path (wrap-around fixed-point semantics).
+    """
+
+    def fn(a22, a21, a12):
+        prod = mpra_gemm(a21, a12, n_limbs=4)
+        return (a22 - prod,)
+
+    return fn
+
+
+def rgb_convert_int8_fn():
+    """RGB: SRGB2XYZ colour conversion — a 3×3 matrix times a pixel
+    panel, INT8 through the 1-limb MPRA path (Table 2's RGB workload)."""
+
+    def fn(mat, img):
+        # mat: (3,3), img: (3, P) channel-major pixels
+        return (mpra_gemm(mat, img, n_limbs=1, bm=3, bk=3),)
+
+    return fn
+
+
+def fir_int16_fn(n: int, taps: int):
+    """FFE: a `taps`-tap FIR over `n` samples, INT16 (2-limb MPRA path).
+
+    The delay-line matrix is built by static window gathers (the vector
+    Map op of the lowering); the filter itself is the (1, n, taps)
+    p-GEMM of Table 2's FFE workload.
+    """
+
+    def fn(x, h):
+        # x: (n + taps - 1,), h: (taps,)
+        windows = jnp.stack([x[t : t + n] for t in range(taps)], axis=0)  # (taps, n)
+        y = mpra_gemm(h[None, :], windows, n_limbs=2, bm=1)
+        return (y,)
+
+    return fn

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make the build-path package (compile/) importable when pytest runs
+# from the repository root (e.g. `pytest python/tests/`).
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,99 @@
+"""L2 model graphs vs direct oracles + AOT manifest sanity."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(1)
+
+
+def test_alexnet_conv_int8_matches_direct_conv():
+    c, hw, k, r = 8, 9, 4, 3
+    fn = model.alexnet_conv_int8_fn(c=c, hw=hw, k=k, r=r)
+    x = jnp.asarray(RNG.integers(-128, 128, size=(c, hw, hw)), dtype=jnp.int32)
+    w = jnp.asarray(RNG.integers(-128, 128, size=(k, c, r, r)), dtype=jnp.int32)
+    (got,) = fn(x, w)
+    want = ref.conv_im2col_ref(x, w).reshape(k, -1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ffl_bf16_matches_oracle():
+    fn = model.ffl_bf16_fn()
+    x = jnp.asarray(RNG.standard_normal((4, 32)), dtype=jnp.float32)
+    w1 = jnp.asarray(RNG.standard_normal((32, 64)), dtype=jnp.float32)
+    w2 = jnp.asarray(RNG.standard_normal((64, 32)), dtype=jnp.float32)
+    (got,) = fn(x, w1, w2)
+    # oracle applies the same BP16 quantization the datapath sees
+    q = lambda t: np.asarray(jnp.asarray(t).astype(jnp.bfloat16), dtype=np.float32)
+    h = np.maximum(q(x) @ q(w1), 0.0)
+    want = q(h) @ q(w2)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-2, atol=2e-2)
+
+
+def test_pca_cov_matches_oracle():
+    fn = model.pca_cov_fn()
+    x = jnp.asarray(RNG.standard_normal((64, 16)), dtype=jnp.float32)
+    (got,) = fn(x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.pca_cov_ref(x)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_nerf_mlp_matches_oracle():
+    fn = model.nerf_mlp_fn()
+    x = jnp.asarray(RNG.standard_normal((16, 8)), dtype=jnp.float32)
+    w1 = jnp.asarray(RNG.standard_normal((8, 32)), dtype=jnp.float32)
+    w2 = jnp.asarray(RNG.standard_normal((32, 8)), dtype=jnp.float32)
+    (got,) = fn(x, w1, w2)
+    want = ref.ffl_ref(np.asarray(x), np.asarray(w1), np.asarray(w2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_md_update_int32_matches_numpy():
+    fn = model.md_update_int32_fn()
+    a22 = jnp.asarray(RNG.integers(-100, 100, size=(16, 16)), dtype=jnp.int32)
+    a21 = jnp.asarray(RNG.integers(-100, 100, size=(16, 8)), dtype=jnp.int32)
+    a12 = jnp.asarray(RNG.integers(-100, 100, size=(8, 16)), dtype=jnp.int32)
+    (got,) = fn(a22, a21, a12)
+    want = np.asarray(a22) - np.asarray(a21) @ np.asarray(a12)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_all_aot_entries_lower_and_eval():
+    """Every AOT entry traces, lowers to HLO text, and eval_shape agrees."""
+    from compile import aot
+
+    for name, (fn, specs, _doc) in aot.entries().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text, name
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) >= 1, name
+
+
+def test_rgb_convert_matches_direct():
+    fn = model.rgb_convert_int8_fn()
+    mat = jnp.asarray(RNG.integers(-128, 128, size=(3, 3)), dtype=jnp.int32)
+    img = jnp.asarray(RNG.integers(-128, 128, size=(3, 64)), dtype=jnp.int32)
+    (got,) = fn(mat, img)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(mat) @ np.asarray(img))
+
+
+def test_fir_matches_direct_convolution():
+    n, taps = 32, 8
+    fn = model.fir_int16_fn(n=n, taps=taps)
+    x = jnp.asarray(RNG.integers(-3000, 3000, size=(n + taps - 1,)), dtype=jnp.int32)
+    h = jnp.asarray(RNG.integers(-3000, 3000, size=(taps,)), dtype=jnp.int32)
+    (got,) = fn(x, h)
+    want = np.array(
+        [sum(int(h[t]) * int(x[i + t]) for t in range(taps)) for i in range(n)],
+        dtype=np.int64,
+    )
+    np.testing.assert_array_equal(np.asarray(got).ravel().astype(np.int64), want)

@@ -1,0 +1,110 @@
+//! Ablation: what each §5 scheduling ingredient buys.
+//!
+//! For every p-GEMM in the Table 2 suite, compare the best achievable
+//! cycles AND memory under the full joint space (dataflow × arrangement ×
+//! K-seg × tile-dir) against restricted spaces: single fixed dataflow,
+//! no array resize, no K-segmentation. Prints the cost of each
+//! restriction — the evidence behind the paper's joint-optimization claim.
+
+use gta::arch::Dataflow;
+use gta::scheduler::{self, Candidate};
+use gta::util::bench::bench;
+use gta::workloads;
+use gta::{GtaConfig, TensorOp};
+
+#[derive(Default)]
+struct Tally {
+    cycles: u64,
+    mem: u64,
+}
+
+impl Tally {
+    fn add_best(&mut self, cands: &[Candidate], keep: impl Fn(&Candidate) -> bool) {
+        let filtered: Vec<&Candidate> = cands.iter().filter(|c| keep(c)).collect();
+        if filtered.is_empty() {
+            // restriction expressible nowhere: charge the unrestricted best
+            self.cycles += cands.iter().map(|c| c.report.cycles).min().unwrap();
+            self.mem += cands.iter().map(|c| c.report.memory_access()).min().unwrap();
+            return;
+        }
+        self.cycles += filtered.iter().map(|c| c.report.cycles).min().unwrap();
+        self.mem += filtered.iter().map(|c| c.report.memory_access()).min().unwrap();
+    }
+}
+
+fn main() {
+    let gta = GtaConfig::lanes16();
+    let default_arr = gta
+        .arrangements()
+        .into_iter()
+        .find(|a| a.lane_rows == a.lane_cols)
+        .unwrap_or(gta.arrangements()[0]);
+
+    let mut full = Tally::default();
+    let mut ws_only = Tally::default();
+    let mut no_resize = Tally::default();
+    let mut no_kseg = Tally::default();
+    // separate tally for the small operators (where utilization levers
+    // matter; the big Cover1 GEMMs are work-bound under any schedule)
+    let mut full_small = Tally::default();
+    let mut no_kseg_small = Tally::default();
+    let mut no_resize_small = Tally::default();
+    let mut n_ops = 0u64;
+
+    for w in workloads::suite() {
+        for op in &w.ops {
+            let TensorOp::PGemm(g) = op else { continue };
+            let cands = scheduler::explore(g, &gta);
+            full.add_best(&cands, |_| true);
+            ws_only.add_best(&cands, |c| c.config.dataflow == Dataflow::WS);
+            no_resize.add_best(&cands, |c| c.config.arrangement == default_arr);
+            no_kseg.add_best(&cands, |c| c.config.k_segments == 1);
+            if g.macs() < 2_000_000 {
+                full_small.add_best(&cands, |_| true);
+                no_kseg_small.add_best(&cands, |c| c.config.k_segments == 1);
+                no_resize_small.add_best(&cands, |c| c.config.arrangement == default_arr);
+            }
+            n_ops += 1;
+        }
+    }
+    println!("=== Ablation: best-achievable under scheduling restrictions ({n_ops} suite p-GEMMs) ===");
+    let row = |name: &str, t: &Tally| {
+        println!(
+            "  {:<24} {:>14} cycles (+{:>5.1}%)   {:>16} mem bytes (+{:>5.1}%)",
+            name,
+            t.cycles,
+            (t.cycles as f64 / full.cycles as f64 - 1.0) * 100.0,
+            t.mem,
+            (t.mem as f64 / full.mem as f64 - 1.0) * 100.0,
+        );
+    };
+    row("full joint search", &full);
+    row("WS-only dataflow", &ws_only);
+    row("no array resize", &no_resize);
+    row("no K-segmentation", &no_kseg);
+    println!("  --- small operators only (< 2M MACs) ---");
+    let row_small = |name: &str, t: &Tally| {
+        println!(
+            "  {:<24} {:>14} cycles (+{:>5.1}%)",
+            name,
+            t.cycles,
+            (t.cycles as f64 / full_small.cycles as f64 - 1.0) * 100.0,
+        );
+    };
+    row_small("full joint search", &full_small);
+    row_small("no array resize", &no_resize_small);
+    row_small("no K-segmentation", &no_kseg_small);
+    assert!(ws_only.cycles >= full.cycles && ws_only.mem >= full.mem);
+    assert!(no_resize.cycles >= full.cycles);
+    assert!(no_kseg.cycles >= full.cycles);
+    assert!(
+        ws_only.cycles > full.cycles || no_resize.cycles > full.cycles,
+        "at least one restriction must hurt, else the joint space is pointless"
+    );
+    println!();
+
+    let g = gta::PGemm::new(384, 169, 2304, gta::Precision::Int8);
+    bench("ablation/full_space_explore", || {
+        std::hint::black_box(scheduler::explore(std::hint::black_box(&g), &gta));
+    });
+}

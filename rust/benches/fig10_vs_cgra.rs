@@ -1,0 +1,24 @@
+//! Fig. 10 — GTA vs CGRA (HyCube) on the p-GEMM operators of every
+//! workload. Paper targets: 25.83× speedup, 8.76× memory efficiency.
+
+use gta::report;
+use gta::sim::{cgra::CgraSim, Platform};
+use gta::util::bench::bench;
+use gta::workloads;
+
+fn main() {
+    let cmp = report::fig10();
+    println!("=== Fig 10: GTA vs CGRA, p-GEMM ops (paper avg: 25.83x / 8.76x) ===");
+    print!("{}", report::render_comparison(&cmp));
+    assert!(cmp.rows.iter().all(|r| r.speedup >= 1.0), "GTA must win cycles");
+    assert!(cmp.avg_speedup > 10.0, "CGRA gap should be large");
+    assert!(cmp.avg_mem_saving > 2.0);
+    println!();
+
+    let cgra = CgraSim::default();
+    for w in workloads::suite_pgemm_only() {
+        bench(&format!("fig10/cgra/{}", w.name), || {
+            std::hint::black_box(cgra.run_all(std::hint::black_box(&w.ops)));
+        });
+    }
+}

@@ -1,0 +1,37 @@
+//! Fig. 2 — operator classification scatter (algorithmic parallelism ×
+//! arithmetic intensity), plus classification-throughput timing.
+
+use gta::ops::classify::{classify, fig2_points};
+use gta::precision::Precision;
+use gta::util::bench::bench;
+use gta::util::rng::Rng;
+use gta::{PGemm, TensorOp};
+
+fn main() {
+    println!("=== Fig 2: operator classification ===");
+    for p in fig2_points() {
+        println!(
+            "  {:<8} parallelism={:>12.1} intensity={:>8.2} -> {:?}",
+            p.family, p.parallelism, p.intensity, p.class
+        );
+    }
+    println!();
+
+    // classification is on the coordinator's request path: time it
+    let mut rng = Rng::new(1);
+    let ops: Vec<TensorOp> = (0..4096)
+        .map(|_| {
+            TensorOp::PGemm(PGemm::new(
+                rng.range_u64(1, 512),
+                rng.range_u64(1, 512),
+                rng.range_u64(1, 512),
+                *rng.choose(&Precision::ALL),
+            ))
+        })
+        .collect();
+    bench("fig2/classify_4096_random_ops", || {
+        for op in &ops {
+            std::hint::black_box(classify(std::hint::black_box(op)));
+        }
+    });
+}

@@ -1,0 +1,39 @@
+//! Fig. 5 — dataflow pattern matching: the six coverage cases on the
+//! 64-lane / 64×64-array running example, plus pattern-classifier timing.
+
+use gta::report;
+use gta::scheduler::pattern::{classify, max_k_segments, ragged_idle_fraction, TileDir};
+use gta::sim::systolic::MappedGemm;
+use gta::util::bench::bench;
+use gta::util::rng::Rng;
+
+fn main() {
+    println!("=== Fig 5: dataflow pattern matching (64x64 array) ===");
+    for r in report::fig5() {
+        println!(
+            "  {:<24} mapped {:>4}x{:<5} -> {:<9} max_k_seg={}",
+            r.workload, r.mapped.0, r.mapped.1, r.coverage, r.max_k_segments
+        );
+    }
+    println!();
+
+    let mut rng = Rng::new(5);
+    let cases: Vec<MappedGemm> = (0..8192)
+        .map(|_| MappedGemm {
+            rows: rng.range_u64(1, 4096),
+            cols: rng.range_u64(1, 4096),
+            temporal: rng.range_u64(1, 4096),
+        })
+        .collect();
+    bench("fig5/classify_8192_mappings", || {
+        for &g in &cases {
+            std::hint::black_box(classify(std::hint::black_box(g), 64, 64));
+        }
+    });
+    bench("fig5/kseg_and_ragged_8192", || {
+        for &g in &cases {
+            std::hint::black_box(max_k_segments(g, 64, 64));
+            std::hint::black_box(ragged_idle_fraction(g, 64, 64, TileDir::Lateral));
+        }
+    });
+}

@@ -1,0 +1,35 @@
+//! Fig. 6 — MPRA energy per precision and operating mode, plus energy
+//! model throughput.
+
+use gta::arch::energy::{fig6_rows, mpra_mac_pj, total_energy_pj};
+use gta::arch::Dataflow;
+use gta::precision::Precision;
+use gta::util::bench::bench;
+
+fn main() {
+    println!("=== Fig 6: MPRA energy per full-array cycle (pJ) ===");
+    for r in fig6_rows() {
+        println!(
+            "  {:<6} WS={:>6.2} OS={:>6.2} SIMD={:>6.2}  (Ara unit {:>6.2})",
+            r.precision, r.ws_pj, r.os_pj, r.simd_pj, r.ara_unit_pj
+        );
+    }
+    // the paper's qualitative claims, asserted
+    let rows = fig6_rows();
+    assert!(rows.windows(2).all(|w| (w[0].ws_pj - w[1].ws_pj).abs() < 1e-9));
+    assert!(rows.iter().all(|r| r.os_pj > r.ws_pj && r.simd_pj < r.ws_pj));
+    println!("(flat across precision; OS > WS > SIMD — as the paper reports)\n");
+
+    bench("fig6/mac_energy_all_precisions_x1e5", || {
+        for _ in 0..100_000 {
+            for p in Precision::ALL {
+                std::hint::black_box(mpra_mac_pj(p, Dataflow::WS));
+            }
+        }
+    });
+    bench("fig6/total_energy_1e6_calls", || {
+        for i in 0..1_000_000u64 {
+            std::hint::black_box(total_energy_pj(i, Precision::Int8, Dataflow::OS, i * 2, i / 4));
+        }
+    });
+}

@@ -1,0 +1,32 @@
+//! Fig. 7 — GTA vs the original VPU (Ara): computing-cycle speedup and
+//! memory-access saving per Table 2 workload. Paper targets: average
+//! 6.45× speedup, 7.76× memory saving.
+
+use gta::report;
+use gta::sim::{gta::GtaSim, vpu::VpuSim, Platform};
+use gta::util::bench::bench;
+use gta::workloads;
+
+fn main() {
+    let cmp = report::fig7();
+    println!("=== Fig 7: GTA vs VPU (paper avg: 6.45x speed / 7.76x mem) ===");
+    print!("{}", report::render_comparison(&cmp));
+    // shape checks: GTA must win cycles on every workload, memory on the
+    // reuse-bearing ones, with averages in the paper's order of magnitude
+    assert!(cmp.rows.iter().all(|r| r.speedup > 1.0), "GTA must win cycles");
+    assert!(cmp.avg_speedup > 3.0 && cmp.avg_speedup < 20.0);
+    assert!(cmp.avg_mem_saving > 2.0);
+    println!();
+
+    // steady-state simulator throughput (schedule cache warm)
+    let gta = GtaSim::table1();
+    let vpu = VpuSim::default();
+    for w in workloads::suite() {
+        bench(&format!("fig7/gta/{}", w.name), || {
+            std::hint::black_box(gta.run_all(std::hint::black_box(&w.ops)));
+        });
+        bench(&format!("fig7/vpu/{}", w.name), || {
+            std::hint::black_box(vpu.run_all(std::hint::black_box(&w.ops)));
+        });
+    }
+}

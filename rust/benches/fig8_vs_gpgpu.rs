@@ -1,0 +1,28 @@
+//! Fig. 8 — GTA vs GPGPU (NVIDIA H100) at equal silicon area (§6.3):
+//! p-GEMM ops on tensor cores, vector ops on CUDA cores. Paper targets:
+//! average 3.39× speedup, 5.35× memory saving (our geomean is the
+//! comparable statistic — see EXPERIMENTS.md).
+
+use gta::report;
+use gta::sim::{gpgpu::GpgpuSim, Platform};
+use gta::util::bench::bench;
+use gta::workloads;
+
+fn main() {
+    let cmp = report::fig8();
+    println!(
+        "=== Fig 8: GTA vs GPGPU at equal area ({} GTA lanes; paper avg: 3.39x / 5.35x) ===",
+        GpgpuSim::equal_area_gta_lanes()
+    );
+    print!("{}", report::render_comparison(&cmp));
+    assert!(cmp.geomean_speedup > 1.0, "GTA should win overall");
+    assert!(cmp.avg_mem_saving > 2.0);
+    println!();
+
+    let gpu = GpgpuSim::default();
+    for w in workloads::suite() {
+        bench(&format!("fig8/gpgpu/{}", w.name), || {
+            std::hint::black_box(gpu.run_all(std::hint::black_box(&w.ops)));
+        });
+    }
+}

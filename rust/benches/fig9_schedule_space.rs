@@ -1,0 +1,47 @@
+//! Fig. 9 — the mixed precision × dataflow scheduling scatter for one
+//! Alexnet conv layer, plus scheduler-exploration timing (the §5 search
+//! is on the coordinator's request path — its cost matters).
+
+use gta::precision::Precision;
+use gta::report;
+use gta::util::bench::bench;
+use gta::{scheduler, GtaConfig, PGemm};
+
+fn main() {
+    println!("=== Fig 9: schedule space (Alexnet conv3, 3 precisions) ===");
+    let pts = report::fig9();
+    for p in &pts {
+        if p.selected {
+            println!(
+                "  {:<6} selected: {:<4} {:<6} kseg={} (cycles {:.2}x, mem {:.2}x of min)",
+                p.precision, p.dataflow, p.arrangement, p.k_segments, p.cycles_ratio, p.mem_ratio
+            );
+        }
+    }
+    println!("  {} candidates total across the three precisions", pts.len());
+    // the Fig 9 observation: distributions differ nonlinearly by precision
+    let spread = |prec: &str| -> f64 {
+        pts.iter()
+            .filter(|p| p.precision == prec)
+            .map(|p| p.cycles_ratio)
+            .fold(0.0, f64::max)
+    };
+    assert!(spread("INT8") != spread("FP32"), "precision must reshape the space");
+    println!();
+
+    let gta16 = GtaConfig::lanes16();
+    for p in [Precision::Int8, Precision::Fp16, Precision::Fp32] {
+        let g = PGemm::new(384, 169, 2304, p);
+        bench(&format!("fig9/explore_conv3_{}", p.name()), || {
+            std::hint::black_box(scheduler::explore(std::hint::black_box(&g), &gta16));
+        });
+    }
+    // the full schedule (explore + select) at the e2e configs
+    for lanes in [4u32, 16, 64] {
+        let cfg = GtaConfig::with_lanes(lanes);
+        let g = PGemm::new(384, 169, 2304, Precision::Int8);
+        bench(&format!("fig9/schedule_{}lanes", lanes), || {
+            std::hint::black_box(scheduler::schedule(std::hint::black_box(&g), &cfg));
+        });
+    }
+}

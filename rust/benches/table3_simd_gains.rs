@@ -1,0 +1,37 @@
+//! Table 3 — SIMD gains for all data types.
+//!
+//! Regenerates the table (derived from the MPRA SIMD throughput model,
+//! asserting the paper's exact values) and times the vector-mode
+//! simulator on a SIMD sweep across all eight precisions.
+
+use gta::precision::Precision;
+use gta::report;
+use gta::sim::{gta::GtaSim, Platform};
+use gta::util::bench::bench;
+use gta::{TensorOp, VectorKind};
+
+fn main() {
+    println!("=== Table 3: SIMD gains for all data types ===");
+    print!("{}", report::render_table3());
+
+    // assert the paper's exact numbers as part of the bench run
+    let paper = [8.0, 4.0, 2.0, 1.0, 16.0, 4.0, 3.56, 1.3];
+    for (row, want) in report::table3().iter().zip(paper) {
+        assert!(
+            (row.1 - want).abs() / want < 0.01,
+            "{}: {} != paper {}",
+            row.0.name(),
+            row.1,
+            want
+        );
+    }
+    println!("(all eight gains match the paper exactly)\n");
+
+    let sim = GtaSim::table1();
+    for p in Precision::ALL {
+        let op = TensorOp::vector(1 << 20, p, VectorKind::Map);
+        bench(&format!("table3/simd_vector_1M_{}", p.name()), || {
+            std::hint::black_box(sim.run(std::hint::black_box(&op)));
+        });
+    }
+}

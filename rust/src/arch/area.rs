@@ -1,0 +1,155 @@
+//! Area model: the synthesized numbers the paper reports (Table 1, §6.1)
+//! and the same-area normalization used for the cross-platform comparisons
+//! (§6.3 "configure different number of MPRA to match the same area").
+
+
+/// Table 1 — evaluated platforms.
+#[derive(Debug, Clone)]
+pub struct PlatformInfo {
+    pub name: &'static str,
+    pub node_nm: u32,
+    pub freq_mhz: u32,
+    pub area_mm2: f64,
+    pub compute_units: &'static str,
+    pub precisions: &'static str,
+}
+
+/// The four Table 1 columns.
+pub fn table1() -> Vec<PlatformInfo> {
+    vec![
+        PlatformInfo {
+            name: "GTA",
+            node_nm: 14,
+            freq_mhz: 1000,
+            area_mm2: 0.35,
+            compute_units: "4 lanes (8x8 MPRA each)",
+            precisions: "INT8/16/32/64, BP16, FP16/32/64",
+        },
+        PlatformInfo {
+            name: "VPU-Ara",
+            node_nm: 14,
+            freq_mhz: 250,
+            area_mm2: 0.33,
+            compute_units: "4 lanes (per-precision MACs)",
+            precisions: "INT8/16/32/64, BP16, FP16/32/64",
+        },
+        PlatformInfo {
+            name: "GPGPU-NVIDIA H100",
+            node_nm: 4,
+            freq_mhz: 1755,
+            area_mm2: 814.0,
+            compute_units: "528 tensor cores + CUDA cores",
+            precisions: "FP64, TF32, FP32, INT32, BP16, FP16, FP8, INT8",
+        },
+        PlatformInfo {
+            name: "CGRA-hycube",
+            node_nm: 28,
+            freq_mhz: 704,
+            area_mm2: 7.82,
+            compute_units: "4x4 word-level PEs",
+            precisions: "INT8/16/32/64, BP16, FP16/32/64",
+        },
+    ]
+}
+
+/// §6.1 synthesized fractions.
+pub mod fractions {
+    /// A lane with an 8×8 MPRA uses this fraction of the original Ara
+    /// lane's *computation* area while covering all integer precisions.
+    pub const MPRA_LANE_OF_ARA_LANE: f64 = 0.6076;
+    /// Control/interconnect overhead over the original 4-lane Ara.
+    pub const CONTROL_OVERHEAD: f64 = 0.0606;
+    /// With FP post-processing units added the lane is ≈ the original.
+    pub const LANE_WITH_FP_OF_ARA_LANE: f64 = 1.0;
+}
+
+/// Per-lane area in mm² for GTA at 14 nm (Table 1: 4 lanes = 0.35 mm²).
+pub const GTA_LANE_AREA_MM2: f64 = 0.35 / 4.0;
+
+/// Published logic transistor density (MTr/mm²) for the nodes in Table 1.
+/// Real density gains are far below ideal quadratic scaling (SRAM and
+/// analog barely shrink), so the §6.3 same-area normalization uses these
+/// measured figures rather than `(node ratio)²`.
+fn mtr_per_mm2(node_nm: u32) -> f64 {
+    match node_nm {
+        4 => 137.0,  // TSMC N4 class
+        5 => 130.0,  // TSMC N5
+        7 => 91.0,   // TSMC N7
+        14 => 29.0,  // Intel 14 / TSMC 16FF class
+        16 => 29.0,
+        22 => 16.5,  // GF 22FDX class (Ara's node family)
+        28 => 15.3,  // TSMC 28HPC
+        other => 29.0 * (14.0 / other as f64).powi(2), // fallback: ideal
+    }
+}
+
+/// Area multiplier when re-targeting logic from `from_nm` to `to_nm`:
+/// `area_to = area_from · density(from)/density(to)`.
+pub fn density_scale(from_nm: u32, to_nm: u32) -> f64 {
+    mtr_per_mm2(from_nm) / mtr_per_mm2(to_nm)
+}
+
+/// How many GTA lanes fit in `area_mm2` of silicon at `node_nm`,
+/// normalizing the foreign area to GTA's 14 nm node.
+pub fn gta_lanes_for_area(area_mm2: f64, node_nm: u32) -> u32 {
+    let at14 = area_mm2 * density_scale(node_nm, 14);
+    (at14 / GTA_LANE_AREA_MM2).floor().max(1.0) as u32
+}
+
+/// Area efficiency in peak 8-bit MACs/cycle/mm² for a GTA instance —
+/// the paper's headline "better area efficiency" metric.
+pub fn gta_area_efficiency(lanes: u32) -> f64 {
+    let pes = lanes as f64 * 64.0;
+    pes / (lanes as f64 * GTA_LANE_AREA_MM2)
+}
+
+/// Ara's peak 8-bit ops/cycle/mm²: 4 lanes, 8 INT8 MACs each, 0.33 mm².
+pub fn ara_area_efficiency() -> f64 {
+    (4.0 * 8.0) / 0.33
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_four_platforms() {
+        let t = table1();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0].name, "GTA");
+        assert!((t[2].area_mm2 - 814.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn density_scaling_follows_published_density() {
+        // 28nm logic re-targeted to 14nm roughly halves
+        assert!((density_scale(28, 14) - 15.3 / 29.0).abs() < 1e-12);
+        // 4nm logic re-targeted to 14nm grows ~4.7x (NOT ideal 12.25x)
+        let g = density_scale(4, 14);
+        assert!((4.0..6.0).contains(&g), "got {g}");
+        assert!((density_scale(14, 14) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gta_beats_ara_area_efficiency() {
+        // 64 PEs in 60.76% of the MAC area that held 8 INT8 MACs:
+        // the §6.1 area-efficiency claim
+        assert!(gta_area_efficiency(4) > ara_area_efficiency());
+    }
+
+    #[test]
+    fn same_area_normalization_monotone() {
+        // more foreign area -> at least as many equivalent GTA lanes
+        let a = gta_lanes_for_area(1.0, 14);
+        let b = gta_lanes_for_area(2.0, 14);
+        assert!(b >= a);
+        assert!(gta_lanes_for_area(0.0001, 14) >= 1); // floor at 1 lane
+    }
+
+    #[test]
+    fn hycube_area_maps_to_lane_budget() {
+        // 7.82 mm² @28nm ≈ 4.1 mm² @14nm ≈ ~47 GTA lanes
+        let lanes = gta_lanes_for_area(7.82, 28);
+        assert!((40..=55).contains(&lanes), "got {lanes}");
+    }
+}

@@ -1,0 +1,136 @@
+//! SysCSR instruction encoding (Fig. 4c): the three-level interconnect
+//! configuration packed into the CSR word layout the lane scheduler
+//! writes, plus the per-lane mask-register image the Mask Match Mechanism
+//! loads (Fig. 4e).
+//!
+//! Word layout (64-bit CSR):
+//! ```text
+//!   [63:56] magic/version   [55:48] lane_rows   [47:40] lane_cols
+//!   [39:38] systolic mode   [37:32] mask width  [31:0]  reserved
+//! ```
+//! Mask sets are written through a separate data port, one word per lane.
+
+use super::{Arrangement, Dataflow, SysCsr};
+
+const MAGIC: u64 = 0x9A;
+
+/// Encode the Global Layout + Systolic Mode fields into the CSR word.
+pub fn encode_csr(csr: &SysCsr, mask_bits: u32) -> u64 {
+    let mode = match csr.systolic_mode {
+        Dataflow::WS => 0u64,
+        Dataflow::IS => 1,
+        Dataflow::OS => 2,
+        Dataflow::Simd => 3,
+    };
+    (MAGIC << 56)
+        | ((csr.global_layout.lane_rows as u64 & 0xFF) << 48)
+        | ((csr.global_layout.lane_cols as u64 & 0xFF) << 40)
+        | (mode << 38)
+        | ((mask_bits as u64 & 0x3F) << 32)
+}
+
+/// Decode a CSR word back into layout + mode (+ mask width). Returns
+/// `None` on a bad magic or malformed field — the hardware would raise an
+/// illegal-CSR exception.
+pub fn decode_csr(word: u64, lanes: u32) -> Option<(SysCsr, u32)> {
+    if (word >> 56) & 0xFF != MAGIC {
+        return None;
+    }
+    let lane_rows = ((word >> 48) & 0xFF) as u32;
+    let lane_cols = ((word >> 40) & 0xFF) as u32;
+    if lane_rows == 0 || lane_cols == 0 || lane_rows * lane_cols != lanes {
+        return None;
+    }
+    let mode = match (word >> 38) & 0x3 {
+        0 => Dataflow::WS,
+        1 => Dataflow::IS,
+        2 => Dataflow::OS,
+        _ => Dataflow::Simd,
+    };
+    let mask_bits = ((word >> 32) & 0x3F) as u32;
+    Some((
+        SysCsr {
+            global_layout: Arrangement::new(lane_rows, lane_cols),
+            systolic_mode: mode,
+            mask_groups: vec![0; lanes as usize],
+        },
+        mask_bits,
+    ))
+}
+
+/// Pack the per-lane mask groups into the mask-register image (one
+/// `mask_bits`-wide field per lane, little-endian lane order).
+pub fn encode_masks(masks: &[u32], mask_bits: u32) -> Vec<u64> {
+    assert!(mask_bits > 0 && mask_bits <= 16);
+    let per_word = 64 / mask_bits as usize;
+    let mut words = vec![0u64; masks.len().div_ceil(per_word)];
+    for (lane, &m) in masks.iter().enumerate() {
+        assert!(m < (1 << mask_bits), "mask {m} exceeds width {mask_bits}");
+        let (w, slot) = (lane / per_word, lane % per_word);
+        words[w] |= (m as u64) << (slot as u32 * mask_bits);
+    }
+    words
+}
+
+/// Unpack the mask-register image.
+pub fn decode_masks(words: &[u64], lanes: usize, mask_bits: u32) -> Vec<u32> {
+    let per_word = 64 / mask_bits as usize;
+    let field = (1u64 << mask_bits) - 1;
+    (0..lanes)
+        .map(|lane| {
+            let (w, slot) = (lane / per_word, lane % per_word);
+            ((words[w] >> (slot as u32 * mask_bits)) & field) as u32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::GtaConfig;
+    use crate::util::rng::{property, Rng};
+
+    #[test]
+    fn csr_roundtrip() {
+        let cfg = GtaConfig::lanes16();
+        for mode in Dataflow::ALL {
+            for arr in cfg.arrangements() {
+                let csr = SysCsr::whole_array(&cfg, arr, mode);
+                let word = encode_csr(&csr, cfg.mask_bits);
+                let (back, bits) = decode_csr(word, cfg.lanes).unwrap();
+                assert_eq!(back.global_layout, arr);
+                assert_eq!(back.systolic_mode, mode);
+                assert_eq!(bits, cfg.mask_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn csr_rejects_garbage() {
+        assert!(decode_csr(0, 16).is_none(), "bad magic");
+        let cfg = GtaConfig::lanes16();
+        let csr = SysCsr::whole_array(&cfg, Arrangement::new(4, 4), Dataflow::WS);
+        let word = encode_csr(&csr, 4);
+        // layout that doesn't match the lane count
+        assert!(decode_csr(word, 8).is_none());
+    }
+
+    #[test]
+    fn mask_image_roundtrip() {
+        property("mask image roundtrip", 100, |rng: &mut Rng| {
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let lanes = rng.range_u64(1, 64) as usize;
+            let masks: Vec<u32> =
+                (0..lanes).map(|_| rng.range_u64(0, (1 << bits) - 1) as u32).collect();
+            let words = encode_masks(&masks, bits);
+            assert_eq!(decode_masks(&words, lanes, bits), masks);
+        });
+    }
+
+    #[test]
+    fn mask_image_is_dense() {
+        // 16 lanes × 4 bits = exactly one 64-bit word
+        let masks: Vec<u32> = (0..16).map(|i| i % 16).collect();
+        assert_eq!(encode_masks(&masks, 4).len(), 1);
+    }
+}

@@ -1,0 +1,258 @@
+//! GTA hardware architecture model (§4): lanes, MPRA geometry, the SysCSR
+//! three-level interconnect configuration (Global Layout / Systolic Mode /
+//! Mask Group) and the mask-match partitioning mechanism of Fig. 4.
+
+pub mod area;
+pub mod isa;
+pub mod energy;
+
+
+/// Systolic dataflows supported by the array (§3.1) plus the VPU-native
+/// SIMD mode (§5: "some p-GEMM operators may get better result from
+/// vectorization").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Weight-Stationary: B panel resident, inputs stream.
+    WS,
+    /// Input-Stationary: A panel resident (dual of WS).
+    IS,
+    /// Output-Stationary: C tile resident, operands stream K-deep.
+    OS,
+    /// VPU vector mode on the reconfigured MPRA.
+    Simd,
+}
+
+impl Dataflow {
+    pub const SYSTOLIC: [Dataflow; 3] = [Dataflow::WS, Dataflow::IS, Dataflow::OS];
+    pub const ALL: [Dataflow; 4] = [Dataflow::WS, Dataflow::IS, Dataflow::OS, Dataflow::Simd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::WS => "WS",
+            Dataflow::IS => "IS",
+            Dataflow::OS => "OS",
+            Dataflow::Simd => "SIMD",
+        }
+    }
+}
+
+/// Logical arrangement of the lanes' MPRAs into one systolic array
+/// ("array arrangement", §4.2): `lane_rows × lane_cols` grid of
+/// 8×8 MPRA blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Arrangement {
+    pub lane_rows: u32,
+    pub lane_cols: u32,
+}
+
+impl Arrangement {
+    pub fn new(lane_rows: u32, lane_cols: u32) -> Self {
+        assert!(lane_rows > 0 && lane_cols > 0);
+        Arrangement { lane_rows, lane_cols }
+    }
+
+    pub fn lanes(&self) -> u32 {
+        self.lane_rows * self.lane_cols
+    }
+}
+
+/// Configuration of a GTA instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GtaConfig {
+    /// Number of VPU lanes, each hosting one MPRA (Table 1 default: 4).
+    pub lanes: u32,
+    /// PE rows per MPRA (paper fixes 8 so one row covers 8×n-bit WS/IS).
+    pub mpra_rows: u32,
+    /// PE columns per MPRA.
+    pub mpra_cols: u32,
+    /// Clock in MHz (post-MPRA synthesis: 1 GHz, §6.1).
+    pub freq_mhz: u32,
+    /// Per-lane SRAM (operand buffer) in KiB.
+    pub sram_kib: u32,
+    /// Vector register length in 64-bit elements (Ara-style VLEN/64).
+    pub vlen64: u32,
+    /// Width of the mask bit sets — how many sub-array partitions the
+    /// mask-match mechanism can express (§4.2).
+    pub mask_bits: u32,
+}
+
+impl Default for GtaConfig {
+    fn default() -> Self {
+        // Table 1 GTA column: 14nm, 1 GHz, 4 lanes, all eight precisions.
+        GtaConfig {
+            lanes: 4,
+            mpra_rows: 8,
+            mpra_cols: 8,
+            freq_mhz: 1000,
+            sram_kib: 16,
+            vlen64: 64,
+            mask_bits: 4,
+        }
+    }
+}
+
+impl GtaConfig {
+    /// A 16-lane high-performance instance (the Fig. 4 running example).
+    pub fn lanes16() -> Self {
+        GtaConfig { lanes: 16, ..Default::default() }
+    }
+
+    pub fn with_lanes(lanes: u32) -> Self {
+        assert!(lanes > 0);
+        GtaConfig { lanes, ..Default::default() }
+    }
+
+    /// PEs across the whole accelerator.
+    pub fn total_pes(&self) -> u32 {
+        self.lanes * self.mpra_rows * self.mpra_cols
+    }
+
+    /// All logical array shapes the slide unit can realize: factor pairs
+    /// of the lane count (§4.2 "several array rearrangements").
+    pub fn arrangements(&self) -> Vec<Arrangement> {
+        let n = self.lanes;
+        (1..=n)
+            .filter(|d| n % d == 0)
+            .map(|d| Arrangement::new(d, n / d))
+            .collect()
+    }
+
+    /// Physical PE grid of an arrangement.
+    pub fn array_shape(&self, a: Arrangement) -> (u64, u64) {
+        assert_eq!(a.lanes(), self.lanes, "arrangement must use every lane");
+        (
+            (a.lane_rows * self.mpra_rows) as u64,
+            (a.lane_cols * self.mpra_cols) as u64,
+        )
+    }
+}
+
+/// The Systolic Control and Status Register (Fig. 4c): the three-level
+/// interconnect configuration the lane scheduler writes before launching
+/// an operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SysCsr {
+    /// Global Layout: logical lane grid → slide-unit shuffle program.
+    pub global_layout: Arrangement,
+    /// Systolic Mode: what moves between lanes each beat.
+    pub systolic_mode: Dataflow,
+    /// Mask Group: one mask word per lane; lanes sharing a mask form a
+    /// sub-region that may exchange data (Fig. 4e).
+    pub mask_groups: Vec<u32>,
+}
+
+impl SysCsr {
+    /// Program the CSR for a whole-array single-tenant launch.
+    pub fn whole_array(cfg: &GtaConfig, layout: Arrangement, mode: Dataflow) -> Self {
+        SysCsr {
+            global_layout: layout,
+            systolic_mode: mode,
+            mask_groups: vec![0; cfg.lanes as usize],
+        }
+    }
+
+    /// Number of inter-lane operand streams the slide unit must move per
+    /// beat in this mode (§4.2: OS moves three operand sets; WS/IS move
+    /// an input stream + a partial-sum stream).
+    pub fn streams_per_beat(&self) -> u32 {
+        match self.systolic_mode {
+            Dataflow::OS => 3,
+            Dataflow::WS | Dataflow::IS => 2,
+            Dataflow::Simd => 0,
+        }
+    }
+
+    /// Partition lanes by mask value (the Mask Match Mechanism): data may
+    /// only move between lanes with identical masks.
+    pub fn partitions(&self) -> Vec<Vec<usize>> {
+        let mut groups: std::collections::BTreeMap<u32, Vec<usize>> = Default::default();
+        for (lane, &m) in self.mask_groups.iter().enumerate() {
+            groups.entry(m).or_default().push(lane);
+        }
+        groups.into_values().collect()
+    }
+
+    /// Check the CSR against a config: every lane masked, and no more
+    /// distinct partitions than the mask width can express.
+    pub fn validate(&self, cfg: &GtaConfig) -> Result<(), String> {
+        if self.mask_groups.len() != cfg.lanes as usize {
+            return Err(format!(
+                "mask set count {} != lanes {}",
+                self.mask_groups.len(),
+                cfg.lanes
+            ));
+        }
+        if self.global_layout.lanes() != cfg.lanes {
+            return Err(format!(
+                "global layout {}x{} does not use all {} lanes",
+                self.global_layout.lane_rows, self.global_layout.lane_cols, cfg.lanes
+            ));
+        }
+        let parts = self.partitions().len() as u32;
+        if parts > (1 << self.mask_bits_needed(cfg)) {
+            return Err("partition count exceeds mask width".into());
+        }
+        Ok(())
+    }
+
+    fn mask_bits_needed(&self, cfg: &GtaConfig) -> u32 {
+        cfg.mask_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table1() {
+        let c = GtaConfig::default();
+        assert_eq!(c.lanes, 4);
+        assert_eq!(c.freq_mhz, 1000);
+        assert_eq!(c.total_pes(), 4 * 64);
+    }
+
+    #[test]
+    fn arrangements_are_factor_pairs() {
+        let c = GtaConfig::lanes16();
+        let arrs = c.arrangements();
+        assert_eq!(arrs.len(), 5); // 1x16 2x8 4x4 8x2 16x1
+        for a in &arrs {
+            assert_eq!(a.lanes(), 16);
+        }
+        // 4x4 lanes of 8x8 PEs = 32x32 logical array
+        let (r, cshape) = c.array_shape(Arrangement::new(4, 4));
+        assert_eq!((r, cshape), (32, 32));
+    }
+
+    #[test]
+    fn syscsr_streams_by_mode() {
+        let cfg = GtaConfig::default();
+        let layout = Arrangement::new(2, 2);
+        assert_eq!(SysCsr::whole_array(&cfg, layout, Dataflow::OS).streams_per_beat(), 3);
+        assert_eq!(SysCsr::whole_array(&cfg, layout, Dataflow::WS).streams_per_beat(), 2);
+        assert_eq!(SysCsr::whole_array(&cfg, layout, Dataflow::Simd).streams_per_beat(), 0);
+    }
+
+    #[test]
+    fn mask_match_partitions() {
+        let cfg = GtaConfig::lanes16();
+        let mut csr = SysCsr::whole_array(&cfg, Arrangement::new(4, 4), Dataflow::WS);
+        // split into 2 sub-regions: lanes 0-7 vs 8-15
+        for lane in 8..16 {
+            csr.mask_groups[lane] = 1;
+        }
+        let parts = csr.partitions();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], (0..8).collect::<Vec<_>>());
+        assert_eq!(parts[1], (8..16).collect::<Vec<_>>());
+        assert!(csr.validate(&cfg).is_ok());
+    }
+
+    #[test]
+    fn syscsr_validation_catches_bad_layout() {
+        let cfg = GtaConfig::default(); // 4 lanes
+        let csr = SysCsr::whole_array(&GtaConfig::lanes16(), Arrangement::new(4, 4), Dataflow::WS);
+        assert!(csr.validate(&cfg).is_err());
+    }
+}

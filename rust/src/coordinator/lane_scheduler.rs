@@ -1,0 +1,185 @@
+//! Lane scheduler: the multi-tenant partition allocator behind the Mask
+//! Match Mechanism (§4.2, Fig. 4e). Concurrent operators get disjoint
+//! contiguous lane groups; each group's lanes share a mask word, so the
+//! slide unit only moves data within a group.
+
+use crate::arch::{Arrangement, GtaConfig, SysCsr};
+use std::collections::BTreeMap;
+
+/// Identifier of an allocated partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PartitionId(pub u32);
+
+/// A granted partition: which lanes, which mask value.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub id: PartitionId,
+    pub lanes: Vec<u32>,
+    pub mask: u32,
+}
+
+/// Allocator over the lane pool.
+#[derive(Debug)]
+pub struct LaneAllocator {
+    config: GtaConfig,
+    /// lane -> owning partition (None = free)
+    owner: Vec<Option<PartitionId>>,
+    next_id: u32,
+    live: BTreeMap<PartitionId, Partition>,
+}
+
+impl LaneAllocator {
+    pub fn new(config: GtaConfig) -> Self {
+        LaneAllocator {
+            owner: vec![None; config.lanes as usize],
+            config,
+            next_id: 0,
+            live: BTreeMap::new(),
+        }
+    }
+
+    pub fn free_lanes(&self) -> u32 {
+        self.owner.iter().filter(|o| o.is_none()).count() as u32
+    }
+
+    /// Allocate `n` contiguous lanes (contiguity is what the slide unit's
+    /// shuffle program requires). Returns None when fragmented/full or
+    /// when the mask width cannot express another partition.
+    pub fn allocate(&mut self, n: u32) -> Option<Partition> {
+        if n == 0 || n > self.config.lanes {
+            return None;
+        }
+        let max_parts = 1u32 << self.config.mask_bits;
+        if self.live.len() as u32 >= max_parts {
+            return None;
+        }
+        // first-fit contiguous scan
+        let lanes = self.owner.len();
+        let mut start = 0usize;
+        while start + (n as usize) <= lanes {
+            if self.owner[start..start + n as usize].iter().all(Option::is_none) {
+                let id = PartitionId(self.next_id);
+                self.next_id += 1;
+                let lane_ids: Vec<u32> = (start as u32..start as u32 + n).collect();
+                for &l in &lane_ids {
+                    self.owner[l as usize] = Some(id);
+                }
+                // mask = lowest unused mask value
+                let used: Vec<u32> = self.live.values().map(|p| p.mask).collect();
+                let mask = (0..max_parts).find(|m| !used.contains(m)).unwrap();
+                let part = Partition { id, lanes: lane_ids, mask };
+                self.live.insert(id, part.clone());
+                return Some(part);
+            }
+            start += 1;
+        }
+        None
+    }
+
+    /// Release a partition's lanes.
+    pub fn release(&mut self, id: PartitionId) -> bool {
+        if self.live.remove(&id).is_none() {
+            return false;
+        }
+        for o in self.owner.iter_mut() {
+            if *o == Some(id) {
+                *o = None;
+            }
+        }
+        true
+    }
+
+    /// Produce the SysCSR mask-group field for the current allocation:
+    /// owned lanes carry their partition's mask; free lanes get the
+    /// all-ones "parked" mask.
+    pub fn mask_groups(&self) -> Vec<u32> {
+        let parked = (1u32 << self.config.mask_bits) - 1;
+        self.owner
+            .iter()
+            .map(|o| match o {
+                Some(id) => self.live[id].mask,
+                None => parked,
+            })
+            .collect()
+    }
+
+    /// Build a SysCSR for one live partition (sub-array launch).
+    pub fn syscsr_for(&self, id: PartitionId, mode: crate::arch::Dataflow) -> Option<SysCsr> {
+        let part = self.live.get(&id)?;
+        let n = part.lanes.len() as u32;
+        // widest arrangement that factors the partition
+        let rows = (1..=n).rev().find(|d| n % d == 0 && *d * *d <= n).unwrap_or(1);
+        Some(SysCsr {
+            global_layout: Arrangement::new(rows, n / rows),
+            systolic_mode: mode,
+            mask_groups: self.mask_groups(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dataflow;
+
+    #[test]
+    fn allocate_release_cycle() {
+        let mut a = LaneAllocator::new(GtaConfig::lanes16());
+        let p1 = a.allocate(8).unwrap();
+        let p2 = a.allocate(8).unwrap();
+        assert_eq!(a.free_lanes(), 0);
+        assert!(a.allocate(1).is_none(), "pool exhausted");
+        assert_ne!(p1.mask, p2.mask, "partitions must have distinct masks");
+        assert!(a.release(p1.id));
+        assert_eq!(a.free_lanes(), 8);
+        assert!(a.allocate(8).is_some());
+        assert!(!a.release(p1.id), "double release rejected");
+        let _ = p2;
+    }
+
+    #[test]
+    fn contiguity_respected() {
+        let mut a = LaneAllocator::new(GtaConfig::lanes16());
+        let p1 = a.allocate(6).unwrap();
+        let _p2 = a.allocate(6).unwrap();
+        a.release(p1.id);
+        // 6 free at the front, 4 at the back: a 5-lane ask fits in front
+        let p3 = a.allocate(5).unwrap();
+        assert_eq!(p3.lanes, vec![0, 1, 2, 3, 4]);
+        // 8 contiguous no longer exists
+        assert!(a.allocate(8).is_none());
+    }
+
+    #[test]
+    fn mask_groups_reflect_ownership() {
+        let mut a = LaneAllocator::new(GtaConfig::lanes16());
+        let p = a.allocate(4).unwrap();
+        let masks = a.mask_groups();
+        assert_eq!(masks.len(), 16);
+        for l in 0..4 {
+            assert_eq!(masks[l], p.mask);
+        }
+        let parked = (1 << 4) - 1;
+        assert!(masks[4..].iter().all(|&m| m == parked));
+    }
+
+    #[test]
+    fn partition_count_bounded_by_mask_width() {
+        let mut cfg = GtaConfig::lanes16();
+        cfg.mask_bits = 1; // only 2 expressible partitions
+        let mut a = LaneAllocator::new(cfg);
+        assert!(a.allocate(2).is_some());
+        assert!(a.allocate(2).is_some());
+        assert!(a.allocate(2).is_none(), "mask width exhausted");
+    }
+
+    #[test]
+    fn syscsr_from_partition_validates() {
+        let cfg = GtaConfig::lanes16();
+        let mut a = LaneAllocator::new(cfg);
+        let p = a.allocate(4).unwrap();
+        let csr = a.syscsr_for(p.id, Dataflow::WS).unwrap();
+        assert_eq!(csr.global_layout.lanes(), 4);
+        assert_eq!(csr.mask_groups.len(), 16);
+    }
+}

@@ -1,0 +1,145 @@
+//! Coordinator metrics: request counters, schedule-cache statistics and
+//! latency percentiles, shared across worker threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    pgemm_ops: u64,
+    vector_ops: u64,
+    functional_execs: u64,
+    schedule_cache_hits: u64,
+    schedule_cache_misses: u64,
+    per_artifact: BTreeMap<String, u64>,
+    latencies_us: Vec<u64>,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A frozen snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub pgemm_ops: u64,
+    pub vector_ops: u64,
+    pub functional_execs: u64,
+    pub schedule_cache_hits: u64,
+    pub schedule_cache_misses: u64,
+    pub per_artifact: BTreeMap<String, u64>,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+}
+
+impl Metrics {
+    pub fn record_request(&self, is_pgemm: bool, latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        if is_pgemm {
+            m.pgemm_ops += 1;
+        } else {
+            m.vector_ops += 1;
+        }
+        m.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn record_functional(&self, artifact: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.functional_execs += 1;
+        *m.per_artifact.entry(artifact.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn record_cache(&self, hit: bool) {
+        let mut m = self.inner.lock().unwrap();
+        if hit {
+            m.schedule_cache_hits += 1;
+        } else {
+            m.schedule_cache_misses += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lat = m.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() as f64 - 1.0) * p) as usize]
+            }
+        };
+        Snapshot {
+            requests: m.requests,
+            pgemm_ops: m.pgemm_ops,
+            vector_ops: m.vector_ops,
+            functional_execs: m.functional_execs,
+            schedule_cache_hits: m.schedule_cache_hits,
+            schedule_cache_misses: m.schedule_cache_misses,
+            per_artifact: m.per_artifact.clone(),
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            mean_us: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<u64>() as f64 / lat.len() as f64
+            },
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "requests={} (pgemm={} vector={})  functional={}  cache {}/{} hit\n\
+             latency: p50={}us p95={}us p99={}us mean={:.1}us\n",
+            self.requests,
+            self.pgemm_ops,
+            self.vector_ops,
+            self.functional_execs,
+            self.schedule_cache_hits,
+            self.schedule_cache_hits + self.schedule_cache_misses,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_us,
+        );
+        for (name, n) in &self.per_artifact {
+            s.push_str(&format!("  artifact {name}: {n} execs\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_counts() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_request(i % 2 == 0, Duration::from_micros(i));
+        }
+        m.record_cache(true);
+        m.record_cache(false);
+        m.record_functional("k");
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.pgemm_ops, 50);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.schedule_cache_hits, 1);
+        assert_eq!(s.per_artifact["k"], 1);
+        assert!(s.render().contains("p50=50us"));
+    }
+}

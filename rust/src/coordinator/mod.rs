@@ -1,0 +1,332 @@
+//! L3 coordinator: the GTA "lane scheduler + runtime" — classifies and
+//! schedules incoming tensor operators (§5), simulates them on the MPRA
+//! model, and (when an AOT artifact exists) executes the *functional*
+//! result through the PJRT engine so numerics are real, not modeled.
+//!
+//! Threading model: PJRT handles are not `Send`, so one dedicated executor
+//! thread owns the [`Engine`]; scheduling/simulation workers scale across
+//! cores and talk to it over a channel. Python never runs here — the
+//! binary is self-contained once `make artifacts` has produced the HLO.
+
+pub mod lane_scheduler;
+pub mod metrics;
+
+use crate::arch::GtaConfig;
+use crate::ops::{PGemm, TensorOp};
+use crate::runtime::{Engine, HostTensor};
+use crate::scheduler::{self, Candidate};
+use crate::sim::gta::GtaSim;
+use crate::sim::{Platform, SimReport};
+use anyhow::{anyhow, Result};
+use metrics::Metrics;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What the caller wants done with an operator.
+#[derive(Debug, Clone)]
+pub enum ExecKind {
+    /// Schedule + simulate only (cycle/traffic report).
+    Simulate,
+    /// Schedule + simulate, AND execute the named artifact with these
+    /// inputs on the PJRT engine, returning real numerics.
+    Functional { artifact: String, inputs: Vec<HostTensor> },
+}
+
+/// A request to the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub op: TensorOp,
+    pub exec: ExecKind,
+}
+
+/// The coordinator's answer.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    /// The §5 schedule chosen (None for pure vector ops).
+    pub schedule: Option<Candidate>,
+    /// Simulated cycles/traffic on the GTA model.
+    pub sim: SimReport,
+    /// Functional outputs (when requested and an engine is attached).
+    pub outputs: Option<Vec<HostTensor>>,
+    pub latency: Duration,
+}
+
+/// Job sent to the executor thread.
+enum ExecJob {
+    Run {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Names {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the dedicated PJRT executor thread.
+pub struct Executor {
+    tx: mpsc::Sender<ExecJob>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the executor; blocks until the engine has compiled all
+    /// artifacts (or failed).
+    pub fn spawn(dir: PathBuf) -> Result<Executor> {
+        let (tx, rx) = mpsc::channel::<ExecJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("gta-pjrt-executor".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        ExecJob::Run { artifact, inputs, reply } => {
+                            let _ = reply.send(engine.execute(&artifact, &inputs));
+                        }
+                        ExecJob::Names { reply } => {
+                            let _ = reply
+                                .send(engine.names().iter().map(|s| s.to_string()).collect());
+                        }
+                        ExecJob::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during engine load"))??;
+        Ok(Executor { tx, handle: Some(handle) })
+    }
+
+    /// Execute an artifact synchronously through the executor thread.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ExecJob::Run { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Artifact names the engine compiled.
+    pub fn names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ExecJob::Names { reply })
+            .map_err(|_| anyhow!("executor gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ExecJob::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub gta: GtaConfig,
+    sim: GtaSim,
+    executor: Option<Executor>,
+    /// §5 exploration memoized per operator shape — repeated layers skip
+    /// the schedule search entirely (a large hot-path win; see §Perf).
+    schedule_cache: Mutex<HashMap<PGemm, Candidate>>,
+    pub metrics: Metrics,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Simulation-only coordinator.
+    pub fn new(gta: GtaConfig) -> Coordinator {
+        Coordinator {
+            sim: GtaSim::new(gta),
+            gta,
+            executor: None,
+            schedule_cache: Mutex::new(HashMap::new()),
+            metrics: Metrics::default(),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Coordinator with a functional PJRT engine attached.
+    pub fn with_engine(gta: GtaConfig, artifact_dir: PathBuf) -> Result<Coordinator> {
+        let mut c = Coordinator::new(gta);
+        c.executor = Some(Executor::spawn(artifact_dir)?);
+        Ok(c)
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.executor.is_some()
+    }
+
+    pub fn executor(&self) -> Option<&Executor> {
+        self.executor.as_ref()
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Schedule a p-GEMM (memoized).
+    pub fn schedule(&self, g: &PGemm) -> Candidate {
+        if let Some(hit) = self.schedule_cache.lock().unwrap().get(g) {
+            self.metrics.record_cache(true);
+            return *hit;
+        }
+        self.metrics.record_cache(false);
+        let cand = scheduler::schedule(g, &self.gta);
+        self.schedule_cache.lock().unwrap().insert(*g, cand);
+        cand
+    }
+
+    /// Handle one request synchronously.
+    pub fn handle(&self, req: Request) -> Response {
+        let t0 = Instant::now();
+        let (schedule, sim) = match &req.op {
+            TensorOp::PGemm(g) => {
+                let cand = self.schedule(g);
+                (Some(cand), cand.report)
+            }
+            TensorOp::Vector(_) => (None, self.sim.run(&req.op)),
+        };
+        let outputs = match &req.exec {
+            ExecKind::Simulate => None,
+            ExecKind::Functional { artifact, inputs } => match &self.executor {
+                Some(ex) => {
+                    self.metrics.record_functional(artifact);
+                    Some(ex.execute(artifact, inputs.clone()).unwrap_or_else(|e| {
+                        panic!("functional execution of {artifact} failed: {e:#}")
+                    }))
+                }
+                None => None,
+            },
+        };
+        let latency = t0.elapsed();
+        self.metrics
+            .record_request(matches!(req.op, TensorOp::PGemm(_)), latency);
+        Response { id: req.id, schedule, sim, outputs, latency }
+    }
+
+    /// Serve a batch of requests on `workers` threads. Functional jobs
+    /// serialize through the single PJRT executor; scheduling/simulation
+    /// parallelizes. Responses are returned sorted by request id.
+    pub fn serve(self: &Arc<Self>, requests: Vec<Request>, workers: usize) -> Vec<Response> {
+        let queue = Arc::new(Mutex::new(std::collections::VecDeque::from(requests)));
+        let (tx, rx) = mpsc::channel::<Response>();
+        let mut handles = Vec::new();
+        for w in 0..workers.max(1) {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let me = Arc::clone(self);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gta-worker-{w}"))
+                    .spawn(move || loop {
+                        let req = { queue.lock().unwrap().pop_front() };
+                        match req {
+                            Some(r) => {
+                                let resp = me.handle(r);
+                                if tx.send(resp).is_err() {
+                                    break;
+                                }
+                            }
+                            None => break,
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+        drop(tx);
+        let mut out: Vec<Response> = rx.into_iter().collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::VectorKind;
+    use crate::precision::Precision;
+
+    #[test]
+    fn simulate_only_requests() {
+        let c = Coordinator::new(GtaConfig::default());
+        let r = c.handle(Request {
+            id: 7,
+            op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+            exec: ExecKind::Simulate,
+        });
+        assert_eq!(r.id, 7);
+        assert!(r.schedule.is_some());
+        assert!(r.sim.cycles > 0);
+        assert!(r.outputs.is_none());
+    }
+
+    #[test]
+    fn schedule_cache_hits_on_repeat() {
+        let c = Coordinator::new(GtaConfig::default());
+        let g = PGemm::new(128, 64, 256, Precision::Bp16);
+        let a = c.schedule(&g);
+        let b = c.schedule(&g);
+        assert_eq!(a.config, b.config);
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.schedule_cache_hits, 1);
+        assert_eq!(snap.schedule_cache_misses, 1);
+    }
+
+    #[test]
+    fn serve_parallel_preserves_ids() {
+        let c = Arc::new(Coordinator::new(GtaConfig::default()));
+        let reqs: Vec<Request> = (0..32)
+            .map(|i| Request {
+                id: i,
+                op: if i % 2 == 0 {
+                    TensorOp::gemm(32 + i, 32, 32, Precision::Int16)
+                } else {
+                    TensorOp::vector(1024, Precision::Int16, VectorKind::Map)
+                },
+                exec: ExecKind::Simulate,
+            })
+            .collect();
+        let resps = c.serve(reqs, 4);
+        assert_eq!(resps.len(), 32);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        assert_eq!(c.metrics.snapshot().requests, 32);
+    }
+
+    #[test]
+    fn vector_ops_bypass_scheduler() {
+        let c = Coordinator::new(GtaConfig::default());
+        let r = c.handle(Request {
+            id: 0,
+            op: TensorOp::vector(4096, Precision::Fp32, VectorKind::Activation),
+            exec: ExecKind::Simulate,
+        });
+        assert!(r.schedule.is_none());
+        assert!(r.sim.cycles > 0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # GTA — a General Tensor Accelerator (reproduction)
+//!
+//! Library reproduction of *"GTA: a new General Tensor Accelerator with
+//! Better Area Efficiency and Data Reuse"* (CS.AR 2024): the MPRA
+//! multi-precision systolic model, the p-GEMM/vector operator
+//! classification, the joint dataflow × precision × array-resize
+//! scheduling space, cycle/traffic simulators for GTA and the three
+//! baselines (Ara VPU, H100 GPGPU, HyCube CGRA), and a tokio + PJRT
+//! execution runtime that runs the AOT-compiled Pallas functional model
+//! of the MPRA datapath.
+//!
+//! Layered per DESIGN.md:
+//! * [`precision`] / [`ops`] / [`lowering`] — the operator algebra (§3)
+//! * [`arch`] — MPRA/lane/SysCSR hardware model (§4)
+//! * [`scheduler`] — scheduling-space exploration (§5)
+//! * [`sim`] — cycle-accurate-style platform simulators (§6)
+//! * [`workloads`] — the Table 2 suite
+//! * [`runtime`] / [`coordinator`] — the L3 execution engine
+//! * [`report`] — regenerates every table and figure of the paper
+
+pub mod arch;
+pub mod coordinator;
+pub mod util;
+pub mod lowering;
+pub mod ops;
+pub mod precision;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod serve;
+pub mod sim;
+pub mod verify;
+pub mod workloads;
+
+pub use arch::{Arrangement, Dataflow, GtaConfig, SysCsr};
+pub use ops::{PGemm, TensorOp, VectorKind, VectorOp};
+pub use precision::Precision;

@@ -1,0 +1,199 @@
+//! Lowering: turn domain operators into the p-GEMM + vector decomposition
+//! GTA executes (§3.2). Each function returns the operator list in
+//! execution order; the coordinator schedules each element independently.
+//!
+//! Where the paper cites TTGT ("tensor contractions can be rewritten as
+//! Transpose-Transpose-GEMM-Transpose sequences"), the transposes appear
+//! as vector `Map` passes around the central p-GEMM.
+
+use crate::ops::{TensorOp, VectorKind};
+use crate::precision::Precision;
+
+/// `conv2d` via im2col: (C,H,W) ⊛ (K,C,R,S), valid padding, stride `stride`
+/// → GEMM `M=K, N=OH·OW, K=C·R·S` plus the im2col gather (a Map pass).
+pub fn conv2d_im2col(
+    c: u64,
+    h: u64,
+    w: u64,
+    k: u64,
+    r: u64,
+    s: u64,
+    stride: u64,
+    p: Precision,
+) -> Vec<TensorOp> {
+    assert!(h >= r && w >= s && stride >= 1);
+    let oh = (h - r) / stride + 1;
+    let ow = (w - s) / stride + 1;
+    vec![
+        // im2col patch gather: one copy per patch element
+        TensorOp::vector(c * r * s * oh * ow, p, VectorKind::Map),
+        TensorOp::gemm(k, oh * ow, c * r * s, p),
+    ]
+}
+
+/// Dense layer: `y[B,N] = x[B,K]·W[K,N]` (+ bias + activation vector ops).
+pub fn dense(b: u64, k: u64, n: u64, p: Precision, activation: bool) -> Vec<TensorOp> {
+    let mut ops = vec![TensorOp::gemm(b, n, k, p)];
+    ops.push(TensorOp::vector(b * n, p, VectorKind::Axpy)); // bias
+    if activation {
+        ops.push(TensorOp::vector(b * n, p, VectorKind::Activation));
+    }
+    ops
+}
+
+/// Tensor contraction via TTGT: contract a (I,J,K)×(K,L) style problem.
+/// `outer` = product of uncontracted lhs dims, `inner` = contracted dim,
+/// `rhs` = product of uncontracted rhs dims.
+pub fn contraction_ttgt(outer: u64, inner: u64, rhs: u64, p: Precision) -> Vec<TensorOp> {
+    vec![
+        TensorOp::vector(outer * inner, p, VectorKind::Map), // transpose in
+        TensorOp::gemm(outer, rhs, inner, p),
+        TensorOp::vector(outer * rhs, p, VectorKind::Map), // transpose out
+    ]
+}
+
+/// MTTKRP (matricized-tensor × Khatri-Rao product): X(1)·(C ⊙ B) for an
+/// I×J×K tensor and rank-R factors — GEMM (I, R, J·K) after matricization.
+pub fn mttkrp(i: u64, j: u64, k: u64, rank: u64, p: Precision) -> Vec<TensorOp> {
+    vec![
+        TensorOp::vector(j * k * rank, p, VectorKind::Map), // Khatri-Rao product
+        TensorOp::gemm(i, rank, j * k, p),
+    ]
+}
+
+/// Big-number multiplication (BNM): two `l`-limb operands → the rank-1
+/// limb p-GEMM (outer product) + carry pass (§3.1, Fig. 1).
+pub fn bignum_mul(l: u64) -> Vec<TensorOp> {
+    vec![
+        TensorOp::gemm(l, l, 1, Precision::Int8), // limb outer product
+        TensorOp::vector(2 * l - 1, Precision::Int32, VectorKind::Reduce), // carry chain
+    ]
+}
+
+/// FIR filter (audio FFE): `taps`-tap filter over `n` samples — a GEMV-like
+/// p-GEMM (1, n, taps) expressed over the delay-line matrix.
+pub fn fir_filter(n: u64, taps: u64, p: Precision) -> Vec<TensorOp> {
+    vec![
+        TensorOp::vector(n, p, VectorKind::Map), // delay-line window gather
+        TensorOp::gemm(1, n, taps, p),
+    ]
+}
+
+/// Colour-space conversion (SRGB2XYZ): 3×3 matrix × `pixels` columns.
+pub fn color_convert(pixels: u64, p: Precision) -> Vec<TensorOp> {
+    vec![
+        TensorOp::gemm(3, pixels, 3, p),
+        TensorOp::vector(3 * pixels, p, VectorKind::Activation), // gamma
+    ]
+}
+
+/// PCA: covariance GEMM (D,D,N) + eigen iterations as GEMV p-GEMMs.
+pub fn pca(n: u64, d: u64, iters: u64, p: Precision) -> Vec<TensorOp> {
+    let mut ops = vec![
+        TensorOp::vector(n * d, p, VectorKind::Map), // centering
+        TensorOp::gemm(d, d, n, p),                  // XᵀX
+    ];
+    for _ in 0..iters {
+        ops.push(TensorOp::gemm(d, 1, d, p)); // power-iteration GEMV
+        ops.push(TensorOp::vector(d, p, VectorKind::Reduce)); // normalize
+    }
+    ops
+}
+
+/// Blocked matrix decomposition (LU-style) trailing updates: for an
+/// `n`×`n` matrix with block size `b`, each step k does a (n-kb)² × b GEMM.
+pub fn matrix_decomposition(n: u64, b: u64, p: Precision) -> Vec<TensorOp> {
+    assert!(b > 0 && n >= b);
+    let mut ops = Vec::new();
+    let steps = n / b;
+    for step in 0..steps {
+        let rem = n - (step + 1) * b;
+        // panel factorization: vector-heavy (division, scaling)
+        ops.push(TensorOp::vector((n - step * b) * b, p, VectorKind::Axpy));
+        if rem > 0 {
+            // trailing update A22 -= A21·A12
+            ops.push(TensorOp::gemm(rem, rem, b, p));
+        }
+    }
+    ops
+}
+
+/// NTT butterfly stages (encryption): n·log n butterflies, vector-mode
+/// (no reuse), plus twiddle multiplication.
+pub fn ntt(n: u64, p: Precision) -> Vec<TensorOp> {
+    let log_n = 64 - (n - 1).leading_zeros() as u64;
+    vec![TensorOp::vector(n * log_n, p, VectorKind::Axpy)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::classify::{classify, OpClass};
+
+    #[test]
+    fn conv_gemm_dims_match_im2col() {
+        let ops = conv2d_im2col(64, 15, 15, 64, 3, 3, 1, Precision::Int8);
+        match ops[1] {
+            TensorOp::PGemm(g) => {
+                assert_eq!(g.m, 64);
+                assert_eq!(g.n, 13 * 13);
+                assert_eq!(g.k, 64 * 9);
+            }
+            _ => panic!("expected GEMM"),
+        }
+    }
+
+    #[test]
+    fn conv_total_macs_equal_direct_conv() {
+        // direct conv MACs = K·OH·OW·C·R·S == GEMM M·N·K
+        let (c, h, w, k, r) = (16u64, 10u64, 10u64, 8u64, 3u64);
+        let ops = conv2d_im2col(c, h, w, k, r, r, 1, Precision::Int8);
+        let gemm_macs = match ops[1] {
+            TensorOp::PGemm(g) => g.macs(),
+            _ => unreachable!(),
+        };
+        let oh = h - r + 1;
+        assert_eq!(gemm_macs, k * oh * oh * c * r * r);
+    }
+
+    #[test]
+    fn bignum_is_rank1_pgemm() {
+        let ops = bignum_mul(64);
+        match ops[0] {
+            TensorOp::PGemm(g) => {
+                assert_eq!((g.m, g.n, g.k), (64, 64, 1));
+                assert_eq!(g.precision, Precision::Int8);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn decomposition_shrinks_updates() {
+        let ops = matrix_decomposition(256, 32, Precision::Int32);
+        let gemms: Vec<_> = ops
+            .iter()
+            .filter_map(|o| match o {
+                TensorOp::PGemm(g) => Some(g.m),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(gemms.len(), 7); // last step has no trailing block
+        assert!(gemms.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn ntt_is_vector_class() {
+        for op in ntt(8192, Precision::Int64) {
+            assert_eq!(classify(&op), OpClass::Vector);
+        }
+    }
+
+    #[test]
+    fn dense_contains_pgemm_and_vector() {
+        let ops = dense(16, 256, 1024, Precision::Bp16, true);
+        assert_eq!(ops.len(), 3);
+        assert!(matches!(ops[0], TensorOp::PGemm(_)));
+        assert!(matches!(ops[1], TensorOp::Vector(_)));
+    }
+}

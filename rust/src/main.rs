@@ -1,0 +1,252 @@
+//! `gta` — CLI for the GTA reproduction: regenerate the paper's tables and
+//! figures, run workloads on any platform simulator, explore schedules,
+//! and drive the functional PJRT path.
+
+use anyhow::{anyhow, bail, Result};
+use gta::ops::PGemm;
+use gta::precision::Precision;
+use gta::report;
+use gta::runtime::default_artifact_dir;
+use gta::sim::{cgra::CgraSim, gpgpu::GpgpuSim, gta::GtaSim, vpu::VpuSim, Platform};
+use gta::workloads;
+use gta::{scheduler, GtaConfig};
+
+const USAGE: &str = "\
+gta — General Tensor Accelerator reproduction
+
+USAGE:
+  gta table1|table2|table3          print a paper table
+  gta fig2|fig5|fig6|fig7|fig8|fig9|fig10
+                                    regenerate a paper figure's data
+  gta run --workload <NAME|all> [--platform gta|vpu|gpgpu|cgra] [--lanes N]
+                                    simulate a Table 2 workload
+  gta schedule --gemm MxNxK --precision <p> [--lanes N]
+                                    explore + select a schedule (§5)
+  gta verify [--artifacts DIR]      run every AOT artifact via PJRT and
+                                    check numerics against the rust oracle
+  gta serve --requests N [--artifacts DIR] [--workers W]
+                                    e2e driver: mixed request stream
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = Flags::parse(&args[args.len().min(1)..]);
+    match cmd {
+        "table1" => {
+            println!("Table 1: evaluated platforms");
+            for p in report::table1() {
+                println!(
+                    "  {:<18} {:>4}nm {:>6}MHz {:>10.2}mm²  {}",
+                    p.name, p.node_nm, p.freq_mhz, p.area_mm2, p.compute_units
+                );
+            }
+        }
+        "table2" => {
+            println!("Table 2: workload suite");
+            for w in workloads::suite() {
+                println!(
+                    "  {:<5} {:<8} {:>5} ops {:>16} MACs  {}",
+                    w.name,
+                    w.precision.name(),
+                    w.ops.len(),
+                    w.total_macs(),
+                    w.description
+                );
+            }
+        }
+        "table3" => print!("{}", report::render_table3()),
+        "fig2" => {
+            println!("Fig 2: operator classification (parallelism, intensity)");
+            for p in report::fig2() {
+                println!(
+                    "  {:<8} parallelism={:>12.1} intensity={:>8.2} -> {:?}",
+                    p.family, p.parallelism, p.intensity, p.class
+                );
+            }
+        }
+        "fig5" => {
+            println!("Fig 5: dataflow pattern matching (64-lane, 64x64 array)");
+            for r in report::fig5() {
+                println!(
+                    "  {:<24} mapped {:>4}x{:<5} -> {:<9} max_k_seg={}",
+                    r.workload, r.mapped.0, r.mapped.1, r.coverage, r.max_k_segments
+                );
+            }
+        }
+        "fig6" => {
+            println!("Fig 6: MPRA energy per array-cycle (pJ)");
+            for r in report::fig6() {
+                println!(
+                    "  {:<6} WS={:>6.2} OS={:>6.2} SIMD={:>6.2}  (Ara unit {:>6.2})",
+                    r.precision, r.ws_pj, r.os_pj, r.simd_pj, r.ara_unit_pj
+                );
+            }
+        }
+        "fig7" => print!("{}", report::render_comparison(&report::fig7())),
+        "fig8" => print!("{}", report::render_comparison(&report::fig8())),
+        "fig10" => print!("{}", report::render_comparison(&report::fig10())),
+        "fig9" => {
+            println!("Fig 9: schedule space scatter (Alexnet conv3, 3 precisions)");
+            println!(
+                "  {:<6} {:<5} {:<6} {:>5} {:>12} {:>12} sel",
+                "prec", "flow", "arr", "kseg", "cycles_ratio", "mem_ratio"
+            );
+            for p in report::fig9() {
+                println!(
+                    "  {:<6} {:<5} {:<6} {:>5} {:>12.3} {:>12.3} {}",
+                    p.precision,
+                    p.dataflow,
+                    p.arrangement,
+                    p.k_segments,
+                    p.cycles_ratio,
+                    p.mem_ratio,
+                    if p.selected { "*" } else { "" }
+                );
+            }
+        }
+        "run" => cmd_run(&flags)?,
+        "schedule" => cmd_schedule(&flags)?,
+        "verify" => cmd_verify(&flags)?,
+        "serve" => cmd_serve(&flags)?,
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown command {other:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Tiny flag parser: `--key value` pairs (`--flag` alone = "true").
+struct Flags(std::collections::HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut map = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    map.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                    continue;
+                }
+                map.insert(key.to_string(), "true".to_string());
+            }
+            i += 1;
+        }
+        Flags(map)
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(String::as_str)
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn platform_for(name: &str, lanes: u32) -> Result<Box<dyn Platform>> {
+    Ok(match name {
+        "gta" => Box::new(GtaSim::new(GtaConfig::with_lanes(lanes))),
+        "vpu" => Box::new(VpuSim::default()),
+        "gpgpu" => Box::new(GpgpuSim::default()),
+        "cgra" => Box::new(CgraSim::default()),
+        other => bail!("unknown platform {other:?} (gta|vpu|gpgpu|cgra)"),
+    })
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let which = flags.get("workload").unwrap_or("all");
+    let lanes = flags.get_u64("lanes", 4) as u32;
+    let platform = platform_for(flags.get("platform").unwrap_or("gta"), lanes)?;
+    let suite = workloads::suite();
+    let selected: Vec<_> = suite
+        .iter()
+        .filter(|w| which == "all" || w.name.eq_ignore_ascii_case(which))
+        .collect();
+    if selected.is_empty() {
+        bail!("no workload named {which:?}");
+    }
+    println!(
+        "{:<6} {:>16} {:>16} {:>14} {:>8}",
+        "name", "cycles", "mem bytes", "energy(uJ)", "util"
+    );
+    for w in selected {
+        let r = platform.run_all(&w.ops);
+        println!(
+            "{:<6} {:>16} {:>16} {:>14.2} {:>7.1}%  ({} @{}MHz)",
+            w.name,
+            r.cycles,
+            r.memory_access(),
+            r.energy_pj / 1e6,
+            r.utilization * 100.0,
+            platform.name(),
+            r.freq_mhz
+        );
+    }
+    Ok(())
+}
+
+fn cmd_schedule(flags: &Flags) -> Result<()> {
+    let gemm = flags.get("gemm").ok_or_else(|| anyhow!("--gemm MxNxK required"))?;
+    let dims: Vec<u64> = gemm
+        .split(['x', 'X'])
+        .map(|d| d.parse().map_err(|_| anyhow!("bad dim {d:?}")))
+        .collect::<Result<_>>()?;
+    let [m, n, k] = dims[..] else { bail!("--gemm wants MxNxK") };
+    let precision = Precision::parse(flags.get("precision").unwrap_or("int8"))
+        .ok_or_else(|| anyhow!("bad precision"))?;
+    let cfg = GtaConfig::with_lanes(flags.get_u64("lanes", 16) as u32);
+    let g = PGemm::new(m, n, k, precision);
+    let cands = scheduler::explore(&g, &cfg);
+    let best = scheduler::select(&cands);
+    println!(
+        "explored {} schedule candidates for {m}x{n}x{k} {}",
+        cands.len(),
+        precision
+    );
+    for c in &cands {
+        let sel = if c.config == best.config { " <= selected" } else { "" };
+        println!(
+            "  {:<4} {:>2}x{:<2} kseg={:<3} {:?}: cycles={} mem={} util={:.2}{}",
+            c.config.dataflow.name(),
+            c.config.arrangement.lane_rows,
+            c.config.arrangement.lane_cols,
+            c.config.k_segments,
+            c.config.tile_dir,
+            c.report.cycles,
+            c.report.memory_access(),
+            c.report.utilization,
+            sel
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(flags: &Flags) -> Result<()> {
+    let dir: std::path::PathBuf = flags
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifact_dir);
+    let outcome = gta::verify::verify_all(&dir, true)?;
+    if outcome.failed > 0 {
+        bail!("{} artifact verifications FAILED", outcome.failed);
+    }
+    println!("all {} artifact verifications passed", outcome.passed);
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let n = flags.get_u64("requests", 64);
+    let workers = flags.get_u64("workers", 4) as usize;
+    let dir: std::path::PathBuf = flags
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(default_artifact_dir);
+    let summary = gta::serve::run_mixed_stream(dir, n, workers)?;
+    print!("{}", summary.render());
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! Fig. 2 — classification of tensor operators along the two axes of §3.2:
+//! **algorithmic parallelism** (vectorizable extent) and **arithmetic
+//! intensity** (MACs per compulsorily-moved element).
+//!
+//! The classification decides how GTA executes an operator: intensity
+//! above a threshold ⇒ lower to p-GEMM on the systolic array; below ⇒
+//! compile to vector (SIMD) mode.
+
+use super::{PGemm, TensorOp, VectorOp};
+
+/// Named operator families placed on the Fig. 2 scatter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatorFamily {
+    Gemm,
+    Conv,
+    Gemv,
+    Mttkrp,
+    Ttmc,
+    Dot,
+    Axpy,
+    FirFilter,
+    Fft,
+    Stencil,
+    ElementWise,
+    Reduction,
+    Ntt,
+    BigNumMul,
+}
+
+impl OperatorFamily {
+    pub const ALL: [OperatorFamily; 14] = [
+        OperatorFamily::Gemm,
+        OperatorFamily::Conv,
+        OperatorFamily::Gemv,
+        OperatorFamily::Mttkrp,
+        OperatorFamily::Ttmc,
+        OperatorFamily::Dot,
+        OperatorFamily::Axpy,
+        OperatorFamily::FirFilter,
+        OperatorFamily::Fft,
+        OperatorFamily::Stencil,
+        OperatorFamily::ElementWise,
+        OperatorFamily::Reduction,
+        OperatorFamily::Ntt,
+        OperatorFamily::BigNumMul,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OperatorFamily::Gemm => "GEMM",
+            OperatorFamily::Conv => "CONV",
+            OperatorFamily::Gemv => "GEMV",
+            OperatorFamily::Mttkrp => "MTTKRP",
+            OperatorFamily::Ttmc => "TTMc",
+            OperatorFamily::Dot => "DOT",
+            OperatorFamily::Axpy => "AXPY",
+            OperatorFamily::FirFilter => "FIR",
+            OperatorFamily::Fft => "FFT",
+            OperatorFamily::Stencil => "STENCIL",
+            OperatorFamily::ElementWise => "ELTWISE",
+            OperatorFamily::Reduction => "REDUCE",
+            OperatorFamily::Ntt => "NTT",
+            OperatorFamily::BigNumMul => "BNM",
+        }
+    }
+
+    /// Indicative (parallelism, intensity) coordinates for a representative
+    /// instance — the Fig. 2 placement. Parallelism = independent outputs;
+    /// intensity = MACs/element. Representative sizes follow the paper's
+    /// workload suite.
+    pub fn representative(self) -> (f64, f64) {
+        let g = |m: u64, n: u64, k: u64| {
+            let p = PGemm::new(m, n, k, crate::precision::Precision::Fp32);
+            (p.parallelism() as f64, p.arithmetic_intensity())
+        };
+        match self {
+            OperatorFamily::Gemm => g(512, 512, 512),
+            OperatorFamily::Conv => g(256, 13 * 13, 3 * 3 * 256),
+            OperatorFamily::Gemv => g(1, 4096, 4096),
+            OperatorFamily::Mttkrp => g(64 * 64, 32, 64),
+            OperatorFamily::Ttmc => g(64 * 64, 64, 64),
+            OperatorFamily::Dot => g(1, 1, 65536),
+            OperatorFamily::Axpy => (65536.0, 1.0 / 3.0),
+            OperatorFamily::FirFilter => g(1, 16384, 256),
+            OperatorFamily::Fft => (4096.0, 0.75), // butterflies: log-depth, low reuse
+            OperatorFamily::Stencil => g(1, 65536, 9),
+            OperatorFamily::ElementWise => (1_048_576.0, 1.0 / 3.0),
+            OperatorFamily::Reduction => (1.0, 1.0),
+            OperatorFamily::Ntt => g(1, 8192, 64),
+            OperatorFamily::BigNumMul => g(64, 64, 1),
+        }
+    }
+}
+
+/// Execution class an operator lowers to (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// Reuse-bearing: map onto the systolic array as a p-GEMM.
+    PGemm,
+    /// Reuse-free: execute in the VPU's SIMD mode.
+    Vector,
+}
+
+/// Intensity threshold below which p-GEMM lowering cannot beat SIMD:
+/// at intensity ≤ 1 every fetched element is used at most once, so the
+/// systolic array's reuse machinery buys nothing.
+pub const INTENSITY_THRESHOLD: f64 = 1.0;
+
+/// Classify a lowered operator.
+pub fn classify(op: &TensorOp) -> OpClass {
+    match op {
+        TensorOp::Vector(_) => OpClass::Vector,
+        TensorOp::PGemm(g) => {
+            if g.arithmetic_intensity() > INTENSITY_THRESHOLD {
+                OpClass::PGemm
+            } else {
+                OpClass::Vector
+            }
+        }
+    }
+}
+
+/// Classify a family by its representative instance (Fig. 2 partition).
+pub fn classify_family(f: OperatorFamily) -> OpClass {
+    let (_, intensity) = f.representative();
+    if intensity > INTENSITY_THRESHOLD {
+        OpClass::PGemm
+    } else {
+        OpClass::Vector
+    }
+}
+
+/// A point of the Fig. 2 scatter.
+#[derive(Debug, Clone)]
+pub struct Fig2Point {
+    pub family: String,
+    pub parallelism: f64,
+    pub intensity: f64,
+    pub class: OpClass,
+}
+
+/// Regenerate the Fig. 2 dataset.
+pub fn fig2_points() -> Vec<Fig2Point> {
+    OperatorFamily::ALL
+        .iter()
+        .map(|&f| {
+            let (p, i) = f.representative();
+            Fig2Point {
+                family: f.name().to_string(),
+                parallelism: p,
+                intensity: i,
+                class: classify_family(f),
+            }
+        })
+        .collect()
+}
+
+/// Degenerate-GEMM vectorization fallback: a p-GEMM that is really a dot
+/// or thin GEMV can be re-expressed as a vector op (the paper's "some
+/// p-GEMM operators may get better result from vectorization", §5).
+pub fn as_vector_fallback(g: &PGemm) -> Option<VectorOp> {
+    if g.m == 1 && g.n == 1 {
+        Some(VectorOp::new(g.k, g.precision, super::VectorKind::Axpy))
+    } else if g.is_degenerate() {
+        Some(VectorOp::new(
+            g.m.max(g.n) * g.k,
+            g.precision,
+            super::VectorKind::Axpy,
+        ))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::VectorKind;
+    use crate::precision::Precision;
+
+    #[test]
+    fn gemm_like_families_are_pgemm_class() {
+        for f in [
+            OperatorFamily::Gemm,
+            OperatorFamily::Conv,
+            OperatorFamily::Mttkrp,
+            OperatorFamily::Ttmc,
+        ] {
+            assert_eq!(classify_family(f), OpClass::PGemm, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn reuse_free_families_are_vector_class() {
+        for f in [
+            OperatorFamily::Axpy,
+            OperatorFamily::ElementWise,
+            OperatorFamily::Fft,
+            OperatorFamily::Reduction,
+        ] {
+            assert_eq!(classify_family(f), OpClass::Vector, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn fig2_has_all_families_and_spread() {
+        let pts = fig2_points();
+        assert_eq!(pts.len(), OperatorFamily::ALL.len());
+        let n_pgemm = pts.iter().filter(|p| p.class == OpClass::PGemm).count();
+        let n_vec = pts.len() - n_pgemm;
+        // square GEMM/CONV/contractions sit deep in the p-GEMM region;
+        // GEMV/FIR/outer-product land near intensity≈1 and vectorize
+        assert!(n_pgemm >= 4, "expected a populated p-GEMM region, got {n_pgemm}");
+        assert!(n_vec >= 6, "expected a populated vector region, got {n_vec}");
+    }
+
+    #[test]
+    fn dot_product_falls_back_to_vector() {
+        let g = PGemm::new(1, 1, 65536, Precision::Fp32);
+        assert_eq!(classify(&TensorOp::PGemm(g)), OpClass::Vector);
+        let v = as_vector_fallback(&g).unwrap();
+        assert_eq!(v.len, 65536);
+        assert_eq!(v.kind, VectorKind::Axpy);
+    }
+
+    #[test]
+    fn big_gemm_classified_pgemm() {
+        let g = PGemm::new(512, 512, 512, Precision::Bp16);
+        assert_eq!(classify(&TensorOp::PGemm(g)), OpClass::PGemm);
+    }
+}

@@ -1,0 +1,182 @@
+//! Tensor-operator IR: the paper's §3.2 classification of tensor algebra
+//! into **p-GEMM** (anything with reuse, lowered to an M×N×K contraction of
+//! arbitrary — possibly degenerate — size) and **vector** operators
+//! (no arithmetic intensity, compiled to SIMD).
+
+pub mod classify;
+
+use crate::precision::Precision;
+
+/// A pseudo-GEMM: `C[M,N] += A[M,K] · B[K,N]` at some precision.
+///
+/// "p" is for *pseudo*: M/N/K may be 1 (GEMV, dot, outer product) — the
+/// paper folds all reuse-bearing operators into this one shape (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PGemm {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub precision: Precision,
+}
+
+impl PGemm {
+    pub fn new(m: u64, n: u64, k: u64, precision: Precision) -> Self {
+        assert!(m > 0 && n > 0 && k > 0, "degenerate dims are 1, not 0");
+        PGemm { m, n, k, precision }
+    }
+
+    /// Multiply-accumulate count (at workload precision, not limb level).
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    /// Compulsory traffic in elements: read A and B once, write C once.
+    pub fn compulsory_elems(&self) -> u64 {
+        self.m * self.k + self.k * self.n + self.m * self.n
+    }
+
+    /// Compulsory traffic in bytes.
+    pub fn compulsory_bytes(&self) -> u64 {
+        self.compulsory_elems() * self.precision.bytes()
+    }
+
+    /// Arithmetic intensity: MACs per compulsorily-moved element.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.macs() as f64 / self.compulsory_elems() as f64
+    }
+
+    /// Algorithmic parallelism: independent output elements (M·N) —
+    /// the vectorizable extent of the kernel.
+    pub fn parallelism(&self) -> u64 {
+        self.m * self.n
+    }
+
+    /// Is this effectively a matrix-vector product / dot product?
+    pub fn is_degenerate(&self) -> bool {
+        self.m == 1 || self.n == 1
+    }
+}
+
+/// Element-wise/reduction work with no reuse opportunity: runs in the
+/// VPU's native SIMD mode on GTA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VectorKind {
+    /// z = x ⊙ y (mul/add/sub/min/max …), 1 MAC-equivalent per element
+    Map,
+    /// z = a·x + y
+    Axpy,
+    /// scalar = Σ reduce
+    Reduce,
+    /// table lookup / activation / rounding — 1 op per element, no MAC
+    Activation,
+}
+
+/// A vector operator over `len` elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VectorOp {
+    pub len: u64,
+    pub precision: Precision,
+    pub kind: VectorKind,
+}
+
+impl VectorOp {
+    pub fn new(len: u64, precision: Precision, kind: VectorKind) -> Self {
+        assert!(len > 0);
+        VectorOp { len, precision, kind }
+    }
+
+    /// Operation count (MAC-equivalents).
+    pub fn ops(&self) -> u64 {
+        match self.kind {
+            VectorKind::Map | VectorKind::Activation | VectorKind::Reduce => self.len,
+            VectorKind::Axpy => self.len, // fused mul-add = 1 MAC
+        }
+    }
+
+    /// Element traffic: inputs + output.
+    pub fn elems(&self) -> u64 {
+        match self.kind {
+            VectorKind::Map | VectorKind::Axpy => 3 * self.len,
+            VectorKind::Reduce => self.len + 1,
+            VectorKind::Activation => 2 * self.len,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.elems() * self.precision.bytes()
+    }
+}
+
+/// A tensor operator after decomposition (§3.2): either reuse-bearing
+/// (p-GEMM) or reuse-free (vector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorOp {
+    PGemm(PGemm),
+    Vector(VectorOp),
+}
+
+impl TensorOp {
+    pub fn precision(&self) -> Precision {
+        match self {
+            TensorOp::PGemm(g) => g.precision,
+            TensorOp::Vector(v) => v.precision,
+        }
+    }
+
+    pub fn macs(&self) -> u64 {
+        match self {
+            TensorOp::PGemm(g) => g.macs(),
+            TensorOp::Vector(v) => v.ops(),
+        }
+    }
+
+    pub fn compulsory_bytes(&self) -> u64 {
+        match self {
+            TensorOp::PGemm(g) => g.compulsory_bytes(),
+            TensorOp::Vector(v) => v.bytes(),
+        }
+    }
+
+    pub fn gemm(m: u64, n: u64, k: u64, p: Precision) -> TensorOp {
+        TensorOp::PGemm(PGemm::new(m, n, k, p))
+    }
+
+    pub fn vector(len: u64, p: Precision, kind: VectorKind) -> TensorOp {
+        TensorOp::Vector(VectorOp::new(len, p, kind))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgemm_counts() {
+        let g = PGemm::new(4, 8, 16, Precision::Int8);
+        assert_eq!(g.macs(), 512);
+        assert_eq!(g.compulsory_elems(), 4 * 16 + 16 * 8 + 4 * 8);
+        assert_eq!(g.compulsory_bytes(), g.compulsory_elems());
+        assert!(!g.is_degenerate());
+        assert!(PGemm::new(1, 8, 16, Precision::Int8).is_degenerate());
+    }
+
+    #[test]
+    fn intensity_grows_with_size() {
+        let small = PGemm::new(4, 4, 4, Precision::Fp32);
+        let big = PGemm::new(256, 256, 256, Precision::Fp32);
+        assert!(big.arithmetic_intensity() > small.arithmetic_intensity());
+    }
+
+    #[test]
+    fn vector_op_has_no_reuse() {
+        let v = VectorOp::new(1024, Precision::Fp32, VectorKind::Map);
+        // intensity = ops/elems = 1/3 < 1: no reuse, the Fig 2 bottom band
+        assert!((v.ops() as f64 / v.elems() as f64) < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_dims_rejected() {
+        PGemm::new(0, 1, 1, Precision::Int8);
+    }
+}

@@ -1,0 +1,119 @@
+//! Multi-precision accumulator model (paper Fig. 3).
+//!
+//! The systolic array emits 16-bit limb partial products; the accumulator
+//! is a tree of basic units that shift-adds four partial products per
+//! doubling of width ("a 16-bit accumulator unit takes four 16-bit
+//! operands X₁Y₁, X₂Y₁, X₁Y₂, X₂Y₂ ... and uses shift-add operations").
+//! Carries between limbs of a big-number product are also resolved here —
+//! the array itself never sees a carry.
+
+/// One basic 16-bit accumulator unit: combine the four cross partial
+/// products of a 16×16-bit multiplication split into 8-bit halves.
+///
+/// `x = x2·2⁸ + x1`, `y = y2·2⁸ + y1` ⇒
+/// `x·y = x1y1 + (x2y1 + x1y2)·2⁸ + x2y2·2¹⁶`.
+pub fn unit16(x1y1: i64, x2y1: i64, x1y2: i64, x2y2: i64) -> i64 {
+    x1y1 + ((x2y1 + x1y2) << 8) + (x2y2 << 16)
+}
+
+/// Recursively combine an `n×n` grid of limb partial products
+/// (`grid[i][j] = xᵢ·yⱼ`, little-endian limbs) into the full product.
+/// This is the accumulator tree the MPRA pairs with an `n`-limb mapping.
+pub fn combine(grid: &[Vec<i64>]) -> i64 {
+    let n = grid.len();
+    let mut acc = 0i64;
+    for (i, row) in grid.iter().enumerate() {
+        assert_eq!(row.len(), n, "partial-product grid must be square");
+        for (j, &p) in row.iter().enumerate() {
+            acc = acc.wrapping_add(p.wrapping_shl(8 * (i + j) as u32));
+        }
+    }
+    acc
+}
+
+/// Carry-propagate a pre-carry limb vector (the BNM accumulator step):
+/// turn column sums `c[k] = Σ_{i+j=k} aᵢbⱼ` into proper base-256 limbs.
+pub fn carry_propagate(pre: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(pre.len() + 8);
+    let mut carry: i64 = 0;
+    for &v in pre {
+        let s = v + carry;
+        out.push((s & 0xFF) as u8);
+        carry = s >> 8;
+    }
+    while carry != 0 {
+        out.push((carry & 0xFF) as u8);
+        carry >>= 8;
+    }
+    out
+}
+
+/// Interpret little-endian base-256 limbs as a big unsigned integer,
+/// returned as decimal string (for display/verification of BNM results
+/// beyond u128 range).
+pub fn limbs_to_decimal(limbs: &[u8]) -> String {
+    // schoolbook base conversion; fine for the ≤128-limb artifacts
+    let mut digits: Vec<u8> = vec![0]; // little-endian decimal digits
+    for &l in limbs.iter().rev() {
+        // digits = digits*256 + l
+        let mut carry = l as u32;
+        for d in digits.iter_mut() {
+            let v = (*d as u32) * 256 + carry;
+            *d = (v % 10) as u8;
+            carry = v / 10;
+        }
+        while carry > 0 {
+            digits.push((carry % 10) as u8);
+            carry /= 10;
+        }
+    }
+    let s: String = digits.iter().rev().map(|d| (b'0' + d) as char).collect();
+    let s = s.trim_start_matches('0');
+    if s.is_empty() { "0".to_string() } else { s.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::limbs::decompose;
+
+    #[test]
+    fn unit16_reconstructs_16bit_product() {
+        for &(x, y) in &[(0x1234i64, 0x5678i64), (255, 255), (1, 0x7FFF)] {
+            let (x1, x2) = (x & 0xFF, x >> 8);
+            let (y1, y2) = (y & 0xFF, y >> 8);
+            assert_eq!(unit16(x1 * y1, x2 * y1, x1 * y2, x2 * y2), x * y);
+        }
+    }
+
+    #[test]
+    fn combine_reconstructs_wide_products() {
+        // 32-bit (4-limb) signed product, exact in i64
+        for &(x, y) in &[(0x1234_5678i64, 0x0EDC_BA98i64), (-123456, 789012)] {
+            let xs = decompose(x, 4);
+            let ys = decompose(y, 4);
+            let grid: Vec<Vec<i64>> =
+                xs.iter().map(|&xi| ys.iter().map(|&yj| xi * yj).collect()).collect();
+            assert_eq!(combine(&grid), x * y);
+        }
+    }
+
+    #[test]
+    fn carry_propagation_normalizes() {
+        // 255*255 = 65025 -> pre-carry [65025]; limbs 0x01 0xFE 0x00 ...
+        let limbs = carry_propagate(&[65025]);
+        assert_eq!(limbs[0], 0x01);
+        assert_eq!(limbs[1], 0xFE);
+        assert_eq!(limbs.get(2).copied().unwrap_or(0), 0);
+    }
+
+    #[test]
+    fn decimal_conversion() {
+        assert_eq!(limbs_to_decimal(&[0]), "0");
+        assert_eq!(limbs_to_decimal(&[1, 1]), "257");
+        // 2^64 = 18446744073709551616 : limb 8 set
+        let mut l = vec![0u8; 9];
+        l[8] = 1;
+        assert_eq!(limbs_to_decimal(&l), "18446744073709551616");
+    }
+}

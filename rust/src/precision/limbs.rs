@@ -1,0 +1,163 @@
+//! Limb algebra: the scalar model of the MPRA datapath.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (little-endian 8-bit
+//! limbs, signed-MSB scheme) so the rust side can independently verify the
+//! numerics that come back from the PJRT-executed Pallas kernels.
+
+/// Split a signed value into `n` little-endian limbs.
+///
+/// Lower limbs are unsigned bytes; the TOP limb is sign-extended (the
+/// signed-MSB scheme of the Fig. 3 accumulator), so the value recomposes
+/// exactly for in-range inputs.
+pub fn decompose(x: i64, n: u32) -> Vec<i64> {
+    (0..n)
+        .map(|i| {
+            if i == n - 1 {
+                x >> (8 * i)
+            } else {
+                (x >> (8 * i)) & 0xFF
+            }
+        })
+        .collect()
+}
+
+/// Inverse of [`decompose`].
+pub fn recompose(limbs: &[i64]) -> i64 {
+    limbs
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| l.wrapping_shl(8 * i as u32))
+        .fold(0i64, i64::wrapping_add)
+}
+
+/// One scalar multi-precision product the way the array computes it:
+/// all `n²` limb cross-products, shift-added (§3.1, Fig. 1a).
+pub fn limb_mul(x: i64, y: i64, n: u32, width: u32) -> i64 {
+    let xs = decompose(x, n);
+    let ys = decompose(y, n);
+    let mut acc = 0i64;
+    for (i, &xi) in xs.iter().enumerate() {
+        for (j, &yj) in ys.iter().enumerate() {
+            let shift = 8 * (i + j) as u32;
+            if shift >= width {
+                continue; // vanishes mod 2^width
+            }
+            acc = acc.wrapping_add(xi.wrapping_mul(yj).wrapping_shl(shift));
+        }
+    }
+    truncate(acc, width)
+}
+
+/// Limb-decomposed GEMM over i64 scalars — the oracle the PJRT results are
+/// checked against (`C = A·B` mod `2^width`, row-major).
+pub fn limb_gemm(
+    a: &[i64],
+    b: &[i64],
+    m: usize,
+    k: usize,
+    n: usize,
+    n_limbs: u32,
+    width: u32,
+) -> Vec<i64> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0i64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i64;
+            for kk in 0..k {
+                acc = acc.wrapping_add(limb_mul(a[i * k + kk], b[kk * n + j], n_limbs, width));
+            }
+            c[i * n + j] = truncate(acc, width);
+        }
+    }
+    c
+}
+
+/// Wrap a value to `width` bits with sign extension (two's-complement
+/// accumulator semantics).
+pub fn truncate(v: i64, width: u32) -> i64 {
+    if width >= 64 {
+        v
+    } else {
+        (v << (64 - width)) >> (64 - width)
+    }
+}
+
+/// Big-number (BNM) pre-carry limb product: `c[k] = Σ_{i+j=k} a_i·b_j`
+/// (the rank-1 p-GEMM the bignum Pallas kernel computes).
+pub fn bignum_mul_precarry(a: &[u8], b: &[u8]) -> Vec<i64> {
+    if a.is_empty() || b.is_empty() {
+        return vec![];
+    }
+    let mut c = vec![0i64; a.len() + b.len() - 1];
+    for (i, &ai) in a.iter().enumerate() {
+        for (j, &bj) in b.iter().enumerate() {
+            c[i + j] += ai as i64 * bj as i64;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_recompose_roundtrip() {
+        for &(x, n) in &[
+            (0i64, 1u32),
+            (127, 1),
+            (-128, 1),
+            (32767, 2),
+            (-32768, 2),
+            (0x1234_5678, 4),
+            (-0x1234_5678, 4),
+            (i64::MAX, 8),
+            (i64::MIN, 8),
+        ] {
+            assert_eq!(recompose(&decompose(x, n)), x, "x={x} n={n}");
+        }
+    }
+
+    #[test]
+    fn limb_mul_exact_for_in_range_values() {
+        // 16-bit operands through the 2-limb path: exact signed product
+        for &(x, y) in &[(123i64, 456i64), (-123, 456), (-32768, 32767), (0, -1)] {
+            assert_eq!(limb_mul(x, y, 2, 32), x * y, "{x}*{y}");
+        }
+        // 32-bit operands through the 4-limb path, mod 2^32
+        let (x, y) = (0x7fff_0001i64, -0x1234i64);
+        assert_eq!(limb_mul(x, y, 4, 32), truncate(x.wrapping_mul(y), 32));
+    }
+
+    #[test]
+    fn limb_gemm_matches_naive() {
+        let m = 3;
+        let k = 4;
+        let n = 2;
+        let a: Vec<i64> = (0..m * k).map(|i| (i as i64 * 37 - 50) % 120).collect();
+        let b: Vec<i64> = (0..k * n).map(|i| (i as i64 * 91 - 70) % 120).collect();
+        let got = limb_gemm(&a, &b, m, k, n, 1, 32);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i64 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert_eq!(got[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn bignum_precarry_matches_wide_product() {
+        // (0x0201) * (0x0403) limbs little-endian: [1,2] * [3,4]
+        let c = bignum_mul_precarry(&[1, 2], &[3, 4]);
+        assert_eq!(c, vec![3, 10, 8]); // 1·3, 1·4+2·3, 2·4
+    }
+
+    #[test]
+    fn truncate_is_mod_2w_signed() {
+        assert_eq!(truncate(0x1_0000_0001, 32), 1);
+        assert_eq!(truncate(0xFFFF_FFFF, 32), -1);
+        assert_eq!(truncate(-1, 16), -1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Precision model: the eight data types GTA supports (Table 1) and their
+//! decomposition into 8-bit limbs — the paper's §3.1 insight that an
+//! `8n × 8m`-bit multiplication *is* an `n×m` matrix of limb cross-products.
+//!
+//! Floating-point types map to their mantissa width: BP16→INT8, FP16→INT12,
+//! FP32→INT24, FP64→INT53 (§4.1), i.e. 1/2/3/7 limbs.
+
+pub mod accumulator;
+pub mod limbs;
+
+
+/// The eight precisions of the contemporary vector ISAs GTA targets
+/// (RISC-V V, AVX-512, SVE — paper §1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int8,
+    Int16,
+    Int32,
+    Int64,
+    Bp16,
+    Fp16,
+    Fp32,
+    Fp64,
+}
+
+impl Precision {
+    /// All precisions, in the paper's Table 3 ordering.
+    pub const ALL: [Precision; 8] = [
+        Precision::Int8,
+        Precision::Int16,
+        Precision::Int32,
+        Precision::Int64,
+        Precision::Bp16,
+        Precision::Fp16,
+        Precision::Fp32,
+        Precision::Fp64,
+    ];
+
+    /// Storage width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int8 => 8,
+            Precision::Int16 | Precision::Bp16 | Precision::Fp16 => 16,
+            Precision::Int32 | Precision::Fp32 => 32,
+            Precision::Int64 | Precision::Fp64 => 64,
+        }
+    }
+
+    /// Width of the value the multiplier array actually multiplies:
+    /// the full word for integers, the (hidden-bit-extended) mantissa for
+    /// floats — "the mantissa multiplication for BP16, FP16, FP32, and FP64
+    /// can be equivalently represented as the multiplication of INT8, 12,
+    /// 24, and 53" (§4.1).
+    pub fn multiplier_bits(self) -> u32 {
+        match self {
+            Precision::Int8 => 8,
+            Precision::Int16 => 16,
+            Precision::Int32 => 32,
+            Precision::Int64 => 64,
+            Precision::Bp16 => 8,
+            Precision::Fp16 => 12,
+            Precision::Fp32 => 24,
+            Precision::Fp64 => 53,
+        }
+    }
+
+    /// Number of 8-bit limbs occupied on the MPRA (`n = ⌈mult_bits/8⌉`).
+    pub fn limbs(self) -> u32 {
+        self.multiplier_bits().div_ceil(8)
+    }
+
+    /// Bytes per stored element.
+    pub fn bytes(self) -> u64 {
+        (self.bits() / 8) as u64
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(
+            self,
+            Precision::Bp16 | Precision::Fp16 | Precision::Fp32 | Precision::Fp64
+        )
+    }
+
+    /// Table-3 row label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int8 => "INT8",
+            Precision::Int16 => "INT16",
+            Precision::Int32 => "INT32",
+            Precision::Int64 => "INT64",
+            Precision::Bp16 => "BP16",
+            Precision::Fp16 => "FP16",
+            Precision::Fp32 => "FP32",
+            Precision::Fp64 => "FP64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        let t = s.to_ascii_lowercase();
+        Some(match t.as_str() {
+            "int8" | "i8" => Precision::Int8,
+            "int16" | "i16" => Precision::Int16,
+            "int32" | "i32" => Precision::Int32,
+            "int64" | "i64" => Precision::Int64,
+            "bp16" | "bf16" | "bfloat16" => Precision::Bp16,
+            "fp16" | "f16" | "half" => Precision::Fp16,
+            "fp32" | "f32" | "float" => Precision::Fp32,
+            "fp64" | "f64" | "double" => Precision::Fp64,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn limb_counts_match_paper_section_4_1() {
+        // §4.1: mantissa of BP16/FP16/FP32/FP64 == INT8/12/24/53
+        assert_eq!(Precision::Int8.limbs(), 1);
+        assert_eq!(Precision::Int16.limbs(), 2);
+        assert_eq!(Precision::Int32.limbs(), 4);
+        assert_eq!(Precision::Int64.limbs(), 8);
+        assert_eq!(Precision::Bp16.limbs(), 1);
+        assert_eq!(Precision::Fp16.limbs(), 2);
+        assert_eq!(Precision::Fp32.limbs(), 3);
+        assert_eq!(Precision::Fp64.limbs(), 7);
+    }
+
+    #[test]
+    fn storage_bytes() {
+        assert_eq!(Precision::Int8.bytes(), 1);
+        assert_eq!(Precision::Bp16.bytes(), 2);
+        assert_eq!(Precision::Fp32.bytes(), 4);
+        assert_eq!(Precision::Fp64.bytes(), 8);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("bf16"), Some(Precision::Bp16));
+        assert_eq!(Precision::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,273 @@
+//! Regenerates every table and figure of the paper's evaluation (§6–7)
+//! from the simulators — the single source the benches, examples and CLI
+//! print from.
+
+use crate::arch::area::{self, PlatformInfo};
+use crate::arch::energy::{self, Fig6Row};
+use crate::ops::classify::{fig2_points, Fig2Point};
+use crate::ops::PGemm;
+use crate::precision::Precision;
+use crate::scheduler;
+use crate::sim::{cgra::CgraSim, gpgpu::GpgpuSim, gta::GtaSim, vpu::VpuSim, Platform, SimReport};
+use crate::workloads::{self, Workload};
+
+/// One row of a Fig. 7/8/10 comparison.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub workload: String,
+    pub gta: SimReport,
+    pub baseline: SimReport,
+    /// cycle ratio baseline/GTA — the paper's "computational speedup"
+    /// (§6.3: "We assume the same clock frequency", so cycles compare
+    /// directly across platforms)
+    pub speedup: f64,
+    /// memory-access ratio baseline/GTA (the paper's "memory efficiency")
+    pub mem_saving: f64,
+    /// wall-time ratio at each platform's own Table 1 clock (extra info)
+    pub wall_speedup: f64,
+}
+
+/// Aggregate of a comparison.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub baseline_name: String,
+    pub rows: Vec<CompareRow>,
+    pub avg_speedup: f64,
+    pub avg_mem_saving: f64,
+    pub geomean_speedup: f64,
+    pub geomean_mem_saving: f64,
+}
+
+/// Run the suite on GTA and a baseline, produce the comparison.
+pub fn compare_suite(gta: &GtaSim, baseline: &dyn Platform, suite: &[Workload]) -> Comparison {
+    let rows: Vec<CompareRow> = suite
+        .iter()
+        .map(|w| {
+            let g = gta.run_all(&w.ops);
+            let b = baseline.run_all(&w.ops);
+            CompareRow {
+                workload: w.name.to_string(),
+                speedup: b.cycles as f64 / g.cycles.max(1) as f64,
+                mem_saving: b.memory_access() as f64 / g.memory_access().max(1) as f64,
+                wall_speedup: b.seconds() / g.seconds().max(1e-12),
+                gta: g,
+                baseline: b,
+            }
+        })
+        .collect();
+    let n = rows.len().max(1) as f64;
+    let avg = |f: &dyn Fn(&CompareRow) -> f64| rows.iter().map(|r| f(r)).sum::<f64>() / n;
+    let geo = |f: &dyn Fn(&CompareRow) -> f64| {
+        (rows.iter().map(|r| f(r).ln()).sum::<f64>() / n).exp()
+    };
+    Comparison {
+        baseline_name: baseline.name().to_string(),
+        avg_speedup: avg(&|r| r.speedup),
+        avg_mem_saving: avg(&|r| r.mem_saving),
+        geomean_speedup: geo(&|r| r.speedup),
+        geomean_mem_saving: geo(&|r| r.mem_saving),
+        rows,
+    }
+}
+
+/// Fig. 7 — GTA vs VPU (full suite: vector + p-GEMM ops).
+pub fn fig7() -> Comparison {
+    compare_suite(&GtaSim::table1(), &VpuSim::default(), &workloads::suite())
+}
+
+/// Fig. 8 — GTA vs GPGPU. Same-area comparison (§6.3): the GTA instance
+/// is scaled up ("configure different number of MPRA") to the H100's
+/// 14 nm-equivalent area; p-GEMM → tensor cores, vector → CUDA cores.
+pub fn fig8() -> Comparison {
+    let lanes = GpgpuSim::equal_area_gta_lanes();
+    compare_suite(
+        &GtaSim::new(crate::arch::GtaConfig::with_lanes(lanes)),
+        &GpgpuSim::default(),
+        &workloads::suite(),
+    )
+}
+
+/// Fig. 10 — GTA vs CGRA "in p-GEMM operators".
+pub fn fig10() -> Comparison {
+    compare_suite(
+        &GtaSim::table1(),
+        &CgraSim::default(),
+        &workloads::suite_pgemm_only(),
+    )
+}
+
+/// Table 1 rows.
+pub fn table1() -> Vec<PlatformInfo> {
+    area::table1()
+}
+
+/// Table 3 rows: (precision, derived gain).
+pub fn table3() -> Vec<(Precision, f64)> {
+    Precision::ALL
+        .iter()
+        .map(|&p| (p, crate::sim::mpra::simd_gain(p)))
+        .collect()
+}
+
+/// Fig. 2 scatter points.
+pub fn fig2() -> Vec<Fig2Point> {
+    fig2_points()
+}
+
+/// Fig. 6 rows.
+pub fn fig6() -> Vec<Fig6Row> {
+    energy::fig6_rows()
+}
+
+/// One Fig. 9 scatter point: a schedule candidate's normalized metrics.
+#[derive(Debug, Clone)]
+pub struct Fig9Point {
+    pub precision: String,
+    pub dataflow: String,
+    pub arrangement: String,
+    pub k_segments: u64,
+    pub cycles_ratio: f64,
+    pub mem_ratio: f64,
+    pub selected: bool,
+}
+
+/// Fig. 9 — the mixed precision × dataflow scheduling scatter for one
+/// Alexnet conv layer (conv3: M=384, N=169, K=2304) at three precisions.
+pub fn fig9() -> Vec<Fig9Point> {
+    let gta = crate::arch::GtaConfig::lanes16();
+    let mut out = Vec::new();
+    for p in [Precision::Int8, Precision::Fp16, Precision::Fp32] {
+        let g = PGemm::new(384, 169, 2304, p);
+        let cands = scheduler::explore(&g, &gta);
+        let best = scheduler::select(&cands);
+        let min_c = cands.iter().map(|c| c.report.cycles).min().unwrap().max(1) as f64;
+        let min_m = cands
+            .iter()
+            .map(|c| c.report.memory_access())
+            .min()
+            .unwrap()
+            .max(1) as f64;
+        for c in &cands {
+            out.push(Fig9Point {
+                precision: p.name().to_string(),
+                dataflow: c.config.dataflow.name().to_string(),
+                arrangement: format!(
+                    "{}x{}",
+                    c.config.arrangement.lane_rows, c.config.arrangement.lane_cols
+                ),
+                k_segments: c.config.k_segments,
+                cycles_ratio: c.report.cycles as f64 / min_c,
+                mem_ratio: c.report.memory_access() as f64 / min_m,
+                selected: c.config == best.config,
+            });
+        }
+    }
+    out
+}
+
+/// Fig. 5 — the dataflow-pattern-matching case table for a 64-lane GTA
+/// (the paper's running example) across representative workloads.
+#[derive(Debug, Clone)]
+pub struct Fig5Row {
+    pub workload: String,
+    pub dataflow: String,
+    pub mapped: (u64, u64),
+    pub array: (u64, u64),
+    pub coverage: String,
+    pub max_k_segments: u64,
+}
+
+pub fn fig5() -> Vec<Fig5Row> {
+    use crate::arch::Dataflow;
+    let gta = crate::arch::GtaConfig::with_lanes(64);
+    let arr = crate::arch::Arrangement::new(8, 8); // 64×64 PE array
+    let (r, c) = gta.array_shape(arr);
+    let cases = [
+        ("tiny GEMV 16x16x16", PGemm::new(16, 16, 16, Precision::Int8)),
+        ("tall 256x16x64", PGemm::new(256, 16, 64, Precision::Int8)),
+        ("wide 16x256x64", PGemm::new(16, 256, 64, Precision::Int8)),
+        ("tall-cover 512x48x64", PGemm::new(512, 48, 64, Precision::Int8)),
+        ("wide-cover 48x512x64", PGemm::new(48, 512, 64, Precision::Int8)),
+        ("huge 512x512x512", PGemm::new(512, 512, 512, Precision::Int8)),
+    ];
+    cases
+        .iter()
+        .map(|(name, g)| {
+            let mapped = crate::sim::mpra::map_gemm(g, Dataflow::OS);
+            let cov = scheduler::pattern::classify(mapped, r, c);
+            Fig5Row {
+                workload: name.to_string(),
+                dataflow: "OS".into(),
+                mapped: (mapped.rows, mapped.cols),
+                array: (r, c),
+                coverage: format!("{cov:?}"),
+                max_k_segments: scheduler::pattern::max_k_segments(mapped, r, c),
+            }
+        })
+        .collect()
+}
+
+/// Render a comparison as an aligned text table.
+pub fn render_comparison(c: &Comparison) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "GTA vs {:<18} {:>14} {:>14} {:>10} {:>10} {:>10}\n",
+        c.baseline_name, "GTA cycles", "base cycles", "speedup", "mem-save", "wall"
+    ));
+    for r in &c.rows {
+        s.push_str(&format!(
+            "  {:<24} {:>14} {:>14} {:>9.2}x {:>9.2}x {:>9.2}x\n",
+            r.workload, r.gta.cycles, r.baseline.cycles, r.speedup, r.mem_saving, r.wall_speedup
+        ));
+    }
+    s.push_str(&format!(
+        "  {:<24} {:>14} {:>14} {:>9.2}x {:>9.2}x   (geomean {:.2}x / {:.2}x)\n",
+        "AVERAGE", "", "", c.avg_speedup, c.avg_mem_saving, c.geomean_speedup, c.geomean_mem_saving
+    ));
+    s
+}
+
+/// Render Table 3.
+pub fn render_table3() -> String {
+    let mut s = String::from("Table 3: SIMD gains for all data types\n");
+    for (p, g) in table3() {
+        s.push_str(&format!("  {:<6} {:>6.2}x\n", p.name(), g));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_rows_complete() {
+        let t = table3();
+        assert_eq!(t.len(), 8);
+    }
+
+    #[test]
+    fn fig9_contains_three_precisions_and_selection() {
+        let pts = fig9();
+        let precs: std::collections::HashSet<_> =
+            pts.iter().map(|p| p.precision.clone()).collect();
+        assert_eq!(precs.len(), 3);
+        // exactly one selected point per precision
+        for prec in precs {
+            assert_eq!(
+                pts.iter().filter(|p| p.precision == prec && p.selected).count(),
+                1
+            );
+        }
+        // normalized ratios are >= 1
+        assert!(pts.iter().all(|p| p.cycles_ratio >= 1.0 && p.mem_ratio >= 1.0));
+    }
+
+    #[test]
+    fn fig5_covers_multiple_cases() {
+        let rows = fig5();
+        let cases: std::collections::HashSet<_> =
+            rows.iter().map(|r| r.coverage.clone()).collect();
+        assert!(cases.len() >= 4, "want variety of coverage cases, got {cases:?}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (names, files, shapes, dtypes), parsed with the in-tree
+//! JSON parser.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Artifact tensor dtypes (the host formats the runtime supports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    S32,
+    S64,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "s32" => DType::S32,
+            "s64" => DType::S64,
+            "f32" => DType::F32,
+            other => return Err(anyhow!("unsupported artifact dtype {other:?}")),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::S32 => "s32",
+            DType::S64 => "s64",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<u64>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<u64>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub file: String,
+    pub doc: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Manifest {
+    pub fn read(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let obj = root.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, j) in obj {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                j.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                Entry {
+                    file: j
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    doc: j.get("doc").and_then(Json::as_str).unwrap_or("").to_string(),
+                    sha256: j
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs: specs("inputs")?,
+                    outputs: specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+        "k": {
+            "doc": "test kernel",
+            "file": "k.hlo.txt",
+            "sha256": "ab",
+            "inputs": [{"shape": [2, 3], "dtype": "s32"}],
+            "outputs": [{"shape": [6], "dtype": "f32"}]
+        }
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(DOC).unwrap();
+        let e = &m.entries["k"];
+        assert_eq!(e.file, "k.hlo.txt");
+        assert_eq!(e.inputs[0].shape, vec![2, 3]);
+        assert_eq!(e.inputs[0].dtype, DType::S32);
+        assert_eq!(e.inputs[0].elements(), 6);
+        assert_eq!(e.outputs[0].dtype, DType::F32);
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = DOC.replace("s32", "u4");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration-adjacent: if artifacts were built, the real manifest
+        // must satisfy this parser
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(m) = Manifest::read(path) {
+            assert!(!m.entries.is_empty());
+            for (name, e) in &m.entries {
+                assert!(!e.inputs.is_empty(), "{name} has no inputs");
+                assert!(!e.outputs.is_empty(), "{name} has no outputs");
+            }
+        }
+    }
+}

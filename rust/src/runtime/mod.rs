@@ -1,0 +1,252 @@
+//! PJRT execution runtime (the L3 ↔ artifact bridge).
+//!
+//! Loads the HLO-text artifacts `make artifacts` produced (HLO **text** is
+//! the interchange format — jax ≥ 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids), compiles
+//! them once on the PJRT CPU client, and executes them from the hot path.
+//! Python never runs here.
+
+pub mod manifest;
+
+use anyhow::{anyhow, Context, Result};
+use manifest::{DType, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A host-side tensor in one of the artifact dtypes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    F32(Vec<f32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::I32(v) => v.len(),
+            HostTensor::I64(v) => v.len(),
+            HostTensor::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::I32(_) => DType::S32,
+            HostTensor::I64(_) => DType::S64,
+            HostTensor::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            HostTensor::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    entry: manifest::Entry,
+}
+
+/// The artifact engine: one PJRT client, one compiled executable per
+/// artifact, keyed by manifest name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load + compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        Self::load_filtered(dir, |_| true)
+    }
+
+    /// Load only the artifacts `keep` accepts (faster startup for tools
+    /// that need a single kernel).
+    pub fn load_filtered(dir: impl AsRef<Path>, keep: impl Fn(&str) -> bool) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::read(dir.join("manifest.json"))
+            .context("reading artifact manifest (run `make artifacts`?)")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for (name, entry) in manifest.entries {
+            if !keep(&name) {
+                continue;
+            }
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", entry.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            artifacts.insert(name, LoadedArtifact { exe, entry });
+        }
+        Ok(Engine { client, artifacts, dir })
+    }
+
+    /// Sorted artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// The manifest entry for `name`.
+    pub fn entry(&self, name: &str) -> Option<&manifest::Entry> {
+        self.artifacts.get(name).map(|a| &a.entry)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute artifact `name` with host inputs; returns the tuple fields.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if inputs.len() != art.entry.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                art.entry.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&art.entry.inputs).enumerate() {
+            if t.dtype() != spec.dtype {
+                return Err(anyhow!(
+                    "{name} input {i}: dtype {} != manifest {}",
+                    t.dtype().name(),
+                    spec.dtype.name()
+                ));
+            }
+            let expect = spec.elements() as usize;
+            if t.len() != expect {
+                return Err(anyhow!(
+                    "{name} input {i}: {} elements != shape {:?}",
+                    t.len(),
+                    spec.shape
+                ));
+            }
+            let lit = match t {
+                HostTensor::I32(v) => xla::Literal::vec1(v),
+                HostTensor::I64(v) => xla::Literal::vec1(v),
+                HostTensor::F32(v) => xla::Literal::vec1(v),
+            };
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input {i}: {e}"))?
+            };
+            literals.push(lit);
+        }
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        // aot.py lowers with return_tuple=True, so outputs arrive as a tuple
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name}: {e}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, spec) in tuple.into_iter().zip(&art.entry.outputs) {
+            out.push(match spec.dtype {
+                DType::S32 => HostTensor::I32(lit.to_vec().map_err(|e| anyhow!("{e}"))?),
+                DType::S64 => HostTensor::I64(lit.to_vec().map_err(|e| anyhow!("{e}"))?),
+                DType::F32 => HostTensor::F32(lit.to_vec().map_err(|e| anyhow!("{e}"))?),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Pad a row-major `rows × cols` i32 matrix up to `(pr, pc)` with zeros
+/// (artifact tiles are fixed-shape; the coordinator pads ragged tiles).
+pub fn pad_matrix_i32(data: &[i32], rows: usize, cols: usize, pr: usize, pc: usize) -> Vec<i32> {
+    assert!(pr >= rows && pc >= cols, "cannot pad down");
+    assert_eq!(data.len(), rows * cols);
+    let mut out = vec![0i32; pr * pc];
+    for r in 0..rows {
+        out[r * pc..r * pc + cols].copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Slice the top-left `rows × cols` out of a padded `(pr, pc)` matrix.
+pub fn unpad_matrix_i32(data: &[i32], pr: usize, pc: usize, rows: usize, cols: usize) -> Vec<i32> {
+    assert!(pr >= rows && pc >= cols);
+    assert_eq!(data.len(), pr * pc);
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        out.extend_from_slice(&data[r * pc..r * pc + cols]);
+    }
+    out
+}
+
+/// Locate the artifacts directory: `$GTA_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("GTA_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let m: Vec<i32> = (0..6).collect(); // 2x3
+        let p = pad_matrix_i32(&m, 2, 3, 4, 5);
+        assert_eq!(p.len(), 20);
+        assert_eq!(p[0..3], [0, 1, 2]);
+        assert_eq!(p[5..8], [3, 4, 5]);
+        assert_eq!(p[3], 0);
+        assert_eq!(unpad_matrix_i32(&p, 4, 5, 2, 3), m);
+    }
+
+    #[test]
+    fn host_tensor_dtypes() {
+        assert_eq!(HostTensor::I32(vec![1]).dtype(), DType::S32);
+        assert_eq!(HostTensor::F32(vec![1.0]).dtype(), DType::F32);
+        assert_eq!(HostTensor::I64(vec![1]).len(), 1);
+        assert!(!HostTensor::I64(vec![1]).is_empty());
+    }
+}

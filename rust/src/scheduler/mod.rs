@@ -1,0 +1,349 @@
+//! Scheduling-space exploration (§5): for a p-GEMM operator, jointly
+//! choose **dataflow** (WS/IS/OS/SIMD), **array resize** (lane
+//! arrangement), **K-segmentation** and **tiling direction**, trading
+//! computing cycles against memory access; the final pick is the
+//! normalized least-sum-of-squares point ("the preference is given to the
+//! one with the least sum of squares").
+
+pub mod pattern;
+
+use crate::arch::{Arrangement, Dataflow, GtaConfig};
+use crate::ops::PGemm;
+use crate::sim::systolic::{self, MappedGemm};
+use crate::sim::{mpra, SimReport};
+use crate::arch::energy;
+use pattern::{Coverage, TileDir, EARLY_FILL_RECOVERY};
+
+/// One point of the scheduling space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ScheduleConfig {
+    pub arrangement: Arrangement,
+    pub dataflow: Dataflow,
+    /// K-segmentation factor (1 = none); only meaningful for Uncover cases.
+    pub k_segments: u64,
+    /// Tiling walk order for Cover1.
+    pub tile_dir: TileDir,
+}
+
+/// An evaluated schedule candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub config: ScheduleConfig,
+    pub report: SimReport,
+    pub coverage: Option<Coverage>,
+}
+
+/// Evaluate one schedule configuration for `g` on `gta`.
+pub fn evaluate(g: &PGemm, cfg: ScheduleConfig, gta: &GtaConfig) -> Candidate {
+    if cfg.dataflow == Dataflow::Simd {
+        return Candidate {
+            config: cfg,
+            report: simd_gemm(g, gta),
+            coverage: None,
+        };
+    }
+    let (r, c) = gta.array_shape(cfg.arrangement);
+    let mapped = mpra::map_gemm(g, cfg.dataflow);
+    let coverage = pattern::classify(mapped, r, c);
+
+    // ---- Cover2/3 wrap: fold the oversized spatial dim into the idle
+    // other dimension ("tasks from the next column or row can be brought
+    // in prematurely to fill the idle array", §5). Wrapping row folds of
+    // the contraction dim (WS/IS) re-injects partial sums, which the
+    // traffic model already counts; wrapping M/N folds (OS) is free.
+    let wrapped = apply_cover_wrap(mapped, r, c);
+
+    // ---- K-segmentation: replicate the (possibly wrapped) footprint
+    // while it still under-covers the array ----
+    let s_max = pattern::max_k_segments(wrapped, r, c);
+    let s = cfg.k_segments.clamp(1, s_max);
+    let (adjusted, merge_elems) = apply_k_segments(wrapped, cfg.dataflow, s, g, r, c);
+
+    let run = systolic::run(cfg.dataflow, r, c, adjusted, g.m, g.n, g.k);
+
+    // ---- early fill: recover ragged-edge idle cycles for Cover cases ----
+    let cycles = match coverage {
+        Coverage::Cover1 | Coverage::Cover2 | Coverage::Cover3 => {
+            let idle = pattern::ragged_idle_fraction(adjusted, r, c, cfg.tile_dir);
+            (run.cycles as f64 * (1.0 - EARLY_FILL_RECOVERY * idle)).ceil() as u64
+        }
+        _ => run.cycles,
+    };
+
+    let bytes = g.precision.bytes();
+    let sram_bytes = (run.sram_read_elems + run.sram_write_elems + 2 * merge_elems) * bytes;
+    // DRAM: compulsory traffic — the same idealized backing-store model
+    // every baseline uses, so the cross-platform ratio isolates the
+    // on-chip reuse difference the paper measures.
+    let dram_bytes = g.compulsory_bytes();
+
+    let macs = g.macs();
+    let energy_pj = energy::total_energy_pj(macs, g.precision, cfg.dataflow, sram_bytes, dram_bytes);
+    Candidate {
+        config: cfg,
+        report: SimReport {
+            cycles,
+            freq_mhz: gta.freq_mhz,
+            sram_bytes,
+            dram_bytes,
+            macs,
+            // `adjusted` already carries wrap + K-seg replication, so the
+            // systolic run's utilization is the real figure
+            utilization: run.utilization,
+            energy_pj,
+        },
+        coverage: Some(coverage),
+    }
+}
+
+/// SIMD (vector-mode) execution of a p-GEMM: no reuse — every MAC fetches
+/// its operands from the VRF/SRAM stream (the Fig. 2 "no intensity" path).
+fn simd_gemm(g: &PGemm, gta: &GtaConfig) -> SimReport {
+    let per_lane = mpra::simd_mults_per_cycle(g.precision);
+    let throughput = per_lane * gta.lanes as f64; // word-MACs/cycle
+    let macs = g.macs();
+    let cycles = (macs as f64 / throughput).ceil() as u64;
+    let bytes = g.precision.bytes();
+    // A broadcast + B stream per MAC, C write per output
+    let sram_bytes = (2 * macs + g.m * g.n) * bytes;
+    let dram_bytes = g.compulsory_bytes();
+    SimReport {
+        cycles: cycles.max(1),
+        freq_mhz: gta.freq_mhz,
+        sram_bytes,
+        dram_bytes,
+        macs,
+        utilization: (throughput / (gta.total_pes() as f64 / (g.precision.limbs().pow(2) as f64)))
+            .min(1.0),
+        energy_pj: energy::total_energy_pj(macs, g.precision, Dataflow::Simd, sram_bytes, dram_bytes),
+    }
+}
+
+/// Apply K-segmentation: `s` replicas placed into whichever spatial
+/// dimension has slack, each carrying `1/s` of the contraction; merging
+/// the replicas' partial outputs costs `(s-1)·M·N` extra element
+/// reads+writes (§5's utilization-vs-reuse conflict).
+fn apply_k_segments(
+    mapped: MappedGemm,
+    flow: Dataflow,
+    s: u64,
+    g: &PGemm,
+    r: u64,
+    c: u64,
+) -> (MappedGemm, u64) {
+    if s <= 1 {
+        return (mapped, 0);
+    }
+    let merge = (s - 1) * g.m * g.n;
+    let adjusted = match flow {
+        // WS/IS: contraction is the ROW spatial dim — split rows, widen cols
+        Dataflow::WS | Dataflow::IS => MappedGemm {
+            rows: mapped.rows.div_ceil(s),
+            cols: mapped.cols * s,
+            temporal: mapped.temporal,
+        },
+        // OS: contraction is temporal — shorten the stream and replicate
+        // the C tile into the slack dimension(s)
+        Dataflow::OS => {
+            let fit_r = (r / mapped.rows.max(1)).max(1);
+            let s_r = s.min(fit_r);
+            let s_c = (s / s_r).min((c / mapped.cols.max(1)).max(1)).max(1);
+            MappedGemm {
+                rows: mapped.rows * s_r,
+                cols: mapped.cols * s_c,
+                temporal: mapped.temporal.div_ceil(s_r * s_c),
+            }
+        }
+        Dataflow::Simd => mapped,
+    };
+    (adjusted, merge)
+}
+
+/// Fold an over-covering dimension into idle capacity of the other
+/// (Cover2: rows over, columns idle → wrap row folds sideways; Cover3:
+/// symmetric). Leaves Uncover/Cover1 mappings untouched.
+fn apply_cover_wrap(g: MappedGemm, r: u64, c: u64) -> MappedGemm {
+    match pattern::classify(g, r, c) {
+        Coverage::Cover2 => {
+            let wrap = (c / g.cols.max(1)).min(g.rows.div_ceil(r)).max(1);
+            MappedGemm {
+                rows: g.rows.div_ceil(wrap),
+                cols: g.cols * wrap,
+                temporal: g.temporal,
+            }
+        }
+        Coverage::Cover3 => {
+            let wrap = (r / g.rows.max(1)).min(g.cols.div_ceil(c)).max(1);
+            MappedGemm {
+                rows: g.rows * wrap,
+                cols: g.cols.div_ceil(wrap),
+                temporal: g.temporal,
+            }
+        }
+        _ => g,
+    }
+}
+
+/// Enumerate the whole scheduling space for `g` on `gta`.
+pub fn explore(g: &PGemm, gta: &GtaConfig) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for arrangement in gta.arrangements() {
+        for flow in Dataflow::SYSTOLIC {
+            let (r, c) = gta.array_shape(arrangement);
+            let mapped = apply_cover_wrap(mpra::map_gemm(g, flow), r, c);
+            let s_max = pattern::max_k_segments(mapped, r, c);
+            let mut s = 1u64;
+            while s <= s_max {
+                for dir in TileDir::BOTH {
+                    let cfg = ScheduleConfig {
+                        arrangement,
+                        dataflow: flow,
+                        k_segments: s,
+                        tile_dir: dir,
+                    };
+                    out.push(evaluate(g, cfg, gta));
+                }
+                s *= 2;
+            }
+        }
+    }
+    // the SIMD fallback is arrangement-independent
+    out.push(evaluate(
+        g,
+        ScheduleConfig {
+            arrangement: gta.arrangements()[0],
+            dataflow: Dataflow::Simd,
+            k_segments: 1,
+            tile_dir: TileDir::Lateral,
+        },
+        gta,
+    ));
+    out
+}
+
+/// §5 selection: normalize cycles and memory access by their minima over
+/// the space, pick the candidate with the least sum of squares.
+pub fn select(candidates: &[Candidate]) -> Candidate {
+    assert!(!candidates.is_empty());
+    let min_cycles = candidates.iter().map(|c| c.report.cycles).min().unwrap().max(1);
+    let min_mem = candidates
+        .iter()
+        .map(|c| c.report.memory_access())
+        .min()
+        .unwrap()
+        .max(1);
+    *candidates
+        .iter()
+        .min_by(|a, b| {
+            let score = |x: &Candidate| {
+                let nc = x.report.cycles as f64 / min_cycles as f64;
+                let nm = x.report.memory_access() as f64 / min_mem as f64;
+                nc * nc + nm * nm
+            };
+            score(a).partial_cmp(&score(b)).unwrap()
+        })
+        .unwrap()
+}
+
+/// Explore + select in one call — the coordinator's entry point.
+pub fn schedule(g: &PGemm, gta: &GtaConfig) -> Candidate {
+    select(&explore(g, gta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::Precision;
+
+    fn gta() -> GtaConfig {
+        GtaConfig::lanes16()
+    }
+
+    #[test]
+    fn explore_covers_all_dataflows_and_arrangements() {
+        let g = PGemm::new(64, 64, 64, Precision::Int8);
+        let cands = explore(&g, &gta());
+        let arrs: std::collections::HashSet<_> =
+            cands.iter().map(|c| c.config.arrangement).collect();
+        assert_eq!(arrs.len(), 5); // 16 lanes: 1x16..16x1
+        for flow in Dataflow::ALL {
+            assert!(
+                cands.iter().any(|c| c.config.dataflow == flow),
+                "{flow:?} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn selection_is_in_space_and_pareto_sane() {
+        let g = PGemm::new(128, 128, 512, Precision::Bp16);
+        let cands = explore(&g, &gta());
+        let best = select(&cands);
+        assert!(cands.iter().any(|c| c.config == best.config));
+        // the selected point must not be strictly dominated
+        for c in &cands {
+            let dominates = c.report.cycles < best.report.cycles
+                && c.report.memory_access() < best.report.memory_access();
+            assert!(!dominates, "{:?} dominates selection", c.config);
+        }
+    }
+
+    #[test]
+    fn k_segmentation_helps_small_workloads() {
+        // tiny GEMM on the big array: Uncover1; segmented candidates must
+        // beat s=1 on cycles for the same dataflow/arrangement
+        let g = PGemm::new(8, 8, 512, Precision::Int8);
+        let cands = explore(&g, &gta());
+        let os: Vec<_> = cands
+            .iter()
+            .filter(|c| {
+                c.config.dataflow == Dataflow::OS
+                    && c.config.arrangement == Arrangement::new(4, 4)
+                    && c.config.tile_dir == TileDir::Lateral
+            })
+            .collect();
+        assert!(os.len() > 1, "expected segmented OS candidates");
+        let s1 = os.iter().find(|c| c.config.k_segments == 1).unwrap();
+        let sbig = os.iter().max_by_key(|c| c.config.k_segments).unwrap();
+        assert!(sbig.report.cycles < s1.report.cycles, "segmentation should cut cycles");
+        assert!(
+            sbig.report.memory_access() > s1.report.memory_access(),
+            "…but cost memory (the §5 conflict)"
+        );
+    }
+
+    #[test]
+    fn precision_changes_the_chosen_schedule_space_shape() {
+        // Fig 9's observation: different precisions give nonlinear,
+        // different distributions for the same operator
+        let g8 = PGemm::new(96, 169, 576, Precision::Int8);
+        let g32 = PGemm::new(96, 169, 576, Precision::Int32);
+        let r8 = schedule(&g8, &gta()).report;
+        let r32 = schedule(&g32, &gta()).report;
+        assert!(r32.cycles > r8.cycles, "more limbs -> more cycles");
+    }
+
+    #[test]
+    fn simd_fallback_wins_for_pure_dot() {
+        let g = PGemm::new(1, 1, 4096, Precision::Fp64);
+        let best = schedule(&g, &gta());
+        assert_eq!(best.config.dataflow, Dataflow::Simd, "dot should vectorize");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        for g in [
+            PGemm::new(8, 8, 8, Precision::Int8),
+            PGemm::new(500, 300, 700, Precision::Fp32),
+        ] {
+            for c in explore(&g, &gta()) {
+                assert!(
+                    c.report.utilization <= 1.0 + 1e-9,
+                    "{:?} util {}",
+                    c.config,
+                    c.report.utilization
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Dataflow pattern matching (§5, Fig. 5): classify how a mapped workload
+//! covers the physical array, and model the two utilization levers the
+//! paper describes — K-segmentation for under-covering workloads and
+//! early-fill tiling (Lateral/Vertical) for over-covering ones.
+
+use crate::sim::systolic::MappedGemm;
+
+/// The six Fig. 5 coverage cases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coverage {
+    /// Workload short of the array in BOTH spatial directions.
+    Uncover1,
+    /// Exceeds in the ROW direction only; total still under array size.
+    Uncover2,
+    /// Exceeds in the COLUMN direction only; total still under array size.
+    Uncover3,
+    /// Exceeds in the ROW direction and covers the array.
+    Cover2,
+    /// Exceeds in the COLUMN direction and covers the array.
+    Cover3,
+    /// Exceeds in BOTH directions (tiled Lateral or Vertical).
+    Cover1,
+}
+
+/// Tiling walk order for Cover1 (§5: "the tiling placement could be in
+/// direction of Lateral or Vertical").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TileDir {
+    Lateral,
+    Vertical,
+}
+
+impl TileDir {
+    pub const BOTH: [TileDir; 2] = [TileDir::Lateral, TileDir::Vertical];
+}
+
+/// Classify a mapped workload against an `r × c` array.
+pub fn classify(g: MappedGemm, r: u64, c: u64) -> Coverage {
+    let over_r = g.rows > r;
+    let over_c = g.cols > c;
+    match (over_r, over_c) {
+        (false, false) => Coverage::Uncover1,
+        (true, false) => {
+            if g.rows * g.cols >= r * c {
+                Coverage::Cover2
+            } else {
+                Coverage::Uncover2
+            }
+        }
+        (false, true) => {
+            if g.rows * g.cols >= r * c {
+                Coverage::Cover3
+            } else {
+                Coverage::Uncover3
+            }
+        }
+        (true, true) => Coverage::Cover1,
+    }
+}
+
+/// Maximum useful K-segmentation factor for a coverage case: how many
+/// replicas of the under-covering footprint fit in the array.
+pub fn max_k_segments(g: MappedGemm, r: u64, c: u64) -> u64 {
+    match classify(g, r, c) {
+        Coverage::Uncover1 => {
+            let fit_r = (r / g.rows.max(1)).max(1);
+            let fit_c = (c / g.cols.max(1)).max(1);
+            fit_r * fit_c
+        }
+        Coverage::Uncover2 | Coverage::Uncover3 => {
+            // one free direction left
+            let free = if g.rows > r { c / g.cols.max(1) } else { r / g.rows.max(1) };
+            free.max(1)
+        }
+        _ => 1, // covering workloads cannot be replicated
+    }
+}
+
+/// Fraction of total fold-cycles idled by the ragged edge in a direction,
+/// for the Cover cases. Early fill ("tasks from the next column or row can
+/// be brought in prematurely") recovers most of this.
+pub fn ragged_idle_fraction(g: MappedGemm, r: u64, c: u64, dir: TileDir) -> f64 {
+    let fr = g.rows.div_ceil(r);
+    let fc = g.cols.div_ceil(c);
+    // idle rows/cols on the last (ragged) fold; 0 when tiling is exact
+    let rag_r = if g.rows % r == 0 { 0 } else { r - g.rows % r };
+    let rag_c = if g.cols % c == 0 { 0 } else { c - g.cols % c };
+    let last_r = g.rows - (fr - 1) * r; // used rows in last fold
+    let last_c = g.cols - (fc - 1) * c;
+    let total_area = (fr * fc * r * c) as f64;
+    match dir {
+        // lateral walk: the ragged COLUMN edge occurs once per row band
+        TileDir::Lateral => (fr * rag_c * last_r.min(r)) as f64 / total_area,
+        // vertical walk: the ragged ROW edge occurs once per column band
+        TileDir::Vertical => (fc * rag_r * last_c.min(c)) as f64 / total_area,
+    }
+}
+
+/// Fraction of the ragged-edge idle area the early-fill mechanism
+/// recovers (the next tile's fill overlaps the edge fold's drain; the
+/// first fill of each band cannot be hidden).
+pub const EARLY_FILL_RECOVERY: f64 = 0.8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(rows: u64, cols: u64) -> MappedGemm {
+        MappedGemm { rows, cols, temporal: 32 }
+    }
+
+    #[test]
+    fn six_cases_classified() {
+        let (r, c) = (16, 16);
+        assert_eq!(classify(g(8, 8), r, c), Coverage::Uncover1);
+        assert_eq!(classify(g(32, 4), r, c), Coverage::Uncover2);
+        assert_eq!(classify(g(4, 32), r, c), Coverage::Uncover3);
+        assert_eq!(classify(g(64, 8), r, c), Coverage::Cover2);
+        assert_eq!(classify(g(8, 64), r, c), Coverage::Cover3);
+        assert_eq!(classify(g(64, 64), r, c), Coverage::Cover1);
+    }
+
+    #[test]
+    fn boundary_exact_fit_is_uncover1() {
+        // workload == array: nothing exceeds, no segmentation needed
+        assert_eq!(classify(g(16, 16), 16, 16), Coverage::Uncover1);
+        assert_eq!(max_k_segments(g(16, 16), 16, 16), 1);
+    }
+
+    #[test]
+    fn k_segments_fill_the_array() {
+        // quarter-size workload: 4 replicas fit
+        assert_eq!(max_k_segments(g(8, 8), 16, 16), 4);
+        // half-row workload: 2 fit
+        assert_eq!(max_k_segments(g(8, 16), 16, 16), 2);
+        // covering workload: none
+        assert_eq!(max_k_segments(g(64, 64), 16, 16), 1);
+    }
+
+    #[test]
+    fn ragged_fraction_zero_for_perfect_tiling() {
+        let f = ragged_idle_fraction(g(32, 32), 16, 16, TileDir::Lateral);
+        assert_eq!(f, 0.0);
+    }
+
+    #[test]
+    fn ragged_fraction_positive_and_direction_dependent() {
+        // 40 cols on 16-wide array: ragged col edge of 8; rows perfect
+        let lat = ragged_idle_fraction(g(32, 40), 16, 16, TileDir::Lateral);
+        let ver = ragged_idle_fraction(g(32, 40), 16, 16, TileDir::Vertical);
+        assert!(lat > 0.0);
+        assert_eq!(ver, 0.0); // rows tile perfectly -> no row raggedness
+    }
+
+    #[test]
+    fn ragged_fraction_bounded() {
+        for (rows, cols) in [(17, 33), (100, 9), (5, 5), (31, 31)] {
+            for dir in TileDir::BOTH {
+                let f = ragged_idle_fraction(g(rows, cols), 16, 16, dir);
+                assert!((0.0..1.0).contains(&f), "{rows}x{cols} {dir:?}: {f}");
+            }
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! End-to-end serving driver: replay a mixed stream of tensor-operator
+//! requests through the coordinator — scheduling each through the §5
+//! explorer, simulating cycles/traffic on the GTA model, and executing
+//! the functional tiles through PJRT with inline numeric verification.
+//! This is the `examples/e2e_serve.rs` workhorse (EXPERIMENTS.md §E2E).
+
+use crate::coordinator::{Coordinator, ExecKind, Request};
+use crate::ops::TensorOp;
+use crate::precision::{limbs, Precision};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+use crate::GtaConfig;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Summary of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub functional: u64,
+    pub verified_ok: u64,
+    pub verified_failed: u64,
+    pub wall_seconds: f64,
+    pub throughput_rps: f64,
+    pub total_sim_cycles: u64,
+    pub metrics: crate::coordinator::metrics::Snapshot,
+}
+
+impl ServeSummary {
+    pub fn render(&self) -> String {
+        format!(
+            "e2e serve: {} requests ({} functional, {} verified ok, {} failed)\n\
+             wall {:.3}s -> {:.1} req/s; simulated GTA cycles {}\n{}",
+            self.requests,
+            self.functional,
+            self.verified_ok,
+            self.verified_failed,
+            self.wall_seconds,
+            self.throughput_rps,
+            self.total_sim_cycles,
+            self.metrics.render()
+        )
+    }
+}
+
+/// One functional request template: artifact + generated inputs + oracle.
+struct FunctionalCase {
+    artifact: &'static str,
+    op: TensorOp,
+    inputs: Vec<HostTensor>,
+    /// expected i32 outputs for exact-integer artifacts (None = skip check)
+    expect_i32: Option<Vec<i32>>,
+}
+
+fn make_case(kind: usize, rng: &mut Rng) -> FunctionalCase {
+    match kind % 3 {
+        0 => {
+            // INT8 MPRA GEMM tile
+            let dim = 64usize;
+            let a: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(-100, 100)).collect();
+            let b: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(-100, 100)).collect();
+            let want = limbs::limb_gemm(&a, &b, dim, dim, dim, 1, 32);
+            FunctionalCase {
+                artifact: "mpra_gemm_i8_64",
+                op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+                inputs: vec![
+                    HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+                    HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+                ],
+                expect_i32: Some(want.iter().map(|&v| v as i32).collect()),
+            }
+        }
+        1 => {
+            // INT16 MPRA GEMM tile
+            let dim = 64usize;
+            let a: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(-3000, 3000)).collect();
+            let b: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(-3000, 3000)).collect();
+            let want = limbs::limb_gemm(&a, &b, dim, dim, dim, 2, 32);
+            FunctionalCase {
+                artifact: "mpra_gemm_i16_64",
+                op: TensorOp::gemm(64, 64, 64, Precision::Int16),
+                inputs: vec![
+                    HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+                    HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+                ],
+                expect_i32: Some(want.iter().map(|&v| v as i32).collect()),
+            }
+        }
+        _ => {
+            // BNM: 512-bit big-number product
+            let l = 64usize;
+            let a: Vec<u8> = (0..l).map(|_| rng.range_u64(0, 255) as u8).collect();
+            let b: Vec<u8> = (0..l).map(|_| rng.range_u64(0, 255) as u8).collect();
+            let want = limbs::bignum_mul_precarry(&a, &b);
+            FunctionalCase {
+                artifact: "bignum_mul_64",
+                op: TensorOp::gemm(64, 64, 1, Precision::Int8),
+                inputs: vec![
+                    HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+                    HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+                ],
+                expect_i32: Some(want.iter().map(|&v| v as i32).collect()),
+            }
+        }
+    }
+}
+
+/// Replay `n` mixed requests (functional MPRA/BNM tiles interleaved with
+/// simulate-only workload operators) on `workers` threads.
+pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result<ServeSummary> {
+    let coord = Arc::new(Coordinator::with_engine(GtaConfig::lanes16(), artifact_dir)?);
+    let mut rng = Rng::new(2024);
+
+    // simulate-only operators drawn from the Table 2 suite
+    let sim_ops: Vec<TensorOp> = crate::workloads::suite()
+        .into_iter()
+        .flat_map(|w| w.ops.into_iter().take(3))
+        .collect();
+
+    let mut expected: Vec<Option<Vec<i32>>> = Vec::new();
+    let mut requests = Vec::new();
+    for i in 0..n {
+        if i % 2 == 0 {
+            let case = make_case((i / 2) as usize, &mut rng);
+            expected.push(case.expect_i32);
+            requests.push(Request {
+                id: i,
+                op: case.op,
+                exec: ExecKind::Functional {
+                    artifact: case.artifact.to_string(),
+                    inputs: case.inputs,
+                },
+            });
+        } else {
+            expected.push(None);
+            requests.push(Request {
+                id: i,
+                op: sim_ops[(i as usize / 2) % sim_ops.len()],
+                exec: ExecKind::Simulate,
+            });
+        }
+    }
+
+    let t0 = Instant::now();
+    let responses = coord.serve(requests, workers);
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut functional = 0u64;
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut total_cycles = 0u64;
+    for r in &responses {
+        total_cycles += r.sim.cycles;
+        if let Some(outs) = &r.outputs {
+            functional += 1;
+            if let Some(want) = &expected[r.id as usize] {
+                match outs[0].as_i32() {
+                    Some(got) if got == want.as_slice() => ok += 1,
+                    _ => failed += 1,
+                }
+            }
+        }
+    }
+    Ok(ServeSummary {
+        requests: n,
+        functional,
+        verified_ok: ok,
+        verified_failed: failed,
+        wall_seconds: wall,
+        throughput_rps: n as f64 / wall.max(1e-9),
+        total_sim_cycles: total_cycles,
+        metrics: coord.metrics.snapshot(),
+    })
+}

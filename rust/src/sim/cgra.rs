@@ -1,0 +1,159 @@
+//! CGRA baseline: a HyCube-style 4×4 word-level array (Table 1 column 4).
+//!
+//! CGRAs buy flexibility with word-level reconfigurability: each PE has a
+//! full-width FU and datapath-oriented interconnect, so arrays stay small
+//! (4×4) and — the paper's §7.4 point — exhibit weak acceleration and
+//! data reuse: operands flow through the load/store PEs for every
+//! iteration of the modulo-scheduled loop.
+
+use super::{Platform, SimReport};
+use crate::arch::energy;
+use crate::ops::{PGemm, TensorOp, VectorOp};
+use crate::precision::Precision;
+
+/// HyCube configuration.
+#[derive(Debug, Clone)]
+pub struct CgraSim {
+    pub rows: u32,
+    pub cols: u32,
+    pub freq_mhz: u32,
+    /// PEs with memory (load/store) capability — HyCube ties them to the
+    /// array edge.
+    pub ls_ports: u32,
+    /// Non-MAC ops in the GEMM inner-loop body (address gen, branch,
+    /// accumulate move) that occupy PE slots in the modulo schedule.
+    pub loop_overhead_ops: u32,
+}
+
+impl Default for CgraSim {
+    fn default() -> Self {
+        CgraSim { rows: 4, cols: 4, freq_mhz: 704, ls_ports: 4, loop_overhead_ops: 3 }
+    }
+}
+
+impl CgraSim {
+    fn pes(&self) -> u64 {
+        (self.rows * self.cols) as u64
+    }
+
+    /// Parallel FU count for a precision: the word-level datapath gives
+    /// the CGRA FULL-width units, so high precisions run at the same
+    /// per-PE rate as low ones ("high-precision units such as FP64 have a
+    /// larger number of settings and can be on par with GTA", §7.4) —
+    /// but low precisions cannot subdivide a PE, wasting its width.
+    fn macs_per_cycle(&self, _p: Precision) -> f64 {
+        // modulo schedule: each iteration = 1 MAC + loop_overhead ops;
+        // II*PEs slots per iteration set the steady-state rate
+        let ops_per_iter = 1.0 + self.loop_overhead_ops as f64;
+        self.pes() as f64 / ops_per_iter
+    }
+
+    fn run_gemm(&self, g: &PGemm) -> SimReport {
+        let macs = g.macs();
+        let compute_rate = self.macs_per_cycle(g.precision);
+        // memory-port bound: one streamed word per MAC through ls_ports
+        // (the stationary operand is held in a PE register across the
+        // modulo-scheduled inner loop)
+        let mem_rate = self.ls_ports as f64;
+        let rate = compute_rate.min(mem_rate);
+        let prologue = (self.rows + self.cols) as u64; // pipeline fill depth
+        let cycles = (macs as f64 / rate).ceil() as u64 + prologue;
+
+        let bytes = g.precision.bytes();
+        // no array-level reuse: both operands re-fetched per MAC; C
+        // accumulators held in PE registers per output, spilled per tile
+        let sram_bytes = (2 * macs + g.m * g.n) * bytes;
+        let dram_bytes = g.compulsory_bytes();
+        SimReport {
+            cycles,
+            freq_mhz: self.freq_mhz,
+            sram_bytes,
+            dram_bytes,
+            macs,
+            utilization: rate / self.pes() as f64, // MAC-busy PEs only
+            energy_pj: macs as f64 * energy::ara_mac_pj(g.precision) * 1.4 // 28nm penalty
+                + sram_bytes as f64 * energy::SRAM_PJ_PER_BYTE
+                + dram_bytes as f64 * energy::DRAM_PJ_PER_BYTE,
+        }
+    }
+
+    fn run_vector(&self, v: &VectorOp) -> SimReport {
+        let ops = v.ops();
+        // element-wise loops map 1 op/PE/II with the same overhead;
+        // two fresh operands per op through the load/store PEs
+        let rate = self
+            .macs_per_cycle(v.precision)
+            .min(self.ls_ports as f64 / 2.0);
+        let cycles = (ops as f64 / rate).ceil().max(1.0) as u64;
+        let sram_bytes = v.bytes();
+        SimReport {
+            cycles,
+            freq_mhz: self.freq_mhz,
+            sram_bytes,
+            dram_bytes: v.bytes(),
+            macs: ops,
+            utilization: rate / self.pes() as f64,
+            energy_pj: ops as f64 * energy::ara_mac_pj(v.precision) * 1.4
+                + sram_bytes as f64
+                    * (energy::SRAM_PJ_PER_BYTE + energy::DRAM_PJ_PER_BYTE),
+        }
+    }
+}
+
+impl Platform for CgraSim {
+    fn name(&self) -> &'static str {
+        "CGRA-hycube"
+    }
+
+    fn run(&self, op: &TensorOp) -> SimReport {
+        match op {
+            TensorOp::PGemm(g) => self.run_gemm(g),
+            TensorOp::Vector(v) => self.run_vector(v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gta::GtaSim;
+
+    #[test]
+    fn rate_is_precision_independent() {
+        let c = CgraSim::default();
+        assert_eq!(
+            c.macs_per_cycle(Precision::Int8),
+            c.macs_per_cycle(Precision::Fp64)
+        );
+    }
+
+    #[test]
+    fn memory_port_bound() {
+        let c = CgraSim::default();
+        // 16 PEs / 4 ops = 4 MACs/cycle compute == 4 ports streaming rate
+        let g = TensorOp::gemm(64, 64, 64, Precision::Int32);
+        let r = c.run(&g);
+        assert!(r.cycles >= 64 * 64 * 64 / 4);
+    }
+
+    #[test]
+    fn gta_advantage_shrinks_at_fp64() {
+        // §7.4: FP64 "can be on par with GTA"; INT8 is a blowout
+        let cgra = CgraSim::default();
+        let gta = GtaSim::table1();
+        let g8 = TensorOp::gemm(128, 128, 128, Precision::Int8);
+        let g64 = TensorOp::gemm(128, 128, 128, Precision::Fp64);
+        let sp8 = cgra.run(&g8).seconds() / gta.run(&g8).seconds();
+        let sp64 = cgra.run(&g64).seconds() / gta.run(&g64).seconds();
+        assert!(sp8 > 3.0 * sp64, "INT8 speedup {sp8:.1} vs FP64 {sp64:.1}");
+        assert!(sp64 >= 0.8, "FP64 roughly on par, got {sp64:.2}");
+    }
+
+    #[test]
+    fn no_reuse_traffic() {
+        let c = CgraSim::default();
+        let g = PGemm::new(64, 64, 64, Precision::Int8);
+        let r = c.run(&TensorOp::PGemm(g));
+        assert!(r.sram_bytes as f64 >= 2.0 * g.macs() as f64);
+    }
+}

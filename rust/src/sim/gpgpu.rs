@@ -1,0 +1,203 @@
+//! GPGPU baseline: an H100-class model (Table 1 column 3).
+//!
+//! Following the paper's §7.3 methodology, decomposed **p-GEMM operators
+//! go to the tensor cores** (small-cube MMA units) and **vector operators
+//! go to the CUDA cores**. "For precision that Tensor Core cannot support,
+//! we use the closely higher precision."
+//!
+//! Comparison is **same-area** (§6.3: "configure different number of MPRA
+//! to match the same area"): the H100 is modeled at full chip scale and
+//! the GTA side of Fig. 8 is scaled UP to the H100's 14 nm-equivalent
+//! area (see `report::fig8` / `area::gta_lanes_for_area`). The small MMA
+//! cube means every MAC drags a fixed shared-memory operand quota — the
+//! paper's "large numbers of memory operations and high on-chip memory
+//! bandwidth" observation — and ragged workloads pay whole-cube cycles.
+
+use super::{Platform, SimReport};
+use crate::arch::area;
+use crate::ops::{PGemm, TensorOp, VectorOp};
+use crate::precision::Precision;
+
+/// Whole-chip dense MAC rates per cycle (H100 SXM at 1755 MHz), derived
+/// from the public TOPS/TFLOPS figures.
+fn chip_macs_per_cycle(p: Precision) -> f64 {
+    match p {
+        // 1979 TOPS INT8 (TC)
+        Precision::Int8 => 563_000.0,
+        // INT16/INT32: promoted to the INT32 CUDA-core path
+        Precision::Int16 | Precision::Int32 => 19_000.0,
+        // INT64: CUDA-core 64-bit integer path (quarter INT32 rate)
+        Precision::Int64 => 4_750.0,
+        // 989 TFLOPS FP16/BF16 (TC)
+        Precision::Bp16 | Precision::Fp16 => 281_000.0,
+        // FP32 runs on the TF32 TC path (494 TFLOPS)
+        Precision::Fp32 => 141_000.0,
+        // FP64 TC: 67 TFLOPS
+        Precision::Fp64 => 19_000.0,
+    }
+}
+
+/// MMA cube shape the tensor core executes for `p` (m, n, k).
+fn mma_cube(p: Precision) -> (u64, u64, u64) {
+    match p {
+        Precision::Int8 => (16, 8, 32),
+        Precision::Bp16 | Precision::Fp16 => (16, 8, 16),
+        Precision::Fp32 => (16, 8, 8), // TF32 cube
+        Precision::Fp64 => (8, 8, 4),
+        Precision::Int16 | Precision::Int32 | Precision::Int64 => (8, 8, 4),
+    }
+}
+
+/// H100 model (full chip by default; `slice` scales it for ablations).
+#[derive(Debug, Clone)]
+pub struct GpgpuSim {
+    pub freq_mhz: u32,
+    /// Fraction of the whole chip's compute simulated (1.0 = full H100).
+    pub slice: f64,
+}
+
+impl Default for GpgpuSim {
+    fn default() -> Self {
+        GpgpuSim { freq_mhz: 1755, slice: 1.0 }
+    }
+}
+
+impl GpgpuSim {
+    /// The number of GTA lanes occupying the same silicon area as this
+    /// H100 model at 14 nm-equivalent density (the Fig. 8 normalization),
+    /// rounded down to a power of two so the lane grid has usable
+    /// arrangements (a GTA would be built with a power-of-two lane count).
+    pub fn equal_area_gta_lanes() -> u32 {
+        let raw = area::gta_lanes_for_area(814.0, 4);
+        1 << (31 - raw.leading_zeros())
+    }
+
+    fn tc_macs_per_cycle(&self, p: Precision) -> f64 {
+        (chip_macs_per_cycle(p) * self.slice).max(0.25)
+    }
+
+    fn run_gemm(&self, g: &PGemm) -> SimReport {
+        let macs = g.macs();
+        let rate = self.tc_macs_per_cycle(g.precision);
+        // the TC executes whole cubes: ragged/small workloads pay for the
+        // full (tm,tn,tk) volume — the cube-quantization penalty
+        let (tm, tn, tk) = mma_cube(g.precision);
+        let n_cubes = g.m.div_ceil(tm) * g.n.div_ceil(tn) * g.k.div_ceil(tk);
+        let cube_macs = n_cubes * tm * tn * tk;
+        // a runtime (cuBLAS-style heuristic) would send GEMMs that badly
+        // under-fill the cube to the CUDA cores instead
+        if (macs as f64) < 0.25 * cube_macs as f64 {
+            return self.run_vector(&VectorOp::new(
+                macs.max(1),
+                g.precision,
+                crate::ops::VectorKind::Axpy,
+            ));
+        }
+        let cycles = (cube_macs as f64 / rate).ceil().max(1.0) as u64;
+        let per_cube = tm * tk + tk * tn; // operand elements per MMA
+        let bytes = g.precision.bytes();
+        let sram_bytes = (n_cubes * per_cube + g.m * g.n) * bytes;
+        let dram_bytes = g.compulsory_bytes();
+        SimReport {
+            cycles,
+            freq_mhz: self.freq_mhz,
+            sram_bytes,
+            dram_bytes,
+            macs,
+            // the cube quantizes the workload: ragged edges idle the TC
+            utilization: macs as f64 / (n_cubes * tm * tn * tk) as f64,
+            energy_pj: macs as f64 * 0.4 // 4nm MAC, fused datapath
+                + sram_bytes as f64 * crate::arch::energy::SRAM_PJ_PER_BYTE
+                + dram_bytes as f64 * crate::arch::energy::DRAM_PJ_PER_BYTE,
+        }
+    }
+
+    fn run_vector(&self, v: &VectorOp) -> SimReport {
+        // CUDA cores: FP32-class lanes; the slice's share of 132 SMs × 128
+        // lanes, at most the INT32 rate for integer work
+        let cuda_rate = (19_000.0 * self.slice).max(0.25);
+        let ops = v.ops();
+        let cycles = (ops as f64 / cuda_rate).ceil().max(1.0) as u64;
+        let sram_bytes = v.bytes();
+        SimReport {
+            cycles,
+            freq_mhz: self.freq_mhz,
+            sram_bytes,
+            dram_bytes: v.bytes(),
+            macs: ops,
+            utilization: 1.0,
+            energy_pj: ops as f64 * 0.4
+                + sram_bytes as f64
+                    * (crate::arch::energy::SRAM_PJ_PER_BYTE
+                        + crate::arch::energy::DRAM_PJ_PER_BYTE),
+        }
+    }
+}
+
+impl Platform for GpgpuSim {
+    fn name(&self) -> &'static str {
+        "GPGPU-H100"
+    }
+
+    fn run(&self, op: &TensorOp) -> SimReport {
+        match op {
+            TensorOp::PGemm(g) => self.run_gemm(g),
+            TensorOp::Vector(v) => self.run_vector(v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gta::GtaSim;
+
+    #[test]
+    fn equal_area_normalization_is_large() {
+        // H100's 814mm² @4nm is worth tens of thousands of 14nm GTA lanes
+        let lanes = GpgpuSim::equal_area_gta_lanes();
+        assert!((20_000..80_000).contains(&lanes), "got {lanes}");
+    }
+
+    #[test]
+    fn tc_precisions_fast_promoted_slow() {
+        let s = GpgpuSim::default();
+        assert!(s.tc_macs_per_cycle(Precision::Int8) > s.tc_macs_per_cycle(Precision::Fp16));
+        assert!(s.tc_macs_per_cycle(Precision::Fp16) > s.tc_macs_per_cycle(Precision::Int16));
+    }
+
+    #[test]
+    fn small_cube_costs_memory() {
+        // per-MAC shared memory quota must exceed the systolic compulsory
+        // fraction for a big GEMM — the paper's §7.3 memory argument
+        let s = GpgpuSim::default();
+        let g = PGemm::new(512, 512, 512, Precision::Bp16);
+        let r = s.run(&TensorOp::PGemm(g));
+        assert!(r.sram_bytes > g.compulsory_bytes() * 4);
+    }
+
+    #[test]
+    fn gta_saves_memory_vs_gpgpu_on_bp16_gemm() {
+        // equal-area comparison, as in Fig. 8
+        let gpu = GpgpuSim::default();
+        let gta = GtaSim::new(crate::GtaConfig::with_lanes(1024));
+        let g = TensorOp::gemm(512, 512, 2048, Precision::Bp16);
+        assert!(gpu.run(&g).memory_access() > gta.run(&g).memory_access());
+    }
+
+    #[test]
+    fn ragged_workload_underutilizes_cube() {
+        let s = GpgpuSim::default();
+        // ragged but big enough to stay on the TC (no CUDA fallback)
+        let r = s.run(&TensorOp::gemm(24, 12, 40, Precision::Fp16));
+        assert!(r.utilization < 0.8, "util {}", r.utilization);
+    }
+
+    #[test]
+    fn tiny_gemm_falls_back_to_cuda_cores() {
+        let s = GpgpuSim::default();
+        // M=K=3: the cube would be ~1% utilized -> heuristic reroutes
+        let r = s.run(&TensorOp::gemm(3, 4096, 3, Precision::Int8));
+        assert!((r.utilization - 1.0).abs() < 1e-9);
+    }
+}

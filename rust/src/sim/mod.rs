@@ -1,0 +1,128 @@
+//! Platform simulators (§6.3): GTA and the three baselines.
+//!
+//! All simulators report the two metrics the paper compares — **computing
+//! cycles** and **memory access** — plus energy and utilization. They are
+//! analytic cycle models in the scale-sim tradition (the same methodology
+//! the paper builds its own simulators on), counting fills, streams,
+//! drains and per-operand traffic rather than simulating RTL.
+
+pub mod cgra;
+pub mod gpgpu;
+pub mod gta;
+pub mod mpra;
+pub mod systolic;
+pub mod trace;
+pub mod vpu;
+
+use crate::ops::TensorOp;
+
+/// Result of simulating one operator (or a whole workload) on a platform.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SimReport {
+    /// Compute cycles at the platform's own clock.
+    pub cycles: u64,
+    /// Platform clock in MHz (to convert cycles to wall time).
+    pub freq_mhz: u32,
+    /// Bytes moved to/from the on-chip operand memory (SRAM / shared mem /
+    /// VRF fill traffic). This is the paper's "memory access" metric.
+    pub sram_bytes: u64,
+    /// Bytes moved to/from off-chip (or next-level) memory.
+    pub dram_bytes: u64,
+    /// Multiply-accumulates executed, at workload precision.
+    pub macs: u64,
+    /// Average fraction of compute resources busy (0..=1).
+    pub utilization: f64,
+    /// Total energy in pJ (compute + memory).
+    pub energy_pj: f64,
+}
+
+impl SimReport {
+    /// Wall-clock seconds.
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / (self.freq_mhz as f64 * 1e6)
+    }
+
+    /// The paper's memory-access index: total bytes through the memory
+    /// hierarchy (SRAM + DRAM weighted equally, as access counts).
+    pub fn memory_access(&self) -> u64 {
+        self.sram_bytes + self.dram_bytes
+    }
+
+    /// Accumulate another report (sequential composition of operators).
+    pub fn add(&mut self, other: &SimReport) {
+        debug_assert!(
+            self.freq_mhz == 0 || other.freq_mhz == 0 || self.freq_mhz == other.freq_mhz,
+            "cannot add reports across clock domains"
+        );
+        let total_cycles = self.cycles + other.cycles;
+        // cycle-weighted utilization
+        self.utilization = if total_cycles > 0 {
+            (self.utilization * self.cycles as f64 + other.utilization * other.cycles as f64)
+                / total_cycles as f64
+        } else {
+            0.0
+        };
+        self.cycles = total_cycles;
+        self.freq_mhz = self.freq_mhz.max(other.freq_mhz);
+        self.sram_bytes += other.sram_bytes;
+        self.dram_bytes += other.dram_bytes;
+        self.macs += other.macs;
+        self.energy_pj += other.energy_pj;
+    }
+
+    /// Sum a sequence of reports.
+    pub fn sum<'a>(reports: impl IntoIterator<Item = &'a SimReport>) -> SimReport {
+        let mut acc = SimReport::default();
+        for r in reports {
+            acc.add(r);
+        }
+        acc
+    }
+}
+
+/// A platform that can execute (simulate) a decomposed tensor operator.
+pub trait Platform {
+    fn name(&self) -> &'static str;
+    /// Simulate one operator.
+    fn run(&self, op: &TensorOp) -> SimReport;
+    /// Simulate a workload (operator sequence).
+    fn run_all(&self, ops: &[TensorOp]) -> SimReport {
+        let reports: Vec<SimReport> = ops.iter().map(|op| self.run(op)).collect();
+        SimReport::sum(reports.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_add_accumulates() {
+        let mut a = SimReport {
+            cycles: 100,
+            freq_mhz: 1000,
+            sram_bytes: 10,
+            dram_bytes: 1,
+            macs: 50,
+            utilization: 1.0,
+            energy_pj: 5.0,
+        };
+        let b = SimReport {
+            cycles: 300,
+            freq_mhz: 1000,
+            utilization: 0.5,
+            ..a
+        };
+        a.add(&b);
+        assert_eq!(a.cycles, 400);
+        assert_eq!(a.sram_bytes, 20);
+        // cycle-weighted utilization: (1.0*100 + 0.5*300)/400
+        assert!((a.utilization - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seconds_uses_frequency() {
+        let r = SimReport { cycles: 1_000_000, freq_mhz: 1000, ..Default::default() };
+        assert!((r.seconds() - 1e-3).abs() < 1e-12);
+    }
+}

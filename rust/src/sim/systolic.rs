@@ -1,0 +1,203 @@
+//! Scale-sim-style analytic model of a systolic array executing a GEMM
+//! under the three dataflows (§3.1, §5). This is the timing/traffic core
+//! both the GTA simulator and the scheduler cost model are built on.
+//!
+//! Orientation convention (rows × cols of the PE grid):
+//! * **WS**: rows ← K (contraction), cols ← N; M streams temporally.
+//! * **IS**: rows ← K, cols ← M; N streams temporally.
+//! * **OS**: rows ← M, cols ← N; K streams temporally.
+//!
+//! Traffic is counted in *elements* at the interface of the array's
+//! operand SRAM (the caller converts to bytes at workload precision), in
+//! the style of scale-sim's counted read/write traces.
+
+use crate::arch::Dataflow;
+
+/// A GEMM already *mapped* to array coordinates (after any precision
+/// expansion — see [`crate::sim::mpra`]): spatial dims include limb
+/// multiplication, temporal dim likewise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MappedGemm {
+    /// Elements along the array-row spatial dimension.
+    pub rows: u64,
+    /// Elements along the array-column spatial dimension.
+    pub cols: u64,
+    /// Temporal (streamed) extent.
+    pub temporal: u64,
+}
+
+/// Timing + traffic of one GEMM on an `r × c` array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystolicRun {
+    pub cycles: u64,
+    /// Element reads of the streamed operand(s) + stationary fills.
+    pub sram_read_elems: u64,
+    /// Element writes of results (incl. partial-sum spill traffic).
+    pub sram_write_elems: u64,
+    /// Average PE utilization over the run.
+    pub utilization: f64,
+    /// Number of (row, col) fold iterations executed.
+    pub folds: u64,
+}
+
+/// Simulate `gemm` (already in array coordinates) on an `r × c` array
+/// under `flow`. `m`, `n`, `k` are the ORIGINAL workload dims (for traffic
+/// accounting of A/B/C at word granularity); `gemm` carries the mapped
+/// (possibly limb-expanded) extents.
+pub fn run(
+    flow: Dataflow,
+    r: u64,
+    c: u64,
+    gemm: MappedGemm,
+    m: u64,
+    n: u64,
+    k: u64,
+) -> SystolicRun {
+    assert!(r > 0 && c > 0);
+    match flow {
+        Dataflow::WS | Dataflow::IS => run_stationary(r, c, gemm, m, n, k, flow),
+        Dataflow::OS => run_os(r, c, gemm, m, n, k),
+        Dataflow::Simd => panic!("SIMD mode is not a systolic dataflow"),
+    }
+}
+
+/// WS / IS: one operand resident, the other streams past it.
+fn run_stationary(
+    r: u64,
+    c: u64,
+    g: MappedGemm,
+    m: u64,
+    n: u64,
+    k: u64,
+    flow: Dataflow,
+) -> SystolicRun {
+    // Double-buffered folds: while fold (i,j) streams its `temporal`
+    // values, the next fold's stationary panel loads into the shadow
+    // registers and the skew drain overlaps the next fill. Only the first
+    // fill and last drain are exposed. Closed form, O(1) (§Perf L3).
+    let fr = g.rows.div_ceil(r);
+    let fc = g.cols.div_ceil(c);
+    let fill = g.rows.min(r);
+    let drain = g.rows.min(r) + g.cols.min(c) - 1;
+    let cycles = fr * fc * g.temporal + fill + drain;
+    let busy_pe_cycles = g.rows * g.cols * g.temporal;
+    let utilization = busy_pe_cycles as f64 / (cycles.max(1) as f64 * (r * c) as f64);
+
+    // ---- traffic at word granularity (original dims) ----
+    // stationary operand loaded exactly once; streamed operand re-read per
+    // fold of the stationary operand's non-shared spatial dim; outputs
+    // accumulate partial sums across contraction folds.
+    let fk = k_folds(flow, g, r);
+    let (stationary_elems, streamed_elems, out_elems) = match flow {
+        // WS: B (k×n) resident; A (m×k) streams once per N-fold; C = m×n
+        Dataflow::WS => (k * n, m * k * fc, m * n),
+        // IS: A (m×k) resident; B (k×n) streams once per M-fold; C = m×n
+        Dataflow::IS => (m * k, k * n * fc, m * n),
+        _ => unreachable!(),
+    };
+    // partial sums cross the array boundary once per extra contraction fold
+    let psum_traffic = out_elems * (fk.saturating_sub(1));
+    SystolicRun {
+        cycles,
+        sram_read_elems: stationary_elems + streamed_elems + psum_traffic,
+        sram_write_elems: out_elems + psum_traffic,
+        utilization,
+        folds: fr * fc,
+    }
+}
+
+/// OS: the C tile is resident; A and B stream K-deep into the array.
+fn run_os(r: u64, c: u64, g: MappedGemm, m: u64, n: u64, k: u64) -> SystolicRun {
+    // Double-buffered OS folds: the K-deep stream of the next C-tile
+    // follows the current one back-to-back; the output drain overlaps the
+    // next fill (scale-sim's 2r+c+T−2 with the skews amortized across
+    // folds). Closed form as in run_stationary.
+    let fr = g.rows.div_ceil(r);
+    let fc = g.cols.div_ceil(c);
+    let fill = g.rows.min(r);
+    let drain = g.rows.min(r) + g.cols.min(c) - 1;
+    let cycles = fr * fc * g.temporal + fill + drain;
+    let busy_pe_cycles = g.rows * g.cols * g.temporal;
+    let utilization = busy_pe_cycles as f64 / (cycles.max(1) as f64 * (r * c) as f64);
+    // A re-read per column fold, B re-read per row fold, C written once
+    // (partial sums never leave the array — the OS advantage).
+    SystolicRun {
+        cycles,
+        sram_read_elems: m * k * fc + k * n * fr,
+        sram_write_elems: m * n,
+        utilization,
+        folds: fr * fc,
+    }
+}
+
+/// Contraction folds: how many times partial sums must leave the array.
+fn k_folds(flow: Dataflow, g: MappedGemm, r: u64) -> u64 {
+    match flow {
+        // WS/IS: contraction is the ROW spatial dim; each row-fold produces
+        // partial sums that are re-injected
+        Dataflow::WS | Dataflow::IS => g.rows.div_ceil(r),
+        // OS: contraction is temporal; partial sums stay put
+        Dataflow::OS => 1,
+        Dataflow::Simd => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(rows: u64, cols: u64, t: u64) -> MappedGemm {
+        MappedGemm { rows, cols, temporal: t }
+    }
+
+    #[test]
+    fn perfectly_mapped_ws_single_fold() {
+        // 8×8 array, K=8,N=8,M=16 : one fold
+        let run = run(Dataflow::WS, 8, 8, g(8, 8, 16), 16, 8, 8);
+        assert_eq!(run.folds, 1);
+        // stream 16 + fill 8 + drain 8+8-1 = 39
+        assert_eq!(run.cycles, 39);
+        // B once (64), A once (16*8=128), C 128 writes, no psum traffic
+        assert_eq!(run.sram_read_elems, 64 + 128);
+        assert_eq!(run.sram_write_elems, 128);
+    }
+
+    #[test]
+    fn os_partial_sums_stay_on_array() {
+        let ws = run(Dataflow::WS, 8, 8, g(64, 8, 16), 16, 8, 64, );
+        let os = run(Dataflow::OS, 8, 8, g(16, 8, 64), 16, 8, 64);
+        // WS folds K=64 over 8 rows: 8 folds -> psum traffic; OS has none
+        assert!(ws.sram_write_elems > os.sram_write_elems);
+    }
+
+    #[test]
+    fn utilization_bounded_and_degrades_with_bad_fit() {
+        let good = run(Dataflow::OS, 8, 8, g(8, 8, 64), 8, 8, 64);
+        let bad = run(Dataflow::OS, 8, 8, g(9, 9, 64), 9, 9, 64);
+        assert!(good.utilization <= 1.0 && good.utilization > 0.5);
+        assert!(bad.utilization < good.utilization, "ragged folds waste PEs");
+    }
+
+    #[test]
+    fn cycles_scale_linearly_in_temporal_extent() {
+        let a = run(Dataflow::WS, 8, 8, g(8, 8, 100), 100, 8, 8).cycles;
+        let b = run(Dataflow::WS, 8, 8, g(8, 8, 200), 200, 8, 8).cycles;
+        assert!(b > a && b < 2 * a + 30);
+    }
+
+    #[test]
+    fn streamed_operand_rereads_per_fold() {
+        // N=16 on 8 cols -> 2 column folds -> A read twice under WS
+        let run2 = run(Dataflow::WS, 8, 8, g(8, 16, 4), 4, 16, 8);
+        assert_eq!(run2.folds, 2);
+        assert_eq!(run2.sram_read_elems, 8 * 16 + 4 * 8 * 2);
+    }
+
+    #[test]
+    fn is_mirrors_ws() {
+        // IS with (M,N) swapped should match WS traffic symmetrically
+        let ws = run(Dataflow::WS, 8, 8, g(8, 8, 32), 32, 8, 8);
+        let is = run(Dataflow::IS, 8, 8, g(8, 8, 32), 8, 32, 8);
+        assert_eq!(ws.cycles, is.cycles);
+    }
+}

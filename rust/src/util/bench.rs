@@ -1,0 +1,75 @@
+//! Micro-benchmark harness (criterion stand-in): warmup + timed samples,
+//! median/mean/min reporting, consistent text output shared by every
+//! `rust/benches/*.rs` target.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl Sample {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters {:>6}  mean {:>12?}  median {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min
+        )
+    }
+}
+
+/// Run `f` repeatedly: a warmup, then enough iterations to fill the time
+/// budget (default 1s), and collect per-iteration timings. Prevents the
+/// optimizer from deleting the work via `std::hint::black_box` in callers.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Sample {
+    bench_with_budget(name, Duration::from_millis(600), &mut f)
+}
+
+pub fn bench_with_budget(name: &str, budget: Duration, f: &mut dyn FnMut()) -> Sample {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (budget.as_nanos() / once.as_nanos()).clamp(5, 10_000) as u64;
+
+    let mut times: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    let sample = Sample {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: times[times.len() / 2],
+        min: times[0],
+    };
+    println!("{}", sample.report());
+    sample
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let s = bench_with_budget(
+            "noop",
+            Duration::from_millis(10),
+            &mut || n = std::hint::black_box(n + 1),
+        );
+        assert!(s.iters >= 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 10);
+        assert!(n >= s.iters);
+    }
+}

@@ -1,0 +1,404 @@
+//! Functional verification: execute every AOT artifact through PJRT with
+//! deterministic random inputs and check the numerics against independent
+//! rust oracles (limb GEMM, direct convolution, naive f32 GEMM). This is
+//! the end-to-end proof that the three-layer stack — Pallas kernel → HLO
+//! text → rust PJRT runtime — computes what the paper's §3.1 says it does.
+
+use crate::precision::limbs;
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Result of a verification sweep.
+#[derive(Debug, Clone, Default)]
+pub struct Outcome {
+    pub passed: u32,
+    pub failed: u32,
+    pub details: Vec<(String, bool, String)>,
+}
+
+impl Outcome {
+    fn record(&mut self, name: &str, r: Result<()>) {
+        match r {
+            Ok(()) => {
+                self.passed += 1;
+                self.details.push((name.to_string(), true, "ok".into()));
+            }
+            Err(e) => {
+                self.failed += 1;
+                self.details.push((name.to_string(), false, format!("{e:#}")));
+            }
+        }
+    }
+}
+
+/// Verify every artifact the manifest lists. `verbose` prints per-artifact
+/// PASS/FAIL lines.
+pub fn verify_all(dir: &Path, verbose: bool) -> Result<Outcome> {
+    let engine = Engine::load(dir)?;
+    let mut out = Outcome::default();
+    let names: Vec<String> = engine.names().iter().map(|s| s.to_string()).collect();
+    for name in names {
+        let r = verify_one(&engine, &name);
+        if verbose {
+            match &r {
+                Ok(()) => println!("  PASS {name}"),
+                Err(e) => println!("  FAIL {name}: {e:#}"),
+            }
+        }
+        out.record(&name, r);
+    }
+    Ok(out)
+}
+
+/// Verify a single artifact by name.
+pub fn verify_one(engine: &Engine, name: &str) -> Result<()> {
+    let mut rng = Rng::new(0xDEAD_BEEF ^ name.len() as u64);
+    match name {
+        "mpra_gemm_i8_64" => verify_mpra_i32(engine, name, 64, 1, &mut rng),
+        "mpra_gemm_i16_64" => verify_mpra_i32(engine, name, 64, 2, &mut rng),
+        "mpra_gemm_i32_64" => verify_mpra_i32(engine, name, 64, 4, &mut rng),
+        "mpra_gemm_i64_32" => verify_mpra_i64(engine, name, 32, &mut rng),
+        "bignum_mul_64" => verify_bignum(engine, name, 64, &mut rng),
+        "matmul_f32_128" => verify_matmul_f32(engine, name, 128, &mut rng),
+        "alexnet_conv_i8" => verify_conv_i8(engine, name, &mut rng),
+        "ffl_bf16" => verify_ffl(engine, name, &mut rng),
+        "pca_cov_f32" => verify_pca(engine, name, &mut rng),
+        "nerf_mlp_f32" => verify_nerf(engine, name, &mut rng),
+        "md_update_i32" => verify_md(engine, name, &mut rng),
+        "rgb_convert_i8" => verify_rgb(engine, name, &mut rng),
+        "fir_i16" => verify_fir(engine, name, &mut rng),
+        other => Err(anyhow!("no oracle registered for artifact {other:?}")),
+    }
+}
+
+// ------------------------------------------------------------- oracles --
+
+/// Naive row-major f32 GEMM.
+pub fn gemm_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Round-to-nearest-even f32 → bf16 → f32 quantization (what the BP16
+/// datapath sees).
+pub fn quantize_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) -> Result<()> {
+    if got.len() != want.len() {
+        return Err(anyhow!("length {} != {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        if (g - w).abs() > tol {
+            return Err(anyhow!("mismatch at {i}: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------- verifications --
+
+fn verify_mpra_i32(engine: &Engine, name: &str, dim: usize, n_limbs: u32, rng: &mut Rng) -> Result<()> {
+    let bits = 8 * n_limbs as i64;
+    let (lo, hi) = (-(1i64 << (bits - 1)), (1i64 << (bits - 1)) - 1);
+    // keep magnitudes small enough that the i32 accumulator cannot
+    // overflow over K=64 — the EXACT regime of the §3.1 claim
+    let clamp = ((i32::MAX as i64 / (dim as i64)) as f64).sqrt() as i64;
+    let (lo, hi) = (lo.max(-clamp), hi.min(clamp));
+    let a: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(lo, hi)).collect();
+    let b: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(lo, hi)).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+            HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+        ],
+    )?;
+    let got = outs[0].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    let want = limbs::limb_gemm(&a, &b, dim, dim, dim, n_limbs, 32);
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        if g as i64 != w {
+            return Err(anyhow!("[{i}] got {g}, oracle {w}"));
+        }
+    }
+    Ok(())
+}
+
+fn verify_mpra_i64(engine: &Engine, name: &str, dim: usize, rng: &mut Rng) -> Result<()> {
+    let a: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(-(1 << 20), 1 << 20)).collect();
+    let b: Vec<i64> = (0..dim * dim).map(|_| rng.range_i64(-(1 << 20), 1 << 20)).collect();
+    let outs = engine.execute(name, &[HostTensor::I64(a.clone()), HostTensor::I64(b.clone())])?;
+    let got = outs[0].as_i64().ok_or_else(|| anyhow!("bad output dtype"))?;
+    let want = limbs::limb_gemm(&a, &b, dim, dim, dim, 8, 64);
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        if g != w {
+            return Err(anyhow!("[{i}] got {g}, oracle {w}"));
+        }
+    }
+    Ok(())
+}
+
+fn verify_bignum(engine: &Engine, name: &str, l: usize, rng: &mut Rng) -> Result<()> {
+    let a: Vec<u8> = (0..l).map(|_| rng.range_u64(0, 255) as u8).collect();
+    let b: Vec<u8> = (0..l).map(|_| rng.range_u64(0, 255) as u8).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+            HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+        ],
+    )?;
+    let got = outs[0].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    let want = limbs::bignum_mul_precarry(&a, &b);
+    if got.len() != want.len() {
+        return Err(anyhow!("len {} != {}", got.len(), want.len()));
+    }
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        if g as i64 != w {
+            return Err(anyhow!("[{i}] got {g}, oracle {w}"));
+        }
+    }
+    Ok(())
+}
+
+fn verify_matmul_f32(engine: &Engine, name: &str, dim: usize, rng: &mut Rng) -> Result<()> {
+    let a: Vec<f32> = (0..dim * dim).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..dim * dim).map(|_| rng.normal_f32()).collect();
+    let outs = engine.execute(name, &[HostTensor::F32(a.clone()), HostTensor::F32(b.clone())])?;
+    let got = outs[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    let want = gemm_f32(&a, &b, dim, dim, dim);
+    assert_allclose(got, &want, 1e-4, 1e-4)
+}
+
+fn verify_conv_i8(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let (c, hw, k, r) = (64usize, 15usize, 64usize, 3usize);
+    let x: Vec<i64> = (0..c * hw * hw).map(|_| rng.range_i64(-128, 127)).collect();
+    let w: Vec<i64> = (0..k * c * r * r).map(|_| rng.range_i64(-128, 127)).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::I32(x.iter().map(|&v| v as i32).collect()),
+            HostTensor::I32(w.iter().map(|&v| v as i32).collect()),
+        ],
+    )?;
+    let got = outs[0].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    // direct convolution oracle (valid padding, stride 1)
+    let o = hw - r + 1;
+    let mut want = vec![0i64; k * o * o];
+    for kk in 0..k {
+        for y in 0..o {
+            for xx in 0..o {
+                let mut acc = 0i64;
+                for ch in 0..c {
+                    for dr in 0..r {
+                        for ds in 0..r {
+                            acc += x[ch * hw * hw + (y + dr) * hw + (xx + ds)]
+                                * w[kk * c * r * r + ch * r * r + dr * r + ds];
+                        }
+                    }
+                }
+                want[kk * o * o + y * o + xx] = acc;
+            }
+        }
+    }
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        if g as i64 != w {
+            return Err(anyhow!("[{i}] got {g}, oracle {w}"));
+        }
+    }
+    Ok(())
+}
+
+fn verify_ffl(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let (b, d, f) = (16usize, 256usize, 1024usize);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32() * 0.5).collect();
+    let w1: Vec<f32> = (0..d * f).map(|_| rng.normal_f32() * 0.05).collect();
+    let w2: Vec<f32> = (0..f * d).map(|_| rng.normal_f32() * 0.05).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::F32(x.clone()),
+            HostTensor::F32(w1.clone()),
+            HostTensor::F32(w2.clone()),
+        ],
+    )?;
+    let got = outs[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    let q = |v: &[f32]| -> Vec<f32> { v.iter().map(|&x| quantize_bf16(x)).collect() };
+    let mut h = gemm_f32(&q(&x), &q(&w1), b, d, f);
+    for v in h.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let want = gemm_f32(&q(&h), &q(&w2), b, f, d);
+    // bf16 mantissa: loose tolerance
+    assert_allclose(got, &want, 2e-2, 2e-2)
+}
+
+fn verify_pca(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let (n, d) = (256usize, 64usize);
+    let x: Vec<f32> = (0..n * d).map(|_| rng.normal_f32()).collect();
+    let outs = engine.execute(name, &[HostTensor::F32(x.clone())])?;
+    let got = outs[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    // center then covariance
+    let mut xc = x.clone();
+    for j in 0..d {
+        let mean: f32 = (0..n).map(|i| x[i * d + j]).sum::<f32>() / n as f32;
+        for i in 0..n {
+            xc[i * d + j] -= mean;
+        }
+    }
+    // want = xcᵀ·xc / (n-1): (d×n)·(n×d)
+    let mut xt = vec![0f32; d * n];
+    for i in 0..n {
+        for j in 0..d {
+            xt[j * n + i] = xc[i * d + j];
+        }
+    }
+    let mut want = gemm_f32(&xt, &xc, d, n, d);
+    for v in want.iter_mut() {
+        *v /= (n - 1) as f32;
+    }
+    assert_allclose(got, &want, 1e-3, 1e-3)
+}
+
+fn verify_nerf(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let (b, d, h) = (128usize, 64usize, 256usize);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32()).collect();
+    let w1: Vec<f32> = (0..d * h).map(|_| rng.normal_f32() * 0.1).collect();
+    let w2: Vec<f32> = (0..h * d).map(|_| rng.normal_f32() * 0.1).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::F32(x.clone()),
+            HostTensor::F32(w1.clone()),
+            HostTensor::F32(w2.clone()),
+        ],
+    )?;
+    let got = outs[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    let mut hidden = gemm_f32(&x, &w1, b, d, h);
+    for v in hidden.iter_mut() {
+        *v = v.max(0.0);
+    }
+    let want = gemm_f32(&hidden, &w2, b, h, d);
+    assert_allclose(got, &want, 1e-4, 1e-4)
+}
+
+fn verify_md(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let (n, b) = (64usize, 32usize);
+    let a22: Vec<i64> = (0..n * n).map(|_| rng.range_i64(-1000, 1000)).collect();
+    let a21: Vec<i64> = (0..n * b).map(|_| rng.range_i64(-1000, 1000)).collect();
+    let a12: Vec<i64> = (0..b * n).map(|_| rng.range_i64(-1000, 1000)).collect();
+    let to_i32 = |v: &[i64]| HostTensor::I32(v.iter().map(|&x| x as i32).collect());
+    let outs = engine.execute(name, &[to_i32(&a22), to_i32(&a21), to_i32(&a12)])?;
+    let got = outs[0].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    for i in 0..n {
+        for j in 0..n {
+            let mut prod = 0i64;
+            for kk in 0..b {
+                prod += a21[i * b + kk] * a12[kk * n + j];
+            }
+            let want = a22[i * n + j] - prod;
+            let g = got[i * n + j] as i64;
+            if g != want {
+                return Err(anyhow!("[{i},{j}] got {g}, oracle {want}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn verify_rgb(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let pixels = 1024usize;
+    let mat: Vec<i64> = (0..9).map(|_| rng.range_i64(-128, 127)).collect();
+    let img: Vec<i64> = (0..3 * pixels).map(|_| rng.range_i64(-128, 127)).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::I32(mat.iter().map(|&v| v as i32).collect()),
+            HostTensor::I32(img.iter().map(|&v| v as i32).collect()),
+        ],
+    )?;
+    let got = outs[0].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    // direct 3×3 colour-matrix oracle
+    for ch in 0..3 {
+        for p in 0..pixels {
+            let want: i64 = (0..3).map(|c| mat[ch * 3 + c] * img[c * pixels + p]).sum();
+            let g = got[ch * pixels + p] as i64;
+            if g != want {
+                return Err(anyhow!("[{ch},{p}] got {g}, oracle {want}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn verify_fir(engine: &Engine, name: &str, rng: &mut Rng) -> Result<()> {
+    let (n, taps) = (256usize, 64usize);
+    let x: Vec<i64> = (0..n + taps - 1).map(|_| rng.range_i64(-3000, 3000)).collect();
+    let h: Vec<i64> = (0..taps).map(|_| rng.range_i64(-3000, 3000)).collect();
+    let outs = engine.execute(
+        name,
+        &[
+            HostTensor::I32(x.iter().map(|&v| v as i32).collect()),
+            HostTensor::I32(h.iter().map(|&v| v as i32).collect()),
+        ],
+    )?;
+    let got = outs[0].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+    // direct FIR oracle: y[i] = Σ_t h[t]·x[i+t]
+    for i in 0..n {
+        let want: i64 = (0..taps).map(|t| h[t] * x[i + t]).sum();
+        let g = got[i] as i64;
+        if g != want {
+            return Err(anyhow!("[{i}] got {g}, oracle {want}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_quantization_properties() {
+        assert_eq!(quantize_bf16(1.0), 1.0);
+        assert_eq!(quantize_bf16(0.0), 0.0);
+        // bf16 has 8 significand bits: relative error < 2^-8
+        for &x in &[3.14159f32, -123.456, 1e-3, 7.5e6] {
+            let q = quantize_bf16(x);
+            assert!(((q - x) / x).abs() < 1.0 / 256.0, "{x} -> {q}");
+        }
+    }
+
+    #[test]
+    fn gemm_f32_oracle_identity() {
+        // A · I = A
+        let a: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let mut eye = vec![0f32; 9];
+        for i in 0..3 {
+            eye[i * 3 + i] = 1.0;
+        }
+        assert_eq!(gemm_f32(&a, &eye, 3, 3, 3), a);
+    }
+
+    #[test]
+    fn allclose_catches_mismatch() {
+        assert!(assert_allclose(&[1.0], &[1.0001], 1e-3, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0], 1e-3, 0.0).is_err());
+    }
+}

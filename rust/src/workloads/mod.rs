@@ -1,0 +1,226 @@
+//! The Table 2 workload suite: nine tensor applications across domains and
+//! precisions, each decomposed into p-GEMM and vector operators "for
+//! execution" exactly as §6.2 prescribes.
+
+use crate::lowering;
+use crate::ops::{TensorOp, VectorKind};
+use crate::precision::Precision;
+
+/// A Table 2 workload: name, description, dominant precision, operator list.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub precision: Precision,
+    pub ops: Vec<TensorOp>,
+}
+
+impl Workload {
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+}
+
+/// BNM — Big-Number Multiplication (scientific computing / encryption):
+/// a batch of 512-bit (64-limb) products, each a rank-1 limb p-GEMM +
+/// carry pass (§3.1).
+pub fn bnm() -> Workload {
+    let mut ops = Vec::new();
+    for _ in 0..128 {
+        ops.extend(lowering::bignum_mul(64));
+    }
+    Workload {
+        name: "BNM",
+        description: "Big Numbers Multiplication in Scientific Computing and Encryption",
+        precision: Precision::Int64,
+        ops,
+    }
+}
+
+/// RGB — SRGB2XYZ colour conversion over a 1080p frame, INT8.
+pub fn rgb() -> Workload {
+    Workload {
+        name: "RGB",
+        description: "SRGB2XYZ in Image Processing",
+        precision: Precision::Int8,
+        ops: lowering::color_convert(1920 * 1080, Precision::Int8),
+    }
+}
+
+/// FFE — feed-forward equalizer (audio), INT16: a bank of FIR filters.
+pub fn ffe() -> Workload {
+    let mut ops = Vec::new();
+    for _ in 0..8 {
+        ops.extend(lowering::fir_filter(48_000, 256, Precision::Int16));
+    }
+    Workload {
+        name: "FFE",
+        description: "FFE in Audio Processing",
+        precision: Precision::Int16,
+        ops,
+    }
+}
+
+/// MD — blocked matrix decomposition (mathematical analysis), INT32
+/// fixed-point.
+pub fn md() -> Workload {
+    Workload {
+        name: "MD",
+        description: "Matrix Decomposition in Mathematical Analysis",
+        precision: Precision::Int32,
+        ops: lowering::matrix_decomposition(512, 32, Precision::Int32),
+    }
+}
+
+/// PCA — covariance + power iteration (data analysis), FP64.
+pub fn pca() -> Workload {
+    Workload {
+        name: "PCA",
+        description: "PCA in Data Analysis",
+        precision: Precision::Fp64,
+        ops: lowering::pca(4096, 128, 16, Precision::Fp64),
+    }
+}
+
+/// Alexnet convolution stack as im2col GEMMs (canonical layer shapes),
+/// batch-scaled; shared by ALT and ALI.
+fn alexnet_convs(p: Precision, batch: u64) -> Vec<TensorOp> {
+    // (C, H/W in, K, R, OH/OW) per conv layer (stride folded into OH/OW)
+    let layers: [(u64, u64, u64, u64); 5] = [
+        (96, 55 * 55, 11 * 11 * 3, 1),  // conv1
+        (256, 27 * 27, 5 * 5 * 96, 1),  // conv2 (groups flattened)
+        (384, 13 * 13, 3 * 3 * 256, 1), // conv3
+        (384, 13 * 13, 3 * 3 * 384, 1), // conv4
+        (256, 13 * 13, 3 * 3 * 384, 1), // conv5
+    ];
+    let mut ops = Vec::new();
+    for (k, spatial, patch, _) in layers {
+        let n = spatial * batch;
+        ops.push(TensorOp::vector(patch * n, p, VectorKind::Map)); // im2col
+        ops.push(TensorOp::gemm(k, n, patch, p));
+        ops.push(TensorOp::vector(k * n, p, VectorKind::Activation)); // relu
+    }
+    // fully-connected head
+    for (m, k) in [(4096, 9216), (4096, 4096), (1000, 4096)] {
+        ops.push(TensorOp::gemm(m, batch, k, p));
+        ops.push(TensorOp::vector(m * batch, p, VectorKind::Activation));
+    }
+    ops
+}
+
+/// ALT — Alexnet training step, FP32: forward + input-grad + weight-grad
+/// (each conv/fc GEMM appears three times at training batch size).
+pub fn alt() -> Workload {
+    let fwd = alexnet_convs(Precision::Fp32, 8);
+    let mut ops = Vec::new();
+    for _ in 0..3 {
+        ops.extend(fwd.iter().cloned());
+    }
+    Workload {
+        name: "ALT",
+        description: "Alexnet Training in ML",
+        precision: Precision::Fp32,
+        ops,
+    }
+}
+
+/// FFL — GPT-3 feed-forward layer, BP16: d_model=12288, d_ff=4·d_model,
+/// over a 512-token microbatch.
+pub fn ffl() -> Workload {
+    let (tokens, d_model, d_ff) = (512, 12_288, 49_152);
+    let mut ops = lowering::dense(tokens, d_model, d_ff, Precision::Bp16, true);
+    ops.extend(lowering::dense(tokens, d_ff, d_model, Precision::Bp16, false));
+    Workload {
+        name: "FFL",
+        description: "GPT3 Feed-Forward Layers in ML",
+        precision: Precision::Bp16,
+        ops,
+    }
+}
+
+/// ALI — Alexnet inference, INT8, batch 1.
+pub fn ali() -> Workload {
+    Workload {
+        name: "ALI",
+        description: "Alexnet Inference in ML",
+        precision: Precision::Int8,
+        ops: alexnet_convs(Precision::Int8, 1),
+    }
+}
+
+/// Nerf — positional-encoding MLP, FP32: 8 layers × 256 wide over a ray
+/// batch.
+pub fn nerf() -> Workload {
+    let (rays, width) = (4096, 256);
+    let mut ops = lowering::dense(rays, 60, width, Precision::Fp32, true);
+    for _ in 0..7 {
+        ops.extend(lowering::dense(rays, width, width, Precision::Fp32, true));
+    }
+    ops.extend(lowering::dense(rays, width, 4, Precision::Fp32, false));
+    Workload {
+        name: "Nerf",
+        description: "Nerf in ML",
+        precision: Precision::Fp32,
+        ops,
+    }
+}
+
+/// The full Table 2 suite in paper order.
+pub fn suite() -> Vec<Workload> {
+    vec![bnm(), rgb(), ffe(), md(), pca(), alt(), ffl(), ali(), nerf()]
+}
+
+/// The p-GEMM-only view of the suite (for the Fig. 10 CGRA comparison,
+/// which the paper runs "in p-GEMM operators").
+pub fn suite_pgemm_only() -> Vec<Workload> {
+    suite()
+        .into_iter()
+        .map(|mut w| {
+            w.ops.retain(|o| matches!(o, TensorOp::PGemm(_)));
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_matches_table2() {
+        let s = suite();
+        let names: Vec<_> = s.iter().map(|w| w.name).collect();
+        assert_eq!(names, ["BNM", "RGB", "FFE", "MD", "PCA", "ALT", "FFL", "ALI", "Nerf"]);
+        let precisions: Vec<_> = s.iter().map(|w| w.precision).collect();
+        assert!(precisions.contains(&Precision::Int8));
+        assert!(precisions.contains(&Precision::Bp16));
+        assert!(precisions.contains(&Precision::Fp64));
+    }
+
+    #[test]
+    fn every_workload_has_both_op_classes_where_expected() {
+        for w in suite() {
+            assert!(!w.ops.is_empty(), "{} empty", w.name);
+            assert!(
+                w.ops.iter().any(|o| matches!(o, TensorOp::PGemm(_))),
+                "{} must contain p-GEMM work",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn ffl_is_the_macs_heavyweight() {
+        let s = suite();
+        let ffl_macs = s.iter().find(|w| w.name == "FFL").unwrap().total_macs();
+        let rgb_macs = s.iter().find(|w| w.name == "RGB").unwrap().total_macs();
+        assert!(ffl_macs > 100 * rgb_macs);
+    }
+
+    #[test]
+    fn pgemm_only_strips_vectors() {
+        for w in suite_pgemm_only() {
+            assert!(w.ops.iter().all(|o| matches!(o, TensorOp::PGemm(_))));
+        }
+    }
+}

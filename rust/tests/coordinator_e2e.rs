@@ -1,0 +1,98 @@
+//! Integration: the coordinator serving mixed simulate + functional
+//! request streams end-to-end (scheduling, simulation, PJRT execution,
+//! lane allocation, metrics).
+
+use gta::coordinator::{lane_scheduler::LaneAllocator, Coordinator, ExecKind, Request};
+use gta::precision::{limbs, Precision};
+use gta::runtime::{default_artifact_dir, HostTensor};
+use gta::{Dataflow, GtaConfig, TensorOp};
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn functional_gemm_through_coordinator() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let coord =
+        Coordinator::with_engine(GtaConfig::lanes16(), default_artifact_dir()).unwrap();
+    let dim = 64usize;
+    let a: Vec<i64> = (0..dim * dim).map(|i| (i as i64 % 200) - 100).collect();
+    let b: Vec<i64> = (0..dim * dim).map(|i| ((i as i64 * 7) % 200) - 100).collect();
+    let resp = coord.handle(Request {
+        id: 1,
+        op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+        exec: ExecKind::Functional {
+            artifact: "mpra_gemm_i8_64".into(),
+            inputs: vec![
+                HostTensor::I32(a.iter().map(|&v| v as i32).collect()),
+                HostTensor::I32(b.iter().map(|&v| v as i32).collect()),
+            ],
+        },
+    });
+    // the schedule must exist and the numerics must match the limb oracle
+    assert!(resp.schedule.is_some());
+    let want = limbs::limb_gemm(&a, &b, dim, dim, dim, 1, 32);
+    let got = resp.outputs.unwrap()[0].as_i32().unwrap().to_vec();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(*g as i64, *w);
+    }
+}
+
+#[test]
+fn mixed_stream_serves_and_verifies() {
+    if !artifacts_ready() {
+        return;
+    }
+    let summary = gta::serve::run_mixed_stream(default_artifact_dir(), 24, 4).unwrap();
+    assert_eq!(summary.requests, 24);
+    assert_eq!(summary.functional, 12);
+    assert_eq!(summary.verified_failed, 0, "numeric mismatches in serve path");
+    assert_eq!(summary.verified_ok, 12);
+    assert!(summary.throughput_rps > 1.0);
+    assert!(summary.metrics.requests == 24);
+}
+
+#[test]
+fn multi_tenant_lane_partitions_run_concurrently() {
+    // two operators sharing the 16-lane pool via mask-match partitions
+    let mut alloc = LaneAllocator::new(GtaConfig::lanes16());
+    let p1 = alloc.allocate(8).expect("first tenant");
+    let p2 = alloc.allocate(8).expect("second tenant");
+    let csr1 = alloc.syscsr_for(p1.id, Dataflow::WS).unwrap();
+    let csr2 = alloc.syscsr_for(p2.id, Dataflow::OS).unwrap();
+    // the two partitions must have disjoint lanes and distinct masks
+    for l in &p1.lanes {
+        assert!(!p2.lanes.contains(l));
+    }
+    assert_ne!(p1.mask, p2.mask);
+    // mask groups agree between the two CSR programs (global state)
+    assert_eq!(csr1.mask_groups, csr2.mask_groups);
+    // releasing one tenant lets a wider arrangement in
+    alloc.release(p1.id);
+    assert!(alloc.allocate(8).is_some());
+}
+
+#[test]
+fn simulate_only_stream_scales_with_workers() {
+    let coord = Arc::new(Coordinator::new(GtaConfig::default()));
+    let reqs: Vec<Request> = (0..64)
+        .map(|i| Request {
+            id: i,
+            op: TensorOp::gemm(64 + (i % 8), 64, 256, Precision::Bp16),
+            exec: ExecKind::Simulate,
+        })
+        .collect();
+    let resps = coord.serve(reqs, 8);
+    assert_eq!(resps.len(), 64);
+    assert!(resps.iter().all(|r| r.sim.cycles > 0));
+    // 8 distinct shapes -> at least 8 cache misses, the rest hits
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.schedule_cache_misses, 8);
+    assert_eq!(snap.schedule_cache_hits, 56);
+}

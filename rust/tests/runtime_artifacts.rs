@@ -1,0 +1,99 @@
+//! Integration: load every AOT artifact through PJRT and check its
+//! numerics against the independent rust oracles — the end-to-end proof
+//! of the three-layer stack (Pallas → HLO text → rust runtime).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (not failed)
+//! when the artifact directory is absent so `cargo test` works pre-build.
+
+use gta::runtime::{default_artifact_dir, Engine, HostTensor};
+use gta::verify;
+
+fn artifacts_ready() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn every_artifact_passes_numeric_verification() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let outcome = verify::verify_all(&default_artifact_dir(), false).unwrap();
+    assert_eq!(outcome.failed, 0, "failures: {:?}", outcome.details);
+    assert!(outcome.passed >= 13, "expected all 13 artifacts, got {}", outcome.passed);
+}
+
+#[test]
+fn engine_reports_manifest_metadata() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::load(default_artifact_dir()).unwrap();
+    assert!(engine.platform().to_lowercase().contains("cpu"));
+    let names = engine.names();
+    for required in [
+        "mpra_gemm_i8_64",
+        "mpra_gemm_i16_64",
+        "mpra_gemm_i32_64",
+        "mpra_gemm_i64_32",
+        "bignum_mul_64",
+        "matmul_f32_128",
+        "alexnet_conv_i8",
+        "ffl_bf16",
+        "pca_cov_f32",
+        "nerf_mlp_f32",
+        "md_update_i32",
+        "rgb_convert_i8",
+        "fir_i16",
+    ] {
+        assert!(names.contains(&required), "missing artifact {required}");
+    }
+    let e = engine.entry("mpra_gemm_i8_64").unwrap();
+    assert_eq!(e.inputs.len(), 2);
+    assert_eq!(e.inputs[0].shape, vec![64, 64]);
+}
+
+#[test]
+fn engine_rejects_malformed_requests() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine =
+        Engine::load_filtered(default_artifact_dir(), |n| n == "mpra_gemm_i8_64").unwrap();
+    // wrong arity
+    assert!(engine.execute("mpra_gemm_i8_64", &[]).is_err());
+    // wrong dtype
+    let bad = vec![
+        HostTensor::F32(vec![0.0; 64 * 64]),
+        HostTensor::F32(vec![0.0; 64 * 64]),
+    ];
+    assert!(engine.execute("mpra_gemm_i8_64", &bad).is_err());
+    // wrong element count
+    let short = vec![HostTensor::I32(vec![0; 16]), HostTensor::I32(vec![0; 16])];
+    assert!(engine.execute("mpra_gemm_i8_64", &short).is_err());
+    // unknown artifact
+    assert!(engine.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn identity_matmul_through_pjrt() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine =
+        Engine::load_filtered(default_artifact_dir(), |n| n == "mpra_gemm_i8_64").unwrap();
+    // A · I == A through the limb kernel
+    let dim = 64usize;
+    let a: Vec<i32> = (0..dim * dim).map(|i| (i % 127) as i32 - 63).collect();
+    let mut eye = vec![0i32; dim * dim];
+    for i in 0..dim {
+        eye[i * dim + i] = 1;
+    }
+    let out = engine
+        .execute(
+            "mpra_gemm_i8_64",
+            &[HostTensor::I32(a.clone()), HostTensor::I32(eye)],
+        )
+        .unwrap();
+    assert_eq!(out[0].as_i32().unwrap(), a.as_slice());
+}

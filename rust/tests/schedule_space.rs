@@ -1,0 +1,113 @@
+//! Integration: the §5 scheduling space across workloads, precisions and
+//! lane counts — selection quality, the utilization-vs-reuse conflict,
+//! and SysCSR programming derived from selected schedules.
+
+use gta::arch::SysCsr;
+use gta::precision::Precision;
+use gta::scheduler::{self, pattern::Coverage};
+use gta::workloads;
+use gta::{Dataflow, GtaConfig, PGemm, TensorOp};
+
+#[test]
+fn every_suite_pgemm_gets_a_valid_schedule() {
+    let gta = GtaConfig::lanes16();
+    for w in workloads::suite() {
+        for op in &w.ops {
+            if let TensorOp::PGemm(g) = op {
+                let best = scheduler::schedule(g, &gta);
+                assert!(best.report.cycles > 0, "{}: zero cycles", w.name);
+                assert!(
+                    best.report.utilization <= 1.0 + 1e-9,
+                    "{}: util {}",
+                    w.name,
+                    best.report.utilization
+                );
+                assert!(
+                    best.report.memory_access() >= g.compulsory_bytes() / 2,
+                    "{}: traffic below compulsory",
+                    w.name
+                );
+                // the chosen arrangement must use every lane
+                assert_eq!(best.config.arrangement.lanes(), gta.lanes);
+            }
+        }
+    }
+}
+
+#[test]
+fn selected_schedule_is_never_dominated() {
+    let gta = GtaConfig::lanes16();
+    for p in [Precision::Int8, Precision::Fp32, Precision::Int64] {
+        let g = PGemm::new(256, 192, 512, p);
+        let cands = scheduler::explore(&g, &gta);
+        let best = scheduler::select(&cands);
+        for c in &cands {
+            assert!(
+                !(c.report.cycles < best.report.cycles
+                    && c.report.memory_access() < best.report.memory_access()),
+                "{p:?}: {:?} dominates the selection",
+                c.config
+            );
+        }
+    }
+}
+
+#[test]
+fn utilization_vs_reuse_conflict_exists() {
+    // §5: "the theoretical conflict between improving array utilization
+    // and data reuse" — for a small workload on a big array, the fastest
+    // candidate must not be the most memory-frugal one.
+    let gta = GtaConfig::with_lanes(64);
+    let g = PGemm::new(16, 16, 2048, Precision::Int8);
+    let cands = scheduler::explore(&g, &gta);
+    let fastest = cands.iter().min_by_key(|c| c.report.cycles).unwrap();
+    let frugal = cands.iter().min_by_key(|c| c.report.memory_access()).unwrap();
+    assert!(fastest.report.memory_access() > frugal.report.memory_access());
+    assert!(frugal.report.cycles > fastest.report.cycles);
+}
+
+#[test]
+fn more_lanes_never_slow_a_big_gemm() {
+    let g = PGemm::new(512, 512, 512, Precision::Int8);
+    let mut last = u64::MAX;
+    for lanes in [4u32, 16, 64] {
+        let cfg = GtaConfig::with_lanes(lanes);
+        let cycles = scheduler::schedule(&g, &cfg).report.cycles;
+        assert!(cycles <= last, "{lanes} lanes: {cycles} > {last}");
+        last = cycles;
+    }
+}
+
+#[test]
+fn coverage_cases_reported_for_systolic_schedules() {
+    let gta = GtaConfig::lanes16();
+    let g = PGemm::new(1000, 1000, 1000, Precision::Int8);
+    let cands = scheduler::explore(&g, &gta);
+    let covered: Vec<Coverage> = cands.iter().filter_map(|c| c.coverage).collect();
+    assert!(!covered.is_empty());
+    assert!(covered.contains(&Coverage::Cover1), "big GEMM must tile both dims");
+}
+
+#[test]
+fn schedule_programs_a_valid_syscsr() {
+    // the chosen schedule's arrangement + dataflow must program a SysCSR
+    // that validates against the config (Fig 4 wiring)
+    let gta = GtaConfig::lanes16();
+    let g = PGemm::new(384, 169, 2304, Precision::Fp16);
+    let best = scheduler::schedule(&g, &gta);
+    let csr = SysCsr::whole_array(&gta, best.config.arrangement, best.config.dataflow);
+    assert!(csr.validate(&gta).is_ok());
+    if best.config.dataflow != Dataflow::Simd {
+        assert!(csr.streams_per_beat() >= 2);
+    }
+}
+
+#[test]
+fn int64_needs_more_cycles_than_int8_everywhere() {
+    // 8 limbs vs 1 limb: every systolic candidate pays the n² work
+    let gta = GtaConfig::lanes16();
+    let g8 = scheduler::schedule(&PGemm::new(128, 128, 128, Precision::Int8), &gta);
+    let g64 = scheduler::schedule(&PGemm::new(128, 128, 128, Precision::Int64), &gta);
+    assert!(g64.report.cycles > g8.report.cycles);
+    assert!(g64.report.memory_access() > g8.report.memory_access());
+}
