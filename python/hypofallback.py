@@ -1,0 +1,59 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The offline test image ships jax/numpy/pytest but not hypothesis; rather
+than erroring at collection, the property tests fall back to a small
+fixed sweep of pseudo-random samples per test (seeded, so failures
+reproduce). Only the surface the tests use is implemented: `given` with
+keyword strategies, a pass-through `settings`, and
+`strategies.integers` / `strategies.sampled_from`.
+"""
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        xs = list(elements)
+        return _Strategy(lambda rng: xs[rng.randrange(len(xs))])
+
+
+def settings(*_args, **_kwargs):
+    """No-op decorator factory (max_examples/deadline are ignored)."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+_FALLBACK_EXAMPLES = 15
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        def wrapper():
+            for case in range(_FALLBACK_EXAMPLES):
+                rng = random.Random(0xC0FFEE + case)
+                kwargs = {k: s.sample(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:  # surface the failing sample
+                    raise AssertionError(
+                        f"property case {case} failed with args {kwargs}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -7,10 +7,10 @@
 //! restriction — the evidence behind the paper's joint-optimization claim.
 
 use gta::arch::Dataflow;
-use gta::scheduler::{self, Candidate};
+use gta::scheduler::{self, explorer, Candidate};
 use gta::util::bench::bench;
 use gta::workloads;
-use gta::{GtaConfig, TensorOp};
+use gta::{GtaConfig, PGemm};
 
 #[derive(Default)]
 struct Tally {
@@ -49,22 +49,21 @@ fn main() {
     let mut full_small = Tally::default();
     let mut no_kseg_small = Tally::default();
     let mut no_resize_small = Tally::default();
-    let mut n_ops = 0u64;
 
-    for w in workloads::suite() {
-        for op in &w.ops {
-            let TensorOp::PGemm(g) = op else { continue };
-            let cands = scheduler::explore(g, &gta);
-            full.add_best(&cands, |_| true);
-            ws_only.add_best(&cands, |c| c.config.dataflow == Dataflow::WS);
-            no_resize.add_best(&cands, |c| c.config.arrangement == default_arr);
-            no_kseg.add_best(&cands, |c| c.config.k_segments == 1);
-            if g.macs() < 2_000_000 {
-                full_small.add_best(&cands, |_| true);
-                no_kseg_small.add_best(&cands, |c| c.config.k_segments == 1);
-                no_resize_small.add_best(&cands, |c| c.config.arrangement == default_arr);
-            }
-            n_ops += 1;
+    // every suite p-GEMM swept concurrently through the batch explorer
+    // (repeated layer shapes share one sweep via the memo)
+    let all_ops: Vec<PGemm> = workloads::suite_pgemms();
+    let n_ops = all_ops.len() as u64;
+    let sets = explorer::explore_batch(&all_ops, &gta);
+    for (g, cands) in all_ops.iter().zip(&sets) {
+        full.add_best(cands, |_| true);
+        ws_only.add_best(cands, |c| c.config.dataflow == Dataflow::WS);
+        no_resize.add_best(cands, |c| c.config.arrangement == default_arr);
+        no_kseg.add_best(cands, |c| c.config.k_segments == 1);
+        if g.macs() < 2_000_000 {
+            full_small.add_best(cands, |_| true);
+            no_kseg_small.add_best(cands, |c| c.config.k_segments == 1);
+            no_resize_small.add_best(cands, |c| c.config.arrangement == default_arr);
         }
     }
     println!("=== Ablation: best-achievable under scheduling restrictions ({n_ops} suite p-GEMMs) ===");

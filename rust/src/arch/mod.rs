@@ -57,7 +57,10 @@ impl Arrangement {
 }
 
 /// Configuration of a GTA instance.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// `Eq + Hash` so a config can key the scheduler's shared memo caches
+/// (`scheduler::cache`) alongside the operator shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GtaConfig {
     /// Number of VPU lanes, each hosting one MPRA (Table 1 default: 4).
     pub lanes: u32,

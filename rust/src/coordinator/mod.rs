@@ -14,12 +14,11 @@ pub mod metrics;
 use crate::arch::GtaConfig;
 use crate::ops::{PGemm, TensorOp};
 use crate::runtime::{Engine, HostTensor};
-use crate::scheduler::{self, Candidate};
+use crate::scheduler::{self, explorer, Candidate};
 use crate::sim::gta::GtaSim;
 use crate::sim::{Platform, SimReport};
 use anyhow::{anyhow, Result};
 use metrics::Metrics;
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -146,9 +145,11 @@ pub struct Coordinator {
     pub gta: GtaConfig,
     sim: GtaSim,
     executor: Option<Executor>,
-    /// §5 exploration memoized per operator shape — repeated layers skip
-    /// the schedule search entirely (a large hot-path win; see §Perf).
-    schedule_cache: Mutex<HashMap<PGemm, Candidate>>,
+    /// §5 exploration through the shared explorer: repeated operator
+    /// shapes schedule in O(1) off the memo, concurrent requests for the
+    /// same shape dedup onto one search (a large hot-path win; §Perf),
+    /// and batch requests fan the search across a worker pool.
+    explorer: scheduler::Explorer,
     pub metrics: Metrics,
     next_id: AtomicU64,
 }
@@ -160,7 +161,7 @@ impl Coordinator {
             sim: GtaSim::new(gta),
             gta,
             executor: None,
-            schedule_cache: Mutex::new(HashMap::new()),
+            explorer: scheduler::Explorer::new(),
             metrics: Metrics::default(),
             next_id: AtomicU64::new(0),
         }
@@ -185,16 +186,26 @@ impl Coordinator {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Schedule a p-GEMM (memoized).
+    /// Schedule a p-GEMM (memoized; concurrent requests for the same
+    /// shape run the search exactly once).
     pub fn schedule(&self, g: &PGemm) -> Candidate {
-        if let Some(hit) = self.schedule_cache.lock().unwrap().get(g) {
-            self.metrics.record_cache(true);
-            return *hit;
-        }
-        self.metrics.record_cache(false);
-        let cand = scheduler::schedule(g, &self.gta);
-        self.schedule_cache.lock().unwrap().insert(*g, cand);
+        let (cand, computed) = self.explorer.schedule(g, &self.gta);
+        self.metrics.record_cache(!computed);
         cand
+    }
+
+    /// Schedule a batch of p-GEMMs concurrently across the explorer's
+    /// worker pool. Results are in input order; repeated shapes within
+    /// the batch (and across earlier requests) share one search.
+    pub fn schedule_batch(&self, ops: &[PGemm]) -> Vec<Candidate> {
+        self.explorer
+            .schedule_batch(ops, &self.gta, explorer::default_workers())
+            .into_iter()
+            .map(|(cand, computed)| {
+                self.metrics.record_cache(!computed);
+                cand
+            })
+            .collect()
     }
 
     /// Handle one request synchronously.
@@ -316,6 +327,23 @@ mod tests {
             assert_eq!(r.id, i as u64);
         }
         assert_eq!(c.metrics.snapshot().requests, 32);
+    }
+
+    #[test]
+    fn schedule_batch_matches_sequential_and_dedups() {
+        let c = Coordinator::new(GtaConfig::default());
+        let a = PGemm::new(96, 169, 576, Precision::Int8);
+        let b = PGemm::new(64, 64, 256, Precision::Bp16);
+        let batch = c.schedule_batch(&[a, b, a, b, a]);
+        assert_eq!(batch.len(), 5);
+        assert_eq!(batch[0].config, batch[2].config);
+        assert_eq!(batch[1].config, batch[3].config);
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.schedule_cache_misses, 2, "two distinct shapes");
+        assert_eq!(snap.schedule_cache_hits, 3);
+        // later single requests are pure cache hits with identical picks
+        assert_eq!(c.schedule(&a).config, batch[0].config);
+        assert_eq!(c.metrics.snapshot().schedule_cache_hits, 4);
     }
 
     #[test]

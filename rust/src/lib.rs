@@ -12,10 +12,24 @@
 //! Layered per DESIGN.md:
 //! * [`precision`] / [`ops`] / [`lowering`] — the operator algebra (§3)
 //! * [`arch`] — MPRA/lane/SysCSR hardware model (§4)
-//! * [`scheduler`] — scheduling-space exploration (§5)
-//! * [`sim`] — cycle-accurate-style platform simulators (§6)
+//! * [`scheduler`] — scheduling-space exploration (§5). The cost model
+//!   and least-sum-of-squares selection live in the module root; the
+//!   search engine is `scheduler::explorer` — a worker-pool sweep over
+//!   the dataflow × arrangement × K-segmentation × tile-direction space
+//!   with Pareto lower-bound pruning and batch entry points
+//!   (`explore_batch` / `schedule_batch`), all memoized through the
+//!   compute-once shared caches in `scheduler::cache` (keyed by
+//!   `(PGemm, GtaConfig)` per sweep/selection and
+//!   `(PGemm, GtaConfig, ScheduleConfig)` per evaluation), so repeated
+//!   operators in a workload schedule in O(1) and concurrent requests
+//!   dedup onto a single search
+//! * [`sim`] — cycle-accurate-style platform simulators (§6); the GTA
+//!   simulator batch-schedules a workload's distinct p-GEMMs through the
+//!   explorer pool before accumulating
 //! * [`workloads`] — the Table 2 suite
-//! * [`runtime`] / [`coordinator`] — the L3 execution engine
+//! * [`runtime`] / [`coordinator`] — the L3 execution engine (the PJRT
+//!   engine is gated behind the `pjrt` feature; offline builds get a
+//!   stub that fails `Engine::load` cleanly)
 //! * [`report`] — regenerates every table and figure of the paper
 
 pub mod arch;

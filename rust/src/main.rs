@@ -203,10 +203,17 @@ fn cmd_schedule(flags: &Flags) -> Result<()> {
     let g = PGemm::new(m, n, k, precision);
     let cands = scheduler::explore(&g, &cfg);
     let best = scheduler::select(&cands);
+    // the serving hot path runs the pruned sweep; show what it saves and
+    // assert (cheaply, here) that the selection is identical
+    let (survivors, stats) = scheduler::explorer::explore_pruned(&g, &cfg);
+    assert_eq!(scheduler::select(&survivors).config, best.config);
     println!(
-        "explored {} schedule candidates for {m}x{n}x{k} {}",
+        "explored {} schedule candidates for {m}x{n}x{k} {} \
+         (pruned sweep: {} evaluated, {} skipped, same winner)",
         cands.len(),
-        precision
+        precision,
+        stats.evaluated,
+        stats.pruned
     );
     for c in &cands {
         let sel = if c.config == best.config { " <= selected" } else { "" };

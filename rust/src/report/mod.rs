@@ -132,14 +132,19 @@ pub struct Fig9Point {
 }
 
 /// Fig. 9 — the mixed precision × dataflow scheduling scatter for one
-/// Alexnet conv layer (conv3: M=384, N=169, K=2304) at three precisions.
+/// Alexnet conv layer (conv3: M=384, N=169, K=2304) at three precisions,
+/// swept concurrently through the batch explorer.
 pub fn fig9() -> Vec<Fig9Point> {
     let gta = crate::arch::GtaConfig::lanes16();
+    let ops: Vec<PGemm> = [Precision::Int8, Precision::Fp16, Precision::Fp32]
+        .iter()
+        .map(|&p| PGemm::new(384, 169, 2304, p))
+        .collect();
+    let sets = scheduler::explore_batch(&ops, &gta);
     let mut out = Vec::new();
-    for p in [Precision::Int8, Precision::Fp16, Precision::Fp32] {
-        let g = PGemm::new(384, 169, 2304, p);
-        let cands = scheduler::explore(&g, &gta);
-        let best = scheduler::select(&cands);
+    for (g, cands) in ops.iter().zip(&sets) {
+        let p = g.precision;
+        let best = scheduler::select(cands);
         let min_c = cands.iter().map(|c| c.report.cycles).min().unwrap().max(1) as f64;
         let min_m = cands
             .iter()
@@ -147,7 +152,7 @@ pub fn fig9() -> Vec<Fig9Point> {
             .min()
             .unwrap()
             .max(1) as f64;
-        for c in &cands {
+        for c in cands.iter() {
             out.push(Fig9Point {
                 precision: p.name().to_string(),
                 dataflow: c.config.dataflow.name().to_string(),

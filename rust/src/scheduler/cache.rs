@@ -1,0 +1,188 @@
+//! Shared memoization for the §5 exploration engine.
+//!
+//! Workloads repeat operator shapes heavily (every AlexNet training step
+//! replays the same five conv GEMMs three times; the serve path replays
+//! identical tiles per request), so schedule search is memoized at three
+//! granularities, all safe to share across worker threads:
+//!
+//! * [`EvalCache`] — single candidate evaluations, keyed by
+//!   `(PGemm, GtaConfig, ScheduleConfig)`; lets a pruned selection pass
+//!   and a later full sweep of the same operator share work.
+//! * [`ExploreCache`] — whole candidate sweeps, keyed by
+//!   `(PGemm, GtaConfig)`.
+//! * [`ScheduleCache`] — the selected schedule, keyed by
+//!   `(PGemm, GtaConfig)`; repeated operators schedule in O(1).
+//!
+//! All three are instances of [`Memo`], a sharded map whose values live
+//! in `OnceLock` cells: concurrent requests for the same key compute the
+//! value exactly once (later arrivals block on the cell instead of
+//! duplicating the search), which keeps the coordinator's cache-hit
+//! metrics exact under `serve`'s worker pool.
+
+use super::{Candidate, ScheduleConfig};
+use crate::arch::GtaConfig;
+use crate::ops::PGemm;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Key of a whole-operator exploration.
+pub type ExploreKey = (PGemm, GtaConfig);
+/// Key of one evaluated point of the schedule space.
+pub type EvalKey = (PGemm, GtaConfig, ScheduleConfig);
+
+/// Memoized single-candidate evaluations.
+pub type EvalCache = Memo<EvalKey, Candidate>;
+/// Memoized full sweeps (shared, so callers clone an `Arc`).
+pub type ExploreCache = Memo<ExploreKey, Arc<Vec<Candidate>>>;
+/// Memoized selected schedules.
+pub type ScheduleCache = Memo<ExploreKey, Candidate>;
+
+/// A sharded concurrent memo table with compute-once semantics.
+#[derive(Debug)]
+pub struct Memo<K, V> {
+    shards: Vec<Mutex<HashMap<K, Arc<OnceLock<V>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Eq + Hash, V: Clone> Memo<K, V> {
+    pub fn new() -> Self {
+        Self::with_shards(16)
+    }
+
+    pub fn with_shards(n: usize) -> Self {
+        Memo {
+            shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &K) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// The cell for `key`, creating an empty one if absent. Holding the
+    /// shard lock only for the map access keeps computation outside locks.
+    fn cell(&self, key: K) -> Arc<OnceLock<V>> {
+        let mut shard = self.shards[self.shard(&key)].lock().unwrap();
+        shard.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+    }
+
+    /// Initialized value for `key`, if any.
+    pub fn get(&self, key: &K) -> Option<V> {
+        let cell = self.shards[self.shard(key)].lock().unwrap().get(key).cloned();
+        cell.and_then(|c| c.get().cloned())
+    }
+
+    /// Return the cached value or compute it exactly once. The returned
+    /// flag is `true` iff THIS call performed the computation — under
+    /// contention every other caller blocks on the cell and reports a
+    /// hit, so hit/miss counts stay exact per distinct key.
+    pub fn get_or_compute(&self, key: K, f: impl FnOnce() -> V) -> (V, bool) {
+        let cell = self.cell(key);
+        let mut computed = false;
+        let v = cell
+            .get_or_init(|| {
+                computed = true;
+                f()
+            })
+            .clone();
+        if computed {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        (v, computed)
+    }
+
+    /// Publish a value computed elsewhere. Returns `false` (and keeps the
+    /// existing value) if the key was already initialized.
+    pub fn insert(&self, key: K, v: V) -> bool {
+        self.cell(key).set(v).is_ok()
+    }
+
+    /// Number of initialized entries.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().filter(|c| c.get().is_some()).count())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl<K: Eq + Hash, V: Clone> Default for Memo<K, V> {
+    fn default() -> Self {
+        Memo::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn computes_once_then_hits() {
+        let memo: Memo<u32, u32> = Memo::new();
+        let (a, fresh_a) = memo.get_or_compute(7, || 42);
+        let (b, fresh_b) = memo.get_or_compute(7, || panic!("must not recompute"));
+        assert_eq!((a, b), (42, 42));
+        assert!(fresh_a && !fresh_b);
+        assert_eq!(memo.misses(), 1);
+        assert_eq!(memo.hits(), 1);
+        assert_eq!(memo.len(), 1);
+        assert_eq!(memo.get(&7), Some(42));
+        assert_eq!(memo.get(&8), None);
+    }
+
+    #[test]
+    fn insert_respects_first_writer() {
+        let memo: Memo<u32, u32> = Memo::new();
+        assert!(memo.insert(1, 10));
+        assert!(!memo.insert(1, 11));
+        assert_eq!(memo.get(&1), Some(10));
+        assert!(!memo.is_empty());
+    }
+
+    #[test]
+    fn concurrent_callers_compute_each_key_exactly_once() {
+        let memo: Memo<u64, u64> = Memo::new();
+        let calls = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let memo = &memo;
+                let calls = &calls;
+                scope.spawn(move || {
+                    for i in 0..64u64 {
+                        let key = (t + i) % 4;
+                        let (v, _) = memo.get_or_compute(key, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            key * 10
+                        });
+                        assert_eq!(v, key * 10);
+                    }
+                });
+            }
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 4, "one compute per distinct key");
+        assert_eq!(memo.misses(), 4);
+        assert_eq!(memo.hits(), 8 * 64 - 4);
+    }
+}

@@ -1,0 +1,444 @@
+//! The §5 exploration engine: enumerate the dataflow × arrangement ×
+//! K-segmentation × tile-direction space, evaluate candidates across a
+//! worker-thread pool, prune dominated configurations before they are
+//! fully costed, and memoize everything through [`super::cache`].
+//!
+//! Three exploration modes, all returning bit-identical candidates for
+//! the same inputs (the cost model is pure arithmetic):
+//!
+//! * [`explore`] — the sequential reference sweep, in the canonical
+//!   [`configs`] enumeration order.
+//! * [`explore_parallel`] — the same sweep fanned across workers; results
+//!   are re-ordered by enumeration index, so output equals [`explore`].
+//! * [`explore_pruned`] — a selection-only sweep that skips candidates
+//!   whose *lower bounds* are already strictly dominated by an evaluated
+//!   candidate. Strict domination in both metrics implies a strictly
+//!   larger sum of normalized squares, and a strictly-dominated candidate
+//!   can never set either normalization minimum, so `select` over the
+//!   survivors provably equals `select` over the full space.
+//!
+//! Batch entry points ([`explore_batch`], [`schedule_batch`], and the
+//! cache-sharing [`Explorer`]) distribute whole operators across the
+//! pool — the shape that matters under serving traffic, where schedule
+//! search (not the PE array) is the throughput bottleneck.
+
+use super::cache::{EvalCache, ExploreCache, ScheduleCache};
+use super::pattern::{self, Coverage, TileDir, EARLY_FILL_RECOVERY};
+use super::{evaluate, select, Candidate, ScheduleConfig};
+use crate::arch::{Dataflow, GtaConfig};
+use crate::ops::PGemm;
+use crate::sim::mpra;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Worker count the parallel paths default to (bounded: schedule search
+/// is compute-light per item, so more threads than cores only adds churn).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Enumerate the schedule space for `g` in the canonical deterministic
+/// order: arrangements (as `GtaConfig::arrangements` yields them) ×
+/// systolic dataflows × power-of-two K-segmentation × tile direction,
+/// with the arrangement-independent SIMD fallback last.
+pub fn configs(g: &PGemm, gta: &GtaConfig) -> Vec<ScheduleConfig> {
+    let mut out = Vec::new();
+    for arrangement in gta.arrangements() {
+        for flow in Dataflow::SYSTOLIC {
+            let (r, c) = gta.array_shape(arrangement);
+            let mapped = super::apply_cover_wrap(mpra::map_gemm(g, flow), r, c);
+            let s_max = pattern::max_k_segments(mapped, r, c);
+            let mut s = 1u64;
+            while s <= s_max {
+                for dir in TileDir::BOTH {
+                    out.push(ScheduleConfig {
+                        arrangement,
+                        dataflow: flow,
+                        k_segments: s,
+                        tile_dir: dir,
+                    });
+                }
+                s *= 2;
+            }
+        }
+    }
+    out.push(ScheduleConfig {
+        arrangement: gta.arrangements()[0],
+        dataflow: Dataflow::Simd,
+        k_segments: 1,
+        tile_dir: TileDir::Lateral,
+    });
+    out
+}
+
+/// Sequential reference sweep: evaluate every point of the space.
+pub fn explore(g: &PGemm, gta: &GtaConfig) -> Vec<Candidate> {
+    configs(g, gta).into_iter().map(|cfg| evaluate(g, cfg, gta)).collect()
+}
+
+/// The reference sweep fanned across `workers` threads. Results are
+/// collected with their enumeration index and re-sorted, so the output
+/// is identical to [`explore`] — order included.
+pub fn explore_parallel(g: &PGemm, gta: &GtaConfig, workers: usize) -> Vec<Candidate> {
+    let cfgs = configs(g, gta);
+    parallel_map(&cfgs, workers, |cfg| evaluate(g, *cfg, gta))
+}
+
+/// Map `f` over `items` on a pool of `workers` threads (std::thread +
+/// mpsc, the same idiom as `coordinator::serve`). Output order matches
+/// input order regardless of completion order.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.clamp(1, items.len().max(1));
+    if workers <= 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                if tx.send((i, f(&items[i]))).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut out: Vec<(usize, R)> = rx.into_iter().collect();
+    out.sort_unstable_by_key(|&(i, _)| i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Statistics of a pruned sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Candidates fully evaluated (the survivors).
+    pub evaluated: usize,
+    /// Candidates skipped because their lower bounds were strictly
+    /// dominated by an already-evaluated candidate.
+    pub pruned: usize,
+}
+
+/// Conservative lower bounds `(cycles, memory_access)` for a systolic
+/// config, computed without running the full systolic/energy model:
+///
+/// * cycles ≥ fold-count × stream depth of the adjusted footprint (the
+///   model adds fill + drain on top); for Cover cases the early-fill
+///   recovery can shave at most `EARLY_FILL_RECOVERY` of that, so the
+///   bound scales by the residue.
+/// * memory ≥ stationary fill + streamed re-reads + output writes +
+///   K-segmentation merge traffic, plus the compulsory DRAM traffic —
+///   exactly the model's terms minus the non-negative partial-sum
+///   spill traffic.
+fn lower_bounds(g: &PGemm, cfg: ScheduleConfig, gta: &GtaConfig) -> (u64, u64) {
+    debug_assert!(cfg.dataflow != Dataflow::Simd);
+    let (r, c) = gta.array_shape(cfg.arrangement);
+    let mapped = mpra::map_gemm(g, cfg.dataflow);
+    let coverage = pattern::classify(mapped, r, c);
+    let wrapped = super::apply_cover_wrap(mapped, r, c);
+    let s_max = pattern::max_k_segments(wrapped, r, c);
+    let s = cfg.k_segments.clamp(1, s_max);
+    let (adjusted, merge_elems) = super::apply_k_segments(wrapped, cfg.dataflow, s, g, r, c);
+    let fr = adjusted.rows.div_ceil(r);
+    let fc = adjusted.cols.div_ceil(c);
+    let base = fr * fc * adjusted.temporal;
+    let cycles_lb = match coverage {
+        Coverage::Cover1 | Coverage::Cover2 | Coverage::Cover3 => {
+            (base as f64 * (1.0 - EARLY_FILL_RECOVERY)).floor() as u64
+        }
+        _ => base,
+    };
+    let (m, n, k) = (g.m, g.n, g.k);
+    let stream_elems = match cfg.dataflow {
+        Dataflow::WS => k * n + m * k * fc + m * n,
+        Dataflow::IS => m * k + k * n * fc + m * n,
+        Dataflow::OS => m * k * fc + k * n * fr + m * n,
+        Dataflow::Simd => unreachable!(),
+    };
+    let mem_lb = (stream_elems + 2 * merge_elems) * g.precision.bytes() + g.compulsory_bytes();
+    (cycles_lb, mem_lb)
+}
+
+/// Selection-only sweep with early pruning: a config is skipped when some
+/// already-evaluated candidate beats its lower bounds *strictly* in both
+/// cycles and memory access. Returns the surviving candidates (in
+/// enumeration order) and the prune statistics; `select` over the
+/// survivors equals `select` over the full space.
+pub fn explore_pruned(g: &PGemm, gta: &GtaConfig) -> (Vec<Candidate>, PruneStats) {
+    explore_pruned_into(g, gta, None)
+}
+
+fn explore_pruned_into(
+    g: &PGemm,
+    gta: &GtaConfig,
+    evals: Option<&EvalCache>,
+) -> (Vec<Candidate>, PruneStats) {
+    let mut survivors: Vec<Candidate> = Vec::new();
+    let mut stats = PruneStats::default();
+    for cfg in configs(g, gta) {
+        if cfg.dataflow != Dataflow::Simd {
+            let (cycles_lb, mem_lb) = lower_bounds(g, cfg, gta);
+            let dominated = survivors
+                .iter()
+                .any(|y| y.report.cycles < cycles_lb && y.report.memory_access() < mem_lb);
+            if dominated {
+                stats.pruned += 1;
+                continue;
+            }
+        }
+        let cand = match evals {
+            Some(cache) => cache.get_or_compute((*g, *gta, cfg), || evaluate(g, cfg, gta)).0,
+            None => evaluate(g, cfg, gta),
+        };
+        stats.evaluated += 1;
+        survivors.push(cand);
+    }
+    (survivors, stats)
+}
+
+/// Explore + select through the pruned sweep — the hot-path entry point.
+/// Provably returns the same least-sum-of-squares winner as
+/// `select(&explore(g, gta))`.
+pub fn schedule(g: &PGemm, gta: &GtaConfig) -> Candidate {
+    let (survivors, _) = explore_pruned(g, gta);
+    select(&survivors)
+}
+
+/// Shared exploration state: the three memo layers of [`super::cache`]
+/// behind one handle, safe to use from many threads at once. The
+/// coordinator owns one per process; batch helpers below create a
+/// transient one.
+#[derive(Debug, Default)]
+pub struct Explorer {
+    /// Whole-sweep memo, `(PGemm, GtaConfig)` → all candidates.
+    pub sweeps: ExploreCache,
+    /// Per-candidate memo, `(PGemm, GtaConfig, ScheduleConfig)` →
+    /// evaluation; shared between pruned selection and full sweeps.
+    pub evals: EvalCache,
+    /// Selected-schedule memo, `(PGemm, GtaConfig)` → winner.
+    pub selected: ScheduleCache,
+}
+
+impl Explorer {
+    pub fn new() -> Explorer {
+        Explorer::default()
+    }
+
+    /// Memoized full sweep; candidate evaluations go through the
+    /// triple-keyed eval cache so a prior pruned pass is reused.
+    pub fn explore(&self, g: &PGemm, gta: &GtaConfig) -> Arc<Vec<Candidate>> {
+        self.sweeps
+            .get_or_compute((*g, *gta), || {
+                Arc::new(
+                    configs(g, gta)
+                        .into_iter()
+                        .map(|cfg| {
+                            self.evals
+                                .get_or_compute((*g, *gta, cfg), || evaluate(g, cfg, gta))
+                                .0
+                        })
+                        .collect(),
+                )
+            })
+            .0
+    }
+
+    /// Memoized pruned schedule. The flag is `true` iff this call ran the
+    /// search (i.e. a cache miss), which keeps caller metrics exact even
+    /// when concurrent requests race on the same operator.
+    pub fn schedule(&self, g: &PGemm, gta: &GtaConfig) -> (Candidate, bool) {
+        self.selected.get_or_compute((*g, *gta), || {
+            let (survivors, _) = explore_pruned_into(g, gta, Some(&self.evals));
+            select(&survivors)
+        })
+    }
+
+    /// Full sweeps for a batch of operators across the worker pool.
+    /// Output order matches `ops`; duplicate shapes share one sweep.
+    pub fn explore_batch(
+        &self,
+        ops: &[PGemm],
+        gta: &GtaConfig,
+        workers: usize,
+    ) -> Vec<Arc<Vec<Candidate>>> {
+        parallel_map(ops, workers, |g| self.explore(g, gta))
+    }
+
+    /// Selected schedules for a batch of operators across the worker
+    /// pool, with per-op freshness flags as in [`Explorer::schedule`].
+    pub fn schedule_batch(
+        &self,
+        ops: &[PGemm],
+        gta: &GtaConfig,
+        workers: usize,
+    ) -> Vec<(Candidate, bool)> {
+        parallel_map(ops, workers, |g| self.schedule(g, gta))
+    }
+}
+
+/// One-shot batch sweep: full candidate sets for every operator,
+/// memoized within the batch, using the default worker count.
+pub fn explore_batch(ops: &[PGemm], gta: &GtaConfig) -> Vec<Arc<Vec<Candidate>>> {
+    Explorer::new().explore_batch(ops, gta, default_workers())
+}
+
+/// One-shot batch scheduling: the selected schedule for every operator,
+/// memoized within the batch, using the default worker count.
+pub fn schedule_batch(ops: &[PGemm], gta: &GtaConfig) -> Vec<Candidate> {
+    Explorer::new()
+        .schedule_batch(ops, gta, default_workers())
+        .into_iter()
+        .map(|(c, _)| c)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::Precision;
+
+    fn gta() -> GtaConfig {
+        GtaConfig::lanes16()
+    }
+
+    fn shapes() -> Vec<PGemm> {
+        vec![
+            PGemm::new(384, 169, 2304, Precision::Int8),
+            PGemm::new(96, 169, 576, Precision::Fp32),
+            PGemm::new(8, 8, 512, Precision::Int16),
+            PGemm::new(1, 1, 4096, Precision::Fp64),
+            PGemm::new(512, 48, 64, Precision::Bp16),
+        ]
+    }
+
+    #[test]
+    fn configs_enumeration_matches_explore_output() {
+        let g = PGemm::new(64, 64, 64, Precision::Int8);
+        let cfgs = configs(&g, &gta());
+        let cands = explore(&g, &gta());
+        assert_eq!(cfgs.len(), cands.len());
+        for (cfg, cand) in cfgs.iter().zip(&cands) {
+            assert_eq!(*cfg, cand.config);
+        }
+        assert_eq!(cfgs.last().unwrap().dataflow, Dataflow::Simd);
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_sequential() {
+        for g in shapes() {
+            let seq = explore(&g, &gta());
+            for workers in [2, 3, 8] {
+                let par = explore_parallel(&g, &gta(), workers);
+                assert_eq!(seq, par, "workers={workers} {g:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_selection_equals_full_selection() {
+        for lanes in [4u32, 16] {
+            let cfg = GtaConfig::with_lanes(lanes);
+            for g in shapes() {
+                let full = select(&explore(&g, &cfg));
+                let (survivors, stats) = explore_pruned(&g, &cfg);
+                let pruned = select(&survivors);
+                assert_eq!(full.config, pruned.config, "{g:?} lanes={lanes}");
+                assert_eq!(full.report, pruned.report);
+                assert_eq!(
+                    stats.evaluated + stats.pruned,
+                    configs(&g, &cfg).len(),
+                    "every config accounted for"
+                );
+                assert_eq!(stats.evaluated, survivors.len());
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_actually_skips_work_somewhere() {
+        // skewed shapes spawn K-seg candidates with heavy merge traffic
+        // that a better arrangement's candidate strictly dominates —
+        // prime pruning territory; at least one shape must prune
+        let mut pruned = 0usize;
+        for g in [
+            PGemm::new(512, 8, 8, Precision::Int8),
+            PGemm::new(8, 512, 8, Precision::Int8),
+            PGemm::new(8, 8, 2048, Precision::Int8),
+            PGemm::new(1024, 16, 16, Precision::Int16),
+            PGemm::new(16, 1024, 16, Precision::Fp32),
+        ] {
+            for lanes in [16u32, 64] {
+                pruned += explore_pruned(&g, &GtaConfig::with_lanes(lanes)).1.pruned;
+            }
+        }
+        assert!(pruned > 0, "expected the prune pass to skip at least one candidate");
+    }
+
+    #[test]
+    fn explorer_caches_share_work_across_paths() {
+        let ex = Explorer::new();
+        let g = PGemm::new(128, 128, 256, Precision::Int8);
+        let cfg = gta();
+        let (_, fresh) = ex.schedule(&g, &cfg);
+        assert!(fresh);
+        let evals_after_schedule = ex.evals.len();
+        assert!(evals_after_schedule > 0);
+        // the full sweep must reuse the pruned pass's evaluations
+        let sweep = ex.explore(&g, &cfg);
+        assert_eq!(sweep.len(), configs(&g, &cfg).len());
+        assert!(ex.evals.hits() > 0, "full sweep should hit pruned-pass evals");
+        // and a repeat schedule is a pure cache hit
+        let (_, fresh2) = ex.schedule(&g, &cfg);
+        assert!(!fresh2);
+    }
+
+    #[test]
+    fn batch_results_match_per_op_results_in_order() {
+        let ops = shapes();
+        let cfg = gta();
+        let batch = schedule_batch(&ops, &cfg);
+        assert_eq!(batch.len(), ops.len());
+        for (g, cand) in ops.iter().zip(&batch) {
+            assert_eq!(cand.config, schedule(g, &cfg).config);
+        }
+        let sets = explore_batch(&ops, &cfg);
+        for (g, set) in ops.iter().zip(&sets) {
+            assert_eq!(**set, explore(g, &cfg));
+        }
+    }
+
+    #[test]
+    fn batch_dedups_repeated_operators() {
+        let g = PGemm::new(256, 27 * 27, 5 * 5 * 96, Precision::Int8);
+        let ops = vec![g; 12];
+        let ex = Explorer::new();
+        let out = ex.schedule_batch(&ops, &gta(), 4);
+        assert_eq!(out.len(), 12);
+        assert_eq!(out.iter().filter(|(_, fresh)| *fresh).count(), 1);
+        assert_eq!(ex.selected.misses(), 1);
+        assert_eq!(ex.selected.hits(), 11);
+        for (cand, _) in &out {
+            assert_eq!(cand.config, out[0].0.config);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 7, |&x| x * 3);
+        assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+        assert_eq!(parallel_map(&[] as &[u64], 4, |&x| x), Vec::<u64>::new());
+    }
+}

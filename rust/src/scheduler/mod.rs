@@ -4,8 +4,18 @@
 //! computing cycles against memory access; the final pick is the
 //! normalized least-sum-of-squares point ("the preference is given to the
 //! one with the least sum of squares").
+//!
+//! The cost model ([`evaluate`]) and selection rule ([`select`]) live
+//! here; the search machinery lives in [`explorer`] (worker-pool batch
+//! sweeps, Pareto pruning) on top of the shared memo layers in
+//! [`cache`]. The convenience entry points below ([`explore`],
+//! [`schedule`], [`explore_batch`], [`schedule_batch`]) delegate there.
 
+pub mod cache;
+pub mod explorer;
 pub mod pattern;
+
+pub use explorer::{Explorer, PruneStats};
 
 use crate::arch::{Arrangement, Dataflow, GtaConfig};
 use crate::ops::PGemm;
@@ -123,7 +133,7 @@ fn simd_gemm(g: &PGemm, gta: &GtaConfig) -> SimReport {
 /// dimension has slack, each carrying `1/s` of the contraction; merging
 /// the replicas' partial outputs costs `(s-1)·M·N` extra element
 /// reads+writes (§5's utilization-vs-reuse conflict).
-fn apply_k_segments(
+pub(crate) fn apply_k_segments(
     mapped: MappedGemm,
     flow: Dataflow,
     s: u64,
@@ -162,7 +172,7 @@ fn apply_k_segments(
 /// Fold an over-covering dimension into idle capacity of the other
 /// (Cover2: rows over, columns idle → wrap row folds sideways; Cover3:
 /// symmetric). Leaves Uncover/Cover1 mappings untouched.
-fn apply_cover_wrap(g: MappedGemm, r: u64, c: u64) -> MappedGemm {
+pub(crate) fn apply_cover_wrap(g: MappedGemm, r: u64, c: u64) -> MappedGemm {
     match pattern::classify(g, r, c) {
         Coverage::Cover2 => {
             let wrap = (c / g.cols.max(1)).min(g.rows.div_ceil(r)).max(1);
@@ -184,41 +194,22 @@ fn apply_cover_wrap(g: MappedGemm, r: u64, c: u64) -> MappedGemm {
     }
 }
 
-/// Enumerate the whole scheduling space for `g` on `gta`.
+/// Enumerate + evaluate the whole scheduling space for `g` on `gta`
+/// (the sequential reference sweep; see [`explorer`] for the parallel
+/// and pruned variants).
 pub fn explore(g: &PGemm, gta: &GtaConfig) -> Vec<Candidate> {
-    let mut out = Vec::new();
-    for arrangement in gta.arrangements() {
-        for flow in Dataflow::SYSTOLIC {
-            let (r, c) = gta.array_shape(arrangement);
-            let mapped = apply_cover_wrap(mpra::map_gemm(g, flow), r, c);
-            let s_max = pattern::max_k_segments(mapped, r, c);
-            let mut s = 1u64;
-            while s <= s_max {
-                for dir in TileDir::BOTH {
-                    let cfg = ScheduleConfig {
-                        arrangement,
-                        dataflow: flow,
-                        k_segments: s,
-                        tile_dir: dir,
-                    };
-                    out.push(evaluate(g, cfg, gta));
-                }
-                s *= 2;
-            }
-        }
-    }
-    // the SIMD fallback is arrangement-independent
-    out.push(evaluate(
-        g,
-        ScheduleConfig {
-            arrangement: gta.arrangements()[0],
-            dataflow: Dataflow::Simd,
-            k_segments: 1,
-            tile_dir: TileDir::Lateral,
-        },
-        gta,
-    ));
-    out
+    explorer::explore(g, gta)
+}
+
+/// Full candidate sets for a batch of operators, evaluated across the
+/// explorer's worker pool with repeated shapes memoized.
+pub fn explore_batch(ops: &[PGemm], gta: &GtaConfig) -> Vec<std::sync::Arc<Vec<Candidate>>> {
+    explorer::explore_batch(ops, gta)
+}
+
+/// Selected schedules for a batch of operators, searched concurrently.
+pub fn schedule_batch(ops: &[PGemm], gta: &GtaConfig) -> Vec<Candidate> {
+    explorer::schedule_batch(ops, gta)
 }
 
 /// §5 selection: normalize cycles and memory access by their minima over
@@ -245,9 +236,11 @@ pub fn select(candidates: &[Candidate]) -> Candidate {
         .unwrap()
 }
 
-/// Explore + select in one call — the coordinator's entry point.
+/// Explore + select in one call — the coordinator's entry point. Runs
+/// the pruned sweep, which provably returns the same winner as
+/// `select(&explore(g, gta))` (see [`explorer::explore_pruned`]).
 pub fn schedule(g: &PGemm, gta: &GtaConfig) -> Candidate {
-    select(&explore(g, gta))
+    explorer::schedule(g, gta)
 }
 
 #[cfg(test)]

@@ -5,7 +5,7 @@
 //! This is the `examples/e2e_serve.rs` workhorse (EXPERIMENTS.md §E2E).
 
 use crate::coordinator::{Coordinator, ExecKind, Request};
-use crate::ops::TensorOp;
+use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
@@ -22,6 +22,10 @@ pub struct ServeSummary {
     pub functional: u64,
     pub verified_ok: u64,
     pub verified_failed: u64,
+    /// Distinct p-GEMM shapes scheduled concurrently by the batch
+    /// pre-pass before the request workers started (all their serve-path
+    /// schedules are memo hits).
+    pub prescheduled: u64,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub total_sim_cycles: u64,
@@ -32,13 +36,14 @@ impl ServeSummary {
     pub fn render(&self) -> String {
         format!(
             "e2e serve: {} requests ({} functional, {} verified ok, {} failed)\n\
-             wall {:.3}s -> {:.1} req/s; simulated GTA cycles {}\n{}",
+             wall {:.3}s -> {:.1} req/s; {} p-GEMMs batch-prescheduled; simulated GTA cycles {}\n{}",
             self.requests,
             self.functional,
             self.verified_ok,
             self.verified_failed,
             self.wall_seconds,
             self.throughput_rps,
+            self.prescheduled,
             self.total_sim_cycles,
             self.metrics.render()
         )
@@ -144,6 +149,19 @@ pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result
     }
 
     let t0 = Instant::now();
+    // Batch pre-pass: explore the schedule space of every distinct
+    // p-GEMM in the stream concurrently, so the request workers below
+    // hit the memo instead of searching inline.
+    let mut seen = std::collections::HashSet::new();
+    let gemms: Vec<PGemm> = requests
+        .iter()
+        .filter_map(|r| match &r.op {
+            TensorOp::PGemm(g) => Some(*g),
+            TensorOp::Vector(_) => None,
+        })
+        .filter(|g| seen.insert(*g))
+        .collect();
+    let prescheduled = coord.schedule_batch(&gemms).len() as u64;
     let responses = coord.serve(requests, workers);
     let wall = t0.elapsed().as_secs_f64();
 
@@ -168,6 +186,7 @@ pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result
         functional,
         verified_ok: ok,
         verified_failed: failed,
+        prescheduled,
         wall_seconds: wall,
         throughput_rps: n as f64 / wall.max(1e-9),
         total_sim_cycles: total_cycles,

@@ -1,7 +1,8 @@
 //! In-tree substrates for an offline build: deterministic PRNG, a JSON
 //! parser (for the artifact manifest), a micro-benchmark harness and a
-//! property-testing loop. The build environment vendors only the `xla`
-//! PJRT crate, so these stand in for rand/serde_json/criterion/proptest.
+//! property-testing loop. Only `anyhow` (and, behind the `pjrt` feature,
+//! a vendored `xla` crate) come from outside the tree, so these stand in
+//! for rand/serde_json/criterion/proptest.
 
 pub mod bench;
 pub mod json;

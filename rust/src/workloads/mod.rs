@@ -3,7 +3,7 @@
 //! execution" exactly as §6.2 prescribes.
 
 use crate::lowering;
-use crate::ops::{TensorOp, VectorKind};
+use crate::ops::{PGemm, TensorOp, VectorKind};
 use crate::precision::Precision;
 
 /// A Table 2 workload: name, description, dominant precision, operator list.
@@ -18,6 +18,18 @@ pub struct Workload {
 impl Workload {
     pub fn total_macs(&self) -> u64 {
         self.ops.iter().map(|o| o.macs()).sum()
+    }
+
+    /// The workload's p-GEMM operators in execution order — the input
+    /// shape the schedule explorer's batch API takes.
+    pub fn pgemms(&self) -> Vec<PGemm> {
+        self.ops
+            .iter()
+            .filter_map(|o| match o {
+                TensorOp::PGemm(g) => Some(*g),
+                TensorOp::Vector(_) => None,
+            })
+            .collect()
     }
 }
 
@@ -170,6 +182,12 @@ pub fn suite() -> Vec<Workload> {
     vec![bnm(), rgb(), ffe(), md(), pca(), alt(), ffl(), ali(), nerf()]
 }
 
+/// Every p-GEMM of the Table 2 suite in paper order — the multi-operator
+/// batch the schedule explorer is sized (and benchmarked) against.
+pub fn suite_pgemms() -> Vec<PGemm> {
+    suite().iter().flat_map(|w| w.pgemms()).collect()
+}
+
 /// The p-GEMM-only view of the suite (for the Fig. 10 CGRA comparison,
 /// which the paper runs "in p-GEMM operators").
 pub fn suite_pgemm_only() -> Vec<Workload> {
@@ -222,5 +240,15 @@ mod tests {
         for w in suite_pgemm_only() {
             assert!(w.ops.iter().all(|o| matches!(o, TensorOp::PGemm(_))));
         }
+    }
+
+    #[test]
+    fn suite_pgemms_flattens_the_whole_suite() {
+        let flat = suite_pgemms();
+        let per_workload: usize = suite().iter().map(|w| w.pgemms().len()).sum();
+        assert_eq!(flat.len(), per_workload);
+        assert!(flat.len() > 20, "the suite should carry plenty of p-GEMM work");
+        // every op in the flat list appears in some workload's decomposition
+        assert!(flat.iter().all(|g| g.m > 0 && g.n > 0 && g.k > 0));
     }
 }

@@ -3,7 +3,8 @@
 //! Table 2 suite on all four platforms.
 
 use gta::report;
-use gta::sim::{cgra::CgraSim, gpgpu::GpgpuSim, gta::GtaSim, vpu::VpuSim, Platform};
+use gta::sim::{cgra::CgraSim, gpgpu::GpgpuSim, gta::GtaSim, vpu::VpuSim, Platform, SimReport};
+use gta::util::rng::{property, Rng};
 use gta::workloads;
 
 #[test]
@@ -96,6 +97,91 @@ fn all_platforms_conserve_macs() {
             assert_eq!(got, want, "{} on {}", w.name, p.name());
         }
     }
+}
+
+/// Golden-ratio regression: the simulated cross-platform ratios must
+/// track the paper's headline figures (7.76×/5.35×/8.76× memory
+/// efficiency and 6.45×/3.39×/25.83× speedup vs VPU/GPGPU/CGRA) within
+/// a fixed tolerance band. The bands are wide — these are analytic
+/// models, not the paper's RTL — but a cost-model regression that moves
+/// a ratio by an order of magnitude must fail here.
+#[test]
+fn golden_ratios_track_the_papers_headline_figures() {
+    let in_band = |name: &str, got: f64, paper: f64, lo: f64, hi: f64| {
+        let ratio = got / paper;
+        assert!(
+            ratio > lo && ratio < hi,
+            "{name}: simulated {got:.2}x vs paper {paper}x (ratio {ratio:.2} outside [{lo}, {hi}])"
+        );
+    };
+
+    let fig7 = report::fig7();
+    in_band("fig7 speedup", fig7.avg_speedup, 6.45, 0.46, 3.11);
+    in_band("fig7 memory", fig7.avg_mem_saving, 7.76, 0.25, 6.0);
+
+    let fig8 = report::fig8();
+    in_band("fig8 speedup (geomean)", fig8.geomean_speedup, 3.39, 0.44, 2.96);
+    in_band("fig8 memory", fig8.avg_mem_saving, 5.35, 0.55, 6.0);
+
+    let fig10 = report::fig10();
+    in_band("fig10 speedup", fig10.avg_speedup, 25.83, 0.38, 3.9);
+    in_band("fig10 memory", fig10.avg_mem_saving, 8.76, 0.25, 12.0);
+}
+
+/// `SimReport::add` invariants under random sequential composition:
+/// utilization stays in [0, 1] and equals the cycle-weighted mean, and
+/// the byte/MAC/energy counters are exactly additive.
+#[test]
+fn prop_sim_report_add_is_cycle_weighted_and_additive() {
+    property("SimReport::add composition", 200, |rng: &mut Rng| {
+        let n = rng.range_u64(1, 12) as usize;
+        let parts: Vec<SimReport> = (0..n)
+            .map(|_| SimReport {
+                cycles: rng.range_u64(0, 1_000_000),
+                freq_mhz: 1000,
+                sram_bytes: rng.range_u64(0, 1 << 40),
+                dram_bytes: rng.range_u64(0, 1 << 40),
+                macs: rng.range_u64(0, 1 << 40),
+                utilization: rng.f64(),
+                energy_pj: rng.f64() * 1e12,
+            })
+            .collect();
+        let total = SimReport::sum(parts.iter());
+
+        assert!(
+            (0.0..=1.0 + 1e-9).contains(&total.utilization),
+            "utilization {} escaped [0,1]",
+            total.utilization
+        );
+        let cycles: u64 = parts.iter().map(|p| p.cycles).sum();
+        assert_eq!(total.cycles, cycles);
+        assert_eq!(total.sram_bytes, parts.iter().map(|p| p.sram_bytes).sum::<u64>());
+        assert_eq!(total.dram_bytes, parts.iter().map(|p| p.dram_bytes).sum::<u64>());
+        assert_eq!(total.macs, parts.iter().map(|p| p.macs).sum::<u64>());
+        let energy: f64 = parts.iter().map(|p| p.energy_pj).sum();
+        assert!((total.energy_pj - energy).abs() <= 1e-6 * energy.abs() + 1e-9);
+        assert_eq!(total.freq_mhz, 1000);
+        assert_eq!(
+            total.memory_access(),
+            parts.iter().map(|p| p.memory_access()).sum::<u64>()
+        );
+
+        // cycle-weighted mean utilization (0 when no cycles at all)
+        if cycles > 0 {
+            let want = parts
+                .iter()
+                .map(|p| p.utilization * p.cycles as f64)
+                .sum::<f64>()
+                / cycles as f64;
+            assert!(
+                (total.utilization - want).abs() < 1e-9,
+                "utilization {} != cycle-weighted mean {want}",
+                total.utilization
+            );
+        } else {
+            assert_eq!(total.utilization, 0.0);
+        }
+    });
 }
 
 #[test]

@@ -122,6 +122,40 @@ fn prop_schedule_selection_in_space_and_sane() {
 }
 
 #[test]
+fn prop_pruned_and_parallel_exploration_match_the_reference() {
+    // The three §5 search paths — sequential reference, worker-pool
+    // parallel, and Pareto-pruned — must agree on random operators:
+    // identical candidate sets (parallel) and identical least-sum-of-
+    // squares winners (pruned).
+    property("explorer paths agree", 40, |rng: &mut Rng| {
+        let lanes = *rng.choose(&[4u32, 8, 16]);
+        let gta = GtaConfig::with_lanes(lanes);
+        let g = PGemm::new(
+            rng.range_u64(1, 640),
+            rng.range_u64(1, 640),
+            rng.range_u64(1, 640),
+            *rng.choose(&Precision::ALL),
+        );
+        let reference = scheduler::explore(&g, &gta);
+        let workers = *rng.choose(&[2usize, 3, 8]);
+        let parallel = scheduler::explorer::explore_parallel(&g, &gta, workers);
+        assert_eq!(reference, parallel, "{g:?} workers={workers}");
+
+        let full_best = scheduler::select(&reference);
+        let (survivors, stats) = scheduler::explorer::explore_pruned(&g, &gta);
+        assert_eq!(stats.evaluated + stats.pruned, reference.len());
+        let pruned_best = scheduler::select(&survivors);
+        assert_eq!(full_best.config, pruned_best.config, "{g:?}");
+        assert_eq!(full_best.report, pruned_best.report);
+        // every survivor must be a member of the full space, in order
+        let mut it = reference.iter();
+        for s in &survivors {
+            assert!(it.any(|c| c == s), "survivor not in reference sweep: {s:?}");
+        }
+    });
+}
+
+#[test]
 fn prop_lane_allocator_never_double_books() {
     property("allocator exclusivity", 100, |rng: &mut Rng| {
         let mut alloc = LaneAllocator::new(GtaConfig::lanes16());

@@ -4,9 +4,10 @@
 
 use gta::arch::SysCsr;
 use gta::precision::Precision;
-use gta::scheduler::{self, pattern::Coverage};
+use gta::scheduler::{self, explorer, pattern::Coverage, Explorer};
 use gta::workloads;
 use gta::{Dataflow, GtaConfig, PGemm, TensorOp};
+use std::sync::Arc;
 
 #[test]
 fn every_suite_pgemm_gets_a_valid_schedule() {
@@ -110,4 +111,103 @@ fn int64_needs_more_cycles_than_int8_everywhere() {
     let g64 = scheduler::schedule(&PGemm::new(128, 128, 128, Precision::Int64), &gta);
     assert!(g64.report.cycles > g8.report.cycles);
     assert!(g64.report.memory_access() > g8.report.memory_access());
+}
+
+// ---------------------------------------------------------- explorer --
+
+/// Determinism: the parallel explorer returns byte-identical candidate
+/// sets — same values, same order — as the sequential reference sweep,
+/// across worker counts, shapes, precisions and lane counts.
+#[test]
+fn parallel_explorer_is_deterministic_vs_sequential_reference() {
+    for lanes in [4u32, 16] {
+        let cfg = GtaConfig::with_lanes(lanes);
+        for g in [
+            PGemm::new(384, 169, 2304, Precision::Int8),
+            PGemm::new(96, 169, 576, Precision::Fp32),
+            PGemm::new(8, 8, 512, Precision::Int16),
+            PGemm::new(1, 1, 4096, Precision::Fp64),
+            PGemm::new(512, 48, 64, Precision::Bp16),
+        ] {
+            let reference = scheduler::explore(&g, &cfg);
+            for workers in [1usize, 2, 4, 8] {
+                let parallel = explorer::explore_parallel(&g, &cfg, workers);
+                assert_eq!(
+                    reference, parallel,
+                    "workers={workers} lanes={lanes} {g:?}: parallel sweep diverged"
+                );
+            }
+            // the batch path must agree too (it layers the memo on top)
+            let batched = scheduler::explore_batch(&[g], &cfg);
+            assert_eq!(reference, *batched[0]);
+        }
+    }
+}
+
+/// Pruning safety: the pruned sweep may skip dominated candidates but
+/// must never drop the least-sum-of-squares winner — selection over the
+/// survivors equals selection over the full space, for every p-GEMM of
+/// the Table 2 suite.
+#[test]
+fn pruning_never_drops_the_least_sum_of_squares_winner() {
+    let cfg = GtaConfig::lanes16();
+    let mut total_pruned = 0usize;
+    let mut seen = std::collections::HashSet::new();
+    for g in workloads::suite_pgemms() {
+        if !seen.insert(g) {
+            continue; // identical layers explore identically
+        }
+        let full = scheduler::select(&scheduler::explore(&g, &cfg));
+        let (survivors, stats) = explorer::explore_pruned(&g, &cfg);
+        let pruned = scheduler::select(&survivors);
+        assert_eq!(full.config, pruned.config, "{g:?}: pruning changed the winner");
+        assert_eq!(full.report, pruned.report);
+        assert_eq!(stats.evaluated, survivors.len());
+        total_pruned += stats.pruned;
+    }
+    // the pass must be a real optimization somewhere in the suite, not a
+    // no-op (if this starts failing after a cost-model change, the bounds
+    // in explorer::lower_bounds need re-deriving)
+    assert!(total_pruned > 0, "pruning never fired across the whole suite");
+}
+
+/// Cache: a second exploration of the same operator hits the memo and
+/// returns identical results (same Arc for sweeps, same candidate for
+/// schedules).
+#[test]
+fn explore_cache_hits_on_repeated_operators() {
+    let ex = Explorer::new();
+    let cfg = GtaConfig::lanes16();
+    let g = PGemm::new(256, 27 * 27, 5 * 5 * 96, Precision::Int8);
+
+    let first = ex.explore(&g, &cfg);
+    let second = ex.explore(&g, &cfg);
+    assert!(Arc::ptr_eq(&first, &second), "second explore must be the memoized Arc");
+    assert_eq!(ex.sweeps.misses(), 1);
+    assert_eq!(ex.sweeps.hits(), 1);
+    assert_eq!(*first, scheduler::explore(&g, &cfg), "memoized sweep == fresh sweep");
+
+    let (s1, fresh1) = ex.schedule(&g, &cfg);
+    let (s2, fresh2) = ex.schedule(&g, &cfg);
+    assert!(fresh1 && !fresh2);
+    assert_eq!(s1.config, s2.config);
+    assert_eq!(s1.report, s2.report);
+    assert_eq!(s1.config, scheduler::schedule(&g, &cfg).config);
+}
+
+/// The batch API schedules a whole workload concurrently and agrees with
+/// the per-operator path, in order, including duplicates.
+#[test]
+fn batch_scheduling_agrees_with_sequential_over_the_alexnet_pipeline() {
+    let cfg = GtaConfig::lanes16();
+    let ops = workloads::ali().pgemms();
+    assert!(ops.len() >= 8, "ALI should decompose into several GEMMs");
+    let batch = scheduler::schedule_batch(&ops, &cfg);
+    assert_eq!(batch.len(), ops.len());
+    for (g, cand) in ops.iter().zip(&batch) {
+        let seq = scheduler::schedule(g, &cfg);
+        assert_eq!(cand.config, seq.config);
+        assert_eq!(cand.report, seq.report);
+        assert_eq!(cand.config.arrangement.lanes(), cfg.lanes);
+    }
 }
