@@ -1,0 +1,54 @@
+//! Serving-path bench: what same-shape coalescing buys on a functional
+//! tile stream. Drives the full batched serve path (admission queue +
+//! coalescing dispatcher + executor thread) on the soft rust-oracle
+//! backend — the dispatch overhead being amortized is the real
+//! per-invocation channel round-trip, identical to the PJRT deployment's.
+//!
+//! Prints req/s with coalescing disabled (window 0 -> every dispatch is a
+//! singleton) vs enabled, plus the observed batch-size histogram.
+
+use gta::coordinator::{CoalesceConfig, Request};
+use gta::serve::{gemm_tile_request, soft_coordinator};
+use gta::GtaConfig;
+use std::time::{Duration, Instant};
+
+fn run(label: &str, coalesce: CoalesceConfig, n: u64, workers: usize) -> f64 {
+    let coord = soft_coordinator(GtaConfig::lanes16(), coalesce).unwrap();
+    let requests: Vec<Request> =
+        (0..n).map(|i| gemm_tile_request(i, "mpra_gemm_i8_64", i as i32 * 7)).collect();
+    let t0 = Instant::now();
+    let responses = coord.serve(requests, workers);
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(responses.len(), n as usize);
+    assert!(responses.iter().all(|r| r.is_ok()));
+    let snap = coord.metrics.snapshot();
+    let rps = n as f64 / wall.max(1e-9);
+    println!(
+        "{label:<28} {n:>5} tiles on {workers} workers: {wall:>7.3}s = {rps:>9.1} req/s  \
+         batches={} mean={:.2} max={} hist={:?}",
+        snap.batches,
+        snap.mean_batch(),
+        snap.max_batch,
+        snap.batch_hist
+    );
+    rps
+}
+
+fn main() {
+    let n = 256u64;
+    let workers = 8usize;
+    println!("serve coalescing: same-shape INT8 64x64 MPRA tiles, soft backend\n");
+    let solo = run(
+        "uncoalesced (window 0)",
+        CoalesceConfig { window: Duration::ZERO, max_batch: 1 },
+        n,
+        workers,
+    );
+    let batched = run(
+        "coalesced (2ms, batch<=32)",
+        CoalesceConfig { window: Duration::from_millis(2), max_batch: 32 },
+        n,
+        workers,
+    );
+    println!("\ncoalescing speedup: {:.2}x", batched / solo.max(1e-9));
+}

@@ -1,9 +1,20 @@
-//! Coordinator metrics: request counters, schedule-cache statistics and
-//! latency percentiles, shared across worker threads.
+//! Coordinator metrics: request counters, schedule-cache statistics,
+//! admission/coalescing telemetry and latency percentiles, shared across
+//! worker threads.
+//!
+//! Latencies are kept in a fixed-size reservoir (Vitter's Algorithm R)
+//! instead of an unbounded vector, so a long-lived server records
+//! millions of requests in O(1) memory while p50/p95/p99 stay within
+//! sampling error; the mean is exact (running sum / count).
 
+use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Latency samples retained for percentile estimation. 4096 samples put
+/// the p99 estimate within ~a tenth of a percentile rank of truth.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -11,10 +22,23 @@ struct Inner {
     pgemm_ops: u64,
     vector_ops: u64,
     functional_execs: u64,
+    functional_errors: u64,
     schedule_cache_hits: u64,
     schedule_cache_misses: u64,
     per_artifact: BTreeMap<String, u64>,
-    latencies_us: Vec<u64>,
+    // admission queue
+    admission_rejected: u64,
+    admission_requeued: u64,
+    queue_peak_depth: u64,
+    // coalescing dispatcher
+    batches: u64,
+    batched_requests: u64,
+    batch_hist: BTreeMap<u64, u64>,
+    // latency reservoir (Algorithm R); rng seeded lazily on first overflow
+    lat_count: u64,
+    lat_sum_us: u64,
+    lat_reservoir: Vec<u64>,
+    lat_rng: Option<Rng>,
 }
 
 /// Thread-safe metrics sink.
@@ -30,9 +54,24 @@ pub struct Snapshot {
     pub pgemm_ops: u64,
     pub vector_ops: u64,
     pub functional_execs: u64,
+    pub functional_errors: u64,
     pub schedule_cache_hits: u64,
     pub schedule_cache_misses: u64,
     pub per_artifact: BTreeMap<String, u64>,
+    pub admission_rejected: u64,
+    pub admission_requeued: u64,
+    pub queue_peak_depth: u64,
+    /// Coalesced dispatches issued to the executor.
+    pub batches: u64,
+    /// Functional invocations carried by those dispatches.
+    pub batched_requests: u64,
+    /// batch size -> number of dispatches of that size.
+    pub batch_hist: BTreeMap<u64, u64>,
+    /// Largest coalesced batch dispatched.
+    pub max_batch: u64,
+    /// Latencies recorded (reservoir holds at most
+    /// [`LATENCY_RESERVOIR_CAP`] of them).
+    pub latency_count: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
@@ -48,13 +87,32 @@ impl Metrics {
         } else {
             m.vector_ops += 1;
         }
-        m.latencies_us.push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        m.lat_count += 1;
+        m.lat_sum_us += us;
+        if m.lat_reservoir.len() < LATENCY_RESERVOIR_CAP {
+            m.lat_reservoir.push(us);
+        } else {
+            // Algorithm R: keep each of the lat_count samples with equal
+            // probability CAP/count
+            let count = m.lat_count;
+            let j = m.lat_rng.get_or_insert_with(|| Rng::new(0x6A7A_5EED)).next_u64() % count;
+            if (j as usize) < LATENCY_RESERVOIR_CAP {
+                m.lat_reservoir[j as usize] = us;
+            }
+        }
     }
 
     pub fn record_functional(&self, artifact: &str) {
         let mut m = self.inner.lock().unwrap();
         m.functional_execs += 1;
         *m.per_artifact.entry(artifact.to_string()).or_insert(0) += 1;
+    }
+
+    /// A functional execution that came back as an error (the request
+    /// still gets a response — this is the drop-free failure path).
+    pub fn record_functional_error(&self) {
+        self.inner.lock().unwrap().functional_errors += 1;
     }
 
     pub fn record_cache(&self, hit: bool) {
@@ -66,9 +124,31 @@ impl Metrics {
         }
     }
 
+    /// Admission-queue depth observed after an admit (peak is kept).
+    pub fn record_queue_depth(&self, depth: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.queue_peak_depth = m.queue_peak_depth.max(depth as u64);
+    }
+
+    pub fn record_admission_rejected(&self) {
+        self.inner.lock().unwrap().admission_rejected += 1;
+    }
+
+    pub fn record_admission_requeued(&self) {
+        self.inner.lock().unwrap().admission_requeued += 1;
+    }
+
+    /// One coalesced dispatch of `size` same-(artifact, shape) requests.
+    pub fn record_batch(&self, size: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += size as u64;
+        *m.batch_hist.entry(size as u64).or_insert(0) += 1;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
-        let mut lat = m.latencies_us.clone();
+        let mut lat = m.lat_reservoir.clone();
         lat.sort_unstable();
         let pct = |p: f64| -> u64 {
             if lat.is_empty() {
@@ -82,36 +162,64 @@ impl Metrics {
             pgemm_ops: m.pgemm_ops,
             vector_ops: m.vector_ops,
             functional_execs: m.functional_execs,
+            functional_errors: m.functional_errors,
             schedule_cache_hits: m.schedule_cache_hits,
             schedule_cache_misses: m.schedule_cache_misses,
             per_artifact: m.per_artifact.clone(),
+            admission_rejected: m.admission_rejected,
+            admission_requeued: m.admission_requeued,
+            queue_peak_depth: m.queue_peak_depth,
+            batches: m.batches,
+            batched_requests: m.batched_requests,
+            batch_hist: m.batch_hist.clone(),
+            max_batch: m.batch_hist.keys().next_back().copied().unwrap_or(0),
+            latency_count: m.lat_count,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
-            mean_us: if lat.is_empty() {
+            mean_us: if m.lat_count == 0 {
                 0.0
             } else {
-                lat.iter().sum::<u64>() as f64 / lat.len() as f64
+                m.lat_sum_us as f64 / m.lat_count as f64
             },
         }
     }
 }
 
 impl Snapshot {
+    /// Mean coalesced batch size (1.0 when nothing was batched).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            1.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests={} (pgemm={} vector={})  functional={}  cache {}/{} hit\n\
-             latency: p50={}us p95={}us p99={}us mean={:.1}us\n",
+            "requests={} (pgemm={} vector={})  functional={} ({} errors)  cache {}/{} hit\n\
+             latency: p50={}us p95={}us p99={}us mean={:.1}us ({} recorded)\n\
+             serving: queue peak={}  batches={} (mean {:.2}, max {})  \
+             admission rejected={} requeued={}\n",
             self.requests,
             self.pgemm_ops,
             self.vector_ops,
             self.functional_execs,
+            self.functional_errors,
             self.schedule_cache_hits,
             self.schedule_cache_hits + self.schedule_cache_misses,
             self.p50_us,
             self.p95_us,
             self.p99_us,
             self.mean_us,
+            self.latency_count,
+            self.queue_peak_depth,
+            self.batches,
+            self.mean_batch(),
+            self.max_batch,
+            self.admission_rejected,
+            self.admission_requeued,
         );
         for (name, n) in &self.per_artifact {
             s.push_str(&format!("  artifact {name}: {n} execs\n"));
@@ -141,5 +249,51 @@ mod tests {
         assert_eq!(s.schedule_cache_hits, 1);
         assert_eq!(s.per_artifact["k"], 1);
         assert!(s.render().contains("p50=50us"));
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded_with_percentiles_in_sampling_error() {
+        let m = Metrics::default();
+        let n = 50_000u64;
+        for i in 1..=n {
+            m.record_request(false, Duration::from_micros(i));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, n);
+        // memory stays bounded
+        assert!(m.inner.lock().unwrap().lat_reservoir.len() <= LATENCY_RESERVOIR_CAP);
+        // mean is exact, percentiles within sampling error of the uniform
+        // 1..=n distribution (a generous 5% of range for cap=4096)
+        assert!((s.mean_us - (n + 1) as f64 / 2.0).abs() < 1.0);
+        let tol = n as f64 * 0.05;
+        assert!((s.p50_us as f64 - n as f64 * 0.50).abs() < tol, "p50={}", s.p50_us);
+        assert!((s.p95_us as f64 - n as f64 * 0.95).abs() < tol, "p95={}", s.p95_us);
+        assert!((s.p99_us as f64 - n as f64 * 0.99).abs() < tol, "p99={}", s.p99_us);
+    }
+
+    #[test]
+    fn serving_counters_roll_up() {
+        let m = Metrics::default();
+        m.record_queue_depth(3);
+        m.record_queue_depth(9);
+        m.record_queue_depth(5);
+        m.record_admission_rejected();
+        m.record_admission_requeued();
+        m.record_admission_requeued();
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(4);
+        m.record_functional_error();
+        let s = m.snapshot();
+        assert_eq!(s.queue_peak_depth, 9);
+        assert_eq!(s.admission_rejected, 1);
+        assert_eq!(s.admission_requeued, 2);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.batched_requests, 9);
+        assert_eq!(s.batch_hist[&4], 2);
+        assert_eq!(s.max_batch, 4);
+        assert!((s.mean_batch() - 3.0).abs() < 1e-12);
+        assert_eq!(s.functional_errors, 1);
+        assert!(s.render().contains("batches=3"));
     }
 }

@@ -4,25 +4,43 @@
 //! result through the PJRT engine so numerics are real, not modeled.
 //!
 //! Threading model: PJRT handles are not `Send`, so one dedicated executor
-//! thread owns the [`Engine`]; scheduling/simulation workers scale across
-//! cores and talk to it over a channel. Python never runs here — the
-//! binary is self-contained once `make artifacts` has produced the HLO.
+//! thread owns the backend ([`crate::runtime::ExecBackend`], normally the
+//! PJRT [`Engine`]); scheduling/simulation workers scale across cores.
+//! Functional requests do not talk to the executor directly — they submit
+//! to a **coalescing dispatcher** thread that groups same-`(artifact,
+//! shape)` invocations arriving within a short window into one
+//! [`ExecJob::RunBatch`], amortizing the per-request channel round-trip
+//! that otherwise makes the single executor thread the serial bottleneck
+//! (the GPTPU lesson: batch small offloaded tensor ops). Request streams
+//! enter through a bounded [`AdmissionQueue`] with backpressure, and every
+//! failure — functional error, panic, rejection — comes back as a
+//! [`Response`] carrying a per-request error: `serve` returns exactly one
+//! response per request, always.
 
 pub mod lane_scheduler;
 pub mod metrics;
 
 use crate::arch::GtaConfig;
 use crate::ops::{PGemm, TensorOp};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::manifest::DType;
+use crate::runtime::{Engine, ExecBackend, HostTensor};
 use crate::scheduler::{self, explorer, Candidate};
 use crate::sim::gta::GtaSim;
 use crate::sim::{Platform, SimReport};
 use anyhow::{anyhow, Result};
 use metrics::Metrics;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Distinct operator shapes the schedule caches retain before shedding
+/// least-recently-used entries (bounded memory on a long-lived server).
+pub const DEFAULT_SCHEDULE_CAPACITY: usize = 32_768;
+
+/// Default admission-queue slots for [`Coordinator::serve`].
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 
 /// What the caller wants done with an operator.
 #[derive(Debug, Clone)]
@@ -42,7 +60,9 @@ pub struct Request {
     pub exec: ExecKind,
 }
 
-/// The coordinator's answer.
+/// The coordinator's answer. Failures are data, not panics: a functional
+/// error, worker panic or admission rejection fills `error` and the
+/// response is still delivered, so streams never silently shrink.
 #[derive(Debug)]
 pub struct Response {
     pub id: u64,
@@ -50,17 +70,35 @@ pub struct Response {
     pub schedule: Option<Candidate>,
     /// Simulated cycles/traffic on the GTA model.
     pub sim: SimReport,
-    /// Functional outputs (when requested and an engine is attached).
+    /// Functional outputs (when requested, an engine is attached, and
+    /// execution succeeded).
     pub outputs: Option<Vec<HostTensor>>,
+    /// Why this request produced no (valid) outputs, if it didn't.
+    pub error: Option<String>,
     pub latency: Duration,
 }
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Per-invocation reply channel for functional execution results.
+type Reply = mpsc::Sender<Result<Vec<HostTensor>>>;
 
 /// Job sent to the executor thread.
 enum ExecJob {
     Run {
         artifact: String,
         inputs: Vec<HostTensor>,
-        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+        reply: Reply,
+    },
+    /// A coalesced batch of same-artifact invocations; results are
+    /// scattered back to the per-invocation reply channels.
+    RunBatch {
+        artifact: String,
+        items: Vec<(Vec<HostTensor>, Reply)>,
     },
     Names {
         reply: mpsc::Sender<Vec<String>>,
@@ -68,25 +106,35 @@ enum ExecJob {
     Shutdown,
 }
 
-/// Handle to the dedicated PJRT executor thread.
+/// Handle to the dedicated executor thread that owns the backend.
 pub struct Executor {
     tx: mpsc::Sender<ExecJob>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Executor {
-    /// Spawn the executor; blocks until the engine has compiled all
-    /// artifacts (or failed).
+    /// Spawn the executor on the PJRT engine; blocks until the engine has
+    /// compiled all artifacts (or failed).
     pub fn spawn(dir: PathBuf) -> Result<Executor> {
+        Self::spawn_backend(move || Ok(Box::new(Engine::load(&dir)?) as Box<dyn ExecBackend>))
+    }
+
+    /// Spawn the executor on an arbitrary backend. `make` runs on the
+    /// executor thread itself (PJRT handles are not `Send`); this call
+    /// blocks until it returns.
+    pub fn spawn_backend<F>(make: F) -> Result<Executor>
+    where
+        F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<ExecJob>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
-            .name("gta-pjrt-executor".into())
+            .name("gta-executor".into())
             .spawn(move || {
-                let engine = match Engine::load(&dir) {
-                    Ok(e) => {
+                let backend = match make() {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        e
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -96,11 +144,18 @@ impl Executor {
                 while let Ok(job) = rx.recv() {
                     match job {
                         ExecJob::Run { artifact, inputs, reply } => {
-                            let _ = reply.send(engine.execute(&artifact, &inputs));
+                            let _ = reply.send(backend.execute(&artifact, &inputs));
+                        }
+                        ExecJob::RunBatch { artifact, items } => {
+                            let (inputs, replies): (Vec<Vec<HostTensor>>, Vec<Reply>) =
+                                items.into_iter().unzip();
+                            let results = backend.execute_batch(&artifact, &inputs);
+                            for (reply, res) in replies.into_iter().zip(results) {
+                                let _ = reply.send(res);
+                            }
                         }
                         ExecJob::Names { reply } => {
-                            let _ = reply
-                                .send(engine.names().iter().map(|s| s.to_string()).collect());
+                            let _ = reply.send(backend.names());
                         }
                         ExecJob::Shutdown => break,
                     }
@@ -108,11 +163,12 @@ impl Executor {
             })?;
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("executor thread died during engine load"))??;
+            .map_err(|_| anyhow!("executor thread died during backend load"))??;
         Ok(Executor { tx, handle: Some(handle) })
     }
 
-    /// Execute an artifact synchronously through the executor thread.
+    /// Execute an artifact synchronously through the executor thread
+    /// (bypasses coalescing — one invocation, one dispatch).
     pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -121,7 +177,7 @@ impl Executor {
         rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
     }
 
-    /// Artifact names the engine compiled.
+    /// Artifact names the backend compiled.
     pub fn names(&self) -> Result<Vec<String>> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -140,17 +196,301 @@ impl Drop for Executor {
     }
 }
 
+/// Coalescing knobs (see `docs/serving.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct CoalesceConfig {
+    /// How long the first invocation of a group waits for same-shape
+    /// company before the group is dispatched.
+    pub window: Duration,
+    /// Hard cap on one dispatched batch; a group reaching it flushes
+    /// immediately.
+    pub max_batch: usize,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        CoalesceConfig { window: Duration::from_millis(1), max_batch: 32 }
+    }
+}
+
+/// One functional invocation in flight from a worker to the dispatcher.
+struct DispatchJob {
+    artifact: String,
+    inputs: Vec<HostTensor>,
+    reply: Reply,
+}
+
+/// Batches group by artifact plus input signature: artifacts are
+/// fixed-shape, but a malformed request must not ride along with (or
+/// poison) well-formed batch-mates.
+type GroupKey = (String, Vec<(DType, usize)>);
+
+fn group_key(job: &DispatchJob) -> GroupKey {
+    (job.artifact.clone(), job.inputs.iter().map(|t| (t.dtype(), t.len())).collect())
+}
+
+/// Dispatch one coalesced group to the executor (or fail every member's
+/// reply if the executor is gone). `artifact` is the group key's —
+/// reused rather than re-cloned from a member.
+fn flush_group(
+    artifact: String,
+    jobs: Vec<DispatchJob>,
+    exec_tx: &mpsc::Sender<ExecJob>,
+    metrics: &Metrics,
+) {
+    if jobs.is_empty() {
+        return;
+    }
+    metrics.record_batch(jobs.len());
+    let items: Vec<(Vec<HostTensor>, Reply)> =
+        jobs.into_iter().map(|j| (j.inputs, j.reply)).collect();
+    if let Err(mpsc::SendError(ExecJob::RunBatch { items, .. })) =
+        exec_tx.send(ExecJob::RunBatch { artifact, items })
+    {
+        for (_, reply) in items {
+            let _ = reply.send(Err(anyhow!("executor shut down before dispatch")));
+        }
+    }
+}
+
+/// The dispatcher thread: accumulate same-`(artifact, shape)` invocations
+/// into groups, flush each group when it reaches `max_batch` or its
+/// window expires, and flush everything on shutdown — a pending
+/// invocation is never dropped.
+fn dispatcher_loop(
+    rx: mpsc::Receiver<DispatchJob>,
+    exec_tx: mpsc::Sender<ExecJob>,
+    cfg: CoalesceConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut groups: HashMap<GroupKey, (Vec<DispatchJob>, Instant)> = HashMap::new();
+    loop {
+        // Nothing pending: sleep on the channel. Groups pending: sleep at
+        // most until the nearest window deadline.
+        let next = if groups.is_empty() {
+            match rx.recv() {
+                Ok(job) => Some(job),
+                Err(_) => break,
+            }
+        } else {
+            let nearest = groups.values().map(|(_, deadline)| *deadline).min().unwrap();
+            match nearest.checked_duration_since(Instant::now()) {
+                None => None, // a deadline already passed
+                Some(wait) => match rx.recv_timeout(wait) {
+                    Ok(job) => Some(job),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                },
+            }
+        };
+        match next {
+            Some(job) => {
+                let key = group_key(&job);
+                let group = groups
+                    .entry(key.clone())
+                    .or_insert_with(|| (Vec::new(), Instant::now() + cfg.window));
+                group.0.push(job);
+                if group.0.len() >= cfg.max_batch.max(1) {
+                    if let Some((jobs, _)) = groups.remove(&key) {
+                        flush_group(key.0, jobs, &exec_tx, &metrics);
+                    }
+                }
+            }
+            None => {
+                let now = Instant::now();
+                let due: Vec<GroupKey> =
+                    groups.iter().filter(|(_, v)| v.1 <= now).map(|(k, _)| k.clone()).collect();
+                for key in due {
+                    if let Some((jobs, _)) = groups.remove(&key) {
+                        flush_group(key.0, jobs, &exec_tx, &metrics);
+                    }
+                }
+            }
+        }
+    }
+    for (key, (jobs, _)) in groups.drain() {
+        flush_group(key.0, jobs, &exec_tx, &metrics);
+    }
+}
+
+/// Handle to the coalescing dispatcher thread.
+struct Dispatcher {
+    /// `None` after shutdown begins. (Mutex keeps the handle `Sync`
+    /// across worker threads on every supported toolchain.)
+    tx: Mutex<Option<mpsc::Sender<DispatchJob>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Dispatcher {
+    fn spawn(exec_tx: mpsc::Sender<ExecJob>, cfg: CoalesceConfig, metrics: Arc<Metrics>) -> Dispatcher {
+        let (tx, rx) = mpsc::channel::<DispatchJob>();
+        let handle = std::thread::Builder::new()
+            .name("gta-coalesce-dispatch".into())
+            .spawn(move || dispatcher_loop(rx, exec_tx, cfg, metrics))
+            .expect("spawning dispatcher thread");
+        Dispatcher { tx: Mutex::new(Some(tx)), handle: Some(handle) }
+    }
+
+    /// Submit one functional invocation and wait for its (possibly
+    /// batched) execution result.
+    fn submit(&self, artifact: String, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or_else(|| anyhow!("dispatcher shut down"))?;
+            tx.send(DispatchJob { artifact, inputs, reply })
+                .map_err(|_| anyhow!("dispatcher gone"))?;
+        }
+        rx.recv().map_err(|_| anyhow!("dispatcher dropped reply"))?
+    }
+}
+
+impl Drop for Dispatcher {
+    fn drop(&mut self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What `admit` does when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the caller until a slot frees (backpressure).
+    Block,
+    /// Fail fast with [`AdmitError::Busy`], handing the item back.
+    Reject,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// At capacity under [`AdmissionPolicy::Reject`].
+    Busy,
+    /// The queue was closed; no further admissions.
+    Closed,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC admission queue: producers `admit` (blocking or
+/// fail-fast per [`AdmissionPolicy`]), consumers `pop` until the queue is
+/// closed *and* drained. The bound is what turns an overload into
+/// backpressure at the door instead of unbounded memory growth inside.
+pub struct AdmissionQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(capacity: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Admit `item`, applying `policy` when at capacity. On failure the
+    /// item is handed back so the caller can synthesize a response for it.
+    pub fn admit(&self, item: T, policy: AdmissionPolicy) -> std::result::Result<(), (T, AdmitError)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err((item, AdmitError::Closed));
+            }
+            if s.items.len() < self.capacity {
+                s.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match policy {
+                AdmissionPolicy::Reject => return Err((item, AdmitError::Busy)),
+                AdmissionPolicy::Block => s = self.not_full.wait(s).unwrap(),
+            }
+        }
+    }
+
+    /// Next item; blocks while the queue is open and empty. `None` once
+    /// closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: pending items still drain, new admissions fail.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Knobs for the batched serve path (see `docs/serving.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    pub workers: usize,
+    /// Admission queue slots; admissions past this apply `policy`.
+    pub queue_capacity: usize,
+    pub policy: AdmissionPolicy,
+}
+
+impl ServeOptions {
+    pub fn with_workers(workers: usize) -> ServeOptions {
+        ServeOptions { workers, ..ServeOptions::default() }
+    }
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 4,
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            policy: AdmissionPolicy::Block,
+        }
+    }
+}
+
 /// The coordinator.
 pub struct Coordinator {
     pub gta: GtaConfig,
     sim: GtaSim,
+    /// Coalescing dispatcher feeding the executor. Declared before
+    /// `executor`: fields drop in order, so shutdown flushes pending
+    /// batches into a still-live executor.
+    dispatcher: Option<Dispatcher>,
     executor: Option<Executor>,
     /// §5 exploration through the shared explorer: repeated operator
     /// shapes schedule in O(1) off the memo, concurrent requests for the
     /// same shape dedup onto one search (a large hot-path win; §Perf),
-    /// and batch requests fan the search across a worker pool.
+    /// and batch requests fan the search across a worker pool. Capped:
+    /// least-recently-used shapes shed past [`DEFAULT_SCHEDULE_CAPACITY`].
     explorer: scheduler::Explorer,
-    pub metrics: Metrics,
+    pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
 }
 
@@ -160,18 +500,58 @@ impl Coordinator {
         Coordinator {
             sim: GtaSim::new(gta),
             gta,
+            dispatcher: None,
             executor: None,
-            explorer: scheduler::Explorer::new(),
-            metrics: Metrics::default(),
+            explorer: scheduler::Explorer::with_capacity(DEFAULT_SCHEDULE_CAPACITY),
+            metrics: Arc::new(Metrics::default()),
             next_id: AtomicU64::new(0),
         }
     }
 
     /// Coordinator with a functional PJRT engine attached.
     pub fn with_engine(gta: GtaConfig, artifact_dir: PathBuf) -> Result<Coordinator> {
+        Self::with_engine_opts(gta, artifact_dir, CoalesceConfig::default())
+    }
+
+    /// [`Coordinator::with_engine`] with explicit coalescing knobs.
+    pub fn with_engine_opts(
+        gta: GtaConfig,
+        artifact_dir: PathBuf,
+        coalesce: CoalesceConfig,
+    ) -> Result<Coordinator> {
         let mut c = Coordinator::new(gta);
-        c.executor = Some(Executor::spawn(artifact_dir)?);
+        c.attach(Executor::spawn(artifact_dir)?, coalesce);
         Ok(c)
+    }
+
+    /// Coordinator over an arbitrary execution backend (e.g. the offline
+    /// [`crate::runtime::SoftBackend`]). `make` runs on the executor
+    /// thread.
+    pub fn with_backend<F>(gta: GtaConfig, make: F) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
+        Self::with_backend_opts(gta, make, CoalesceConfig::default())
+    }
+
+    /// [`Coordinator::with_backend`] with explicit coalescing knobs.
+    pub fn with_backend_opts<F>(
+        gta: GtaConfig,
+        make: F,
+        coalesce: CoalesceConfig,
+    ) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
+        let mut c = Coordinator::new(gta);
+        c.attach(Executor::spawn_backend(make)?, coalesce);
+        Ok(c)
+    }
+
+    fn attach(&mut self, executor: Executor, coalesce: CoalesceConfig) {
+        self.dispatcher =
+            Some(Dispatcher::spawn(executor.tx.clone(), coalesce, Arc::clone(&self.metrics)));
+        self.executor = Some(executor);
     }
 
     pub fn has_engine(&self) -> bool {
@@ -208,7 +588,8 @@ impl Coordinator {
             .collect()
     }
 
-    /// Handle one request synchronously.
+    /// Handle one request synchronously. Never panics on functional
+    /// failure: the error travels in [`Response::error`] instead.
     pub fn handle(&self, req: Request) -> Response {
         let t0 = Instant::now();
         let (schedule, sim) = match &req.op {
@@ -218,60 +599,137 @@ impl Coordinator {
             }
             TensorOp::Vector(_) => (None, self.sim.run(&req.op)),
         };
-        let outputs = match &req.exec {
-            ExecKind::Simulate => None,
-            ExecKind::Functional { artifact, inputs } => match &self.executor {
-                Some(ex) => {
+        let (outputs, error) = match &req.exec {
+            ExecKind::Simulate => (None, None),
+            ExecKind::Functional { artifact, inputs } => match &self.dispatcher {
+                Some(d) => {
                     self.metrics.record_functional(artifact);
-                    Some(ex.execute(artifact, inputs.clone()).unwrap_or_else(|e| {
-                        panic!("functional execution of {artifact} failed: {e:#}")
-                    }))
+                    match d.submit(artifact.clone(), inputs.clone()) {
+                        Ok(outs) => (Some(outs), None),
+                        Err(e) => {
+                            self.metrics.record_functional_error();
+                            (None, Some(format!("functional execution of {artifact} failed: {e:#}")))
+                        }
+                    }
                 }
-                None => None,
+                None => {
+                    (None, Some(format!("functional request for {artifact:?}: no engine attached")))
+                }
             },
         };
         let latency = t0.elapsed();
         self.metrics
             .record_request(matches!(req.op, TensorOp::PGemm(_)), latency);
-        Response { id: req.id, schedule, sim, outputs, latency }
+        Response { id: req.id, schedule, sim, outputs, error, latency }
     }
 
-    /// Serve a batch of requests on `workers` threads. Functional jobs
-    /// serialize through the single PJRT executor; scheduling/simulation
-    /// parallelizes. Responses are returned sorted by request id.
+    /// [`Coordinator::handle`] hardened for worker threads: a panic
+    /// anywhere in the pipeline becomes an error-carrying response, so a
+    /// bad request can never kill a worker and eat its queue share.
+    pub fn handle_caught(&self, req: Request) -> Response {
+        let id = req.id;
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.handle(req))) {
+            Ok(resp) => resp,
+            Err(p) => Response {
+                id,
+                schedule: None,
+                sim: SimReport::default(),
+                outputs: None,
+                error: Some(format!("worker panicked: {}", panic_message(&p))),
+                latency: Duration::ZERO,
+            },
+        }
+    }
+
+    fn unserved_response(id: u64, msg: String) -> Response {
+        Response {
+            id,
+            schedule: None,
+            sim: SimReport::default(),
+            outputs: None,
+            error: Some(msg),
+            latency: Duration::ZERO,
+        }
+    }
+
+    /// Serve a batch of requests on `workers` threads through the default
+    /// admission queue (blocking backpressure). Functional jobs coalesce
+    /// through the dispatcher into batched executor dispatches;
+    /// scheduling/simulation parallelizes. Responses are returned sorted
+    /// by request id, exactly one per request.
     pub fn serve(self: &Arc<Self>, requests: Vec<Request>, workers: usize) -> Vec<Response> {
-        let queue = Arc::new(Mutex::new(std::collections::VecDeque::from(requests)));
+        self.serve_with(requests, ServeOptions::with_workers(workers))
+    }
+
+    /// [`Coordinator::serve`] with explicit admission-queue knobs.
+    pub fn serve_with(self: &Arc<Self>, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
+        let n = requests.len();
+        let queue = Arc::new(AdmissionQueue::new(opts.queue_capacity));
         let (tx, rx) = mpsc::channel::<Response>();
         let mut handles = Vec::new();
-        for w in 0..workers.max(1) {
+        for w in 0..opts.workers.max(1) {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
             let me = Arc::clone(self);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("gta-worker-{w}"))
-                    .spawn(move || loop {
-                        let req = { queue.lock().unwrap().pop_front() };
-                        match req {
-                            Some(r) => {
-                                let resp = me.handle(r);
-                                if tx.send(resp).is_err() {
-                                    break;
-                                }
+                    .spawn(move || {
+                        while let Some(req) = queue.pop() {
+                            let resp = me.handle_caught(req);
+                            if tx.send(resp).is_err() {
+                                break;
                             }
-                            None => break,
                         }
                     })
                     .unwrap(),
             );
         }
+        // Feeder: admission with backpressure. Under `Block` this thread
+        // stalls until workers free a slot; under `Reject` an over-
+        // capacity request gets one requeue attempt, then a Busy response.
+        for req in requests {
+            match queue.admit(req, opts.policy) {
+                Ok(()) => self.metrics.record_queue_depth(queue.depth()),
+                Err((req, AdmitError::Busy)) => {
+                    self.metrics.record_admission_requeued();
+                    std::thread::sleep(Duration::from_micros(100));
+                    match queue.admit(req, AdmissionPolicy::Reject) {
+                        Ok(()) => self.metrics.record_queue_depth(queue.depth()),
+                        Err((req, _)) => {
+                            self.metrics.record_admission_rejected();
+                            let _ = tx.send(Self::unserved_response(
+                                req.id,
+                                "busy: admission queue at capacity".to_string(),
+                            ));
+                        }
+                    }
+                }
+                Err((req, AdmitError::Closed)) => {
+                    let _ = tx
+                        .send(Self::unserved_response(req.id, "admission queue closed".to_string()));
+                }
+            }
+        }
+        queue.close();
         drop(tx);
         let mut out: Vec<Response> = rx.into_iter().collect();
         for h in handles {
             let _ = h.join();
         }
+        assert_eq!(out.len(), n, "serve must yield exactly one response per request");
         out.sort_by_key(|r| r.id);
         out
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -280,6 +738,12 @@ mod tests {
     use super::*;
     use crate::ops::VectorKind;
     use crate::precision::Precision;
+    use crate::runtime::{SoftBackend, FAIL_ARTIFACT};
+    use crate::serve::gemm_tile_request as gemm_tile;
+
+    fn soft(coalesce: CoalesceConfig) -> Arc<Coordinator> {
+        crate::serve::soft_coordinator(GtaConfig::lanes16(), coalesce).unwrap()
+    }
 
     #[test]
     fn simulate_only_requests() {
@@ -293,6 +757,7 @@ mod tests {
         assert!(r.schedule.is_some());
         assert!(r.sim.cycles > 0);
         assert!(r.outputs.is_none());
+        assert!(r.is_ok());
     }
 
     #[test]
@@ -356,5 +821,96 @@ mod tests {
         });
         assert!(r.schedule.is_none());
         assert!(r.sim.cycles > 0);
+    }
+
+    #[test]
+    fn functional_failure_is_an_error_not_a_panic() {
+        let c = soft(CoalesceConfig::default());
+        let resp = c.handle(gemm_tile(3, FAIL_ARTIFACT, 0));
+        assert_eq!(resp.id, 3);
+        assert!(resp.outputs.is_none());
+        let err = resp.error.expect("failure must surface as an error");
+        assert!(err.contains(FAIL_ARTIFACT), "error names the artifact: {err}");
+        assert_eq!(c.metrics.snapshot().functional_errors, 1);
+        // the coordinator is still fully serviceable afterwards
+        let ok = c.handle(gemm_tile(4, "mpra_gemm_i8_64", 1));
+        assert!(ok.is_ok());
+        assert!(ok.outputs.is_some());
+    }
+
+    #[test]
+    fn functional_without_engine_errors_cleanly() {
+        let c = Coordinator::new(GtaConfig::default());
+        let resp = c.handle(gemm_tile(0, "mpra_gemm_i8_64", 0));
+        assert!(resp.outputs.is_none());
+        assert!(resp.error.unwrap().contains("no engine"));
+    }
+
+    #[test]
+    fn admission_queue_blocks_rejects_and_closes() {
+        let q: AdmissionQueue<i32> = AdmissionQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.admit(1, AdmissionPolicy::Reject).is_ok());
+        assert!(q.admit(2, AdmissionPolicy::Reject).is_ok());
+        assert_eq!(q.admit(3, AdmissionPolicy::Reject).unwrap_err(), (3, AdmitError::Busy));
+        assert_eq!(q.depth(), 2);
+        // Block policy exerts backpressure: the admit parks until pop
+        std::thread::scope(|scope| {
+            let q = &q;
+            scope.spawn(move || q.admit(3, AdmissionPolicy::Block).unwrap());
+            std::thread::sleep(Duration::from_millis(10));
+            assert_eq!(q.pop(), Some(1));
+        });
+        assert_eq!(q.depth(), 2);
+        q.close();
+        assert_eq!(q.admit(9, AdmissionPolicy::Block).unwrap_err().1, AdmitError::Closed);
+        assert_eq!(q.pop(), Some(2), "pending items drain after close");
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn serve_with_reject_policy_never_loses_requests() {
+        let c = Arc::new(Coordinator::new(GtaConfig::default()));
+        let reqs: Vec<Request> = (0..64)
+            .map(|i| Request {
+                id: i,
+                op: TensorOp::vector(256, Precision::Int8, VectorKind::Map),
+                exec: ExecKind::Simulate,
+            })
+            .collect();
+        let opts = ServeOptions { workers: 2, queue_capacity: 2, policy: AdmissionPolicy::Reject };
+        let resps = c.serve_with(reqs, opts);
+        assert_eq!(resps.len(), 64, "every request gets a response, served or rejected");
+        let busy = resps.iter().filter(|r| r.error.is_some()).count() as u64;
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.admission_rejected, busy);
+        assert_eq!(snap.requests + busy, 64);
+    }
+
+    #[test]
+    fn coalesced_serve_is_bit_identical_to_direct_execution() {
+        // generous window so concurrent workers land in shared batches
+        let c = soft(CoalesceConfig { window: Duration::from_millis(25), max_batch: 8 });
+        let reqs: Vec<Request> =
+            (0..16).map(|i| gemm_tile(i, "mpra_gemm_i8_64", i as i32 * 17)).collect();
+        let direct: Vec<Vec<HostTensor>> = reqs
+            .iter()
+            .map(|r| match &r.exec {
+                ExecKind::Functional { artifact, inputs } => {
+                    SoftBackend.execute(artifact, inputs).unwrap()
+                }
+                ExecKind::Simulate => unreachable!(),
+            })
+            .collect();
+        let resps = c.serve(reqs, 8);
+        assert_eq!(resps.len(), 16);
+        for (r, want) in resps.iter().zip(&direct) {
+            assert!(r.is_ok(), "unexpected error: {:?}", r.error);
+            assert_eq!(r.outputs.as_ref().unwrap(), want, "batched == sequential numerics");
+        }
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.batched_requests, 16, "every functional exec went through a batch");
+        assert!(snap.max_batch > 1, "same-shape tiles must coalesce: hist {:?}", snap.batch_hist);
     }
 }

@@ -27,9 +27,12 @@
 //!   simulator batch-schedules a workload's distinct p-GEMMs through the
 //!   explorer pool before accumulating
 //! * [`workloads`] — the Table 2 suite
-//! * [`runtime`] / [`coordinator`] — the L3 execution engine (the PJRT
-//!   engine is gated behind the `pjrt` feature; offline builds get a
-//!   stub that fails `Engine::load` cleanly)
+//! * [`runtime`] / [`coordinator`] — the L3 execution engine: an
+//!   `ExecBackend` (the PJRT engine behind the `pjrt` feature, a clean-
+//!   failing stub offline, or the always-available `SoftBackend` limb
+//!   oracle) owned by a dedicated executor thread, fed by a coalescing
+//!   dispatcher that batches same-shape functional tiles, behind a
+//!   bounded admission queue with backpressure (see `docs/serving.md`)
 //! * [`report`] — regenerates every table and figure of the paper
 
 pub mod arch;

@@ -24,8 +24,11 @@ USAGE:
                                     explore + select a schedule (§5)
   gta verify [--artifacts DIR]      run every AOT artifact via PJRT and
                                     check numerics against the rust oracle
-  gta serve --requests N [--artifacts DIR] [--workers W]
-                                    e2e driver: mixed request stream
+  gta serve --requests N [--artifacts DIR] [--workers W] [--backend pjrt|soft]
+                                    e2e driver: mixed request stream through
+                                    the batched (admission queue + coalescing)
+                                    serve path; `--backend soft` runs the
+                                    rust-oracle backend (no artifacts needed)
 ";
 
 fn main() -> Result<()> {
@@ -249,11 +252,17 @@ fn cmd_verify(flags: &Flags) -> Result<()> {
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let n = flags.get_u64("requests", 64);
     let workers = flags.get_u64("workers", 4) as usize;
-    let dir: std::path::PathBuf = flags
-        .get("artifacts")
-        .map(Into::into)
-        .unwrap_or_else(default_artifact_dir);
-    let summary = gta::serve::run_mixed_stream(dir, n, workers)?;
+    let summary = match flags.get("backend").unwrap_or("pjrt") {
+        "soft" => gta::serve::run_mixed_stream_soft(n, workers)?,
+        "pjrt" => {
+            let dir: std::path::PathBuf = flags
+                .get("artifacts")
+                .map(Into::into)
+                .unwrap_or_else(default_artifact_dir);
+            gta::serve::run_mixed_stream(dir, n, workers)?
+        }
+        other => bail!("unknown backend {other:?} (pjrt|soft)"),
+    };
     print!("{}", summary.render());
     Ok(())
 }

@@ -69,6 +69,35 @@ impl HostTensor {
     }
 }
 
+/// What the coordinator's executor thread drives: anything that can run a
+/// named artifact on host tensors. The PJRT [`Engine`] is the production
+/// implementation; [`SoftBackend`] is the in-tree rust-oracle stand-in
+/// that works in every build (no artifacts, no PJRT).
+///
+/// `execute_batch` is the coalescing dispatch point: the default runs the
+/// batch back-to-back on the owning thread, which already amortizes the
+/// per-request channel round-trip; backends with true batched submission
+/// can override it.
+pub trait ExecBackend {
+    /// Execute artifact `name` with host inputs; returns tuple fields.
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Execute a batch of same-artifact invocations, one result per
+    /// element. A failure is per-invocation: one bad input set must not
+    /// poison its batch-mates.
+    fn execute_batch(&self, name: &str, batch: &[Vec<HostTensor>]) -> Vec<Result<Vec<HostTensor>>> {
+        batch.iter().map(|inputs| self.execute(name, inputs)).collect()
+    }
+
+    /// Artifact names this backend can execute.
+    fn names(&self) -> Vec<String>;
+
+    /// Human-readable platform tag.
+    fn platform(&self) -> String {
+        "unknown".to_string()
+    }
+}
+
 #[cfg(feature = "pjrt")]
 mod engine {
     use super::{HostTensor, Result};
@@ -268,6 +297,99 @@ mod engine {
 
 pub use engine::Engine;
 
+impl ExecBackend for Engine {
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        Engine::execute(self, name, inputs)
+    }
+
+    fn names(&self) -> Vec<String> {
+        Engine::names(self).iter().map(|s| s.to_string()).collect()
+    }
+
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+}
+
+/// Artifacts the soft backend implements (the serve-path tile set).
+pub const SOFT_ARTIFACTS: &[&str] = &["bignum_mul_64", "mpra_gemm_i16_64", "mpra_gemm_i8_64"];
+
+/// Artifact name that always fails — failure-path injection for tests and
+/// chaos runs: a request naming it exercises the per-request error path
+/// without touching its batch-mates.
+pub const FAIL_ARTIFACT: &str = "fail_inject";
+
+/// Software reference backend: executes the serve-path artifacts with the
+/// in-tree limb oracle ([`crate::precision::limbs`]) instead of PJRT, so
+/// the full batched-serving path (admission queue, coalescing dispatch,
+/// verification) runs and is testable in every build. Numerics are
+/// bit-identical to the Pallas kernels by construction — the oracle is
+/// what `gta verify` checks those kernels against.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SoftBackend;
+
+impl SoftBackend {
+    fn two_i32<'a>(
+        name: &str,
+        inputs: &'a [HostTensor],
+        len: usize,
+    ) -> Result<(&'a [i32], &'a [i32])> {
+        use anyhow::anyhow;
+        if inputs.len() != 2 {
+            return Err(anyhow!("{name}: expected 2 inputs, got {}", inputs.len()));
+        }
+        let a = inputs[0].as_i32().ok_or_else(|| anyhow!("{name} input 0: want s32"))?;
+        let b = inputs[1].as_i32().ok_or_else(|| anyhow!("{name} input 1: want s32"))?;
+        if a.len() != len || b.len() != len {
+            return Err(anyhow!(
+                "{name}: inputs {}x{} != expected {len} elements each",
+                a.len(),
+                b.len()
+            ));
+        }
+        Ok((a, b))
+    }
+
+    fn gemm64(name: &str, inputs: &[HostTensor], n_limbs: u32) -> Result<Vec<HostTensor>> {
+        let dim = 64usize;
+        let (a, b) = Self::two_i32(name, inputs, dim * dim)?;
+        let a64: Vec<i64> = a.iter().map(|&v| v as i64).collect();
+        let b64: Vec<i64> = b.iter().map(|&v| v as i64).collect();
+        let c = crate::precision::limbs::limb_gemm(&a64, &b64, dim, dim, dim, n_limbs, 32);
+        Ok(vec![HostTensor::I32(c.iter().map(|&v| v as i32).collect())])
+    }
+
+    fn bignum64(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let l = 64usize;
+        let (a, b) = Self::two_i32(name, inputs, l)?;
+        let a8: Vec<u8> = a.iter().map(|&v| v as u8).collect();
+        let b8: Vec<u8> = b.iter().map(|&v| v as u8).collect();
+        let c = crate::precision::limbs::bignum_mul_precarry(&a8, &b8);
+        Ok(vec![HostTensor::I32(c.iter().map(|&v| v as i32).collect())])
+    }
+}
+
+impl ExecBackend for SoftBackend {
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        use anyhow::anyhow;
+        match name {
+            "mpra_gemm_i8_64" => Self::gemm64(name, inputs, 1),
+            "mpra_gemm_i16_64" => Self::gemm64(name, inputs, 2),
+            "bignum_mul_64" => Self::bignum64(name, inputs),
+            n if n == FAIL_ARTIFACT => Err(anyhow!("{FAIL_ARTIFACT}: deliberate failure")),
+            other => Err(anyhow!("soft backend: unknown artifact {other:?}")),
+        }
+    }
+
+    fn names(&self) -> Vec<String> {
+        SOFT_ARTIFACTS.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn platform(&self) -> String {
+        "soft (rust limb oracle)".to_string()
+    }
+}
+
 /// Pad a row-major `rows × cols` i32 matrix up to `(pr, pc)` with zeros
 /// (artifact tiles are fixed-shape; the coordinator pads ragged tiles).
 pub fn pad_matrix_i32(data: &[i32], rows: usize, cols: usize, pr: usize, pc: usize) -> Vec<i32> {
@@ -320,6 +442,34 @@ mod tests {
         assert_eq!(HostTensor::F32(vec![1.0]).dtype(), DType::F32);
         assert_eq!(HostTensor::I64(vec![1]).len(), 1);
         assert!(!HostTensor::I64(vec![1]).is_empty());
+    }
+
+    #[test]
+    fn soft_backend_matches_limb_oracle_and_isolates_batch_failures() {
+        let be = SoftBackend;
+        let a: Vec<i32> = (0..64 * 64).map(|i| (i % 200) - 100).collect();
+        let b: Vec<i32> = (0..64 * 64).map(|i| ((i * 7) % 200) - 100).collect();
+        let inputs = vec![HostTensor::I32(a.clone()), HostTensor::I32(b.clone())];
+        let a64: Vec<i64> = a.iter().map(|&v| v as i64).collect();
+        let b64: Vec<i64> = b.iter().map(|&v| v as i64).collect();
+        let want = crate::precision::limbs::limb_gemm(&a64, &b64, 64, 64, 64, 1, 32);
+        let out = be.execute("mpra_gemm_i8_64", &inputs).unwrap();
+        assert_eq!(out[0].as_i32().unwrap().len(), want.len());
+        for (g, w) in out[0].as_i32().unwrap().iter().zip(&want) {
+            assert_eq!(*g as i64, *w);
+        }
+        // batch dispatch: per-item results, one failure does not poison
+        // the batch — same inputs reproduce the same outputs bit-exactly
+        let bad = vec![HostTensor::I32(vec![1, 2, 3]), HostTensor::I32(vec![4])];
+        let batch = vec![inputs.clone(), bad, inputs.clone()];
+        let results = be.execute_batch("mpra_gemm_i8_64", &batch);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].as_ref().unwrap(), &out);
+        assert!(results[1].is_err());
+        assert_eq!(results[2].as_ref().unwrap(), &out);
+        // failure injection artifact always errors
+        assert!(be.execute(FAIL_ARTIFACT, &inputs).is_err());
+        assert_eq!(be.names(), SOFT_ARTIFACTS.to_vec());
     }
 
     #[test]

@@ -17,12 +17,15 @@
 //! in `OnceLock` cells: concurrent requests for the same key compute the
 //! value exactly once (later arrivals block on the cell instead of
 //! duplicating the search), which keeps the coordinator's cache-hit
-//! metrics exact under `serve`'s worker pool.
+//! metrics exact under `serve`'s worker pool. A memo built with
+//! [`Memo::with_capacity`] additionally sheds least-recently-used entries
+//! per shard, so a long-lived server seeing unbounded distinct shapes
+//! stays bounded in memory.
 
 use super::{Candidate, ScheduleConfig};
 use crate::arch::GtaConfig;
 use crate::ops::PGemm;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -39,25 +42,121 @@ pub type ExploreCache = Memo<ExploreKey, Arc<Vec<Candidate>>>;
 /// Memoized selected schedules.
 pub type ScheduleCache = Memo<ExploreKey, Candidate>;
 
-/// A sharded concurrent memo table with compute-once semantics.
+/// One memo slot: the compute-once cell, its LRU recency stamp, and
+/// whether its completion has been counted against the shard's cap.
 #[derive(Debug)]
-pub struct Memo<K, V> {
-    shards: Vec<Mutex<HashMap<K, Arc<OnceLock<V>>>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+struct Slot<V> {
+    cell: Arc<OnceLock<V>>,
+    last_used: u64,
+    /// Set by `complete`: only counted slots are evictable, so an entry
+    /// whose computation is in flight (or just initialized but not yet
+    /// recency-stamped) can neither be shed nor crowd out resident ones.
+    counted: bool,
 }
 
-impl<K: Eq + Hash, V: Clone> Memo<K, V> {
+/// One shard: the key→slot map plus an ordered recency index so LRU
+/// eviction is O(log n), not a scan of the shard. Invariant (maintained
+/// under the shard lock): every map entry has exactly one index entry at
+/// tick `slot.last_used`; ticks come from one global counter, so they
+/// are unique. `completed` counts the `counted` slots — the population
+/// the capacity bound applies to.
+#[derive(Debug)]
+struct ShardState<K, V> {
+    map: HashMap<K, Slot<V>>,
+    by_recency: BTreeMap<u64, K>,
+    completed: usize,
+}
+
+impl<K: Eq + Hash + Clone, V> ShardState<K, V> {
+    fn new() -> Self {
+        ShardState { map: HashMap::new(), by_recency: BTreeMap::new(), completed: 0 }
+    }
+
+    /// Move `key`'s recency stamp to `now` (no-op for unknown keys).
+    fn touch(&mut self, key: &K, now: u64) {
+        if let Some(slot) = self.map.get_mut(key) {
+            let old = slot.last_used;
+            slot.last_used = now;
+            self.by_recency.remove(&old);
+            self.by_recency.insert(now, key.clone());
+        }
+    }
+}
+
+/// A sharded concurrent memo table with compute-once semantics and an
+/// optional per-shard LRU capacity (see [`Memo::with_capacity`]): a
+/// long-lived server seeing unbounded distinct shapes sheds the least
+/// recently used entries instead of growing without bound.
+#[derive(Debug)]
+pub struct Memo<K, V> {
+    shards: Vec<Mutex<ShardState<K, V>>>,
+    /// LRU cap per shard; `None` = unbounded (the default).
+    cap_per_shard: Option<usize>,
+    /// Global recency clock (monotonic, relaxed — ticks unique).
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Evict completed LRU entries until at most `cap` completed entries
+/// remain. In-flight cells are never evicted (concurrent callers hold
+/// their `Arc` and compute-once semantics must survive) and never count
+/// against the cap — a burst of new concurrent keys cannot crowd out
+/// resident values; the map only transiently exceeds `cap` by the number
+/// of outstanding computations.
+fn evict_lru<K: Eq + Hash + Clone, V>(
+    shard: &mut ShardState<K, V>,
+    cap: usize,
+    evictions: &AtomicU64,
+) {
+    while shard.completed > cap {
+        // oldest-first walk of the recency index, skipping in-flight cells
+        let victim = shard
+            .by_recency
+            .iter()
+            .find(|&(_, k)| shard.map.get(k).is_some_and(|s| s.counted))
+            .map(|(t, k)| (*t, k.clone()));
+        match victim {
+            Some((tick, key)) => {
+                shard.by_recency.remove(&tick);
+                shard.map.remove(&key);
+                shard.completed -= 1;
+                evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            None => break,
+        }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Memo<K, V> {
     pub fn new() -> Self {
         Self::with_shards(16)
     }
 
     pub fn with_shards(n: usize) -> Self {
         Memo {
-            shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..n.max(1)).map(|_| Mutex::new(ShardState::new())).collect(),
+            cap_per_shard: None,
+            tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
+    }
+
+    /// A memo holding at most ~`capacity` initialized entries, shedding
+    /// least-recently-used ones past that. The cap is enforced per shard
+    /// (`ceil(capacity / shards)` each, with `shards = min(capacity, 16)`),
+    /// so the total initialized count at rest never exceeds
+    /// `shards * ceil(capacity / shards)` — exactly `capacity` whenever
+    /// `capacity` is a multiple of the shard count.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let shards = capacity.min(16);
+        let mut memo = Self::with_shards(shards);
+        memo.cap_per_shard = Some(capacity.div_ceil(shards));
+        memo
     }
 
     fn shard(&self, key: &K) -> usize {
@@ -66,25 +165,70 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
         (h.finish() as usize) % self.shards.len()
     }
 
-    /// The cell for `key`, creating an empty one if absent. Holding the
-    /// shard lock only for the map access keeps computation outside locks.
-    fn cell(&self, key: K) -> Arc<OnceLock<V>> {
-        let mut shard = self.shards[self.shard(&key)].lock().unwrap();
-        shard.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+    fn now(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Initialized value for `key`, if any.
+    /// The cell for `key`, creating an empty (in-flight, uncounted) one
+    /// if absent. Holding the shard lock only for the map access keeps
+    /// computation outside locks; eviction happens in [`Memo::complete`],
+    /// the only place the completed population can grow.
+    fn cell(&self, key: K) -> Arc<OnceLock<V>> {
+        let now = self.now();
+        let mut shard = self.shards[self.shard(&key)].lock().unwrap();
+        if let Some(slot) = shard.map.get(&key) {
+            let cell = Arc::clone(&slot.cell);
+            shard.touch(&key, now);
+            return cell;
+        }
+        let cell = Arc::new(OnceLock::new());
+        shard
+            .map
+            .insert(key.clone(), Slot { cell: Arc::clone(&cell), last_used: now, counted: false });
+        shard.by_recency.insert(now, key);
+        cell
+    }
+
+    /// A computation for `key` just completed: stamp its recency at
+    /// completion time — eviction must see how fresh the *value* is, not
+    /// when its cell was created, or a slow expensive search would finish
+    /// as the LRU victim — count it against the cap, and shed overflow.
+    fn complete(&self, key: &K) {
+        let now = self.now();
+        let mut shard = self.shards[self.shard(key)].lock().unwrap();
+        let freshly_counted = match shard.map.get_mut(key) {
+            Some(slot) if !slot.counted => {
+                slot.counted = true;
+                true
+            }
+            Some(_) => false,
+            None => return, // nothing can evict an uncounted cell, so: absent = never inserted
+        };
+        if freshly_counted {
+            shard.completed += 1;
+        }
+        shard.touch(key, now);
+        if let Some(cap) = self.cap_per_shard {
+            evict_lru(&mut shard, cap, &self.evictions);
+        }
+    }
+
+    /// Initialized value for `key`, if any (refreshes LRU recency).
     pub fn get(&self, key: &K) -> Option<V> {
-        let cell = self.shards[self.shard(key)].lock().unwrap().get(key).cloned();
-        cell.and_then(|c| c.get().cloned())
+        let now = self.now();
+        let mut shard = self.shards[self.shard(key)].lock().unwrap();
+        let v = shard.map.get(key)?.cell.get().cloned();
+        shard.touch(key, now);
+        v
     }
 
     /// Return the cached value or compute it exactly once. The returned
     /// flag is `true` iff THIS call performed the computation — under
     /// contention every other caller blocks on the cell and reports a
-    /// hit, so hit/miss counts stay exact per distinct key.
+    /// hit, so hit/miss counts stay exact per distinct key. (An evicted
+    /// key that comes back is a genuine recompute and counts as a miss.)
     pub fn get_or_compute(&self, key: K, f: impl FnOnce() -> V) -> (V, bool) {
-        let cell = self.cell(key);
+        let cell = self.cell(key.clone());
         let mut computed = false;
         let v = cell
             .get_or_init(|| {
@@ -94,6 +238,7 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
             .clone();
         if computed {
             self.misses.fetch_add(1, Ordering::Relaxed);
+            self.complete(&key);
         } else {
             self.hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -103,19 +248,28 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
     /// Publish a value computed elsewhere. Returns `false` (and keeps the
     /// existing value) if the key was already initialized.
     pub fn insert(&self, key: K, v: V) -> bool {
-        self.cell(key).set(v).is_ok()
+        let fresh = self.cell(key.clone()).set(v).is_ok();
+        if fresh {
+            self.complete(&key);
+        }
+        fresh
     }
 
     /// Number of initialized entries.
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().values().filter(|c| c.get().is_some()).count())
+            .map(|s| s.lock().unwrap().map.values().filter(|c| c.cell.get().is_some()).count())
             .sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Total capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.cap_per_shard.map(|c| c * self.shards.len())
     }
 
     pub fn hits(&self) -> u64 {
@@ -125,9 +279,13 @@ impl<K: Eq + Hash, V: Clone> Memo<K, V> {
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
 }
 
-impl<K: Eq + Hash, V: Clone> Default for Memo<K, V> {
+impl<K: Eq + Hash + Clone, V: Clone> Default for Memo<K, V> {
     fn default() -> Self {
         Memo::new()
     }
@@ -159,6 +317,127 @@ mod tests {
         assert!(!memo.insert(1, 11));
         assert_eq!(memo.get(&1), Some(10));
         assert!(!memo.is_empty());
+    }
+
+    #[test]
+    fn capped_memo_sheds_lru_sequentially() {
+        // capacity 32 -> 16 shards x 2 per shard
+        let memo: Memo<u64, u64> = Memo::with_capacity(32);
+        assert_eq!(memo.capacity(), Some(32));
+        for k in 0..200u64 {
+            let (v, fresh) = memo.get_or_compute(k, || k * 2);
+            assert_eq!(v, k * 2);
+            assert!(fresh);
+        }
+        assert!(memo.len() <= 32, "len {} over capacity", memo.len());
+        assert_eq!(memo.evictions(), 200 - memo.len() as u64);
+        // an evicted key recomputes (miss), a resident key hits
+        let resident = (0..200u64).find(|k| memo.get(k).is_some()).unwrap();
+        let (_, fresh) = memo.get_or_compute(resident, || unreachable!());
+        assert!(!fresh);
+        let evicted = (0..200u64).find(|k| memo.get(k).is_none()).unwrap();
+        let (v, fresh) = memo.get_or_compute(evicted, || evicted * 2);
+        assert_eq!(v, evicted * 2);
+        assert!(fresh, "evicted key must recompute");
+    }
+
+    #[test]
+    fn capped_memo_respects_capacity_under_concurrent_access() {
+        let memo: Memo<u64, u64> = Memo::with_capacity(32);
+        let calls = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let memo = &memo;
+                let calls = &calls;
+                scope.spawn(move || {
+                    for i in 0..400u64 {
+                        let key = (t * 131 + i * 7) % 257;
+                        let (v, _) = memo.get_or_compute(key, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            key + 1000
+                        });
+                        assert_eq!(v, key + 1000, "values stay exact across evictions");
+                    }
+                });
+            }
+        });
+        // at rest every in-flight cell is initialized and every shard has
+        // been shed to its cap, so the total obeys the capacity bound
+        assert!(memo.len() <= 32, "len {} over capacity", memo.len());
+        assert!(memo.evictions() > 0);
+        // accounting stays exact: every call is either a hit or a miss,
+        // and every miss corresponds to one actual computation
+        assert_eq!(memo.hits() + memo.misses(), 8 * 400);
+        assert_eq!(memo.misses(), calls.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn recency_index_stays_in_sync_with_the_map() {
+        let memo: Memo<u64, u64> = Memo::with_capacity(16);
+        for k in 0..100u64 {
+            memo.get_or_compute(k % 37, || k);
+            memo.get(&(k % 11));
+            memo.insert(k % 53, k);
+        }
+        for shard in &memo.shards {
+            let s = shard.lock().unwrap();
+            assert_eq!(s.map.len(), s.by_recency.len(), "one index entry per slot");
+            for (tick, key) in &s.by_recency {
+                assert_eq!(s.map[key].last_used, *tick, "index points at the live stamp");
+            }
+            assert_eq!(
+                s.completed,
+                s.map.values().filter(|slot| slot.counted).count(),
+                "completed counter tracks counted slots"
+            );
+        }
+    }
+
+    #[test]
+    fn completion_time_not_insertion_time_drives_eviction() {
+        let mut memo: Memo<u64, u64> = Memo::with_shards(1);
+        memo.cap_per_shard = Some(3);
+        // key 1's cell is created first (oldest insertion tick) but stays
+        // in flight while 2 and 3 complete
+        let slow = memo.cell(1);
+        memo.get_or_compute(2, || 20);
+        memo.get_or_compute(3, || 30);
+        // the slow computation finishes last: stamped at completion
+        slow.set(10).unwrap();
+        memo.complete(&1);
+        // the next insert overflows the cap: the victim must be key 2
+        // (oldest completion), not key 1 (oldest insertion)
+        memo.get_or_compute(4, || 40);
+        assert_eq!(memo.get(&1), Some(10), "freshly completed entry survives");
+        assert_eq!(memo.get(&2), None, "oldest completed entry is shed");
+        assert_eq!(memo.get(&3), Some(30));
+        assert_eq!(memo.get(&4), Some(40));
+        assert_eq!(memo.evictions(), 1);
+    }
+
+    #[test]
+    fn lru_hit_refreshes_recency() {
+        let mut memo: Memo<u64, u64> = Memo::with_shards(1);
+        memo.cap_per_shard = Some(2);
+        memo.get_or_compute(1, || 10);
+        memo.get_or_compute(2, || 20);
+        // touch 1 so 2 becomes the LRU, then overflow with 3
+        assert_eq!(memo.get(&1), Some(10));
+        memo.get_or_compute(3, || 30);
+        assert_eq!(memo.get(&1), Some(10), "recently read entry survives");
+        assert_eq!(memo.get(&2), None, "LRU entry is shed");
+        assert_eq!(memo.get(&3), Some(30));
+    }
+
+    #[test]
+    fn uncapped_memo_never_evicts() {
+        let memo: Memo<u64, u64> = Memo::new();
+        for k in 0..500u64 {
+            memo.get_or_compute(k, || k);
+        }
+        assert_eq!(memo.len(), 500);
+        assert_eq!(memo.evictions(), 0);
+        assert_eq!(memo.capacity(), None);
     }
 
     #[test]

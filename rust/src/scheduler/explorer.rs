@@ -236,6 +236,21 @@ impl Explorer {
         Explorer::default()
     }
 
+    /// An explorer whose memo layers shed least-recently-used entries
+    /// past ~`schedules` distinct operator shapes (the per-candidate eval
+    /// cache gets proportionally more room — a sweep evaluates dozens of
+    /// candidates per shape). This is what a long-lived server wants:
+    /// bounded memory under unbounded distinct request shapes, identical
+    /// results, exact hit/miss accounting.
+    pub fn with_capacity(schedules: usize) -> Explorer {
+        let schedules = schedules.max(1);
+        Explorer {
+            sweeps: ExploreCache::with_capacity(schedules),
+            evals: EvalCache::with_capacity(schedules.saturating_mul(64)),
+            selected: ScheduleCache::with_capacity(schedules),
+        }
+    }
+
     /// Memoized full sweep; candidate evaluations go through the
     /// triple-keyed eval cache so a prior pruned pass is reused.
     pub fn explore(&self, g: &PGemm, gta: &GtaConfig) -> Arc<Vec<Candidate>> {
@@ -402,6 +417,22 @@ mod tests {
         // and a repeat schedule is a pure cache hit
         let (_, fresh2) = ex.schedule(&g, &cfg);
         assert!(!fresh2);
+    }
+
+    #[test]
+    fn capped_explorer_sheds_but_stays_correct() {
+        let capped = Explorer::with_capacity(2);
+        let cfg = gta();
+        // 5 distinct shapes through a 2-entry schedule cache: later shapes
+        // evict earlier ones, revisits recompute, winners never change
+        for round in 0..2 {
+            for g in shapes() {
+                let (cand, _) = capped.schedule(&g, &cfg);
+                assert_eq!(cand.config, schedule(&g, &cfg).config, "round {round} {g:?}");
+            }
+        }
+        assert!(capped.selected.len() <= 2);
+        assert!(capped.selected.evictions() > 0);
     }
 
     #[test]

@@ -1,49 +1,99 @@
 //! End-to-end serving driver: replay a mixed stream of tensor-operator
 //! requests through the coordinator — scheduling each through the §5
 //! explorer, simulating cycles/traffic on the GTA model, and executing
-//! the functional tiles through PJRT with inline numeric verification.
-//! This is the `examples/e2e_serve.rs` workhorse (EXPERIMENTS.md §E2E).
+//! the functional tiles through the coalescing batched dispatch path with
+//! inline numeric verification. This is the `examples/e2e_serve.rs`
+//! workhorse (EXPERIMENTS.md §E2E).
+//!
+//! Two backends drive the same path: the PJRT engine over AOT artifacts
+//! ([`run_mixed_stream`]) and the in-tree rust-oracle
+//! [`crate::runtime::SoftBackend`] ([`run_mixed_stream_soft`]), which
+//! needs no artifacts and therefore runs in every build.
 
-use crate::coordinator::{Coordinator, ExecKind, Request};
+use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request};
 use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
-use crate::runtime::HostTensor;
+use crate::runtime::{ExecBackend, HostTensor, SoftBackend};
 use crate::util::rng::Rng;
 use crate::GtaConfig;
 use anyhow::Result;
+use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// A coordinator over the soft rust-oracle backend — the offline stand-in
+/// for the PJRT deployment, shared by the e2e tests, benches and
+/// examples.
+pub fn soft_coordinator(gta: GtaConfig, coalesce: CoalesceConfig) -> Result<Arc<Coordinator>> {
+    Ok(Arc::new(Coordinator::with_backend_opts(
+        gta,
+        || Ok(Box::new(SoftBackend) as Box<dyn ExecBackend>),
+        coalesce,
+    )?))
+}
+
+/// A deterministic 64×64 INT8 MPRA functional tile request (the
+/// serve-path unit of work the tests and benches replay).
+pub fn gemm_tile_request(id: u64, artifact: &str, seed: i32) -> Request {
+    let a: Vec<i32> = (0..64 * 64).map(|i| ((i + seed) % 200) - 100).collect();
+    let b: Vec<i32> = (0..64 * 64).map(|i| ((i * 5 + seed) % 200) - 100).collect();
+    Request {
+        id,
+        op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+        exec: ExecKind::Functional {
+            artifact: artifact.to_string(),
+            inputs: vec![HostTensor::I32(a), HostTensor::I32(b)],
+        },
+    }
+}
 
 /// Summary of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
     pub requests: u64,
+    /// Functional requests in the stream (each yields outputs or an error).
     pub functional: u64,
     pub verified_ok: u64,
     pub verified_failed: u64,
+    /// Responses that carried a per-request error (failed execution,
+    /// admission rejection, worker panic).
+    pub errors: u64,
     /// Distinct p-GEMM shapes scheduled concurrently by the batch
     /// pre-pass before the request workers started (all their serve-path
     /// schedules are memo hits).
     pub prescheduled: u64,
+    /// Coalesced executor dispatches (see batch histogram in `metrics`).
+    pub coalesced_batches: u64,
+    /// Largest coalesced batch.
+    pub max_batch: u64,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub total_sim_cycles: u64,
+    /// The coordinator's **cumulative** metrics snapshot at the end of
+    /// the run (as are `coalesced_batches`/`max_batch`, which are taken
+    /// from it): when several streams replay through one coordinator,
+    /// counters span all of them. The stock drivers build a fresh
+    /// coordinator per run, so there the numbers are per-run.
     pub metrics: crate::coordinator::metrics::Snapshot,
 }
 
 impl ServeSummary {
     pub fn render(&self) -> String {
         format!(
-            "e2e serve: {} requests ({} functional, {} verified ok, {} failed)\n\
-             wall {:.3}s -> {:.1} req/s; {} p-GEMMs batch-prescheduled; simulated GTA cycles {}\n{}",
+            "e2e serve: {} requests ({} functional, {} verified ok, {} failed, {} errored)\n\
+             wall {:.3}s -> {:.1} req/s; {} p-GEMMs batch-prescheduled; \
+             {} coalesced dispatches (max batch {}); simulated GTA cycles {}\n{}",
             self.requests,
             self.functional,
             self.verified_ok,
             self.verified_failed,
+            self.errors,
             self.wall_seconds,
             self.throughput_rps,
             self.prescheduled,
+            self.coalesced_batches,
+            self.max_batch,
             self.total_sim_cycles,
             self.metrics.render()
         )
@@ -112,10 +162,11 @@ fn make_case(kind: usize, rng: &mut Rng) -> FunctionalCase {
     }
 }
 
-/// Replay `n` mixed requests (functional MPRA/BNM tiles interleaved with
-/// simulate-only workload operators) on `workers` threads.
-pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result<ServeSummary> {
-    let coord = Arc::new(Coordinator::with_engine(GtaConfig::lanes16(), artifact_dir)?);
+/// Build the standard mixed stream: `n` requests with ids `0..n`,
+/// functional MPRA/BNM tiles (even ids) interleaved with simulate-only
+/// workload operators (odd ids). Returns the requests plus the id-indexed
+/// verification oracle.
+pub fn mixed_stream(n: u64) -> (Vec<Request>, Vec<Option<Vec<i32>>>) {
     let mut rng = Rng::new(2024);
 
     // simulate-only operators drawn from the Table 2 suite
@@ -147,12 +198,35 @@ pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result
             });
         }
     }
+    (requests, expected)
+}
+
+/// Replay `requests` on `workers` threads through `coord` and verify
+/// functional outputs against `expected` (indexed by request id; ids at
+/// or past `expected.len()` and `None` slots are simply unchecked).
+///
+/// Verification is total and panic-free: a functional response with an
+/// error, missing outputs, an empty output tuple, or a wrong dtype counts
+/// as `verified_failed` — and `serve` guarantees one response per
+/// request, so nothing is silently lost.
+pub fn run_stream(
+    coord: &Arc<Coordinator>,
+    requests: Vec<Request>,
+    expected: &[Option<Vec<i32>>],
+    workers: usize,
+) -> ServeSummary {
+    let n = requests.len() as u64;
+    let functional_ids: HashSet<u64> = requests
+        .iter()
+        .filter(|r| matches!(r.exec, ExecKind::Functional { .. }))
+        .map(|r| r.id)
+        .collect();
 
     let t0 = Instant::now();
     // Batch pre-pass: explore the schedule space of every distinct
     // p-GEMM in the stream concurrently, so the request workers below
     // hit the memo instead of searching inline.
-    let mut seen = std::collections::HashSet::new();
+    let mut seen = HashSet::new();
     let gemms: Vec<PGemm> = requests
         .iter()
         .filter_map(|r| match &r.op {
@@ -168,28 +242,61 @@ pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result
     let mut functional = 0u64;
     let mut ok = 0u64;
     let mut failed = 0u64;
+    let mut errors = 0u64;
     let mut total_cycles = 0u64;
     for r in &responses {
         total_cycles += r.sim.cycles;
-        if let Some(outs) = &r.outputs {
-            functional += 1;
-            if let Some(want) = &expected[r.id as usize] {
-                match outs[0].as_i32() {
-                    Some(got) if got == want.as_slice() => ok += 1,
-                    _ => failed += 1,
+        if r.error.is_some() {
+            errors += 1;
+        }
+        if !functional_ids.contains(&r.id) {
+            continue;
+        }
+        functional += 1;
+        match &r.outputs {
+            Some(outs) if r.error.is_none() => {
+                if let Some(want) = expected.get(r.id as usize).and_then(|w| w.as_ref()) {
+                    match outs.first().and_then(|t| t.as_i32()) {
+                        Some(got) if got == want.as_slice() => ok += 1,
+                        _ => failed += 1,
+                    }
                 }
             }
+            // failed execution / missing outputs: a verification failure,
+            // never a panic
+            _ => failed += 1,
         }
     }
-    Ok(ServeSummary {
+    let snap = coord.metrics.snapshot();
+    ServeSummary {
         requests: n,
         functional,
         verified_ok: ok,
         verified_failed: failed,
+        errors,
         prescheduled,
+        coalesced_batches: snap.batches,
+        max_batch: snap.max_batch,
         wall_seconds: wall,
         throughput_rps: n as f64 / wall.max(1e-9),
         total_sim_cycles: total_cycles,
-        metrics: coord.metrics.snapshot(),
-    })
+        metrics: snap,
+    }
+}
+
+/// Replay `n` mixed requests on `workers` threads against the PJRT
+/// engine over the AOT artifacts in `artifact_dir`.
+pub fn run_mixed_stream(artifact_dir: PathBuf, n: u64, workers: usize) -> Result<ServeSummary> {
+    let coord = Arc::new(Coordinator::with_engine(GtaConfig::lanes16(), artifact_dir)?);
+    let (requests, expected) = mixed_stream(n);
+    Ok(run_stream(&coord, requests, &expected, workers))
+}
+
+/// Replay `n` mixed requests on `workers` threads against the soft
+/// (rust limb oracle) backend — no artifacts or PJRT required, numerics
+/// identical by construction.
+pub fn run_mixed_stream_soft(n: u64, workers: usize) -> Result<ServeSummary> {
+    let coord = soft_coordinator(GtaConfig::lanes16(), CoalesceConfig::default())?;
+    let (requests, expected) = mixed_stream(n);
+    Ok(run_stream(&coord, requests, &expected, workers))
 }

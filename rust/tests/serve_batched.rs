@@ -1,0 +1,184 @@
+//! E2E: the batched serving subsystem — admission queue with
+//! backpressure, coalescing dispatch, and the drop-free failure contract
+//! (`responses.len() == requests.len()`, errors as data) — driven
+//! offline through the soft rust-oracle backend, so these run in every
+//! build with no artifacts.
+
+use gta::coordinator::{AdmissionPolicy, CoalesceConfig, Coordinator, ExecKind, Request, ServeOptions};
+use gta::precision::Precision;
+use gta::runtime::{ExecBackend, HostTensor, SoftBackend, FAIL_ARTIFACT};
+use gta::serve::{self, gemm_tile_request as gemm_tile};
+use gta::{GtaConfig, TensorOp};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn soft_coordinator(window_ms: u64, max_batch: usize) -> Arc<Coordinator> {
+    serve::soft_coordinator(
+        GtaConfig::lanes16(),
+        CoalesceConfig { window: Duration::from_millis(window_ms), max_batch },
+    )
+    .unwrap()
+}
+
+fn direct(req: &Request) -> Vec<HostTensor> {
+    match &req.exec {
+        ExecKind::Functional { artifact, inputs } => SoftBackend.execute(artifact, inputs).unwrap(),
+        ExecKind::Simulate => unreachable!("direct() wants a functional request"),
+    }
+}
+
+#[test]
+fn failing_request_never_loses_the_stream() {
+    let coord = soft_coordinator(5, 8);
+    let n = 24u64;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            if i == 11 {
+                gemm_tile(i, FAIL_ARTIFACT, i as i32) // deliberate failure mid-stream
+            } else if i % 3 == 0 {
+                Request {
+                    id: i,
+                    op: TensorOp::gemm(96, 169, 576, Precision::Int8),
+                    exec: ExecKind::Simulate,
+                }
+            } else {
+                gemm_tile(i, "mpra_gemm_i8_64", i as i32 * 13)
+            }
+        })
+        .collect();
+    let oracle: Vec<Option<Vec<HostTensor>>> = requests
+        .iter()
+        .map(|r| match &r.exec {
+            ExecKind::Functional { artifact, .. } if artifact != FAIL_ARTIFACT => {
+                Some(direct(r))
+            }
+            _ => None,
+        })
+        .collect();
+
+    let responses = coord.serve(requests, 4);
+
+    // the headline contract: one response per request, ids intact
+    assert_eq!(responses.len(), n as usize);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+    }
+    // the failing request carries its error; every other one is whole
+    for r in &responses {
+        if r.id == 11 {
+            assert!(r.outputs.is_none());
+            let err = r.error.as_ref().expect("injected failure must surface");
+            assert!(err.contains(FAIL_ARTIFACT), "error names the artifact: {err}");
+        } else {
+            assert!(r.is_ok(), "request {} unexpectedly errored: {:?}", r.id, r.error);
+            if let Some(want) = &oracle[r.id as usize] {
+                assert_eq!(r.outputs.as_ref().unwrap(), want, "request {}", r.id);
+            }
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.functional_errors, 1);
+    assert_eq!(snap.requests, n);
+}
+
+#[test]
+fn run_stream_counts_failures_instead_of_panicking() {
+    let coord = soft_coordinator(5, 8);
+    // ids are deliberately sparse: the verification pass must not index
+    // expected[] out of bounds (ids 90/91 lie past the oracle vector)
+    let requests = vec![
+        gemm_tile(0, "mpra_gemm_i8_64", 7),
+        gemm_tile(1, FAIL_ARTIFACT, 9),
+        Request {
+            id: 2,
+            op: TensorOp::gemm(64, 64, 256, Precision::Int16),
+            exec: ExecKind::Simulate,
+        },
+        gemm_tile(90, "mpra_gemm_i8_64", 21),
+        gemm_tile(91, "wrong_artifact_name", 3),
+    ];
+    let want0 = direct(&requests[0])[0].as_i32().unwrap().to_vec();
+    // oracle: id 0 checked (and correct), id 1 checked (fails to execute)
+    let expected: Vec<Option<Vec<i32>>> = vec![Some(want0), Some(vec![1, 2, 3]), None];
+
+    let summary = serve::run_stream(&coord, requests, &expected, 3);
+    assert_eq!(summary.requests, 5);
+    assert_eq!(summary.functional, 4);
+    assert_eq!(summary.verified_ok, 1, "id 0 verifies");
+    // id 1 (injected failure) and id 91 (unknown artifact) fail;
+    // id 90 executes fine but has no oracle slot -> unchecked
+    assert_eq!(summary.verified_failed, 2);
+    assert_eq!(summary.errors, 2);
+}
+
+#[test]
+fn coalesced_batches_are_bit_identical_to_sequential_execution() {
+    // wide window + small cap: batches form deterministically under the
+    // blocked-worker pattern, and sizes are capped at 4
+    let coord = soft_coordinator(25, 4);
+    let requests: Vec<Request> = (0..24)
+        .map(|i| {
+            // two interleaved artifact groups — only same-(artifact, shape)
+            // tiles may share a dispatch
+            let artifact = if i % 2 == 0 { "mpra_gemm_i8_64" } else { "mpra_gemm_i16_64" };
+            gemm_tile(i, artifact, i as i32 * 31)
+        })
+        .collect();
+    let oracle: Vec<Vec<HostTensor>> = requests.iter().map(direct).collect();
+
+    let responses = coord.serve(requests, 8);
+    assert_eq!(responses.len(), 24);
+    for (r, want) in responses.iter().zip(&oracle) {
+        assert!(r.is_ok(), "request {}: {:?}", r.id, r.error);
+        assert_eq!(
+            r.outputs.as_ref().unwrap(),
+            want,
+            "batched outputs must be bit-identical to one-at-a-time execution (id {})",
+            r.id
+        );
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.batched_requests, 24, "all functional execs dispatched via batches");
+    assert!(snap.max_batch > 1, "same-shape tiles must coalesce: hist {:?}", snap.batch_hist);
+    assert!(snap.max_batch <= 4, "max_batch cap respected: hist {:?}", snap.batch_hist);
+    assert_eq!(
+        snap.batch_hist.iter().map(|(sz, cnt)| sz * cnt).sum::<u64>(),
+        24,
+        "histogram accounts for every invocation"
+    );
+}
+
+#[test]
+fn backpressure_keeps_queue_bounded_and_serves_everything() {
+    let coord = soft_coordinator(1, 8);
+    let cap = 4usize;
+    let n = 64u64;
+    let requests: Vec<Request> =
+        (0..n).map(|i| gemm_tile(i, "mpra_gemm_i8_64", i as i32)).collect();
+    let opts = ServeOptions { workers: 4, queue_capacity: cap, policy: AdmissionPolicy::Block };
+    let responses = coord.serve_with(requests, opts);
+    assert_eq!(responses.len(), n as usize);
+    assert!(responses.iter().all(|r| r.is_ok()));
+    let snap = coord.metrics.snapshot();
+    assert!(
+        snap.queue_peak_depth <= cap as u64,
+        "blocking admission keeps depth within capacity (peak {})",
+        snap.queue_peak_depth
+    );
+    assert_eq!(snap.admission_rejected, 0, "Block policy rejects nothing");
+}
+
+#[test]
+fn soft_mixed_stream_end_to_end() {
+    // the full production driver — scheduling pre-pass, admission queue,
+    // coalescing, verification — entirely offline
+    let summary = serve::run_mixed_stream_soft(24, 4).unwrap();
+    assert_eq!(summary.requests, 24);
+    assert_eq!(summary.functional, 12);
+    assert_eq!(summary.verified_ok, 12, "soft backend is the oracle: all must verify");
+    assert_eq!(summary.verified_failed, 0);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.metrics.requests, 24);
+    assert!(summary.coalesced_batches > 0);
+    assert!(summary.throughput_rps > 0.0);
+}
