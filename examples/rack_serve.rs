@@ -1,0 +1,71 @@
+//! RACK DRIVER: shard the mixed e2e request stream across a
+//! heterogeneous multi-GTA rack — two 16-lane shards and two 4-lane
+//! shards behind a round-robin router — with ONE schedule cache shared
+//! rack-wide. Every shard runs its own soft rust-oracle backend behind
+//! its own (adaptive-window) coalescing dispatcher, so the whole thing
+//! works offline in every build.
+//!
+//! What to look for in the output: the per-shard utilization/traffic
+//! report, and rack-wide schedule-cache hits — a shape scheduled on one
+//! 16-lane shard is a cache hit when the router later lands it on the
+//! other (equal `GtaConfig`, equal fingerprint), while the 4-lane shards
+//! keep their own entries in the same memo.
+//!
+//! ```bash
+//! cargo run --release --example rack_serve [N] [workers]
+//! ```
+
+use gta::coordinator::rack::policy_by_name;
+use gta::coordinator::CoalesceConfig;
+use gta::serve::{mixed_stream, run_stream_rack, soft_rack};
+use gta::GtaConfig;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let configs = vec![
+        GtaConfig::lanes16(),
+        GtaConfig::lanes16(),
+        GtaConfig::with_lanes(4),
+        GtaConfig::with_lanes(4),
+    ];
+    let shards = configs.len();
+    println!(
+        "serving {n} mixed requests on {workers} workers across {shards} shards \
+         (16/16/4/4 lanes, round-robin, shared schedule cache)…\n"
+    );
+    let rack = soft_rack(
+        configs,
+        CoalesceConfig::with_adaptive_window(),
+        policy_by_name("rr").expect("rr is a built-in policy"),
+    )?;
+    let (requests, expected) = mixed_stream(n);
+    let summary = run_stream_rack(&rack, requests, &expected, workers);
+    print!("{}", summary.render());
+
+    // hard gates: the single-GTA serving contract must hold rack-wide
+    assert_eq!(summary.requests, n, "one response per request, rack-wide");
+    assert_eq!(summary.errors, 0, "requests came back with errors");
+    assert_eq!(summary.verified_failed, 0, "numeric verification failed");
+    assert_eq!(summary.functional, summary.verified_ok);
+
+    let rs = summary.shards.as_ref().expect("rack runs carry per-shard telemetry");
+    assert_eq!(rs.shards.len(), shards);
+    let routed: u64 = rs.shards.iter().map(|t| t.routed).sum();
+    assert_eq!(routed, n, "every request was routed to exactly one shard");
+    assert!(
+        rs.aggregate.schedule_cache_hits > 0,
+        "repeated shapes must hit the rack-shared schedule cache"
+    );
+
+    println!(
+        "\nrack OK: {n} requests over {shards} shards, {} rack-wide cache hits \
+         ({} searches), {} functional tiles numerically exact",
+        rs.aggregate.schedule_cache_hits,
+        rs.aggregate.schedule_cache_misses,
+        summary.verified_ok
+    );
+    Ok(())
+}

@@ -40,15 +40,21 @@ fn main() {
     println!("serve coalescing: same-shape INT8 64x64 MPRA tiles, soft backend\n");
     let solo = run(
         "uncoalesced (window 0)",
-        CoalesceConfig { window: Duration::ZERO, max_batch: 1 },
+        CoalesceConfig { window: Duration::ZERO, max_batch: 1, ..Default::default() },
         n,
         workers,
     );
     let batched = run(
         "coalesced (2ms, batch<=32)",
-        CoalesceConfig { window: Duration::from_millis(2), max_batch: 32 },
+        CoalesceConfig { window: Duration::from_millis(2), max_batch: 32, ..Default::default() },
         n,
         workers,
     );
-    println!("\ncoalescing speedup: {:.2}x", batched / solo.max(1e-9));
+    let adaptive = run(
+        "adaptive window",
+        CoalesceConfig::with_adaptive_window(),
+        n,
+        workers,
+    );
+    println!("\ncoalescing speedup: {:.2}x (adaptive {:.2}x)", batched / solo.max(1e-9), adaptive / solo.max(1e-9));
 }

@@ -128,6 +128,31 @@ impl GtaConfig {
             (a.lane_cols * self.mpra_cols) as u64,
         )
     }
+
+    /// Compact stable identity of this configuration (FNV-1a over every
+    /// field). The schedule-cache memos key on the full `GtaConfig`, so
+    /// rack shards with equal fingerprints share cache entries rack-wide
+    /// while heterogeneous shards coexist in the same memo; telemetry
+    /// reports this value so an operator can see which shards pool.
+    pub fn fingerprint(&self) -> u64 {
+        let fields = [
+            self.lanes,
+            self.mpra_rows,
+            self.mpra_cols,
+            self.freq_mhz,
+            self.sram_kib,
+            self.vlen64,
+            self.mask_bits,
+        ];
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for f in fields {
+            for b in f.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        h
+    }
 }
 
 /// The Systolic Control and Status Register (Fig. 4c): the three-level

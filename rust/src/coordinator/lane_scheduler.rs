@@ -18,6 +18,15 @@ pub struct Partition {
     pub mask: u32,
 }
 
+/// Point-in-time lane occupancy of one allocator — the per-shard slice
+/// of the rack-level free-lane accounting (see `coordinator::rack`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneUsage {
+    pub total: u32,
+    pub free: u32,
+    pub live_partitions: usize,
+}
+
 /// Allocator over the lane pool.
 #[derive(Debug)]
 pub struct LaneAllocator {
@@ -42,33 +51,72 @@ impl LaneAllocator {
         self.owner.iter().filter(|o| o.is_none()).count() as u32
     }
 
+    /// Occupancy snapshot for rack-level accounting.
+    pub fn usage(&self) -> LaneUsage {
+        LaneUsage {
+            total: self.config.lanes,
+            free: self.free_lanes(),
+            live_partitions: self.live.len(),
+        }
+    }
+
+    /// How many partitions the mask word width can express.
+    fn max_partitions(&self) -> u64 {
+        1u64 << self.config.mask_bits.min(32)
+    }
+
+    /// The all-ones "parked" mask for free lanes.
+    fn parked_mask(&self) -> u32 {
+        (self.max_partitions() - 1) as u32
+    }
+
+    /// Next partition id not currently live. Ids recycle: a counter that
+    /// wrapped past u32::MAX skips ids still in use instead of colliding
+    /// (live partitions are bounded by the mask width, so a free id is
+    /// found within `live.len() + 1` probes).
+    fn fresh_id(&self) -> Option<PartitionId> {
+        let mut id = self.next_id;
+        for _ in 0..=self.live.len() {
+            let cand = PartitionId(id);
+            if !self.live.contains_key(&cand) {
+                return Some(cand);
+            }
+            id = id.wrapping_add(1);
+        }
+        None
+    }
+
     /// Allocate `n` contiguous lanes (contiguity is what the slide unit's
-    /// shuffle program requires). Returns None when fragmented/full or
-    /// when the mask width cannot express another partition.
+    /// shuffle program requires). Returns None — never panics — when
+    /// fragmented/full, when the mask width cannot express another
+    /// partition, or when no partition id is free.
     pub fn allocate(&mut self, n: u32) -> Option<Partition> {
         if n == 0 || n > self.config.lanes {
             return None;
         }
-        let max_parts = 1u32 << self.config.mask_bits;
-        if self.live.len() as u32 >= max_parts {
+        let max_parts = self.max_partitions();
+        if self.live.len() as u64 >= max_parts {
             return None;
         }
+        // Pick identity BEFORE touching `owner`: every early return must
+        // leave the allocator unchanged. (The pre-rack code unwrapped the
+        // mask search after marking lanes, so an exhausted mask space
+        // panicked mid-mutation and leaked the marked lanes.)
+        let used: Vec<u32> = self.live.values().map(|p| p.mask).collect();
+        let mask = (0..max_parts).map(|m| m as u32).find(|m| !used.contains(m))?;
+        let id = self.fresh_id()?;
         // first-fit contiguous scan
         let lanes = self.owner.len();
         let mut start = 0usize;
         while start + (n as usize) <= lanes {
             if self.owner[start..start + n as usize].iter().all(Option::is_none) {
-                let id = PartitionId(self.next_id);
-                self.next_id += 1;
                 let lane_ids: Vec<u32> = (start as u32..start as u32 + n).collect();
                 for &l in &lane_ids {
                     self.owner[l as usize] = Some(id);
                 }
-                // mask = lowest unused mask value
-                let used: Vec<u32> = self.live.values().map(|p| p.mask).collect();
-                let mask = (0..max_parts).find(|m| !used.contains(m)).unwrap();
                 let part = Partition { id, lanes: lane_ids, mask };
                 self.live.insert(id, part.clone());
+                self.next_id = id.0.wrapping_add(1);
                 return Some(part);
             }
             start += 1;
@@ -93,7 +141,7 @@ impl LaneAllocator {
     /// owned lanes carry their partition's mask; free lanes get the
     /// all-ones "parked" mask.
     pub fn mask_groups(&self) -> Vec<u32> {
-        let parked = (1u32 << self.config.mask_bits) - 1;
+        let parked = self.parked_mask();
         self.owner
             .iter()
             .map(|o| match o {
@@ -171,6 +219,55 @@ mod tests {
         assert!(a.allocate(2).is_some());
         assert!(a.allocate(2).is_some());
         assert!(a.allocate(2).is_none(), "mask width exhausted");
+    }
+
+    #[test]
+    fn churn_past_max_parts_recycles_masks_without_panicking() {
+        let mut cfg = GtaConfig::lanes16();
+        cfg.mask_bits = 2; // 4 expressible partitions
+        let mut a = LaneAllocator::new(cfg);
+        // far more lifetime allocations than max_parts: masks must recycle
+        for round in 0..64 {
+            let p = a.allocate(4).unwrap_or_else(|| panic!("round {round} must allocate"));
+            assert!(p.mask < 4, "mask within width: {}", p.mask);
+            assert!(a.release(p.id));
+        }
+        // exhausting the mask space is a None, not a panic, and leaves
+        // the pool untouched (no lanes leaked by a partial allocation)
+        let held: Vec<Partition> = (0..4).map(|_| a.allocate(2).unwrap()).collect();
+        assert!(a.allocate(2).is_none(), "mask width exhausted");
+        assert_eq!(a.free_lanes(), 16 - 8, "failed allocate must not leak lanes");
+        let masks: std::collections::HashSet<u32> = held.iter().map(|p| p.mask).collect();
+        assert_eq!(masks.len(), 4, "all four masks in use, none duplicated");
+        for p in &held {
+            assert!(a.release(p.id));
+        }
+        assert_eq!(a.free_lanes(), 16);
+        assert_eq!(a.usage(), LaneUsage { total: 16, free: 16, live_partitions: 0 });
+    }
+
+    #[test]
+    fn partition_ids_recycle_across_u32_wrap() {
+        let mut a = LaneAllocator::new(GtaConfig::lanes16());
+        a.next_id = u32::MAX;
+        let p1 = a.allocate(2).unwrap();
+        assert_eq!(p1.id, PartitionId(u32::MAX));
+        let p2 = a.allocate(2).unwrap();
+        assert_eq!(p2.id, PartitionId(0), "id counter wraps instead of overflowing");
+        a.next_id = u32::MAX; // force a probe over the still-live id
+        let p3 = a.allocate(2).unwrap();
+        assert_ne!(p3.id, p1.id, "live ids are skipped, not reissued");
+        assert_eq!(a.usage().live_partitions, 3);
+    }
+
+    #[test]
+    fn usage_tracks_allocation_lifecycle() {
+        let mut a = LaneAllocator::new(GtaConfig::lanes16());
+        assert_eq!(a.usage(), LaneUsage { total: 16, free: 16, live_partitions: 0 });
+        let p = a.allocate(6).unwrap();
+        assert_eq!(a.usage(), LaneUsage { total: 16, free: 10, live_partitions: 1 });
+        a.release(p.id);
+        assert_eq!(a.usage().free, 16);
     }
 
     #[test]

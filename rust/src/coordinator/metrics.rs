@@ -1,12 +1,15 @@
 //! Coordinator metrics: request counters, schedule-cache statistics,
 //! admission/coalescing telemetry and latency percentiles, shared across
-//! worker threads.
+//! worker threads. In a multi-GTA rack every shard owns one [`Metrics`];
+//! [`ShardTelemetry`]/[`RackSnapshot`] roll the per-shard snapshots into
+//! the rack-wide aggregate utilization/traffic report.
 //!
 //! Latencies are kept in a fixed-size reservoir (Vitter's Algorithm R)
 //! instead of an unbounded vector, so a long-lived server records
 //! millions of requests in O(1) memory while p50/p95/p99 stay within
 //! sampling error; the mean is exact (running sum / count).
 
+use super::lane_scheduler::LaneUsage;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -34,6 +37,12 @@ struct Inner {
     batches: u64,
     batched_requests: u64,
     batch_hist: BTreeMap<u64, u64>,
+    // simulated work (one record per handled request)
+    sim_cycles: u64,
+    sim_util_sum: f64,
+    // live coalescing window (static config or the adaptive controller's
+    // latest choice)
+    coalesce_window_us: u64,
     // latency reservoir (Algorithm R); rng seeded lazily on first overflow
     lat_count: u64,
     lat_sum_us: u64,
@@ -48,7 +57,7 @@ pub struct Metrics {
 }
 
 /// A frozen snapshot for reporting.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Snapshot {
     pub requests: u64,
     pub pgemm_ops: u64,
@@ -69,6 +78,13 @@ pub struct Snapshot {
     pub batch_hist: BTreeMap<u64, u64>,
     /// Largest coalesced batch dispatched.
     pub max_batch: u64,
+    /// Total simulated GTA cycles across handled requests.
+    pub sim_cycles: u64,
+    /// Mean simulated PE utilization across handled requests.
+    pub mean_sim_utilization: f64,
+    /// Coalescing window in effect at snapshot time (µs): the static
+    /// config, or the adaptive controller's latest choice.
+    pub coalesce_window_us: u64,
     /// Latencies recorded (reservoir holds at most
     /// [`LATENCY_RESERVOIR_CAP`] of them).
     pub latency_count: u64,
@@ -138,6 +154,19 @@ impl Metrics {
         self.inner.lock().unwrap().admission_requeued += 1;
     }
 
+    /// Simulated cycles/utilization of one handled request (called once
+    /// per request, so the utilization mean weights by request count).
+    pub fn record_sim(&self, cycles: u64, utilization: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.sim_cycles += cycles;
+        m.sim_util_sum += utilization;
+    }
+
+    /// The coalescing window currently in effect (static or adaptive).
+    pub fn record_window(&self, us: u64) {
+        self.inner.lock().unwrap().coalesce_window_us = us;
+    }
+
     /// One coalesced dispatch of `size` same-(artifact, shape) requests.
     pub fn record_batch(&self, size: usize) {
         let mut m = self.inner.lock().unwrap();
@@ -173,6 +202,13 @@ impl Metrics {
             batched_requests: m.batched_requests,
             batch_hist: m.batch_hist.clone(),
             max_batch: m.batch_hist.keys().next_back().copied().unwrap_or(0),
+            sim_cycles: m.sim_cycles,
+            mean_sim_utilization: if m.requests == 0 {
+                0.0
+            } else {
+                m.sim_util_sum / m.requests as f64
+            },
+            coalesce_window_us: m.coalesce_window_us,
             latency_count: m.lat_count,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
@@ -196,11 +232,59 @@ impl Snapshot {
         }
     }
 
+    /// Fold another shard's snapshot into this one for a rack-level
+    /// aggregate: counters, histograms and sim cycles sum; means are
+    /// re-weighted by their sample counts; `queue_peak_depth`,
+    /// `max_batch`, the coalescing window and the latency percentiles
+    /// take the per-shard maximum (percentile reservoirs cannot be
+    /// merged exactly from snapshots, so the aggregate tail is the
+    /// conservative worst-shard tail).
+    pub fn absorb(&mut self, o: &Snapshot) {
+        // weighted means first, while `self` still holds its own counts
+        let lat_n = self.latency_count + o.latency_count;
+        if lat_n > 0 {
+            self.mean_us = (self.mean_us * self.latency_count as f64
+                + o.mean_us * o.latency_count as f64)
+                / lat_n as f64;
+        }
+        let req_n = self.requests + o.requests;
+        if req_n > 0 {
+            self.mean_sim_utilization = (self.mean_sim_utilization * self.requests as f64
+                + o.mean_sim_utilization * o.requests as f64)
+                / req_n as f64;
+        }
+        self.requests += o.requests;
+        self.pgemm_ops += o.pgemm_ops;
+        self.vector_ops += o.vector_ops;
+        self.functional_execs += o.functional_execs;
+        self.functional_errors += o.functional_errors;
+        self.schedule_cache_hits += o.schedule_cache_hits;
+        self.schedule_cache_misses += o.schedule_cache_misses;
+        for (name, n) in &o.per_artifact {
+            *self.per_artifact.entry(name.clone()).or_insert(0) += n;
+        }
+        self.admission_rejected += o.admission_rejected;
+        self.admission_requeued += o.admission_requeued;
+        self.queue_peak_depth = self.queue_peak_depth.max(o.queue_peak_depth);
+        self.batches += o.batches;
+        self.batched_requests += o.batched_requests;
+        for (sz, cnt) in &o.batch_hist {
+            *self.batch_hist.entry(*sz).or_insert(0) += cnt;
+        }
+        self.max_batch = self.max_batch.max(o.max_batch);
+        self.sim_cycles += o.sim_cycles;
+        self.coalesce_window_us = self.coalesce_window_us.max(o.coalesce_window_us);
+        self.latency_count += o.latency_count;
+        self.p50_us = self.p50_us.max(o.p50_us);
+        self.p95_us = self.p95_us.max(o.p95_us);
+        self.p99_us = self.p99_us.max(o.p99_us);
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
             "requests={} (pgemm={} vector={})  functional={} ({} errors)  cache {}/{} hit\n\
              latency: p50={}us p95={}us p99={}us mean={:.1}us ({} recorded)\n\
-             serving: queue peak={}  batches={} (mean {:.2}, max {})  \
+             serving: queue peak={}  batches={} (mean {:.2}, max {}, window {}us)  \
              admission rejected={} requeued={}\n",
             self.requests,
             self.pgemm_ops,
@@ -218,12 +302,83 @@ impl Snapshot {
             self.batches,
             self.mean_batch(),
             self.max_batch,
+            self.coalesce_window_us,
             self.admission_rejected,
             self.admission_requeued,
         );
         for (name, n) in &self.per_artifact {
             s.push_str(&format!("  artifact {name}: {n} execs\n"));
         }
+        s
+    }
+}
+
+/// Per-shard slice of a rack's telemetry: the shard's own [`Snapshot`]
+/// plus its identity (config fingerprint — shards with equal
+/// fingerprints share schedule-cache entries rack-wide), routing share
+/// and lane occupancy.
+#[derive(Debug, Clone)]
+pub struct ShardTelemetry {
+    pub shard: usize,
+    pub lanes: u32,
+    /// [`crate::arch::GtaConfig::fingerprint`] of the shard's config.
+    pub config_fingerprint: u64,
+    /// Requests the routing policy placed on this shard.
+    pub routed: u64,
+    pub lane_usage: LaneUsage,
+    pub snapshot: Snapshot,
+}
+
+/// Rack-wide telemetry: per-shard counters plus the aggregate rollup
+/// (the ROADMAP "aggregate utilization/traffic per shard" report).
+#[derive(Debug, Clone)]
+pub struct RackSnapshot {
+    pub shards: Vec<ShardTelemetry>,
+    pub aggregate: Snapshot,
+}
+
+impl RackSnapshot {
+    pub fn from_shards(shards: Vec<ShardTelemetry>) -> RackSnapshot {
+        let mut aggregate = Snapshot::default();
+        for t in &shards {
+            aggregate.absorb(&t.snapshot);
+        }
+        RackSnapshot { shards, aggregate }
+    }
+
+    /// Fraction of rack traffic the given shard carried (0.0 when the
+    /// rack has routed nothing yet).
+    pub fn traffic_share(&self, shard: usize) -> f64 {
+        let total: u64 = self.shards.iter().map(|t| t.routed).sum();
+        match self.shards.get(shard) {
+            Some(t) if total > 0 => t.routed as f64 / total as f64,
+            _ => 0.0,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!("rack: {} shards, per-shard utilization/traffic\n", self.shards.len());
+        for t in &self.shards {
+            s.push_str(&format!(
+                "  shard {} [{} lanes, cfg {:016x}]: routed={} ({:.1}% of traffic)  \
+                 util={:.1}%  sim cycles={}  cache {}/{} hit  errors={}  \
+                 lanes free {}/{} ({} partitions)\n",
+                t.shard,
+                t.lanes,
+                t.config_fingerprint,
+                t.routed,
+                self.traffic_share(t.shard) * 100.0,
+                t.snapshot.mean_sim_utilization * 100.0,
+                t.snapshot.sim_cycles,
+                t.snapshot.schedule_cache_hits,
+                t.snapshot.schedule_cache_hits + t.snapshot.schedule_cache_misses,
+                t.snapshot.functional_errors,
+                t.lane_usage.free,
+                t.lane_usage.total,
+                t.lane_usage.live_partitions,
+            ));
+        }
+        s.push_str(&format!("  rack aggregate: {}", self.aggregate.render()));
         s
     }
 }
@@ -295,5 +450,71 @@ mod tests {
         assert!((s.mean_batch() - 3.0).abs() < 1e-12);
         assert_eq!(s.functional_errors, 1);
         assert!(s.render().contains("batches=3"));
+    }
+
+    #[test]
+    fn sim_and_window_counters() {
+        let m = Metrics::default();
+        m.record_request(true, Duration::from_micros(5));
+        m.record_request(false, Duration::from_micros(5));
+        m.record_sim(100, 0.5);
+        m.record_sim(300, 1.0);
+        m.record_window(250);
+        let s = m.snapshot();
+        assert_eq!(s.sim_cycles, 400);
+        assert!((s.mean_sim_utilization - 0.75).abs() < 1e-12);
+        assert_eq!(s.coalesce_window_us, 250);
+        assert!(s.render().contains("window 250us"), "{}", s.render());
+    }
+
+    #[test]
+    fn rack_snapshot_aggregates_per_shard_counters() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        for i in 0..10u64 {
+            a.record_request(true, Duration::from_micros(10));
+            a.record_sim(50, 0.8);
+            if i < 5 {
+                b.record_request(false, Duration::from_micros(30));
+                b.record_sim(20, 0.2);
+            }
+        }
+        a.record_cache(true);
+        b.record_cache(false);
+        b.record_functional_error();
+        a.record_batch(4);
+        b.record_batch(2);
+        let tele = |shard: usize, routed: u64, snapshot: Snapshot| ShardTelemetry {
+            shard,
+            lanes: 16,
+            config_fingerprint: 7,
+            routed,
+            lane_usage: LaneUsage { total: 16, free: 16, live_partitions: 0 },
+            snapshot,
+        };
+        let rs = RackSnapshot::from_shards(vec![
+            tele(0, 10, a.snapshot()),
+            tele(1, 5, b.snapshot()),
+        ]);
+        assert_eq!(rs.aggregate.requests, 15);
+        assert_eq!(rs.aggregate.pgemm_ops, 10);
+        assert_eq!(rs.aggregate.vector_ops, 5);
+        assert_eq!(rs.aggregate.sim_cycles, 10 * 50 + 5 * 20);
+        assert_eq!(rs.aggregate.schedule_cache_hits, 1);
+        assert_eq!(rs.aggregate.schedule_cache_misses, 1);
+        assert_eq!(rs.aggregate.functional_errors, 1);
+        assert_eq!(rs.aggregate.batches, 2);
+        assert_eq!(rs.aggregate.batched_requests, 6);
+        assert_eq!(rs.aggregate.max_batch, 4);
+        // weighted means: (10·0.8 + 5·0.2)/15 and (10·10 + 5·30)/15
+        assert!((rs.aggregate.mean_sim_utilization - 0.6).abs() < 1e-9);
+        assert!((rs.aggregate.mean_us - (10.0 * 10.0 + 5.0 * 30.0) / 15.0).abs() < 1e-9);
+        // traffic shares
+        assert!((rs.traffic_share(0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((rs.traffic_share(1) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(rs.traffic_share(9), 0.0);
+        let rendered = rs.render();
+        assert!(rendered.contains("shard 0"), "{rendered}");
+        assert!(rendered.contains("rack aggregate"), "{rendered}");
     }
 }

@@ -3,35 +3,51 @@
 //! model, and (when an AOT artifact exists) executes the *functional*
 //! result through the PJRT engine so numerics are real, not modeled.
 //!
+//! Since the rack refactor this is a **two-level architecture**: the
+//! serving machinery (shard state, request handling, routing, the
+//! shard-aware `serve` loop) lives in [`rack`] — a [`rack::Rack`] owns N
+//! [`rack::Shard`]s, each one GTA instance with its own config,
+//! simulator, lane allocator, metrics and (optionally) an execution
+//! backend behind its own coalescing dispatcher, while ALL shards share
+//! one [`crate::scheduler::Explorer`] so a shape scheduled on any shard
+//! is a rack-wide cache hit for every shard with the same config.
+//! [`Coordinator`] is the stable single-GTA façade: a one-shard rack
+//! with the exact pre-rack API and behavior.
+//!
 //! Threading model: PJRT handles are not `Send`, so one dedicated executor
-//! thread owns the backend ([`crate::runtime::ExecBackend`], normally the
-//! PJRT [`Engine`]); scheduling/simulation workers scale across cores.
-//! Functional requests do not talk to the executor directly — they submit
-//! to a **coalescing dispatcher** thread that groups same-`(artifact,
-//! shape)` invocations arriving within a short window into one
+//! thread per shard owns that shard's backend
+//! ([`crate::runtime::ExecBackend`], normally the PJRT [`Engine`]);
+//! scheduling/simulation workers scale across cores. Functional requests
+//! do not talk to the executor directly — they submit to a per-shard
+//! **coalescing dispatcher** thread that groups same-`(artifact, shape)`
+//! invocations arriving within a short window into one
 //! [`ExecJob::RunBatch`], amortizing the per-request channel round-trip
 //! that otherwise makes the single executor thread the serial bottleneck
-//! (the GPTPU lesson: batch small offloaded tensor ops). Request streams
-//! enter through a bounded [`AdmissionQueue`] with backpressure, and every
-//! failure — functional error, panic, rejection — comes back as a
-//! [`Response`] carrying a per-request error: `serve` returns exactly one
-//! response per request, always.
+//! (the GPTPU lesson: batch small offloaded tensor ops). The window is
+//! optionally **adaptive** ([`AdaptiveWindow`]): sustained arrivals grow
+//! it toward a cap, singleton batches shrink it toward ~0 so light
+//! traffic pays no added latency. Request streams enter through a
+//! bounded [`AdmissionQueue`] with backpressure, and every failure —
+//! functional error, panic, rejection — comes back as a [`Response`]
+//! carrying a per-request error: `serve` returns exactly one response
+//! per request, always.
 
 pub mod lane_scheduler;
 pub mod metrics;
+pub mod rack;
+
+pub use rack::{LeastLoaded, Rack, RoundRobin, RoutePolicy, ShapeAffinity, Shard, ShardStatus};
 
 use crate::arch::GtaConfig;
 use crate::ops::{PGemm, TensorOp};
 use crate::runtime::manifest::DType;
 use crate::runtime::{Engine, ExecBackend, HostTensor};
-use crate::scheduler::{self, explorer, Candidate};
-use crate::sim::gta::GtaSim;
-use crate::sim::{Platform, SimReport};
+use crate::scheduler::Candidate;
+use crate::sim::SimReport;
 use anyhow::{anyhow, Result};
 use metrics::Metrics;
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -66,6 +82,9 @@ pub struct Request {
 #[derive(Debug)]
 pub struct Response {
     pub id: u64,
+    /// Which rack shard answered (always 0 through a single
+    /// [`Coordinator`]).
+    pub shard: usize,
     /// The §5 schedule chosen (None for pure vector ops).
     pub schedule: Option<Candidate>,
     /// Simulated cycles/traffic on the GTA model.
@@ -200,16 +219,122 @@ impl Drop for Executor {
 #[derive(Debug, Clone, Copy)]
 pub struct CoalesceConfig {
     /// How long the first invocation of a group waits for same-shape
-    /// company before the group is dispatched.
+    /// company before the group is dispatched (the *initial* window when
+    /// `adaptive` is set).
     pub window: Duration,
     /// Hard cap on one dispatched batch; a group reaching it flushes
     /// immediately.
     pub max_batch: usize,
+    /// Adaptive-window bounds: `Some` lets the dispatcher retune
+    /// `window` from observed traffic, `None` keeps it fixed.
+    pub adaptive: Option<AdaptiveWindow>,
 }
 
 impl Default for CoalesceConfig {
     fn default() -> Self {
-        CoalesceConfig { window: Duration::from_millis(1), max_batch: 32 }
+        CoalesceConfig { window: Duration::from_millis(1), max_batch: 32, adaptive: None }
+    }
+}
+
+impl CoalesceConfig {
+    /// Default knobs with the adaptive controller enabled.
+    pub fn with_adaptive_window() -> Self {
+        CoalesceConfig { adaptive: Some(AdaptiveWindow::default()), ..Default::default() }
+    }
+}
+
+/// Bounds for the adaptive coalescing window: the dispatcher retunes the
+/// live window within `[min, max]` from the observed inter-arrival gap
+/// and batch-size histogram — toward ~`min` when mean batch size is 1
+/// (waiting buys nothing, so light traffic pays no added latency),
+/// toward `max` under sustained same-shape arrivals (deeper batches).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveWindow {
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Default for AdaptiveWindow {
+    fn default() -> Self {
+        AdaptiveWindow { min: Duration::ZERO, max: Duration::from_millis(8) }
+    }
+}
+
+/// The adaptive-window rule, pure so it is unit-testable. `gap_ewma_us`
+/// is the smoothed inter-arrival gap, `batch_ewma` the smoothed flushed
+/// batch size.
+///
+/// * Sustained arrivals: the target is a window long enough to collect
+///   ~`max_batch` arrivals (`gap × (max_batch − 1)`), clamped to bounds.
+/// * Sparse arrivals (no company even within the max window): the
+///   target falls to `min` — waiting cannot fill a batch.
+/// * The histogram veto: if flushes stay ~singletons despite an open
+///   window (arrivals never share a shape), halve — latency is being
+///   paid for nothing.
+///
+/// The live window moves halfway toward the target each flush, so it
+/// converges geometrically and never jumps on one outlier.
+fn tuned_window(
+    current_us: u64,
+    gap_ewma_us: f64,
+    batch_ewma: f64,
+    max_batch: usize,
+    bounds: AdaptiveWindow,
+) -> u64 {
+    let min = bounds.min.as_micros() as u64;
+    let max = (bounds.max.as_micros() as u64).max(min);
+    let mut desired = if gap_ewma_us > max as f64 {
+        min
+    } else {
+        ((gap_ewma_us * max_batch.saturating_sub(1) as f64).round() as u64).clamp(min, max)
+    };
+    if batch_ewma < 1.25 {
+        desired = desired.min(current_us / 2).max(min);
+    }
+    (current_us + desired).div_ceil(2).clamp(min, max)
+}
+
+/// Dispatcher-side state of the adaptive controller (a no-op shell when
+/// the config is not adaptive — the window then never moves).
+struct WindowCtl {
+    window_us: u64,
+    bounds: Option<AdaptiveWindow>,
+    max_batch: usize,
+    gap_ewma_us: f64,
+    batch_ewma: f64,
+    last_arrival: Option<Instant>,
+}
+
+impl WindowCtl {
+    fn new(cfg: &CoalesceConfig) -> WindowCtl {
+        WindowCtl {
+            window_us: cfg.window.as_micros() as u64,
+            bounds: cfg.adaptive,
+            max_batch: cfg.max_batch.max(1),
+            // neutral prior: assume arrivals pace the configured window
+            gap_ewma_us: cfg.window.as_micros() as f64,
+            batch_ewma: 1.0,
+            last_arrival: None,
+        }
+    }
+
+    fn window(&self) -> Duration {
+        Duration::from_micros(self.window_us)
+    }
+
+    fn on_arrival(&mut self, now: Instant) {
+        if let Some(prev) = self.last_arrival.replace(now) {
+            let gap = now.saturating_duration_since(prev).as_micros() as f64;
+            self.gap_ewma_us = 0.75 * self.gap_ewma_us + 0.25 * gap;
+        }
+    }
+
+    fn on_flush(&mut self, size: usize) {
+        self.batch_ewma = 0.75 * self.batch_ewma + 0.25 * size as f64;
+        if let Some(bounds) = self.bounds {
+            self.window_us =
+                tuned_window(self.window_us, self.gap_ewma_us, self.batch_ewma, self.max_batch, bounds);
+        }
     }
 }
 
@@ -263,6 +388,8 @@ fn dispatcher_loop(
     cfg: CoalesceConfig,
     metrics: Arc<Metrics>,
 ) {
+    let mut ctl = WindowCtl::new(&cfg);
+    metrics.record_window(ctl.window_us);
     let mut groups: HashMap<GroupKey, (Vec<DispatchJob>, Instant)> = HashMap::new();
     loop {
         // Nothing pending: sleep on the channel. Groups pending: sleep at
@@ -285,14 +412,17 @@ fn dispatcher_loop(
         };
         match next {
             Some(job) => {
+                ctl.on_arrival(Instant::now());
                 let key = group_key(&job);
                 let group = groups
                     .entry(key.clone())
-                    .or_insert_with(|| (Vec::new(), Instant::now() + cfg.window));
+                    .or_insert_with(|| (Vec::new(), Instant::now() + ctl.window()));
                 group.0.push(job);
                 if group.0.len() >= cfg.max_batch.max(1) {
                     if let Some((jobs, _)) = groups.remove(&key) {
+                        ctl.on_flush(jobs.len());
                         flush_group(key.0, jobs, &exec_tx, &metrics);
+                        metrics.record_window(ctl.window_us);
                     }
                 }
             }
@@ -302,9 +432,11 @@ fn dispatcher_loop(
                     groups.iter().filter(|(_, v)| v.1 <= now).map(|(k, _)| k.clone()).collect();
                 for key in due {
                     if let Some((jobs, _)) = groups.remove(&key) {
+                        ctl.on_flush(jobs.len());
                         flush_group(key.0, jobs, &exec_tx, &metrics);
                     }
                 }
+                metrics.record_window(ctl.window_us);
             }
         }
     }
@@ -475,36 +607,31 @@ impl Default for ServeOptions {
     }
 }
 
-/// The coordinator.
+/// The coordinator: the stable single-GTA façade over a one-shard
+/// [`Rack`]. Every entry point routes to that shard, so existing callers
+/// keep the exact pre-rack behavior, while multi-GTA deployments build a
+/// [`Rack`] directly (or reach this one through [`Coordinator::rack`]).
 pub struct Coordinator {
     pub gta: GtaConfig,
-    sim: GtaSim,
-    /// Coalescing dispatcher feeding the executor. Declared before
-    /// `executor`: fields drop in order, so shutdown flushes pending
-    /// batches into a still-live executor.
-    dispatcher: Option<Dispatcher>,
-    executor: Option<Executor>,
-    /// §5 exploration through the shared explorer: repeated operator
-    /// shapes schedule in O(1) off the memo, concurrent requests for the
-    /// same shape dedup onto one search (a large hot-path win; §Perf),
-    /// and batch requests fan the search across a worker pool. Capped:
-    /// least-recently-used shapes shed past [`DEFAULT_SCHEDULE_CAPACITY`].
-    explorer: scheduler::Explorer,
+    /// Shard 0's metrics (the only shard) — kept as a field so
+    /// `coord.metrics.snapshot()` works exactly as before the rack
+    /// refactor.
     pub metrics: Arc<Metrics>,
-    next_id: AtomicU64,
+    rack: Arc<Rack>,
 }
 
 impl Coordinator {
     /// Simulation-only coordinator.
     pub fn new(gta: GtaConfig) -> Coordinator {
+        Self::from_rack(Rack::sim_only(vec![gta], Box::new(RoundRobin::default())))
+    }
+
+    fn from_rack(rack: Rack) -> Coordinator {
+        let rack = Arc::new(rack);
         Coordinator {
-            sim: GtaSim::new(gta),
-            gta,
-            dispatcher: None,
-            executor: None,
-            explorer: scheduler::Explorer::with_capacity(DEFAULT_SCHEDULE_CAPACITY),
-            metrics: Arc::new(Metrics::default()),
-            next_id: AtomicU64::new(0),
+            gta: rack.shard(0).gta,
+            metrics: Arc::clone(&rack.shard(0).metrics),
+            rack,
         }
     }
 
@@ -519,9 +646,12 @@ impl Coordinator {
         artifact_dir: PathBuf,
         coalesce: CoalesceConfig,
     ) -> Result<Coordinator> {
-        let mut c = Coordinator::new(gta);
-        c.attach(Executor::spawn(artifact_dir)?, coalesce);
-        Ok(c)
+        Ok(Self::from_rack(Rack::with_backend(
+            vec![gta],
+            move |_shard| Ok(Box::new(Engine::load(&artifact_dir)?) as Box<dyn ExecBackend>),
+            coalesce,
+            Box::new(RoundRobin::default()),
+        )?))
     }
 
     /// Coordinator over an arbitrary execution backend (e.g. the offline
@@ -543,113 +673,67 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
     {
-        let mut c = Coordinator::new(gta);
-        c.attach(Executor::spawn_backend(make)?, coalesce);
-        Ok(c)
+        // adapt the one-shot factory to the rack's per-shard factory:
+        // one shard, so it is called exactly once
+        let make = Mutex::new(Some(make));
+        Ok(Self::from_rack(Rack::with_backend(
+            vec![gta],
+            move |_shard| {
+                (make.lock().unwrap().take().expect("single-shard factory runs once"))()
+            },
+            coalesce,
+            Box::new(RoundRobin::default()),
+        )?))
     }
 
-    fn attach(&mut self, executor: Executor, coalesce: CoalesceConfig) {
-        self.dispatcher =
-            Some(Dispatcher::spawn(executor.tx.clone(), coalesce, Arc::clone(&self.metrics)));
-        self.executor = Some(executor);
+    /// The underlying one-shard [`Rack`] — the bridge from the
+    /// single-GTA API to the shard-aware one.
+    pub fn rack(&self) -> &Arc<Rack> {
+        &self.rack
+    }
+
+    fn shard(&self) -> &Shard {
+        self.rack.shard(0)
     }
 
     pub fn has_engine(&self) -> bool {
-        self.executor.is_some()
+        self.shard().has_engine()
     }
 
     pub fn executor(&self) -> Option<&Executor> {
-        self.executor.as_ref()
+        self.shard().executor()
     }
 
     pub fn fresh_id(&self) -> u64 {
-        self.next_id.fetch_add(1, Ordering::Relaxed)
+        self.rack.fresh_id()
     }
 
     /// Schedule a p-GEMM (memoized; concurrent requests for the same
     /// shape run the search exactly once).
     pub fn schedule(&self, g: &PGemm) -> Candidate {
-        let (cand, computed) = self.explorer.schedule(g, &self.gta);
-        self.metrics.record_cache(!computed);
-        cand
+        self.shard().schedule(g)
     }
 
     /// Schedule a batch of p-GEMMs concurrently across the explorer's
     /// worker pool. Results are in input order; repeated shapes within
     /// the batch (and across earlier requests) share one search.
     pub fn schedule_batch(&self, ops: &[PGemm]) -> Vec<Candidate> {
-        self.explorer
-            .schedule_batch(ops, &self.gta, explorer::default_workers())
-            .into_iter()
-            .map(|(cand, computed)| {
-                self.metrics.record_cache(!computed);
-                cand
-            })
-            .collect()
+        self.shard().schedule_batch(ops)
     }
 
     /// Handle one request synchronously. Never panics on functional
     /// failure: the error travels in [`Response::error`] instead.
+    /// Routed through the rack so routed/in-flight telemetry matches
+    /// the `serve` path (with one shard, routing is trivially shard 0).
     pub fn handle(&self, req: Request) -> Response {
-        let t0 = Instant::now();
-        let (schedule, sim) = match &req.op {
-            TensorOp::PGemm(g) => {
-                let cand = self.schedule(g);
-                (Some(cand), cand.report)
-            }
-            TensorOp::Vector(_) => (None, self.sim.run(&req.op)),
-        };
-        let (outputs, error) = match &req.exec {
-            ExecKind::Simulate => (None, None),
-            ExecKind::Functional { artifact, inputs } => match &self.dispatcher {
-                Some(d) => {
-                    self.metrics.record_functional(artifact);
-                    match d.submit(artifact.clone(), inputs.clone()) {
-                        Ok(outs) => (Some(outs), None),
-                        Err(e) => {
-                            self.metrics.record_functional_error();
-                            (None, Some(format!("functional execution of {artifact} failed: {e:#}")))
-                        }
-                    }
-                }
-                None => {
-                    (None, Some(format!("functional request for {artifact:?}: no engine attached")))
-                }
-            },
-        };
-        let latency = t0.elapsed();
-        self.metrics
-            .record_request(matches!(req.op, TensorOp::PGemm(_)), latency);
-        Response { id: req.id, schedule, sim, outputs, error, latency }
+        self.rack.handle(req)
     }
 
     /// [`Coordinator::handle`] hardened for worker threads: a panic
     /// anywhere in the pipeline becomes an error-carrying response, so a
     /// bad request can never kill a worker and eat its queue share.
     pub fn handle_caught(&self, req: Request) -> Response {
-        let id = req.id;
-        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.handle(req))) {
-            Ok(resp) => resp,
-            Err(p) => Response {
-                id,
-                schedule: None,
-                sim: SimReport::default(),
-                outputs: None,
-                error: Some(format!("worker panicked: {}", panic_message(&p))),
-                latency: Duration::ZERO,
-            },
-        }
-    }
-
-    fn unserved_response(id: u64, msg: String) -> Response {
-        Response {
-            id,
-            schedule: None,
-            sim: SimReport::default(),
-            outputs: None,
-            error: Some(msg),
-            latency: Duration::ZERO,
-        }
+        self.rack.handle_caught(req)
     }
 
     /// Serve a batch of requests on `workers` threads through the default
@@ -657,69 +741,13 @@ impl Coordinator {
     /// through the dispatcher into batched executor dispatches;
     /// scheduling/simulation parallelizes. Responses are returned sorted
     /// by request id, exactly one per request.
-    pub fn serve(self: &Arc<Self>, requests: Vec<Request>, workers: usize) -> Vec<Response> {
-        self.serve_with(requests, ServeOptions::with_workers(workers))
+    pub fn serve(&self, requests: Vec<Request>, workers: usize) -> Vec<Response> {
+        self.rack.serve(requests, workers)
     }
 
     /// [`Coordinator::serve`] with explicit admission-queue knobs.
-    pub fn serve_with(self: &Arc<Self>, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
-        let n = requests.len();
-        let queue = Arc::new(AdmissionQueue::new(opts.queue_capacity));
-        let (tx, rx) = mpsc::channel::<Response>();
-        let mut handles = Vec::new();
-        for w in 0..opts.workers.max(1) {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            let me = Arc::clone(self);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("gta-worker-{w}"))
-                    .spawn(move || {
-                        while let Some(req) = queue.pop() {
-                            let resp = me.handle_caught(req);
-                            if tx.send(resp).is_err() {
-                                break;
-                            }
-                        }
-                    })
-                    .unwrap(),
-            );
-        }
-        // Feeder: admission with backpressure. Under `Block` this thread
-        // stalls until workers free a slot; under `Reject` an over-
-        // capacity request gets one requeue attempt, then a Busy response.
-        for req in requests {
-            match queue.admit(req, opts.policy) {
-                Ok(()) => self.metrics.record_queue_depth(queue.depth()),
-                Err((req, AdmitError::Busy)) => {
-                    self.metrics.record_admission_requeued();
-                    std::thread::sleep(Duration::from_micros(100));
-                    match queue.admit(req, AdmissionPolicy::Reject) {
-                        Ok(()) => self.metrics.record_queue_depth(queue.depth()),
-                        Err((req, _)) => {
-                            self.metrics.record_admission_rejected();
-                            let _ = tx.send(Self::unserved_response(
-                                req.id,
-                                "busy: admission queue at capacity".to_string(),
-                            ));
-                        }
-                    }
-                }
-                Err((req, AdmitError::Closed)) => {
-                    let _ = tx
-                        .send(Self::unserved_response(req.id, "admission queue closed".to_string()));
-                }
-            }
-        }
-        queue.close();
-        drop(tx);
-        let mut out: Vec<Response> = rx.into_iter().collect();
-        for h in handles {
-            let _ = h.join();
-        }
-        assert_eq!(out.len(), n, "serve must yield exactly one response per request");
-        out.sort_by_key(|r| r.id);
-        out
+    pub fn serve_with(&self, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
+        self.rack.serve_with(requests, opts)
     }
 }
 
@@ -870,6 +898,74 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_window_grows_under_sustained_arrivals() {
+        let bounds = AdaptiveWindow { min: Duration::ZERO, max: Duration::from_millis(8) };
+        // tight arrivals (20us apart), healthy batches: the window must
+        // climb toward the cap from a cold start
+        let mut w = 0u64;
+        for _ in 0..64 {
+            w = tuned_window(w, 20.0, 4.0, 32, bounds);
+        }
+        let target = 20u64 * 31; // gap × (max_batch − 1)
+        assert!(
+            w >= target / 2 && w <= bounds.max.as_micros() as u64,
+            "sustained arrivals should grow the window toward {target}us, got {w}us"
+        );
+    }
+
+    #[test]
+    fn adaptive_window_shrinks_to_floor_when_batches_are_singletons() {
+        let bounds = AdaptiveWindow { min: Duration::ZERO, max: Duration::from_millis(8) };
+        // sparse arrivals (gaps beyond the max window), batch size ~1:
+        // the window must collapse toward ~0 so light traffic pays no
+        // added latency
+        let mut w = Duration::from_millis(4).as_micros() as u64;
+        for _ in 0..64 {
+            w = tuned_window(w, 50_000.0, 1.0, 32, bounds);
+        }
+        assert!(w <= 2, "singleton traffic should drive the window to ~0, got {w}us");
+    }
+
+    #[test]
+    fn adaptive_window_stays_within_bounds_and_fixed_config_never_moves() {
+        let bounds =
+            AdaptiveWindow { min: Duration::from_micros(10), max: Duration::from_micros(100) };
+        for gap in [0.0, 1.0, 50.0, 1e9] {
+            for batch in [1.0, 1.2, 8.0] {
+                for cur in [0u64, 10, 100, 5000] {
+                    let w = tuned_window(cur, gap, batch, 32, bounds);
+                    assert!((10..=100).contains(&w), "gap={gap} batch={batch} cur={cur} -> {w}");
+                }
+            }
+        }
+        // a non-adaptive controller never changes its window
+        let mut ctl = WindowCtl::new(&CoalesceConfig::default());
+        let before = ctl.window_us;
+        ctl.on_arrival(Instant::now());
+        ctl.on_flush(1);
+        ctl.on_flush(32);
+        assert_eq!(ctl.window_us, before);
+    }
+
+    #[test]
+    fn adaptive_serve_reports_the_chosen_window() {
+        // e2e smoke: the adaptive config drives a real stream and the
+        // chosen window lands in the metrics snapshot within bounds
+        let c = soft(CoalesceConfig::with_adaptive_window());
+        let reqs: Vec<Request> =
+            (0..32).map(|i| gemm_tile(i, "mpra_gemm_i8_64", i as i32)).collect();
+        let resps = c.serve(reqs, 4);
+        assert_eq!(resps.len(), 32);
+        let snap = c.metrics.snapshot();
+        let bounds = AdaptiveWindow::default();
+        assert!(
+            snap.coalesce_window_us <= bounds.max.as_micros() as u64,
+            "window {}us beyond the cap",
+            snap.coalesce_window_us
+        );
+    }
+
+    #[test]
     fn serve_with_reject_policy_never_loses_requests() {
         let c = Arc::new(Coordinator::new(GtaConfig::default()));
         let reqs: Vec<Request> = (0..64)
@@ -891,7 +987,11 @@ mod tests {
     #[test]
     fn coalesced_serve_is_bit_identical_to_direct_execution() {
         // generous window so concurrent workers land in shared batches
-        let c = soft(CoalesceConfig { window: Duration::from_millis(25), max_batch: 8 });
+        let c = soft(CoalesceConfig {
+            window: Duration::from_millis(25),
+            max_batch: 8,
+            ..Default::default()
+        });
         let reqs: Vec<Request> =
             (0..16).map(|i| gemm_tile(i, "mpra_gemm_i8_64", i as i32 * 17)).collect();
         let direct: Vec<Vec<HostTensor>> = reqs

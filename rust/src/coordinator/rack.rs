@@ -1,0 +1,645 @@
+//! The multi-GTA rack: N [`Shard`]s — each one GTA instance with its own
+//! [`GtaConfig`], simulator, lane allocator, metrics and (optionally) an
+//! execution backend behind its own coalescing dispatcher — behind one
+//! [`RoutePolicy`] and ONE shared schedule cache.
+//!
+//! The paper evaluates a single GTA array, but its scheduling space
+//! (dataflow × precision × array resize, Fig. 9) extends naturally to a
+//! rack of heterogeneous instances: a 16-lane shard and a 4-lane shard
+//! explore *different* spaces for the same operator, and the shared
+//! [`Explorer`] memoizes both — the cache keys carry the full
+//! `GtaConfig`, so heterogeneous shards coexist in one memo while shards
+//! with equal configs (equal [`GtaConfig::fingerprint`]s) hit each
+//! other's entries rack-wide.
+//!
+//! Serving contract, rack-wide: exactly one [`Response`] per [`Request`],
+//! sorted by id, failures as data. Shard isolation follows: one shard's
+//! functional failures (or panics) can never drop another shard's
+//! responses, because every failure is already a per-request error.
+//!
+//! [`super::Coordinator`] is the one-shard special case of this layer.
+
+use super::lane_scheduler::{LaneAllocator, LaneUsage, Partition, PartitionId};
+use super::metrics::{Metrics, RackSnapshot, ShardTelemetry};
+use super::{
+    panic_message, AdmissionPolicy, AdmissionQueue, AdmitError, CoalesceConfig, Dispatcher,
+    ExecKind, Executor, Request, Response, ServeOptions, DEFAULT_SCHEDULE_CAPACITY,
+};
+use crate::arch::GtaConfig;
+use crate::ops::{PGemm, TensorOp};
+use crate::runtime::ExecBackend;
+use crate::scheduler::{explorer, Candidate, Explorer};
+use crate::sim::gta::GtaSim;
+use crate::sim::{Platform, SimReport};
+use anyhow::Result;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One GTA instance inside a rack.
+pub struct Shard {
+    pub id: usize,
+    pub gta: GtaConfig,
+    sim: GtaSim,
+    /// The rack-shared §5 exploration state: one memo across all shards,
+    /// keyed by `(PGemm, GtaConfig)` — a shape scheduled here is a cache
+    /// hit on every same-config shard.
+    explorer: Arc<Explorer>,
+    /// Per-shard coalescing dispatcher. Declared before `executor`:
+    /// fields drop in order, so shutdown flushes pending batches into a
+    /// still-live executor.
+    dispatcher: Option<Dispatcher>,
+    executor: Option<Executor>,
+    /// Per-shard multi-tenant lane partitions; [`Rack::allocate_lanes`]
+    /// does the rack-level accounting over these.
+    allocator: Mutex<LaneAllocator>,
+    pub metrics: Arc<Metrics>,
+    /// Requests the routing policy placed here (monotonic).
+    routed: AtomicU64,
+    /// Requests admitted but not yet answered — the load signal
+    /// [`LeastLoaded`] routing reads.
+    in_flight: AtomicU64,
+}
+
+impl Shard {
+    fn new(
+        id: usize,
+        gta: GtaConfig,
+        explorer: Arc<Explorer>,
+        executor: Option<Executor>,
+        coalesce: CoalesceConfig,
+    ) -> Shard {
+        let metrics = Arc::new(Metrics::default());
+        let dispatcher = executor
+            .as_ref()
+            .map(|e| Dispatcher::spawn(e.tx.clone(), coalesce, Arc::clone(&metrics)));
+        Shard {
+            id,
+            gta,
+            sim: GtaSim::new(gta),
+            explorer,
+            dispatcher,
+            executor,
+            allocator: Mutex::new(LaneAllocator::new(gta)),
+            metrics,
+            routed: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+        }
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.executor.is_some()
+    }
+
+    pub fn executor(&self) -> Option<&Executor> {
+        self.executor.as_ref()
+    }
+
+    /// Requests the routing policy has placed on this shard so far.
+    pub fn routed(&self) -> u64 {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently admitted but unanswered.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Schedule a p-GEMM for THIS shard's config through the rack-shared
+    /// explorer (cache hits may have been computed by any shard).
+    pub fn schedule(&self, g: &PGemm) -> Candidate {
+        let (cand, computed) = self.explorer.schedule(g, &self.gta);
+        self.metrics.record_cache(!computed);
+        cand
+    }
+
+    /// Schedule a batch of p-GEMMs concurrently across the explorer's
+    /// worker pool. Results are in input order; repeated shapes within
+    /// the batch (and across earlier rack-wide requests) share one search.
+    pub fn schedule_batch(&self, ops: &[PGemm]) -> Vec<Candidate> {
+        self.explorer
+            .schedule_batch(ops, &self.gta, explorer::default_workers())
+            .into_iter()
+            .map(|(cand, computed)| {
+                self.metrics.record_cache(!computed);
+                cand
+            })
+            .collect()
+    }
+
+    /// Handle one request on this shard. Never panics on functional
+    /// failure: the error travels in [`Response::error`] instead.
+    pub fn handle(&self, req: Request) -> Response {
+        let t0 = Instant::now();
+        let (schedule, sim) = match &req.op {
+            TensorOp::PGemm(g) => {
+                let cand = self.schedule(g);
+                (Some(cand), cand.report)
+            }
+            TensorOp::Vector(_) => (None, self.sim.run(&req.op)),
+        };
+        self.metrics.record_sim(sim.cycles, sim.utilization);
+        let (outputs, error) = match &req.exec {
+            ExecKind::Simulate => (None, None),
+            ExecKind::Functional { artifact, inputs } => match &self.dispatcher {
+                Some(d) => {
+                    self.metrics.record_functional(artifact);
+                    match d.submit(artifact.clone(), inputs.clone()) {
+                        Ok(outs) => (Some(outs), None),
+                        Err(e) => {
+                            self.metrics.record_functional_error();
+                            (None, Some(format!("functional execution of {artifact} failed: {e:#}")))
+                        }
+                    }
+                }
+                None => {
+                    (None, Some(format!("functional request for {artifact:?}: no engine attached")))
+                }
+            },
+        };
+        let latency = t0.elapsed();
+        self.metrics
+            .record_request(matches!(req.op, TensorOp::PGemm(_)), latency);
+        Response { id: req.id, shard: self.id, schedule, sim, outputs, error, latency }
+    }
+
+    /// [`Shard::handle`] hardened for worker threads: a panic anywhere in
+    /// the pipeline becomes an error-carrying response, so a bad request
+    /// can never kill a worker and eat its queue share.
+    pub fn handle_caught(&self, req: Request) -> Response {
+        let id = req.id;
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.handle(req))) {
+            Ok(resp) => resp,
+            Err(p) => Response {
+                id,
+                shard: self.id,
+                schedule: None,
+                sim: SimReport::default(),
+                outputs: None,
+                error: Some(format!("worker panicked: {}", panic_message(&p))),
+                latency: Duration::ZERO,
+            },
+        }
+    }
+
+    /// Allocate `n` contiguous lanes on this shard's array.
+    pub fn allocate_lanes(&self, n: u32) -> Option<Partition> {
+        self.allocator.lock().unwrap().allocate(n)
+    }
+
+    /// Release a partition previously granted by this shard.
+    pub fn release_lanes(&self, id: PartitionId) -> bool {
+        self.allocator.lock().unwrap().release(id)
+    }
+
+    pub fn lane_usage(&self) -> LaneUsage {
+        self.allocator.lock().unwrap().usage()
+    }
+
+    /// Load/identity view for routing policies. Deliberately cheap —
+    /// atomics and copies only, no locks — because the serve feeder
+    /// builds one per shard per routed request.
+    pub fn status(&self) -> ShardStatus {
+        ShardStatus { id: self.id, gta: self.gta, in_flight: self.in_flight() }
+    }
+
+    /// Per-shard telemetry for the rack report.
+    pub fn telemetry(&self) -> ShardTelemetry {
+        ShardTelemetry {
+            shard: self.id,
+            lanes: self.gta.lanes,
+            config_fingerprint: self.gta.fingerprint(),
+            routed: self.routed(),
+            lane_usage: self.lane_usage(),
+            snapshot: self.metrics.snapshot(),
+        }
+    }
+}
+
+/// What a routing policy sees of each shard at decision time. Capacity
+/// signals derivable from the config (e.g. `gta.lanes`) live in `gta`;
+/// lane-allocator occupancy is intentionally absent — reading it takes
+/// the allocator lock, and routing runs once per request.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStatus {
+    pub id: usize,
+    pub gta: GtaConfig,
+    pub in_flight: u64,
+}
+
+/// Places each request on a shard. `serve` routes from a single feeder
+/// thread in submission order, so a policy that is a deterministic
+/// function of (its own state, the request, the statuses) yields a
+/// reproducible assignment for a fixed stream.
+pub trait RoutePolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Index into `shards` (`len ≥ 1`). Out-of-range picks are clamped
+    /// by the rack.
+    fn route(&self, req: &Request, shards: &[ShardStatus]) -> usize;
+}
+
+/// Strict rotation over the shards, independent of load or shape.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoutePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&self, _req: &Request, shards: &[ShardStatus]) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % shards.len().max(1)
+    }
+}
+
+/// Fewest in-flight requests wins (ties break to the lowest shard id).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl RoutePolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&self, _req: &Request, shards: &[ShardStatus]) -> usize {
+        shards
+            .iter()
+            .min_by_key(|s| (s.in_flight, s.id))
+            .map(|s| s.id)
+            .unwrap_or(0)
+    }
+}
+
+/// Same shape (and artifact) always lands on the same shard: maximizes
+/// same-`(artifact, shape)` coalescing inside that shard's dispatcher
+/// and keeps each shape's schedule hot in exactly one shard's working
+/// set — the Systolic-Tensor-Array observation that array-shape
+/// diversity pays when work with an affinity stays put.
+#[derive(Debug, Default)]
+pub struct ShapeAffinity;
+
+impl RoutePolicy for ShapeAffinity {
+    fn name(&self) -> &'static str {
+        "shape-affinity"
+    }
+
+    fn route(&self, req: &Request, shards: &[ShardStatus]) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        req.op.hash(&mut h);
+        if let ExecKind::Functional { artifact, .. } = &req.exec {
+            artifact.hash(&mut h);
+        }
+        (h.finish() as usize) % shards.len().max(1)
+    }
+}
+
+/// Look up a routing policy by its CLI name.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn RoutePolicy>> {
+    match name {
+        "rr" | "round-robin" => Some(Box::new(RoundRobin::default())),
+        "least" | "least-loaded" => Some(Box::new(LeastLoaded)),
+        "affinity" | "shape-affinity" => Some(Box::new(ShapeAffinity)),
+        _ => None,
+    }
+}
+
+/// A response for a request that never reached a shard worker.
+fn unserved_response(id: u64, shard: usize, msg: String) -> Response {
+    Response {
+        id,
+        shard,
+        schedule: None,
+        sim: SimReport::default(),
+        outputs: None,
+        error: Some(msg),
+        latency: Duration::ZERO,
+    }
+}
+
+/// N GTA shards behind one routing policy and one shared schedule cache.
+pub struct Rack {
+    shards: Vec<Arc<Shard>>,
+    /// The rack-shared exploration state (exposed so callers can read
+    /// memo-level hit/miss/eviction counters across the whole rack).
+    pub explorer: Arc<Explorer>,
+    policy: Box<dyn RoutePolicy>,
+    next_id: AtomicU64,
+}
+
+impl Rack {
+    /// Simulation-only rack: one shard per config, no execution backends.
+    pub fn sim_only(configs: Vec<GtaConfig>, policy: Box<dyn RoutePolicy>) -> Rack {
+        assert!(!configs.is_empty(), "a rack needs at least one shard");
+        let explorer = Arc::new(Explorer::with_capacity(DEFAULT_SCHEDULE_CAPACITY));
+        let shards = configs
+            .into_iter()
+            .enumerate()
+            .map(|(i, gta)| {
+                Arc::new(Shard::new(i, gta, Arc::clone(&explorer), None, CoalesceConfig::default()))
+            })
+            .collect();
+        Rack { shards, explorer, policy, next_id: AtomicU64::new(0) }
+    }
+
+    /// A rack whose every shard gets its own execution backend from
+    /// `make` (called with the shard index, on that shard's executor
+    /// thread) and its own coalescing dispatcher — batching is per-shard
+    /// by construction.
+    pub fn with_backend<F>(
+        configs: Vec<GtaConfig>,
+        make: F,
+        coalesce: CoalesceConfig,
+        policy: Box<dyn RoutePolicy>,
+    ) -> Result<Rack>
+    where
+        F: Fn(usize) -> Result<Box<dyn ExecBackend>> + Send + Sync + 'static,
+    {
+        assert!(!configs.is_empty(), "a rack needs at least one shard");
+        let explorer = Arc::new(Explorer::with_capacity(DEFAULT_SCHEDULE_CAPACITY));
+        let make = Arc::new(make);
+        let mut shards = Vec::with_capacity(configs.len());
+        for (i, gta) in configs.into_iter().enumerate() {
+            let mk = Arc::clone(&make);
+            let executor = Executor::spawn_backend(move || mk(i))?;
+            shards.push(Arc::new(Shard::new(
+                i,
+                gta,
+                Arc::clone(&explorer),
+                Some(executor),
+                coalesce,
+            )));
+        }
+        Ok(Rack { shards, explorer, policy, next_id: AtomicU64::new(0) })
+    }
+
+    pub fn shards(&self) -> &[Arc<Shard>] {
+        &self.shards
+    }
+
+    pub fn shard(&self, i: usize) -> &Arc<Shard> {
+        &self.shards[i]
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Current status of every shard (what the policy sees).
+    pub fn statuses(&self) -> Vec<ShardStatus> {
+        self.shards.iter().map(|s| s.status()).collect()
+    }
+
+    /// Pick a shard for `req` (does not mark it routed or in flight).
+    pub fn route(&self, req: &Request) -> usize {
+        let statuses = self.statuses();
+        self.policy.route(req, &statuses).min(self.shards.len() - 1)
+    }
+
+    /// Handle one request synchronously on whichever shard the policy
+    /// picks.
+    pub fn handle(&self, req: Request) -> Response {
+        self.handle_on(req, Shard::handle)
+    }
+
+    /// [`Rack::handle`] hardened against panics (see
+    /// [`Shard::handle_caught`]).
+    pub fn handle_caught(&self, req: Request) -> Response {
+        self.handle_on(req, Shard::handle_caught)
+    }
+
+    fn handle_on(&self, req: Request, run: impl Fn(&Shard, Request) -> Response) -> Response {
+        let sidx = self.route(&req);
+        let shard = &self.shards[sidx];
+        shard.routed.fetch_add(1, Ordering::Relaxed);
+        shard.in_flight.fetch_add(1, Ordering::Relaxed);
+        let resp = run(shard, req);
+        shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+        resp
+    }
+
+    /// Serve a batch of requests across the rack on `workers` threads
+    /// through the default admission queue (blocking backpressure).
+    pub fn serve(&self, requests: Vec<Request>, workers: usize) -> Vec<Response> {
+        self.serve_with(requests, ServeOptions::with_workers(workers))
+    }
+
+    /// [`Rack::serve`] with explicit admission-queue knobs. Each request
+    /// is routed (single feeder thread, submission order — deterministic
+    /// for a deterministic policy), admitted to the shared bounded queue,
+    /// and handled by its shard; functional work coalesces inside that
+    /// shard's own dispatcher. Exactly one response per request, sorted
+    /// by id — a shard's failures never drop another shard's responses.
+    pub fn serve_with(&self, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
+        let n = requests.len();
+        let queue = Arc::new(AdmissionQueue::<(usize, Request)>::new(opts.queue_capacity));
+        let (tx, rx) = mpsc::channel::<Response>();
+        let mut handles = Vec::new();
+        for w in 0..opts.workers.max(1) {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let shards: Vec<Arc<Shard>> = self.shards.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("gta-worker-{w}"))
+                    .spawn(move || {
+                        while let Some((sidx, req)) = queue.pop() {
+                            let shard = &shards[sidx];
+                            let resp = shard.handle_caught(req);
+                            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            if tx.send(resp).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+        // Feeder: route, then admit with backpressure. Under `Block` this
+        // thread stalls until workers free a slot; under `Reject` an
+        // over-capacity request gets one requeue attempt, then a Busy
+        // response. Admission counters land on the routed shard's metrics.
+        for req in requests {
+            let sidx = self.route(&req);
+            let shard = &self.shards[sidx];
+            shard.routed.fetch_add(1, Ordering::Relaxed);
+            shard.in_flight.fetch_add(1, Ordering::Relaxed);
+            match queue.admit((sidx, req), opts.policy) {
+                Ok(()) => shard.metrics.record_queue_depth(queue.depth()),
+                Err(((sidx, req), AdmitError::Busy)) => {
+                    shard.metrics.record_admission_requeued();
+                    std::thread::sleep(Duration::from_micros(100));
+                    match queue.admit((sidx, req), AdmissionPolicy::Reject) {
+                        Ok(()) => shard.metrics.record_queue_depth(queue.depth()),
+                        Err(((sidx, req), _)) => {
+                            shard.metrics.record_admission_rejected();
+                            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            let _ = tx.send(unserved_response(
+                                req.id,
+                                sidx,
+                                "busy: admission queue at capacity".to_string(),
+                            ));
+                        }
+                    }
+                }
+                Err(((sidx, req), AdmitError::Closed)) => {
+                    shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    let _ = tx.send(unserved_response(
+                        req.id,
+                        sidx,
+                        "admission queue closed".to_string(),
+                    ));
+                }
+            }
+        }
+        queue.close();
+        drop(tx);
+        let mut out: Vec<Response> = rx.into_iter().collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        assert_eq!(out.len(), n, "serve must yield exactly one response per request");
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Rack-wide telemetry: per-shard counters plus the aggregate rollup.
+    pub fn snapshot(&self) -> RackSnapshot {
+        RackSnapshot::from_shards(self.shards.iter().map(|s| s.telemetry()).collect())
+    }
+
+    /// Rack-level free-lane count across every shard.
+    pub fn free_lanes(&self) -> u32 {
+        self.shards.iter().map(|s| s.lane_usage().free).sum()
+    }
+
+    /// Allocate `n` contiguous lanes on the shard with the most free
+    /// lanes that can take them (ties break to the lowest shard id);
+    /// falls through to less-free shards on fragmentation/mask limits.
+    pub fn allocate_lanes(&self, n: u32) -> Option<(usize, Partition)> {
+        // snapshot occupancy once, then sort the snapshot — the key
+        // must not re-read a mutex-guarded value mid-sort
+        let mut order: Vec<(usize, u32)> =
+            self.shards.iter().map(|s| (s.id, s.lane_usage().free)).collect();
+        order.sort_by_key(|&(id, free)| (std::cmp::Reverse(free), id));
+        for (id, _) in order {
+            if let Some(p) = self.shards[id].allocate_lanes(n) {
+                return Some((id, p));
+            }
+        }
+        None
+    }
+
+    /// Release a partition granted by [`Rack::allocate_lanes`].
+    pub fn release_lanes(&self, shard: usize, id: PartitionId) -> bool {
+        self.shards.get(shard).is_some_and(|s| s.release_lanes(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::VectorKind;
+    use crate::precision::Precision;
+
+    fn sim_rack(lanes: &[u32], policy: Box<dyn RoutePolicy>) -> Rack {
+        Rack::sim_only(lanes.iter().map(|&l| GtaConfig::with_lanes(l)).collect(), policy)
+    }
+
+    fn sim_req(id: u64) -> Request {
+        Request {
+            id,
+            op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+            exec: ExecKind::Simulate,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_and_least_loaded_picks_idle() {
+        let rack = sim_rack(&[16, 16, 16], Box::new(RoundRobin::default()));
+        let picks: Vec<usize> = (0..6).map(|i| rack.route(&sim_req(i))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+
+        let rack = sim_rack(&[16, 16, 16], Box::new(LeastLoaded));
+        rack.shard(0).in_flight.store(5, Ordering::Relaxed);
+        rack.shard(1).in_flight.store(1, Ordering::Relaxed);
+        rack.shard(2).in_flight.store(3, Ordering::Relaxed);
+        assert_eq!(rack.route(&sim_req(0)), 1);
+    }
+
+    #[test]
+    fn shape_affinity_is_a_pure_function_of_the_shape() {
+        let rack = sim_rack(&[16, 16, 16, 16], Box::new(ShapeAffinity));
+        let a = Request {
+            id: 0,
+            op: TensorOp::gemm(96, 169, 576, Precision::Int8),
+            exec: ExecKind::Simulate,
+        };
+        let b = Request {
+            id: 99,
+            op: TensorOp::gemm(96, 169, 576, Precision::Int8),
+            exec: ExecKind::Simulate,
+        };
+        let c = Request {
+            id: 1,
+            op: TensorOp::vector(4096, Precision::Fp32, VectorKind::Map),
+            exec: ExecKind::Simulate,
+        };
+        assert_eq!(rack.route(&a), rack.route(&b), "same shape, same shard — id irrelevant");
+        let _ = rack.route(&c); // different shape may differ; must not panic
+    }
+
+    #[test]
+    fn sim_rack_serves_across_shards_with_one_response_per_request() {
+        let rack = sim_rack(&[16, 4], Box::new(RoundRobin::default()));
+        let reqs: Vec<Request> = (0..16).map(sim_req).collect();
+        let resps = rack.serve(reqs, 4);
+        assert_eq!(resps.len(), 16);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.is_ok());
+            assert_eq!(r.shard, i % 2, "round-robin assignment recorded on the response");
+        }
+        let snap = rack.snapshot();
+        assert_eq!(snap.aggregate.requests, 16);
+        assert_eq!(snap.shards[0].routed, 8);
+        assert_eq!(snap.shards[1].routed, 8);
+        // same shape on two HETEROGENEOUS configs: two searches rack-wide
+        // (one per distinct config), everything else memo hits
+        assert_eq!(snap.aggregate.schedule_cache_misses, 2);
+        assert_eq!(snap.aggregate.schedule_cache_hits, 14);
+        assert_eq!(rack.explorer.selected.misses(), 2);
+    }
+
+    #[test]
+    fn rack_lane_accounting_spreads_and_aggregates() {
+        let rack = sim_rack(&[16, 16], Box::new(RoundRobin::default()));
+        assert_eq!(rack.free_lanes(), 32);
+        let (s1, p1) = rack.allocate_lanes(8).unwrap();
+        let (s2, _p2) = rack.allocate_lanes(8).unwrap();
+        assert_ne!(s1, s2, "second grant goes to the now-freer shard");
+        assert_eq!(rack.free_lanes(), 16);
+        // a 12-lane ask no longer fits either shard contiguously
+        assert!(rack.allocate_lanes(12).is_none());
+        assert!(rack.release_lanes(s1, p1.id));
+        assert!(!rack.release_lanes(s1, p1.id), "double release rejected");
+        assert!(!rack.release_lanes(99, p1.id), "unknown shard rejected");
+        assert_eq!(rack.free_lanes(), 24);
+        let usage = rack.shard(s2).lane_usage();
+        assert_eq!((usage.total, usage.free, usage.live_partitions), (16, 8, 1));
+    }
+}

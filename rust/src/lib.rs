@@ -31,8 +31,15 @@
 //!   `ExecBackend` (the PJRT engine behind the `pjrt` feature, a clean-
 //!   failing stub offline, or the always-available `SoftBackend` limb
 //!   oracle) owned by a dedicated executor thread, fed by a coalescing
-//!   dispatcher that batches same-shape functional tiles, behind a
-//!   bounded admission queue with backpressure (see `docs/serving.md`)
+//!   dispatcher (optionally adaptive-window) that batches same-shape
+//!   functional tiles, behind a bounded admission queue with
+//!   backpressure (see `docs/serving.md`). Since the rack refactor the
+//!   serving machinery lives in `coordinator::rack`: a `Rack` shards
+//!   requests across N GTA instances via a `RoutePolicy`
+//!   (round-robin / least-loaded / shape-affinity), every shard owning
+//!   its own config + lane allocator + backend + metrics while ALL
+//!   shards share one `scheduler::Explorer` memo; `Coordinator` is the
+//!   one-shard special case (see `docs/sharding.md`)
 //! * [`report`] — regenerates every table and figure of the paper
 
 pub mod arch;

@@ -25,10 +25,14 @@ USAGE:
   gta verify [--artifacts DIR]      run every AOT artifact via PJRT and
                                     check numerics against the rust oracle
   gta serve --requests N [--artifacts DIR] [--workers W] [--backend pjrt|soft]
+            [--shards N] [--policy rr|least|affinity] [--shard-lanes L1,L2,...]
                                     e2e driver: mixed request stream through
                                     the batched (admission queue + coalescing)
                                     serve path; `--backend soft` runs the
-                                    rust-oracle backend (no artifacts needed)
+                                    rust-oracle backend (no artifacts needed);
+                                    `--shards N` serves through a multi-GTA
+                                    rack (per-shard utilization in the
+                                    summary; see docs/sharding.md)
 ";
 
 fn main() -> Result<()> {
@@ -252,14 +256,28 @@ fn cmd_verify(flags: &Flags) -> Result<()> {
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let n = flags.get_u64("requests", 64);
     let workers = flags.get_u64("workers", 4) as usize;
+    let shards = flags.get_u64("shards", 1) as usize;
+    let policy = flags.get("policy").unwrap_or("least");
+    let lanes: Vec<u32> = flags
+        .get("shard-lanes")
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    let sharded = shards > 1 || !lanes.is_empty();
     let summary = match flags.get("backend").unwrap_or("pjrt") {
+        "soft" if sharded => {
+            gta::serve::run_mixed_stream_soft_rack(n, workers, shards, &lanes, policy)?
+        }
         "soft" => gta::serve::run_mixed_stream_soft(n, workers)?,
         "pjrt" => {
             let dir: std::path::PathBuf = flags
                 .get("artifacts")
                 .map(Into::into)
                 .unwrap_or_else(default_artifact_dir);
-            gta::serve::run_mixed_stream(dir, n, workers)?
+            if sharded {
+                gta::serve::run_mixed_stream_rack(dir, n, workers, shards, &lanes, policy)?
+            } else {
+                gta::serve::run_mixed_stream(dir, n, workers)?
+            }
         }
         other => bail!("unknown backend {other:?} (pjrt|soft)"),
     };

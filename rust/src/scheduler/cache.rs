@@ -21,6 +21,14 @@
 //! [`Memo::with_capacity`] additionally sheds least-recently-used entries
 //! per shard, so a long-lived server seeing unbounded distinct shapes
 //! stays bounded in memory.
+//!
+//! **Rack sharing:** a multi-GTA rack (`coordinator::rack`) hands ONE
+//! `Explorer` — hence one set of these memos — to every rack shard. The
+//! keys carry the full [`GtaConfig`] (its compact identity is
+//! [`GtaConfig::fingerprint`], which rack telemetry reports), so
+//! heterogeneous shards coexist in the same memo without collision,
+//! while a shape scheduled on any shard is a rack-wide hit for every
+//! shard with the same config.
 
 use super::{Candidate, ScheduleConfig};
 use crate::arch::GtaConfig;

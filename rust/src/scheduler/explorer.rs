@@ -15,7 +15,11 @@
 //!   candidate. Strict domination in both metrics implies a strictly
 //!   larger sum of normalized squares, and a strictly-dominated candidate
 //!   can never set either normalization minimum, so `select` over the
-//!   survivors provably equals `select` over the full space.
+//!   survivors provably equals `select` over the full space. The bounds
+//!   are precision-aware (a limb-work cycles floor) and the cheap SIMD
+//!   fallback is costed first as an extra dominator, so high-limb
+//!   (FP64/INT64) sweeps — whose spaces balloon with limbs² — prune
+//!   hardest.
 //!
 //! Batch entry points ([`explore_batch`], [`schedule_batch`], and the
 //! cache-sharing [`Explorer`]) distribute whole operators across the
@@ -135,9 +139,14 @@ pub struct PruneStats {
 /// config, computed without running the full systolic/energy model:
 ///
 /// * cycles ≥ fold-count × stream depth of the adjusted footprint (the
-///   model adds fill + drain on top); for Cover cases the early-fill
-///   recovery can shave at most `EARLY_FILL_RECOVERY` of that, so the
-///   bound scales by the residue.
+///   model adds fill + drain on top), and never below the **limb-work
+///   floor**: the array retires at most `r·c` limb-MACs per cycle, so an
+///   `n`-limb precision (whose word MACs each cost `n²` limb products)
+///   needs at least `limb_macs / (r·c)` cycles regardless of mapping —
+///   the precision-aware bound that keeps FP64/INT64 sweeps tight. For
+///   Cover cases the early-fill recovery can shave at most
+///   `EARLY_FILL_RECOVERY` of the total, so the bound scales by the
+///   residue.
 /// * memory ≥ stationary fill + streamed re-reads + output writes +
 ///   K-segmentation merge traffic, plus the compulsory DRAM traffic —
 ///   exactly the model's terms minus the non-negative partial-sum
@@ -153,7 +162,8 @@ fn lower_bounds(g: &PGemm, cfg: ScheduleConfig, gta: &GtaConfig) -> (u64, u64) {
     let (adjusted, merge_elems) = super::apply_k_segments(wrapped, cfg.dataflow, s, g, r, c);
     let fr = adjusted.rows.div_ceil(r);
     let fc = adjusted.cols.div_ceil(c);
-    let base = fr * fc * adjusted.temporal;
+    let limb_floor = mpra::limb_macs(g).div_ceil(r * c);
+    let base = (fr * fc * adjusted.temporal).max(limb_floor);
     let cycles_lb = match coverage {
         Coverage::Cover1 | Coverage::Cover2 | Coverage::Cover3 => {
             (base as f64 * (1.0 - EARLY_FILL_RECOVERY)).floor() as u64
@@ -173,9 +183,16 @@ fn lower_bounds(g: &PGemm, cfg: ScheduleConfig, gta: &GtaConfig) -> (u64, u64) {
 
 /// Selection-only sweep with early pruning: a config is skipped when some
 /// already-evaluated candidate beats its lower bounds *strictly* in both
-/// cycles and memory access. Returns the surviving candidates (in
-/// enumeration order) and the prune statistics; `select` over the
-/// survivors equals `select` over the full space.
+/// cycles and memory access. The SIMD fallback — O(1) to cost, with
+/// cycles scaling limbs² — is evaluated FIRST and seeds the dominator
+/// set, so high-limb (FP64/INT64) spaces prune against it before any
+/// systolic candidate is costed. Returns the surviving candidates (in
+/// enumeration order, SIMD last as in [`configs`]) and the prune
+/// statistics; `select` over the survivors equals `select` over the full
+/// space — every dominator (the SIMD fallback included) is itself a
+/// survivor, so a pruned candidate is strictly dominated by a member of
+/// the surviving set: it can neither win the least-sum-of-squares pick
+/// nor set either normalization minimum.
 pub fn explore_pruned(g: &PGemm, gta: &GtaConfig) -> (Vec<Candidate>, PruneStats) {
     explore_pruned_into(g, gta, None)
 }
@@ -185,26 +202,30 @@ fn explore_pruned_into(
     gta: &GtaConfig,
     evals: Option<&EvalCache>,
 ) -> (Vec<Candidate>, PruneStats) {
+    let eval_one = |cfg: ScheduleConfig| match evals {
+        Some(cache) => cache.get_or_compute((*g, *gta, cfg), || evaluate(g, cfg, gta)).0,
+        None => evaluate(g, cfg, gta),
+    };
+    let cfgs = configs(g, gta);
+    let (simd_cfg, systolic) = cfgs.split_last().expect("configs is never empty");
+    debug_assert_eq!(simd_cfg.dataflow, Dataflow::Simd);
+    let simd = eval_one(*simd_cfg);
     let mut survivors: Vec<Candidate> = Vec::new();
-    let mut stats = PruneStats::default();
-    for cfg in configs(g, gta) {
-        if cfg.dataflow != Dataflow::Simd {
-            let (cycles_lb, mem_lb) = lower_bounds(g, cfg, gta);
-            let dominated = survivors
-                .iter()
-                .any(|y| y.report.cycles < cycles_lb && y.report.memory_access() < mem_lb);
-            if dominated {
-                stats.pruned += 1;
-                continue;
-            }
+    let mut stats = PruneStats { evaluated: 1, pruned: 0 };
+    for cfg in systolic {
+        let (cycles_lb, mem_lb) = lower_bounds(g, *cfg, gta);
+        let dominated = std::iter::once(&simd)
+            .chain(survivors.iter())
+            .any(|y| y.report.cycles < cycles_lb && y.report.memory_access() < mem_lb);
+        if dominated {
+            stats.pruned += 1;
+            continue;
         }
-        let cand = match evals {
-            Some(cache) => cache.get_or_compute((*g, *gta, cfg), || evaluate(g, cfg, gta)).0,
-            None => evaluate(g, cfg, gta),
-        };
+        survivors.push(eval_one(*cfg));
         stats.evaluated += 1;
-        survivors.push(cand);
     }
+    // enumeration order is preserved: SIMD comes last, as in `configs`
+    survivors.push(simd);
     (survivors, stats)
 }
 
@@ -399,6 +420,38 @@ mod tests {
             }
         }
         assert!(pruned > 0, "expected the prune pass to skip at least one candidate");
+    }
+
+    #[test]
+    fn high_limb_sweeps_prune_and_still_select_the_true_winner() {
+        // FP64/INT64 analogues of the skewed prune-territory shapes:
+        // limbs² footprints tighten the limb-work floor and the
+        // SIMD-seeded dominator, so pruning must fire somewhere while
+        // selection stays provably exact everywhere
+        let mut pruned = 0usize;
+        for g in [
+            PGemm::new(512, 8, 8, Precision::Int64),
+            PGemm::new(8, 512, 8, Precision::Fp64),
+            PGemm::new(8, 8, 2048, Precision::Fp64),
+            PGemm::new(1024, 16, 16, Precision::Int64),
+            PGemm::new(1, 1, 4096, Precision::Fp64),
+        ] {
+            for lanes in [16u32, 64] {
+                let cfg = GtaConfig::with_lanes(lanes);
+                let full = select(&explore(&g, &cfg));
+                let (survivors, stats) = explore_pruned(&g, &cfg);
+                let picked = select(&survivors);
+                assert_eq!(full.config, picked.config, "{g:?} lanes={lanes}");
+                assert_eq!(full.report, picked.report);
+                assert_eq!(
+                    stats.evaluated + stats.pruned,
+                    configs(&g, &cfg).len(),
+                    "every config accounted for: {g:?} lanes={lanes}"
+                );
+                pruned += stats.pruned;
+            }
+        }
+        assert!(pruned > 0, "high-limb sweeps must prune somewhere");
     }
 
     #[test]

@@ -8,15 +8,20 @@
 //! Two backends drive the same path: the PJRT engine over AOT artifacts
 //! ([`run_mixed_stream`]) and the in-tree rust-oracle
 //! [`crate::runtime::SoftBackend`] ([`run_mixed_stream_soft`]), which
-//! needs no artifacts and therefore runs in every build.
+//! needs no artifacts and therefore runs in every build. Both also run
+//! shard-aware: the `*_rack` drivers replay the identical stream across
+//! a multi-GTA [`Rack`] (`gta serve --shards N`), with per-shard
+//! utilization/traffic in the summary.
 
-use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request};
+use crate::coordinator::metrics::RackSnapshot;
+use crate::coordinator::rack::{policy_by_name, Rack, RoutePolicy};
+use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request, Response};
 use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
-use crate::runtime::{ExecBackend, HostTensor, SoftBackend};
+use crate::runtime::{Engine, ExecBackend, HostTensor, SoftBackend};
 use crate::util::rng::Rng;
 use crate::GtaConfig;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -31,6 +36,35 @@ pub fn soft_coordinator(gta: GtaConfig, coalesce: CoalesceConfig) -> Result<Arc<
         || Ok(Box::new(SoftBackend) as Box<dyn ExecBackend>),
         coalesce,
     )?))
+}
+
+/// A multi-GTA rack of soft-backend shards (one [`SoftBackend`] per
+/// shard, each behind its own coalescing dispatcher).
+pub fn soft_rack(
+    configs: Vec<GtaConfig>,
+    coalesce: CoalesceConfig,
+    policy: Box<dyn RoutePolicy>,
+) -> Result<Arc<Rack>> {
+    Ok(Arc::new(Rack::with_backend(
+        configs,
+        |_shard| Ok(Box::new(SoftBackend) as Box<dyn ExecBackend>),
+        coalesce,
+        policy,
+    )?))
+}
+
+/// Per-shard configs for a rack of `shards` instances: `lanes[i]` lanes
+/// for shard `i` (cycled when shorter), 16-lane instances when empty.
+pub fn shard_configs(shards: usize, lanes: &[u32]) -> Vec<GtaConfig> {
+    (0..shards.max(1))
+        .map(|i| {
+            if lanes.is_empty() {
+                GtaConfig::lanes16()
+            } else {
+                GtaConfig::with_lanes(lanes[i % lanes.len()])
+            }
+        })
+        .collect()
 }
 
 /// A deterministic 64×64 INT8 MPRA functional tile request (the
@@ -67,6 +101,13 @@ pub struct ServeSummary {
     pub coalesced_batches: u64,
     /// Largest coalesced batch.
     pub max_batch: u64,
+    /// Coalescing window at end of run (µs): the static config, or the
+    /// adaptive controller's chosen value (rack runs report the maximum
+    /// across shards).
+    pub coalesce_window_us: u64,
+    /// Per-shard telemetry when the run went through a [`Rack`] (`None`
+    /// for the single-coordinator drivers).
+    pub shards: Option<RackSnapshot>,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub total_sim_cycles: u64,
@@ -80,10 +121,10 @@ pub struct ServeSummary {
 
 impl ServeSummary {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "e2e serve: {} requests ({} functional, {} verified ok, {} failed, {} errored)\n\
              wall {:.3}s -> {:.1} req/s; {} p-GEMMs batch-prescheduled; \
-             {} coalesced dispatches (max batch {}); simulated GTA cycles {}\n{}",
+             {} coalesced dispatches (max batch {}, window {}us); simulated GTA cycles {}\n{}",
             self.requests,
             self.functional,
             self.verified_ok,
@@ -94,9 +135,14 @@ impl ServeSummary {
             self.prescheduled,
             self.coalesced_batches,
             self.max_batch,
+            self.coalesce_window_us,
             self.total_sim_cycles,
             self.metrics.render()
-        )
+        );
+        if let Some(rack) = &self.shards {
+            s.push_str(&rack.render());
+        }
+        s
     }
 }
 
@@ -215,36 +261,92 @@ pub fn run_stream(
     expected: &[Option<Vec<i32>>],
     workers: usize,
 ) -> ServeSummary {
-    let n = requests.len() as u64;
-    let functional_ids: HashSet<u64> = requests
-        .iter()
-        .filter(|r| matches!(r.exec, ExecKind::Functional { .. }))
-        .map(|r| r.id)
-        .collect();
-
+    let functional_ids = functional_ids(&requests);
     let t0 = Instant::now();
     // Batch pre-pass: explore the schedule space of every distinct
     // p-GEMM in the stream concurrently, so the request workers below
     // hit the memo instead of searching inline.
+    let prescheduled = coord.schedule_batch(&distinct_gemms(&requests)).len() as u64;
+    let responses = coord.serve(requests, workers);
+    let wall = t0.elapsed().as_secs_f64();
+    summarize(&responses, expected, &functional_ids, wall, prescheduled, coord.metrics.snapshot(), None)
+}
+
+/// Replay `requests` through a shard-aware [`Rack`] on `workers`
+/// threads, with the same verification contract as [`run_stream`]. The
+/// schedule pre-pass warms the rack-shared cache once per DISTINCT shard
+/// config, so every shard's workers hit the memo no matter where the
+/// router places each request; the summary carries per-shard telemetry.
+pub fn run_stream_rack(
+    rack: &Arc<Rack>,
+    requests: Vec<Request>,
+    expected: &[Option<Vec<i32>>],
+    workers: usize,
+) -> ServeSummary {
+    let functional_ids = functional_ids(&requests);
+    let t0 = Instant::now();
+    let gemms = distinct_gemms(&requests);
+    let mut seen_cfgs = HashSet::new();
+    let mut prescheduled = 0u64;
+    for shard in rack.shards() {
+        if seen_cfgs.insert(shard.gta) {
+            prescheduled += shard.schedule_batch(&gemms).len() as u64;
+        }
+    }
+    let responses = rack.serve(requests, workers);
+    let wall = t0.elapsed().as_secs_f64();
+    let rs = rack.snapshot();
+    summarize(
+        &responses,
+        expected,
+        &functional_ids,
+        wall,
+        prescheduled,
+        rs.aggregate.clone(),
+        Some(rs),
+    )
+}
+
+/// Ids of the functional requests in a stream.
+fn functional_ids(requests: &[Request]) -> HashSet<u64> {
+    requests
+        .iter()
+        .filter(|r| matches!(r.exec, ExecKind::Functional { .. }))
+        .map(|r| r.id)
+        .collect()
+}
+
+/// Distinct p-GEMM shapes in a stream, in first-seen order.
+fn distinct_gemms(requests: &[Request]) -> Vec<PGemm> {
     let mut seen = HashSet::new();
-    let gemms: Vec<PGemm> = requests
+    requests
         .iter()
         .filter_map(|r| match &r.op {
             TensorOp::PGemm(g) => Some(*g),
             TensorOp::Vector(_) => None,
         })
         .filter(|g| seen.insert(*g))
-        .collect();
-    let prescheduled = coord.schedule_batch(&gemms).len() as u64;
-    let responses = coord.serve(requests, workers);
-    let wall = t0.elapsed().as_secs_f64();
+        .collect()
+}
 
+/// Verify responses against the oracle and fold everything into a
+/// [`ServeSummary`] — shared by the coordinator and rack drivers.
+fn summarize(
+    responses: &[Response],
+    expected: &[Option<Vec<i32>>],
+    functional_ids: &HashSet<u64>,
+    wall: f64,
+    prescheduled: u64,
+    snap: crate::coordinator::metrics::Snapshot,
+    shards: Option<RackSnapshot>,
+) -> ServeSummary {
+    let n = responses.len() as u64;
     let mut functional = 0u64;
     let mut ok = 0u64;
     let mut failed = 0u64;
     let mut errors = 0u64;
     let mut total_cycles = 0u64;
-    for r in &responses {
+    for r in responses {
         total_cycles += r.sim.cycles;
         if r.error.is_some() {
             errors += 1;
@@ -267,7 +369,6 @@ pub fn run_stream(
             _ => failed += 1,
         }
     }
-    let snap = coord.metrics.snapshot();
     ServeSummary {
         requests: n,
         functional,
@@ -277,6 +378,8 @@ pub fn run_stream(
         prescheduled,
         coalesced_batches: snap.batches,
         max_batch: snap.max_batch,
+        coalesce_window_us: snap.coalesce_window_us,
+        shards,
         wall_seconds: wall,
         throughput_rps: n as f64 / wall.max(1e-9),
         total_sim_cycles: total_cycles,
@@ -299,4 +402,51 @@ pub fn run_mixed_stream_soft(n: u64, workers: usize) -> Result<ServeSummary> {
     let coord = soft_coordinator(GtaConfig::lanes16(), CoalesceConfig::default())?;
     let (requests, expected) = mixed_stream(n);
     Ok(run_stream(&coord, requests, &expected, workers))
+}
+
+/// Resolve a routing policy name or fail with the accepted spellings.
+fn parse_policy(policy: &str) -> Result<Box<dyn RoutePolicy>> {
+    policy_by_name(policy)
+        .ok_or_else(|| anyhow!("unknown routing policy {policy:?} (rr|least|affinity)"))
+}
+
+/// Replay `n` mixed requests across a `shards`-wide soft-backend rack
+/// (`gta serve --backend soft --shards N`): one `SoftBackend` +
+/// dispatcher per shard, `lanes[i]` lanes per shard (16 when empty),
+/// routing per `policy` (`rr` | `least` | `affinity`).
+pub fn run_mixed_stream_soft_rack(
+    n: u64,
+    workers: usize,
+    shards: usize,
+    lanes: &[u32],
+    policy: &str,
+) -> Result<ServeSummary> {
+    let rack = soft_rack(
+        shard_configs(shards, lanes),
+        CoalesceConfig::default(),
+        parse_policy(policy)?,
+    )?;
+    let (requests, expected) = mixed_stream(n);
+    Ok(run_stream_rack(&rack, requests, &expected, workers))
+}
+
+/// Replay `n` mixed requests across a PJRT-backed rack: every shard
+/// compiles the AOT artifacts in `artifact_dir` on its own executor
+/// thread (one engine per shard).
+pub fn run_mixed_stream_rack(
+    artifact_dir: PathBuf,
+    n: u64,
+    workers: usize,
+    shards: usize,
+    lanes: &[u32],
+    policy: &str,
+) -> Result<ServeSummary> {
+    let rack = Arc::new(Rack::with_backend(
+        shard_configs(shards, lanes),
+        move |_shard| Ok(Box::new(Engine::load(&artifact_dir)?) as Box<dyn ExecBackend>),
+        CoalesceConfig::default(),
+        parse_policy(policy)?,
+    )?);
+    let (requests, expected) = mixed_stream(n);
+    Ok(run_stream_rack(&rack, requests, &expected, workers))
 }

@@ -1,0 +1,213 @@
+//! E2E: the multi-GTA rack — routing determinism, shard-failure
+//! isolation (one shard's functional errors never drop another shard's
+//! responses; `responses.len() == requests.len()` rack-wide), shared
+//! schedule-cache hit accounting across shards, and the
+//! `Coordinator`-is-a-one-shard-rack compatibility contract. All driven
+//! offline through the soft rust-oracle backend.
+
+use gta::coordinator::rack::{policy_by_name, Rack};
+use gta::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request};
+use gta::precision::Precision;
+use gta::runtime::FAIL_ARTIFACT;
+use gta::serve::{self, gemm_tile_request as gemm_tile, soft_rack};
+use gta::{GtaConfig, TensorOp};
+use std::sync::Arc;
+
+fn sim_req(id: u64, m: u64) -> Request {
+    Request {
+        id,
+        op: TensorOp::gemm(m, 64, 64, Precision::Int8),
+        exec: ExecKind::Simulate,
+    }
+}
+
+fn soft_rack_n(lanes: &[u32], policy: &str) -> Arc<Rack> {
+    soft_rack(
+        lanes.iter().map(|&l| GtaConfig::with_lanes(l)).collect(),
+        CoalesceConfig::default(),
+        policy_by_name(policy).unwrap(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn coordinator_new_is_a_one_shard_rack() {
+    let c = Arc::new(Coordinator::new(GtaConfig::lanes16()));
+    assert_eq!(c.rack().len(), 1);
+    assert_eq!(c.rack().shard(0).gta, c.gta);
+    let resps = c.serve((0..8).map(|i| sim_req(i, 32 + i)).collect(), 2);
+    assert_eq!(resps.len(), 8);
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.shard, 0, "a coordinator's responses all come from shard 0");
+        assert!(r.is_ok());
+    }
+    // the pre-rack metrics field still observes the (only) shard
+    assert_eq!(c.metrics.snapshot().requests, 8);
+    assert_eq!(c.rack().snapshot().aggregate.requests, 8);
+}
+
+#[test]
+fn routing_is_deterministic_for_a_fixed_policy() {
+    // the same stream through two identically-configured racks must land
+    // identically, for both stateful (rr) and stateless (affinity)
+    // deterministic policies
+    for policy in ["rr", "affinity"] {
+        let requests = || -> Vec<Request> {
+            (0..32)
+                .map(|i| {
+                    if i % 3 == 0 {
+                        gemm_tile(i, "mpra_gemm_i8_64", i as i32)
+                    } else {
+                        sim_req(i, 16 + (i % 5) * 16)
+                    }
+                })
+                .collect()
+        };
+        let assignment = |rack: &Arc<Rack>| -> Vec<usize> {
+            rack.serve(requests(), 4).iter().map(|r| r.shard).collect()
+        };
+        let a = assignment(&soft_rack_n(&[16, 16, 4, 4], policy));
+        let b = assignment(&soft_rack_n(&[16, 16, 4, 4], policy));
+        assert_eq!(a, b, "policy {policy} must route a fixed stream reproducibly");
+        if policy == "rr" {
+            let distinct: std::collections::HashSet<usize> = a.iter().copied().collect();
+            assert_eq!(distinct.len(), 4, "round-robin must use every shard: {a:?}");
+        }
+    }
+    // shape affinity specifically: equal (shape, artifact) ⇒ equal shard,
+    // independent of request id and of any load state
+    let rack = soft_rack_n(&[16, 16, 4, 4], "affinity");
+    let resps = rack.serve(
+        vec![
+            gemm_tile(0, "mpra_gemm_i8_64", 1),
+            sim_req(1, 96),
+            gemm_tile(2, "mpra_gemm_i8_64", 2),
+            sim_req(3, 96),
+        ],
+        2,
+    );
+    assert_eq!(resps[0].shard, resps[2].shard, "same artifact+shape, same shard");
+    assert_eq!(resps[1].shard, resps[3].shard, "same sim shape, same shard");
+}
+
+#[test]
+fn shard_failure_isolation_never_drops_other_shards_responses() {
+    // round-robin over 4 shards routes in submission order, so ids with
+    // i % 4 == 2 land on shard 2 — and every one of them fails
+    let rack = soft_rack_n(&[16, 16, 16, 16], "rr");
+    let n = 32u64;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            if i % 4 == 2 {
+                gemm_tile(i, FAIL_ARTIFACT, i as i32)
+            } else {
+                gemm_tile(i, "mpra_gemm_i8_64", i as i32 * 13)
+            }
+        })
+        .collect();
+    let responses = rack.serve(requests, 4);
+    assert_eq!(responses.len(), n as usize, "one response per request, rack-wide");
+    for r in &responses {
+        assert_eq!(r.shard, (r.id % 4) as usize, "round-robin assignment");
+        if r.id % 4 == 2 {
+            assert!(r.error.is_some(), "injected failure must surface on {}", r.id);
+        } else {
+            assert!(r.is_ok(), "healthy shard's request {} must not be poisoned: {:?}", r.id, r.error);
+            assert!(r.outputs.is_some());
+        }
+    }
+    let snap = rack.snapshot();
+    assert_eq!(snap.shards[2].snapshot.functional_errors, 8, "all failures on shard 2");
+    for s in [0usize, 1, 3] {
+        assert_eq!(snap.shards[s].snapshot.functional_errors, 0, "shard {s} unaffected");
+    }
+    assert_eq!(snap.aggregate.functional_errors, 8);
+    assert_eq!(snap.aggregate.requests, n);
+}
+
+#[test]
+fn shared_cache_hits_across_equal_config_shards() {
+    // two identical shards, round-robin: the SAME shape alternates
+    // between them, so only the first request anywhere searches — the
+    // other shard's schedules are rack-wide cache hits
+    let rack = soft_rack_n(&[16, 16], "rr");
+    let responses = rack.serve((0..10).map(|i| sim_req(i, 96)).collect(), 1);
+    assert_eq!(responses.len(), 10);
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.schedule_cache_misses, 1, "one search rack-wide");
+    assert_eq!(snap.aggregate.schedule_cache_hits, 9);
+    assert_eq!(rack.explorer.selected.misses(), 1);
+    // the shard that did NOT run the search still answered requests —
+    // all of them as cache hits
+    let non_searcher = snap
+        .shards
+        .iter()
+        .find(|t| t.snapshot.schedule_cache_misses == 0)
+        .expect("one shard must have served purely off the shared cache");
+    assert!(non_searcher.snapshot.schedule_cache_hits > 0);
+    // both shards picked bit-identical schedules (same config, same memo)
+    let cands: Vec<_> = responses.iter().map(|r| r.schedule.unwrap().config).collect();
+    assert!(cands.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn heterogeneous_shards_coexist_in_one_memo() {
+    // same shape on a 16-lane and a 4-lane shard: two distinct cache
+    // keys (the GtaConfig is in the key), two searches, no collision
+    let rack = soft_rack_n(&[16, 4], "rr");
+    let responses = rack.serve((0..8).map(|i| sim_req(i, 128)).collect(), 2);
+    assert_eq!(responses.len(), 8);
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.schedule_cache_misses, 2, "one search per distinct config");
+    assert_eq!(snap.aggregate.schedule_cache_hits, 6);
+    assert_eq!(rack.explorer.selected.misses(), 2);
+    assert_ne!(
+        snap.shards[0].config_fingerprint, snap.shards[1].config_fingerprint,
+        "heterogeneous shards report distinct config fingerprints"
+    );
+    // responses carry per-shard schedules valid for THAT shard's config
+    for r in &responses {
+        let lanes = rack.shard(r.shard).gta.lanes;
+        assert_eq!(r.schedule.unwrap().config.arrangement.lanes(), lanes);
+    }
+}
+
+#[test]
+fn rack_mixed_stream_end_to_end_with_per_shard_utilization() {
+    // the acceptance-criteria run: a 4-shard soft rack serves the mixed
+    // stream, one response per request, per-shard utilization in the
+    // summary, shared-cache hits observed across shards
+    let summary = serve::run_mixed_stream_soft_rack(64, 4, 4, &[], "least").unwrap();
+    assert_eq!(summary.requests, 64);
+    assert_eq!(summary.errors, 0);
+    assert_eq!(summary.verified_failed, 0);
+    assert_eq!(summary.functional, summary.verified_ok);
+    let rs = summary.shards.as_ref().expect("rack runs carry per-shard telemetry");
+    assert_eq!(rs.shards.len(), 4);
+    assert_eq!(rs.shards.iter().map(|t| t.routed).sum::<u64>(), 64);
+    assert_eq!(rs.aggregate.requests, 64);
+    // identical configs + repeated shapes + least-loaded scatter =>
+    // rack-wide shared-cache hits are inevitable
+    assert!(rs.aggregate.schedule_cache_hits > 0, "expected shared-cache hits across shards");
+    let rendered = summary.render();
+    assert!(rendered.contains("per-shard utilization"), "{rendered}");
+    assert!(rendered.contains("shard 3"), "{rendered}");
+}
+
+#[test]
+fn rack_serve_with_reject_policy_accounts_every_request() {
+    let rack = soft_rack_n(&[16, 16], "least");
+    let requests: Vec<Request> = (0..64).map(|i| sim_req(i, 32)).collect();
+    let opts = gta::coordinator::ServeOptions {
+        workers: 2,
+        queue_capacity: 2,
+        policy: gta::coordinator::AdmissionPolicy::Reject,
+    };
+    let responses = rack.serve_with(requests, opts);
+    assert_eq!(responses.len(), 64, "served or rejected, never lost");
+    let busy = responses.iter().filter(|r| r.error.is_some()).count() as u64;
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.admission_rejected, busy);
+    assert_eq!(snap.aggregate.requests + busy, 64);
+}

@@ -15,7 +15,11 @@ use std::time::Duration;
 fn soft_coordinator(window_ms: u64, max_batch: usize) -> Arc<Coordinator> {
     serve::soft_coordinator(
         GtaConfig::lanes16(),
-        CoalesceConfig { window: Duration::from_millis(window_ms), max_batch },
+        CoalesceConfig {
+            window: Duration::from_millis(window_ms),
+            max_batch,
+            ..Default::default()
+        },
     )
     .unwrap()
 }
