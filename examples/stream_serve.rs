@@ -1,0 +1,77 @@
+//! STREAMING DRIVER: the long-lived `RackSession` ingest/egress surface
+//! — the replacement for batch-in/batch-out serving. One session is
+//! opened over a two-shard soft-backend rack; the driver thread submits
+//! the mixed e2e stream one request at a time (getting back a `Ticket`
+//! per admission) while consuming `Response`s as they complete, out of
+//! submission order. `close()` drains everything in flight and returns
+//! the final summary with per-shard telemetry.
+//!
+//! ```bash
+//! cargo run --release --example stream_serve [N] [workers]
+//! ```
+
+use gta::coordinator::{CoalesceConfig, ServeOptions};
+use gta::serve::{mixed_stream, soft_rack};
+use gta::GtaConfig;
+use std::collections::HashSet;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let rack = soft_rack(
+        vec![GtaConfig::lanes16(), GtaConfig::lanes16()],
+        CoalesceConfig::with_adaptive_window(),
+        gta::coordinator::rack::policy_by_name("least").expect("built-in policy"),
+    )?;
+    println!("streaming {n} mixed requests through one RackSession ({workers} workers)…\n");
+
+    let mut session = rack.open_session(ServeOptions::with_workers(workers));
+    let (requests, _expected) = mixed_stream(n);
+
+    let mut tickets = HashSet::new();
+    let mut completed = 0u64;
+    let mut out_of_order = 0u64;
+    let mut last_id: Option<u64> = None;
+    for req in requests {
+        let ticket = session.submit(req).expect("blocking admission cannot reject");
+        tickets.insert(ticket.id);
+        // interleave: consume whatever has already completed
+        while let Some(resp) = session.try_recv() {
+            assert!(tickets.remove(&resp.id), "response without a ticket");
+            if last_id.is_some_and(|prev| resp.id < prev) {
+                out_of_order += 1;
+            }
+            last_id = Some(resp.id);
+            completed += 1;
+        }
+    }
+    let mid_stats = session.stats();
+    println!(
+        "all {} submitted; {} already consumed mid-stream ({} out of submission order), \
+         {} outstanding, queue depth {}",
+        mid_stats.submitted, completed, out_of_order, mid_stats.outstanding, mid_stats.queue_depth
+    );
+
+    // drain the rest as they complete, then close for the summary
+    for resp in session.iter() {
+        assert!(tickets.remove(&resp.id), "response without a ticket");
+        completed += 1;
+    }
+    let summary = session.close();
+    print!("{}", summary.render());
+
+    assert_eq!(completed, n, "exactly one response per submitted request");
+    assert!(tickets.is_empty(), "every ticket was answered");
+    assert_eq!(summary.requests, n);
+    assert_eq!(summary.errors, 0, "no request may error in the happy path");
+
+    // the session is closed: further submissions must fail loudly, not
+    // silently vanish
+    let (mut late, _) = mixed_stream(1);
+    let err = session.submit(late.remove(0)).expect_err("closed session rejects");
+    println!("\nsubmit after close -> {err:?} (tickets are never silently dropped)");
+    println!("stream OK: {n} requests, {out_of_order} completions out of submission order");
+    Ok(())
+}

@@ -12,6 +12,7 @@
 use super::lane_scheduler::LaneUsage;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -54,6 +55,9 @@ struct Inner {
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Smoothed request latency (µs, f64 bits) kept OUTSIDE the mutex so
+    /// routing policies can read it per-request without taking the lock.
+    lat_ewma_bits: AtomicU64,
 }
 
 /// A frozen snapshot for reporting.
@@ -85,6 +89,10 @@ pub struct Snapshot {
     /// Coalescing window in effect at snapshot time (µs): the static
     /// config, or the adaptive controller's latest choice.
     pub coalesce_window_us: u64,
+    /// Smoothed (EWMA, α=0.25) request latency in µs — the live load
+    /// signal routing policies read (percentiles below are reservoir
+    /// estimates; this one tracks the present, not the whole run).
+    pub latency_ewma_us: f64,
     /// Latencies recorded (reservoir holds at most
     /// [`LATENCY_RESERVOIR_CAP`] of them).
     pub latency_count: u64,
@@ -106,6 +114,12 @@ impl Metrics {
         let us = latency.as_micros() as u64;
         m.lat_count += 1;
         m.lat_sum_us += us;
+        let ewma = if m.lat_count == 1 {
+            us as f64
+        } else {
+            0.75 * f64::from_bits(self.lat_ewma_bits.load(Ordering::Relaxed)) + 0.25 * us as f64
+        };
+        self.lat_ewma_bits.store(ewma.to_bits(), Ordering::Relaxed);
         if m.lat_reservoir.len() < LATENCY_RESERVOIR_CAP {
             m.lat_reservoir.push(us);
         } else {
@@ -162,6 +176,12 @@ impl Metrics {
         m.sim_util_sum += utilization;
     }
 
+    /// Smoothed request latency in µs (0.0 before the first request).
+    /// Lock-free — safe to call once per shard per routed request.
+    pub fn latency_ewma_us(&self) -> f64 {
+        f64::from_bits(self.lat_ewma_bits.load(Ordering::Relaxed))
+    }
+
     /// The coalescing window currently in effect (static or adaptive).
     pub fn record_window(&self, us: u64) {
         self.inner.lock().unwrap().coalesce_window_us = us;
@@ -209,6 +229,7 @@ impl Metrics {
                 m.sim_util_sum / m.requests as f64
             },
             coalesce_window_us: m.coalesce_window_us,
+            latency_ewma_us: f64::from_bits(self.lat_ewma_bits.load(Ordering::Relaxed)),
             latency_count: m.lat_count,
             p50_us: pct(0.50),
             p95_us: pct(0.95),
@@ -235,10 +256,10 @@ impl Snapshot {
     /// Fold another shard's snapshot into this one for a rack-level
     /// aggregate: counters, histograms and sim cycles sum; means are
     /// re-weighted by their sample counts; `queue_peak_depth`,
-    /// `max_batch`, the coalescing window and the latency percentiles
-    /// take the per-shard maximum (percentile reservoirs cannot be
-    /// merged exactly from snapshots, so the aggregate tail is the
-    /// conservative worst-shard tail).
+    /// `max_batch`, the coalescing window, the latency percentiles and
+    /// the latency EWMA take the per-shard maximum (percentile
+    /// reservoirs cannot be merged exactly from snapshots, so the
+    /// aggregate tail is the conservative worst-shard tail).
     pub fn absorb(&mut self, o: &Snapshot) {
         // weighted means first, while `self` still holds its own counts
         let lat_n = self.latency_count + o.latency_count;
@@ -247,6 +268,11 @@ impl Snapshot {
                 + o.mean_us * o.latency_count as f64)
                 / lat_n as f64;
         }
+        // a recency signal, not a lifetime one: count-weighting would let
+        // a long-lived shard's stale EWMA mask a currently-slow shard, so
+        // the aggregate takes the conservative worst-shard value (like
+        // the latency tails below)
+        self.latency_ewma_us = self.latency_ewma_us.max(o.latency_ewma_us);
         let req_n = self.requests + o.requests;
         if req_n > 0 {
             self.mean_sim_utilization = (self.mean_sim_utilization * self.requests as f64
@@ -283,7 +309,7 @@ impl Snapshot {
     pub fn render(&self) -> String {
         let mut s = format!(
             "requests={} (pgemm={} vector={})  functional={} ({} errors)  cache {}/{} hit\n\
-             latency: p50={}us p95={}us p99={}us mean={:.1}us ({} recorded)\n\
+             latency: p50={}us p95={}us p99={}us mean={:.1}us ewma={:.1}us ({} recorded)\n\
              serving: queue peak={}  batches={} (mean {:.2}, max {}, window {}us)  \
              admission rejected={} requeued={}\n",
             self.requests,
@@ -297,6 +323,7 @@ impl Snapshot {
             self.p95_us,
             self.p99_us,
             self.mean_us,
+            self.latency_ewma_us,
             self.latency_count,
             self.queue_peak_depth,
             self.batches,
@@ -325,6 +352,10 @@ pub struct ShardTelemetry {
     pub config_fingerprint: u64,
     /// Requests the routing policy placed on this shard.
     pub routed: u64,
+    /// Requests waiting to enter or sitting in an admission queue for
+    /// this shard, not yet picked up by a worker — the live
+    /// queue-pressure gauge a session exposes per shard.
+    pub queued: u64,
     pub lane_usage: LaneUsage,
     pub snapshot: Snapshot,
 }
@@ -360,7 +391,7 @@ impl RackSnapshot {
         let mut s = format!("rack: {} shards, per-shard utilization/traffic\n", self.shards.len());
         for t in &self.shards {
             s.push_str(&format!(
-                "  shard {} [{} lanes, cfg {:016x}]: routed={} ({:.1}% of traffic)  \
+                "  shard {} [{} lanes, cfg {:016x}]: routed={} ({:.1}% of traffic, {} queued)  \
                  util={:.1}%  sim cycles={}  cache {}/{} hit  errors={}  \
                  lanes free {}/{} ({} partitions)\n",
                 t.shard,
@@ -368,6 +399,7 @@ impl RackSnapshot {
                 t.config_fingerprint,
                 t.routed,
                 self.traffic_share(t.shard) * 100.0,
+                t.queued,
                 t.snapshot.mean_sim_utilization * 100.0,
                 t.snapshot.sim_cycles,
                 t.snapshot.schedule_cache_hits,
@@ -424,6 +456,20 @@ mod tests {
         assert!((s.p50_us as f64 - n as f64 * 0.50).abs() < tol, "p50={}", s.p50_us);
         assert!((s.p95_us as f64 - n as f64 * 0.95).abs() < tol, "p95={}", s.p95_us);
         assert!((s.p99_us as f64 - n as f64 * 0.99).abs() < tol, "p99={}", s.p99_us);
+    }
+
+    #[test]
+    fn latency_ewma_tracks_the_recent_level() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_ewma_us(), 0.0, "no samples yet");
+        m.record_request(false, Duration::from_micros(100));
+        assert!((m.latency_ewma_us() - 100.0).abs() < 1e-9, "first sample seeds the ewma");
+        for _ in 0..64 {
+            m.record_request(false, Duration::from_micros(10));
+        }
+        let ewma = m.latency_ewma_us();
+        assert!(ewma < 12.0, "ewma converges to the recent level, got {ewma}");
+        assert!((m.snapshot().latency_ewma_us - ewma).abs() < 1e-12);
     }
 
     #[test]
@@ -489,6 +535,7 @@ mod tests {
             lanes: 16,
             config_fingerprint: 7,
             routed,
+            queued: 0,
             lane_usage: LaneUsage { total: 16, free: 16, live_partitions: 0 },
             snapshot,
         };

@@ -31,12 +31,26 @@
 //! functional error, panic, rejection — comes back as a [`Response`]
 //! carrying a per-request error: `serve` returns exactly one response
 //! per request, always.
+//!
+//! Since the streaming redesign the primary ingest surface is the
+//! long-lived [`RackSession`] ([`Rack::open_session`] /
+//! [`Coordinator::open_session`]): the admission queue and worker pool
+//! run continuously, callers submit requests as they arrive and read
+//! responses as they complete, and the batch `serve`/`serve_with` are
+//! thin submit-all-then-drain wrappers over one session — so batch and
+//! streaming modes share one code path and one completion-ordering rule
+//! ([`order_responses`]).
 
 pub mod lane_scheduler;
 pub mod metrics;
 pub mod rack;
+pub mod session;
 
-pub use rack::{LeastLoaded, Rack, RoundRobin, RoutePolicy, ShapeAffinity, Shard, ShardStatus};
+pub use rack::{
+    order_responses, CapacityWeighted, LeastLoaded, Rack, RoundRobin, RoutePolicy, ShapeAffinity,
+    Shard, ShardStatus,
+};
+pub use session::{RackSession, SessionStats, SubmitError, Ticket};
 
 use crate::arch::GtaConfig;
 use crate::ops::{PGemm, TensorOp};
@@ -748,6 +762,14 @@ impl Coordinator {
     /// [`Coordinator::serve`] with explicit admission-queue knobs.
     pub fn serve_with(&self, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
         self.rack.serve_with(requests, opts)
+    }
+
+    /// Open a long-lived streaming session over this coordinator (the
+    /// one-shard special case of [`Rack::open_session`]): submit
+    /// requests as they arrive, consume responses as they complete. See
+    /// [`RackSession`].
+    pub fn open_session(&self, opts: ServeOptions) -> RackSession {
+        self.rack.open_session(opts)
     }
 }
 

@@ -21,9 +21,10 @@
 
 use super::lane_scheduler::{LaneAllocator, LaneUsage, Partition, PartitionId};
 use super::metrics::{Metrics, RackSnapshot, ShardTelemetry};
+use super::session::{RackSession, SubmitError};
 use super::{
-    panic_message, AdmissionPolicy, AdmissionQueue, AdmitError, CoalesceConfig, Dispatcher,
-    ExecKind, Executor, Request, Response, ServeOptions, DEFAULT_SCHEDULE_CAPACITY,
+    panic_message, AdmitError, CoalesceConfig, Dispatcher, ExecKind, Executor, Request, Response,
+    ServeOptions, DEFAULT_SCHEDULE_CAPACITY,
 };
 use crate::arch::GtaConfig;
 use crate::ops::{PGemm, TensorOp};
@@ -34,7 +35,7 @@ use crate::sim::{Platform, SimReport};
 use anyhow::Result;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One GTA instance inside a rack.
@@ -56,10 +57,15 @@ pub struct Shard {
     allocator: Mutex<LaneAllocator>,
     pub metrics: Arc<Metrics>,
     /// Requests the routing policy placed here (monotonic).
-    routed: AtomicU64,
+    pub(super) routed: AtomicU64,
     /// Requests admitted but not yet answered — the load signal
     /// [`LeastLoaded`] routing reads.
-    in_flight: AtomicU64,
+    pub(super) in_flight: AtomicU64,
+    /// Requests routed here that are waiting to enter or sitting in a
+    /// serve/session queue, not yet picked up by a worker — the
+    /// per-shard queue-pressure gauge routing policies see (a subset of
+    /// `in_flight`; includes a submitter currently blocked in `admit`).
+    pub(super) queued: AtomicU64,
 }
 
 impl Shard {
@@ -85,6 +91,7 @@ impl Shard {
             metrics,
             routed: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
         }
     }
 
@@ -104,6 +111,13 @@ impl Shard {
     /// Requests currently admitted but unanswered.
     pub fn in_flight(&self) -> u64 {
         self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Requests waiting to enter or sitting in an admission queue for
+    /// this shard, not yet picked up by a worker (live queue pressure;
+    /// subset of `in_flight`).
+    pub fn queued(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed)
     }
 
     /// Schedule a p-GEMM for THIS shard's config through the rack-shared
@@ -201,7 +215,14 @@ impl Shard {
     /// atomics and copies only, no locks — because the serve feeder
     /// builds one per shard per routed request.
     pub fn status(&self) -> ShardStatus {
-        ShardStatus { id: self.id, gta: self.gta, in_flight: self.in_flight() }
+        ShardStatus {
+            id: self.id,
+            gta: self.gta,
+            in_flight: self.in_flight(),
+            routed: self.routed(),
+            queued: self.queued(),
+            latency_ewma_us: self.metrics.latency_ewma_us(),
+        }
     }
 
     /// Per-shard telemetry for the rack report.
@@ -211,6 +232,7 @@ impl Shard {
             lanes: self.gta.lanes,
             config_fingerprint: self.gta.fingerprint(),
             routed: self.routed(),
+            queued: self.queued(),
             lane_usage: self.lane_usage(),
             snapshot: self.metrics.snapshot(),
         }
@@ -220,12 +242,21 @@ impl Shard {
 /// What a routing policy sees of each shard at decision time. Capacity
 /// signals derivable from the config (e.g. `gta.lanes`) live in `gta`;
 /// lane-allocator occupancy is intentionally absent — reading it takes
-/// the allocator lock, and routing runs once per request.
+/// the allocator lock, and routing runs once per request. Everything
+/// here is an atomic read.
 #[derive(Debug, Clone, Copy)]
 pub struct ShardStatus {
     pub id: usize,
     pub gta: GtaConfig,
     pub in_flight: u64,
+    /// Requests this shard has been handed so far (monotonic) — the
+    /// long-run traffic share [`CapacityWeighted`] balances.
+    pub routed: u64,
+    /// Live queue depth: admitted for this shard, not yet picked up.
+    pub queued: u64,
+    /// Smoothed request latency (µs) from the shard's [`Metrics`] —
+    /// 0.0 until the shard has answered its first request.
+    pub latency_ewma_us: f64,
 }
 
 /// Places each request on a shard. `serve` routes from a single feeder
@@ -255,7 +286,9 @@ impl RoutePolicy for RoundRobin {
     }
 }
 
-/// Fewest in-flight requests wins (ties break to the lowest shard id).
+/// Fewest in-flight requests wins; ties break on the live queue depth,
+/// then the latency EWMA (send equal load to the shard that is
+/// answering faster), then the lowest shard id.
 #[derive(Debug, Default)]
 pub struct LeastLoaded;
 
@@ -267,7 +300,37 @@ impl RoutePolicy for LeastLoaded {
     fn route(&self, _req: &Request, shards: &[ShardStatus]) -> usize {
         shards
             .iter()
-            .min_by_key(|s| (s.in_flight, s.id))
+            .min_by_key(|s| (s.in_flight, s.queued, s.latency_ewma_us as u64, s.id))
+            .map(|s| s.id)
+            .unwrap_or(0)
+    }
+}
+
+/// Traffic proportional to shard capacity: each decision goes to the
+/// shard with the lowest per-lane traffic share `(routed + 1) / lanes`
+/// (ties → lowest id), so over a sustained stream a 4-lane shard
+/// settles at exactly half an 8-lane shard's traffic. Only the
+/// monotonic `routed` counter feeds the score, so a single submitter
+/// gets a fully deterministic split (live queue/latency feedback is
+/// [`LeastLoaded`]'s job).
+#[derive(Debug, Default)]
+pub struct CapacityWeighted;
+
+impl RoutePolicy for CapacityWeighted {
+    fn name(&self) -> &'static str {
+        "capacity-weighted"
+    }
+
+    fn route(&self, _req: &Request, shards: &[ShardStatus]) -> usize {
+        shards
+            .iter()
+            .min_by(|a, b| {
+                let per_lane = |s: &ShardStatus| (s.routed + 1) as f64 / s.gta.lanes.max(1) as f64;
+                per_lane(a)
+                    .partial_cmp(&per_lane(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.id.cmp(&b.id))
+            })
             .map(|s| s.id)
             .unwrap_or(0)
     }
@@ -302,12 +365,28 @@ pub fn policy_by_name(name: &str) -> Option<Box<dyn RoutePolicy>> {
         "rr" | "round-robin" => Some(Box::new(RoundRobin::default())),
         "least" | "least-loaded" => Some(Box::new(LeastLoaded)),
         "affinity" | "shape-affinity" => Some(Box::new(ShapeAffinity)),
+        "capacity" | "capacity-weighted" => Some(Box::new(CapacityWeighted)),
         _ => None,
     }
 }
 
+/// One shared completion-ordering rule for every drain path (batch
+/// `serve_with` and streaming [`RackSession::drain`] both end here, so
+/// the two modes cannot diverge): responses sort by request id.
+pub fn order_responses(responses: &mut [Response]) {
+    responses.sort_by_key(|r| r.id);
+}
+
+/// The one routing step shared by [`Rack::route`] and the session's
+/// submit path: snapshot every shard's status, ask the policy, clamp
+/// out-of-range picks.
+pub(super) fn route_on(policy: &dyn RoutePolicy, shards: &[Arc<Shard>], req: &Request) -> usize {
+    let statuses: Vec<ShardStatus> = shards.iter().map(|s| s.status()).collect();
+    policy.route(req, &statuses).min(shards.len() - 1)
+}
+
 /// A response for a request that never reached a shard worker.
-fn unserved_response(id: u64, shard: usize, msg: String) -> Response {
+pub(super) fn unserved_response(id: u64, shard: usize, msg: String) -> Response {
     Response {
         id,
         shard,
@@ -325,7 +404,9 @@ pub struct Rack {
     /// The rack-shared exploration state (exposed so callers can read
     /// memo-level hit/miss/eviction counters across the whole rack).
     pub explorer: Arc<Explorer>,
-    policy: Box<dyn RoutePolicy>,
+    /// Shared with every open [`RackSession`], so concurrent sessions
+    /// (and repeated `serve_with` calls) advance ONE routing state.
+    policy: Arc<dyn RoutePolicy>,
     next_id: AtomicU64,
 }
 
@@ -341,7 +422,7 @@ impl Rack {
                 Arc::new(Shard::new(i, gta, Arc::clone(&explorer), None, CoalesceConfig::default()))
             })
             .collect();
-        Rack { shards, explorer, policy, next_id: AtomicU64::new(0) }
+        Rack { shards, explorer, policy: Arc::from(policy), next_id: AtomicU64::new(0) }
     }
 
     /// A rack whose every shard gets its own execution backend from
@@ -372,7 +453,7 @@ impl Rack {
                 coalesce,
             )));
         }
-        Ok(Rack { shards, explorer, policy, next_id: AtomicU64::new(0) })
+        Ok(Rack { shards, explorer, policy: Arc::from(policy), next_id: AtomicU64::new(0) })
     }
 
     pub fn shards(&self) -> &[Arc<Shard>] {
@@ -406,8 +487,7 @@ impl Rack {
 
     /// Pick a shard for `req` (does not mark it routed or in flight).
     pub fn route(&self, req: &Request) -> usize {
-        let statuses = self.statuses();
-        self.policy.route(req, &statuses).min(self.shards.len() - 1)
+        route_on(self.policy.as_ref(), &self.shards, req)
     }
 
     /// Handle one request synchronously on whichever shard the policy
@@ -432,88 +512,52 @@ impl Rack {
         resp
     }
 
+    /// Open a long-lived streaming session over this rack: the admission
+    /// queue and the routing/scheduling/simulation workers are spawned
+    /// once and run continuously; the caller feeds [`RackSession::submit`]
+    /// and consumes completions with `recv`/`try_recv`/`iter` as they
+    /// finish (out of submission order), then `drain`/`close` shuts the
+    /// session down without dropping in-flight work. The batch
+    /// [`Rack::serve_with`] is a thin wrapper over one of these.
+    pub fn open_session(&self, opts: ServeOptions) -> RackSession {
+        RackSession::open(self.shards.clone(), Arc::clone(&self.policy), opts)
+    }
+
     /// Serve a batch of requests across the rack on `workers` threads
     /// through the default admission queue (blocking backpressure).
     pub fn serve(&self, requests: Vec<Request>, workers: usize) -> Vec<Response> {
         self.serve_with(requests, ServeOptions::with_workers(workers))
     }
 
-    /// [`Rack::serve`] with explicit admission-queue knobs. Each request
-    /// is routed (single feeder thread, submission order — deterministic
-    /// for a deterministic policy), admitted to the shared bounded queue,
-    /// and handled by its shard; functional work coalesces inside that
-    /// shard's own dispatcher. Exactly one response per request, sorted
-    /// by id — a shard's failures never drop another shard's responses.
+    /// [`Rack::serve`] with explicit admission-queue knobs — a thin
+    /// wrapper over a [`RackSession`]: submit everything, then drain.
+    /// Each request is routed (this thread, submission order —
+    /// deterministic for a deterministic policy), admitted to the
+    /// session's bounded queue, and handled by its shard; functional
+    /// work coalesces inside that shard's own dispatcher. Exactly one
+    /// response per request, sorted by id — a shard's failures never
+    /// drop another shard's responses.
     pub fn serve_with(&self, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
         let n = requests.len();
-        let queue = Arc::new(AdmissionQueue::<(usize, Request)>::new(opts.queue_capacity));
-        let (tx, rx) = mpsc::channel::<Response>();
-        let mut handles = Vec::new();
-        for w in 0..opts.workers.max(1) {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            let shards: Vec<Arc<Shard>> = self.shards.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("gta-worker-{w}"))
-                    .spawn(move || {
-                        while let Some((sidx, req)) = queue.pop() {
-                            let shard = &shards[sidx];
-                            let resp = shard.handle_caught(req);
-                            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
-                            if tx.send(resp).is_err() {
-                                break;
-                            }
-                        }
-                    })
-                    .unwrap(),
-            );
-        }
-        // Feeder: route, then admit with backpressure. Under `Block` this
-        // thread stalls until workers free a slot; under `Reject` an
-        // over-capacity request gets one requeue attempt, then a Busy
-        // response. Admission counters land on the routed shard's metrics.
+        let mut session = self.open_session(opts);
+        // Rejections become responses here, not errors: the batch
+        // contract is one response per request, served or not.
+        let mut out: Vec<Response> = Vec::with_capacity(n);
         for req in requests {
-            let sidx = self.route(&req);
-            let shard = &self.shards[sidx];
-            shard.routed.fetch_add(1, Ordering::Relaxed);
-            shard.in_flight.fetch_add(1, Ordering::Relaxed);
-            match queue.admit((sidx, req), opts.policy) {
-                Ok(()) => shard.metrics.record_queue_depth(queue.depth()),
-                Err(((sidx, req), AdmitError::Busy)) => {
-                    shard.metrics.record_admission_requeued();
-                    std::thread::sleep(Duration::from_micros(100));
-                    match queue.admit((sidx, req), AdmissionPolicy::Reject) {
-                        Ok(()) => shard.metrics.record_queue_depth(queue.depth()),
-                        Err(((sidx, req), _)) => {
-                            shard.metrics.record_admission_rejected();
-                            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
-                            let _ = tx.send(unserved_response(
-                                req.id,
-                                sidx,
-                                "busy: admission queue at capacity".to_string(),
-                            ));
-                        }
-                    }
-                }
-                Err(((sidx, req), AdmitError::Closed)) => {
-                    shard.in_flight.fetch_sub(1, Ordering::Relaxed);
-                    let _ = tx.send(unserved_response(
-                        req.id,
-                        sidx,
-                        "admission queue closed".to_string(),
-                    ));
+            match session.try_submit(req) {
+                Ok(_ticket) => {}
+                Err(SubmitError { id, shard, error }) => {
+                    let msg = match error {
+                        AdmitError::Busy => "busy: admission queue at capacity",
+                        AdmitError::Closed => "admission queue closed",
+                    };
+                    out.push(unserved_response(id, shard.unwrap_or(0), msg.to_string()));
                 }
             }
         }
-        queue.close();
-        drop(tx);
-        let mut out: Vec<Response> = rx.into_iter().collect();
-        for h in handles {
-            let _ = h.join();
-        }
+        out.append(&mut session.drain());
         assert_eq!(out.len(), n, "serve must yield exactly one response per request");
-        out.sort_by_key(|r| r.id);
+        order_responses(&mut out);
         out
     }
 
@@ -579,6 +623,27 @@ mod tests {
         rack.shard(1).in_flight.store(1, Ordering::Relaxed);
         rack.shard(2).in_flight.store(3, Ordering::Relaxed);
         assert_eq!(rack.route(&sim_req(0)), 1);
+    }
+
+    #[test]
+    fn least_loaded_ties_break_on_the_latency_ewma() {
+        let rack = sim_rack(&[16, 16], Box::new(LeastLoaded));
+        rack.shard(0).metrics.record_request(false, Duration::from_micros(500));
+        rack.shard(1).metrics.record_request(false, Duration::from_micros(50));
+        assert_eq!(rack.route(&sim_req(0)), 1, "equal load -> the faster shard wins");
+    }
+
+    #[test]
+    fn capacity_weighted_splits_traffic_proportionally_to_lanes() {
+        let rack = sim_rack(&[8, 4], Box::new(CapacityWeighted));
+        let mut counts = [0u64; 2];
+        for i in 0..12 {
+            let sidx = rack.route(&sim_req(i));
+            // routing reads the routed counter; mimic the submit path
+            rack.shard(sidx).routed.fetch_add(1, Ordering::Relaxed);
+            counts[sidx] += 1;
+        }
+        assert_eq!(counts, [8, 4], "traffic share equals lane share");
     }
 
     #[test]

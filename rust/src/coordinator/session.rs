@@ -1,0 +1,311 @@
+//! The long-lived streaming serving session: the inversion of the old
+//! batch-in/batch-out `serve` loop. A [`RackSession`] owns the bounded
+//! admission queue and the scheduling/simulation worker threads for its
+//! whole lifetime; callers [`submit`](RackSession::submit) requests one
+//! at a time (non-blocking or backpressured per [`AdmissionPolicy`]) and
+//! consume [`Response`]s **as they complete** — out of submission order —
+//! through [`recv`](RackSession::recv)/[`try_recv`](RackSession::try_recv)/
+//! [`iter`](RackSession::iter). [`close`](RackSession::close) drains
+//! every in-flight request and returns the final [`ServeSummary`].
+//!
+//! The per-shard coalescing dispatchers and executor threads are owned
+//! by the rack's shards and were already long-lived; what the session
+//! adds is a continuously running ingest/egress surface over them, so
+//! the adaptive coalescing window finally sees realistic open-loop
+//! arrivals instead of a pre-materialized batch (the GPTPU
+//! request-queue model). `Rack::serve_with` is now a thin wrapper:
+//! submit everything, then [`drain`](RackSession::drain).
+//!
+//! Determinism: routing happens on the submitting thread in submission
+//! order, exactly like the old single feeder — a deterministic policy
+//! over a fixed stream from one thread yields the same shard assignment
+//! (and therefore bit-identical responses) as the batch path.
+
+use super::metrics::RackSnapshot;
+use super::rack::{order_responses, route_on, RoutePolicy, Shard};
+use super::{AdmissionPolicy, AdmissionQueue, AdmitError, Request, Response, ServeOptions};
+use crate::serve::ServeSummary;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Receipt for one admitted request: its id and the shard the router
+/// placed it on. The matching [`Response`] carries the same `id` and
+/// `shard`, so tickets pair submissions with out-of-order completions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    pub id: u64,
+    pub shard: usize,
+}
+
+/// A rejected submission, with everything the caller needs to
+/// synthesize a response for it (the batch wrapper does exactly that).
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitError {
+    /// Id of the request handed back.
+    pub id: u64,
+    /// Shard the router had picked before admission failed; `None` when
+    /// the session was already closed (the request was never routed).
+    pub shard: Option<usize>,
+    pub error: AdmitError,
+}
+
+/// Live counters for one session (see [`RackSession::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Tickets issued (requests admitted to the queue).
+    pub submitted: u64,
+    /// Responses handed to the caller (or folded in by `drain`/`close`).
+    pub completed: u64,
+    /// Submissions finally rejected with [`AdmitError::Busy`].
+    pub rejected: u64,
+    /// Admitted but not yet consumed: `submitted - completed`.
+    pub outstanding: u64,
+    /// Requests currently sitting in the admission queue.
+    pub queue_depth: usize,
+}
+
+/// A long-lived ingest/egress handle over a rack (or the coordinator's
+/// one-shard facade). See the module docs for the lifecycle; dropping a
+/// session without closing it shuts the workers down cleanly (in-flight
+/// work is still executed, its responses are discarded).
+pub struct RackSession {
+    shards: Vec<Arc<Shard>>,
+    policy: Arc<dyn RoutePolicy>,
+    queue: Arc<AdmissionQueue<(usize, Request)>>,
+    rx: mpsc::Receiver<Response>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    opts: ServeOptions,
+    opened: Instant,
+    closed: bool,
+    // lifecycle counters (single-owner, so plain fields suffice)
+    submitted: u64,
+    completed: u64,
+    rejected: u64,
+    errors: u64,
+    functional: u64,
+    total_sim_cycles: u64,
+}
+
+impl RackSession {
+    /// Spawn the session's worker pool over `shards`. Called through
+    /// [`super::rack::Rack::open_session`] /
+    /// [`super::Coordinator::open_session`].
+    pub(super) fn open(
+        shards: Vec<Arc<Shard>>,
+        policy: Arc<dyn RoutePolicy>,
+        opts: ServeOptions,
+    ) -> RackSession {
+        let queue = Arc::new(AdmissionQueue::<(usize, Request)>::new(opts.queue_capacity));
+        let (tx, rx) = mpsc::channel::<Response>();
+        let workers = (0..opts.workers.max(1))
+            .map(|w| {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let shards = shards.clone();
+                std::thread::Builder::new()
+                    .name(format!("gta-session-worker-{w}"))
+                    .spawn(move || {
+                        while let Some((sidx, req)) = queue.pop() {
+                            let shard = &shards[sidx];
+                            shard.queued.fetch_sub(1, Ordering::Relaxed);
+                            let resp = shard.handle_caught(req);
+                            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                            if tx.send(resp).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawning session worker thread")
+            })
+            .collect();
+        RackSession {
+            shards,
+            policy,
+            queue,
+            rx,
+            workers,
+            opts,
+            opened: Instant::now(),
+            closed: false,
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            errors: 0,
+            functional: 0,
+            total_sim_cycles: 0,
+        }
+    }
+
+    /// Submit one request. Routes on THIS thread in call order (see the
+    /// module docs on determinism), then admits to the bounded queue
+    /// under the session's [`AdmissionPolicy`]: `Block` exerts
+    /// backpressure by stalling the caller until a slot frees; `Reject`
+    /// retries once after 100µs (counted as `admission_requeued`), then
+    /// fails fast with [`AdmitError::Busy`] (counted as
+    /// `admission_rejected`). After [`close`](Self::close)/
+    /// [`drain`](Self::drain) every submission fails with an explicit
+    /// [`AdmitError::Closed`] — tickets are never silently dropped.
+    pub fn submit(&mut self, req: Request) -> Result<Ticket, AdmitError> {
+        self.try_submit(req).map_err(|e| e.error)
+    }
+
+    /// [`submit`](Self::submit), but the rejection hands back the id and
+    /// routed shard so the caller can synthesize a per-request response
+    /// (what the batch `serve_with` wrapper does).
+    pub fn try_submit(&mut self, req: Request) -> Result<Ticket, SubmitError> {
+        let id = req.id;
+        if self.closed {
+            return Err(SubmitError { id, shard: None, error: AdmitError::Closed });
+        }
+        let is_functional = matches!(req.exec, super::ExecKind::Functional { .. });
+        let sidx = route_on(self.policy.as_ref(), &self.shards, &req);
+        let shard = Arc::clone(&self.shards[sidx]);
+        shard.routed.fetch_add(1, Ordering::Relaxed);
+        shard.in_flight.fetch_add(1, Ordering::Relaxed);
+        shard.queued.fetch_add(1, Ordering::Relaxed);
+        // one requeue attempt on Busy before giving up, as the old
+        // batch feeder did
+        let mut requeued = false;
+        let attempt = match self.queue.admit((sidx, req), self.opts.policy) {
+            Err((item, AdmitError::Busy)) => {
+                requeued = true;
+                shard.metrics.record_admission_requeued();
+                std::thread::sleep(Duration::from_micros(100));
+                self.queue.admit(item, AdmissionPolicy::Reject)
+            }
+            other => other,
+        };
+        match attempt {
+            Ok(()) => {
+                shard.metrics.record_queue_depth(self.queue.depth());
+                self.submitted += 1;
+                self.functional += is_functional as u64;
+                Ok(Ticket { id, shard: sidx })
+            }
+            Err((_, error)) => {
+                if requeued {
+                    shard.metrics.record_admission_rejected();
+                    self.rejected += 1;
+                }
+                shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                shard.queued.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError { id, shard: Some(sidx), error })
+            }
+        }
+    }
+
+    /// Next completed response, blocking while work is outstanding.
+    /// Returns `None` when nothing is outstanding (so a submit/recv loop
+    /// can never deadlock on its own session) or after the workers shut
+    /// down.
+    pub fn recv(&mut self) -> Option<Response> {
+        if self.outstanding() == 0 {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(resp) => Some(self.count(resp)),
+            Err(_) => None,
+        }
+    }
+
+    /// Next completed response if one is ready right now.
+    pub fn try_recv(&mut self) -> Option<Response> {
+        match self.rx.try_recv() {
+            Ok(resp) => Some(self.count(resp)),
+            Err(_) => None,
+        }
+    }
+
+    /// Blocking iterator over completions: yields until every currently
+    /// outstanding request has been consumed, then stops (submit more
+    /// and iterate again, or interleave — the session is one owner).
+    pub fn iter(&mut self) -> impl Iterator<Item = Response> + '_ {
+        std::iter::from_fn(move || self.recv())
+    }
+
+    /// Tickets admitted but not yet consumed by the caller.
+    pub fn outstanding(&self) -> u64 {
+        self.submitted - self.completed
+    }
+
+    /// Live session counters (queue depth, submitted/completed/rejected).
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            submitted: self.submitted,
+            completed: self.completed,
+            rejected: self.rejected,
+            outstanding: self.outstanding(),
+            queue_depth: self.queue.depth(),
+        }
+    }
+
+    /// Fold one consumed response into the lifecycle counters.
+    fn count(&mut self, resp: Response) -> Response {
+        self.completed += 1;
+        self.total_sim_cycles += resp.sim.cycles;
+        if resp.error.is_some() {
+            self.errors += 1;
+        }
+        resp
+    }
+
+    /// Stop admissions, let the workers drain every queued and in-flight
+    /// request, and return all not-yet-consumed responses, ordered by
+    /// the same completion-ordering rule as the batch path
+    /// ([`order_responses`] — sorted by id). Subsequent
+    /// [`submit`](Self::submit)s fail with [`AdmitError::Closed`].
+    pub fn drain(&mut self) -> Vec<Response> {
+        self.closed = true;
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        // workers are gone: everything they completed is in the channel
+        let mut out = Vec::new();
+        while let Ok(resp) = self.rx.try_recv() {
+            out.push(self.count(resp));
+        }
+        order_responses(&mut out);
+        out
+    }
+
+    /// Drain in-flight work ([`drain`](Self::drain) — unconsumed
+    /// responses are folded into the summary counters and dropped; call
+    /// `drain` first to keep them) and return the final session summary:
+    /// lifecycle counters, wall-clock throughput, the rack-wide metrics
+    /// rollup and per-shard telemetry. Verification counters are zero —
+    /// checking outputs against an oracle is the driver's job
+    /// (`serve::run_stream` and friends), not the session's.
+    pub fn close(&mut self) -> ServeSummary {
+        let unconsumed = self.drain();
+        drop(unconsumed); // already folded into the counters by drain()
+        let wall = self.opened.elapsed().as_secs_f64();
+        let shards = RackSnapshot::from_shards(self.shards.iter().map(|s| s.telemetry()).collect());
+        let snap = shards.aggregate.clone();
+        ServeSummary {
+            requests: self.completed,
+            functional: self.functional,
+            verified_ok: 0,
+            verified_failed: 0,
+            errors: self.errors,
+            prescheduled: 0,
+            coalesced_batches: snap.batches,
+            max_batch: snap.max_batch,
+            coalesce_window_us: snap.coalesce_window_us,
+            shards: Some(shards),
+            wall_seconds: wall,
+            throughput_rps: self.completed as f64 / wall.max(1e-9),
+            total_sim_cycles: self.total_sim_cycles,
+            metrics: snap,
+        }
+    }
+}
+
+impl Drop for RackSession {
+    fn drop(&mut self) {
+        if !self.closed || !self.workers.is_empty() {
+            let _ = self.drain();
+        }
+    }
+}

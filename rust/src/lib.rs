@@ -36,10 +36,16 @@
 //!   backpressure (see `docs/serving.md`). Since the rack refactor the
 //!   serving machinery lives in `coordinator::rack`: a `Rack` shards
 //!   requests across N GTA instances via a `RoutePolicy`
-//!   (round-robin / least-loaded / shape-affinity), every shard owning
-//!   its own config + lane allocator + backend + metrics while ALL
-//!   shards share one `scheduler::Explorer` memo; `Coordinator` is the
-//!   one-shard special case (see `docs/sharding.md`)
+//!   (round-robin / least-loaded / shape-affinity / capacity-weighted),
+//!   every shard owning its own config + lane allocator + backend +
+//!   metrics while ALL shards share one `scheduler::Explorer` memo;
+//!   `Coordinator` is the one-shard special case (see
+//!   `docs/sharding.md`). The primary ingest surface is the long-lived
+//!   streaming `coordinator::RackSession` (`open_session` →
+//!   submit/recv as requests arrive and complete → `close`), with
+//!   batch `serve`/`serve_with` as thin wrappers over it and an
+//!   open-loop seeded arrival driver in `serve`
+//!   (`gta serve --stream`, see `docs/serving.md`)
 //! * [`report`] — regenerates every table and figure of the paper
 
 pub mod arch;

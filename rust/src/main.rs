@@ -25,14 +25,21 @@ USAGE:
   gta verify [--artifacts DIR]      run every AOT artifact via PJRT and
                                     check numerics against the rust oracle
   gta serve --requests N [--artifacts DIR] [--workers W] [--backend pjrt|soft]
-            [--shards N] [--policy rr|least|affinity] [--shard-lanes L1,L2,...]
+            [--shards N] [--policy rr|least|affinity|capacity]
+            [--shard-lanes L1,L2,...]
+            [--stream] [--arrival-rate R] [--seed S]
                                     e2e driver: mixed request stream through
                                     the batched (admission queue + coalescing)
                                     serve path; `--backend soft` runs the
                                     rust-oracle backend (no artifacts needed);
                                     `--shards N` serves through a multi-GTA
                                     rack (per-shard utilization in the
-                                    summary; see docs/sharding.md)
+                                    summary; see docs/sharding.md);
+                                    `--stream` feeds a long-lived RackSession
+                                    as an open-loop Poisson arrival process at
+                                    `--arrival-rate R` req/s (default 5000)
+                                    with a seeded inter-arrival RNG
+                                    (see docs/serving.md)
 ";
 
 fn main() -> Result<()> {
@@ -263,23 +270,34 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
         .unwrap_or_default();
     let sharded = shards > 1 || !lanes.is_empty();
-    let summary = match flags.get("backend").unwrap_or("pjrt") {
-        "soft" if sharded => {
+    let stream = flags.get("stream").is_some();
+    let rate: f64 = flags.get("arrival-rate").and_then(|v| v.parse().ok()).unwrap_or(5000.0);
+    if stream && !(rate > 0.0) {
+        bail!("--arrival-rate must be a positive req/s rate, got {rate}");
+    }
+    let seed = flags.get_u64("seed", 2024);
+    let summary = match (flags.get("backend").unwrap_or("pjrt"), stream) {
+        ("soft", true) => {
+            gta::serve::run_open_loop_soft_rack(n, workers, shards, &lanes, policy, rate, seed)?
+        }
+        ("soft", false) if sharded => {
             gta::serve::run_mixed_stream_soft_rack(n, workers, shards, &lanes, policy)?
         }
-        "soft" => gta::serve::run_mixed_stream_soft(n, workers)?,
-        "pjrt" => {
+        ("soft", false) => gta::serve::run_mixed_stream_soft(n, workers)?,
+        ("pjrt", stream) => {
             let dir: std::path::PathBuf = flags
                 .get("artifacts")
                 .map(Into::into)
                 .unwrap_or_else(default_artifact_dir);
-            if sharded {
+            if stream {
+                gta::serve::run_open_loop_rack(dir, n, workers, shards, &lanes, policy, rate, seed)?
+            } else if sharded {
                 gta::serve::run_mixed_stream_rack(dir, n, workers, shards, &lanes, policy)?
             } else {
                 gta::serve::run_mixed_stream(dir, n, workers)?
             }
         }
-        other => bail!("unknown backend {other:?} (pjrt|soft)"),
+        (other, _) => bail!("unknown backend {other:?} (pjrt|soft)"),
     };
     print!("{}", summary.render());
     Ok(())

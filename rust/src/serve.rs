@@ -12,10 +12,18 @@
 //! shard-aware: the `*_rack` drivers replay the identical stream across
 //! a multi-GTA [`Rack`] (`gta serve --shards N`), with per-shard
 //! utilization/traffic in the summary.
+//!
+//! Two feeding modes share the verification contract: the **batch**
+//! drivers ([`run_stream`]/[`run_stream_rack`]) push the whole
+//! pre-materialized stream through `serve`, while the **open-loop**
+//! driver ([`run_open_loop_stream`], `gta serve --stream`) feeds a
+//! long-lived [`crate::coordinator::RackSession`] with seeded
+//! exponential inter-arrival gaps — realistic continuous ingest, which
+//! is what lets the adaptive coalescing window engage.
 
 use crate::coordinator::metrics::RackSnapshot;
 use crate::coordinator::rack::{policy_by_name, Rack, RoutePolicy};
-use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request, Response};
+use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request, Response, ServeOptions};
 use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
 use crate::runtime::{Engine, ExecBackend, HostTensor, SoftBackend};
@@ -307,6 +315,68 @@ pub fn run_stream_rack(
     )
 }
 
+/// Replay `requests` through a long-lived
+/// [`crate::coordinator::RackSession`] as an **open-loop arrival
+/// process**: inter-arrival gaps are exponential
+/// (Poisson arrivals) at `rate_rps`, drawn from a [`Rng`] seeded with
+/// `seed` — the same seed replays the same arrival schedule. The driver
+/// thread submits each request at its arrival time (blocking admission:
+/// overload turns into backpressure, not loss), opportunistically
+/// consuming completions between arrivals, then drains the session and
+/// verifies like [`run_stream`]. Unlike the batch drivers there is no
+/// schedule pre-pass — the cache warms the way it would in production,
+/// and the adaptive coalescing window sees real arrival gaps.
+pub fn run_open_loop_stream(
+    rack: &Arc<Rack>,
+    requests: Vec<Request>,
+    expected: &[Option<Vec<i32>>],
+    workers: usize,
+    rate_rps: f64,
+    seed: u64,
+) -> ServeSummary {
+    let functional_ids = functional_ids(&requests);
+    let n = requests.len();
+    let mut session = rack.open_session(ServeOptions::with_workers(workers));
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut due = std::time::Duration::ZERO;
+    let mut responses: Vec<Response> = Vec::with_capacity(n);
+    for req in requests {
+        // exponential inter-arrival gap for a Poisson process at rate_rps
+        let gap = -(1.0 - rng.f64()).ln() / rate_rps.max(1e-9);
+        due += std::time::Duration::from_secs_f64(gap);
+        loop {
+            let elapsed = t0.elapsed();
+            if elapsed >= due {
+                break;
+            }
+            // consume completions while waiting for the next arrival
+            if session.try_recv().map(|r| responses.push(r)).is_none() {
+                let remaining = due - elapsed;
+                if remaining > std::time::Duration::from_micros(200) {
+                    std::thread::sleep(std::time::Duration::from_micros(100));
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        while let Some(r) = session.try_recv() {
+            responses.push(r);
+        }
+        session
+            .submit(req)
+            .expect("open-loop submission under blocking admission cannot be rejected");
+    }
+    while let Some(r) = session.recv() {
+        responses.push(r);
+    }
+    responses.append(&mut session.drain());
+    crate::coordinator::order_responses(&mut responses);
+    let wall = t0.elapsed().as_secs_f64();
+    let rs = rack.snapshot();
+    summarize(&responses, expected, &functional_ids, wall, 0, rs.aggregate.clone(), Some(rs))
+}
+
 /// Ids of the functional requests in a stream.
 fn functional_ids(requests: &[Request]) -> HashSet<u64> {
     requests
@@ -449,4 +519,49 @@ pub fn run_mixed_stream_rack(
     )?);
     let (requests, expected) = mixed_stream(n);
     Ok(run_stream_rack(&rack, requests, &expected, workers))
+}
+
+/// `gta serve --stream --backend soft`: drive `n` mixed requests as a
+/// seeded open-loop Poisson arrival process at `rate_rps` through a
+/// streaming session over a soft-backend rack (adaptive coalescing
+/// window, so sustained arrival rates visibly engage it).
+pub fn run_open_loop_soft_rack(
+    n: u64,
+    workers: usize,
+    shards: usize,
+    lanes: &[u32],
+    policy: &str,
+    rate_rps: f64,
+    seed: u64,
+) -> Result<ServeSummary> {
+    let rack = soft_rack(
+        shard_configs(shards, lanes),
+        CoalesceConfig::with_adaptive_window(),
+        parse_policy(policy)?,
+    )?;
+    let (requests, expected) = mixed_stream(n);
+    Ok(run_open_loop_stream(&rack, requests, &expected, workers, rate_rps, seed))
+}
+
+/// `gta serve --stream` against the PJRT engine: the open-loop arrival
+/// driver over a rack whose every shard compiles the artifacts in
+/// `artifact_dir`.
+pub fn run_open_loop_rack(
+    artifact_dir: PathBuf,
+    n: u64,
+    workers: usize,
+    shards: usize,
+    lanes: &[u32],
+    policy: &str,
+    rate_rps: f64,
+    seed: u64,
+) -> Result<ServeSummary> {
+    let rack = Arc::new(Rack::with_backend(
+        shard_configs(shards, lanes),
+        move |_shard| Ok(Box::new(Engine::load(&artifact_dir)?) as Box<dyn ExecBackend>),
+        CoalesceConfig::with_adaptive_window(),
+        parse_policy(policy)?,
+    )?);
+    let (requests, expected) = mixed_stream(n);
+    Ok(run_open_loop_stream(&rack, requests, &expected, workers, rate_rps, seed))
 }

@@ -1,0 +1,301 @@
+//! E2E: the streaming serving session (`RackSession`) — interleaved
+//! submit/recv determinism against the batch path, mid-stream
+//! backpressure under `AdmissionPolicy::Reject`, close-time draining of
+//! in-flight work, the explicit submit-after-close error, and schedule
+//! cache sharing between concurrent sessions on one `Rack`. All offline
+//! (soft rust-oracle backend / sim-only racks), so these run in every
+//! build.
+
+use gta::coordinator::rack::policy_by_name;
+use gta::coordinator::{
+    AdmissionPolicy, AdmitError, CoalesceConfig, ExecKind, Rack, Request, Response, RoundRobin,
+    ServeOptions,
+};
+use gta::precision::Precision;
+use gta::runtime::{ExecBackend, HostTensor};
+use gta::serve::{mixed_stream, soft_rack};
+use gta::{GtaConfig, TensorOp};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Two identically configured heterogeneous soft racks: what one does
+/// in batch mode, the other must reproduce in streaming mode.
+fn twin_racks() -> (Arc<Rack>, Arc<Rack>) {
+    let mk = || {
+        soft_rack(
+            vec![GtaConfig::lanes16(), GtaConfig::with_lanes(4)],
+            CoalesceConfig::default(),
+            policy_by_name("rr").unwrap(),
+        )
+        .unwrap()
+    };
+    (mk(), mk())
+}
+
+/// Field-by-field response equality (latency excluded — wall time is
+/// never deterministic).
+fn assert_same_response(a: &Response, b: &Response) {
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.shard, b.shard, "request {} routed differently", a.id);
+    assert_eq!(a.error, b.error, "request {}", a.id);
+    assert_eq!(a.outputs, b.outputs, "request {} outputs diverge", a.id);
+    assert_eq!(a.sim.cycles, b.sim.cycles, "request {} sim diverges", a.id);
+    assert_eq!(
+        a.schedule.map(|c| c.config),
+        b.schedule.map(|c| c.config),
+        "request {} schedule diverges",
+        a.id
+    );
+}
+
+#[test]
+fn interleaved_streaming_is_bit_identical_to_batch_serve() {
+    let (batch_rack, stream_rack) = twin_racks();
+    let n = 48u64;
+    // mixed_stream is seeded: two calls build byte-identical request sets
+    let (batch_reqs, _) = mixed_stream(n);
+    let (stream_reqs, _) = mixed_stream(n);
+
+    let batch: Vec<Response> = batch_rack.serve(batch_reqs, 4);
+
+    let mut session = stream_rack.open_session(ServeOptions::with_workers(4));
+    let mut streamed: Vec<Response> = Vec::new();
+    for req in stream_reqs {
+        session.submit(req).expect("blocking admission cannot reject");
+        // interleave consumption with submission — the whole point of
+        // the session API
+        while let Some(r) = session.try_recv() {
+            streamed.push(r);
+        }
+    }
+    streamed.extend(session.drain());
+    gta::coordinator::order_responses(&mut streamed);
+
+    assert_eq!(batch.len(), streamed.len());
+    for (a, b) in batch.iter().zip(&streamed) {
+        assert_same_response(a, b);
+    }
+}
+
+#[test]
+fn batch_serve_wrapper_still_honors_its_contract() {
+    // serve/serve_with are now wrappers over a session: re-check the
+    // pre-redesign contract end to end (one response per request,
+    // sorted, failures as data) plus routing telemetry.
+    let (rack, _) = twin_racks();
+    let n = 32u64;
+    let (reqs, _) = mixed_stream(n);
+    let resps = rack.serve(reqs, 4);
+    assert_eq!(resps.len(), n as usize);
+    for (i, r) in resps.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "sorted by id");
+        assert!(r.is_ok(), "request {} errored: {:?}", r.id, r.error);
+        assert_eq!(r.shard, i % 2, "round-robin placement survives the rewrite");
+    }
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.requests, n);
+    assert_eq!(snap.shards[0].routed, n / 2);
+    assert_eq!(snap.shards[1].routed, n / 2);
+    assert_eq!(snap.shards[0].queued, 0, "nothing left in the queue after drain");
+}
+
+/// An `ExecBackend` whose executions block until the test releases
+/// them: the deterministic way to hold a worker busy and fill the
+/// admission queue.
+struct GatedBackend {
+    started: mpsc::Sender<()>,
+    release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl ExecBackend for GatedBackend {
+    fn execute(&self, _name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        self.started.send(()).ok();
+        self.release.lock().unwrap().recv().ok();
+        Ok(inputs.to_vec())
+    }
+
+    fn names(&self) -> Vec<String> {
+        vec!["gate".to_string()]
+    }
+}
+
+fn gated_request(id: u64) -> Request {
+    Request {
+        id,
+        op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+        exec: ExecKind::Functional {
+            artifact: "gate".to_string(),
+            inputs: vec![HostTensor::I32(vec![id as i32; 4])],
+        },
+    }
+}
+
+#[test]
+fn reject_policy_applies_backpressure_mid_stream() {
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    // Sender/Receiver are !Sync; the Sync factory hands them to the one
+    // backend through take-once slots
+    let started_slot = Mutex::new(Some(started_tx));
+    let release_slot = Mutex::new(Some(release_rx));
+    let rack = Arc::new(
+        Rack::with_backend(
+            vec![GtaConfig::lanes16()],
+            move |_shard| {
+                Ok(Box::new(GatedBackend {
+                    started: started_slot.lock().unwrap().take().expect("one shard, one backend"),
+                    release: Mutex::new(
+                        release_slot.lock().unwrap().take().expect("one shard, one backend"),
+                    ),
+                }) as Box<dyn ExecBackend>)
+            },
+            // zero window: the gated execution starts immediately
+            CoalesceConfig { window: std::time::Duration::ZERO, ..Default::default() },
+            Box::new(RoundRobin::default()),
+        )
+        .unwrap(),
+    );
+    let mut session = rack.open_session(ServeOptions {
+        workers: 1,
+        queue_capacity: 1,
+        policy: AdmissionPolicy::Reject,
+    });
+
+    // r0 is picked up by the only worker and parks inside the backend
+    session.submit(gated_request(0)).expect("first submit admits");
+    started_rx.recv().expect("worker reached the gated backend");
+    // r1 fills the single queue slot
+    session.submit(gated_request(1)).expect("second submit queues");
+    // r2 finds the queue full: explicit Busy, never silently dropped
+    let err = session.submit(gated_request(2)).expect_err("queue is full");
+    assert_eq!(err, AdmitError::Busy);
+    assert_eq!(session.stats().rejected, 1);
+    assert_eq!(session.stats().submitted, 2);
+
+    // release the gate: everything admitted completes, nothing else
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let mut out = session.drain();
+    gta::coordinator::order_responses(&mut out);
+    assert_eq!(out.len(), 2, "both admitted requests complete after release");
+    assert_eq!((out[0].id, out[1].id), (0, 1));
+    assert!(out.iter().all(|r| r.is_ok()), "gated executions succeed once released");
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.admission_rejected, 1);
+    assert_eq!(snap.aggregate.admission_requeued, 1, "one requeue attempt before Busy");
+}
+
+#[test]
+fn close_drains_every_in_flight_request() {
+    let rack = soft_rack(
+        vec![GtaConfig::lanes16()],
+        CoalesceConfig::default(),
+        policy_by_name("least").unwrap(),
+    )
+    .unwrap();
+    let n = 40u64;
+    let (reqs, _) = mixed_stream(n);
+    let mut session = rack.open_session(ServeOptions::with_workers(4));
+    for req in reqs {
+        session.submit(req).expect("blocking admission");
+    }
+    // no recv at all: close must still account for every request
+    let summary = session.close();
+    assert_eq!(summary.requests, n, "close() drained all in-flight work");
+    assert_eq!(summary.errors, 0);
+    assert_eq!(session.stats().outstanding, 0);
+    assert_eq!(rack.shard(0).queued(), 0);
+    assert_eq!(rack.shard(0).in_flight(), 0);
+}
+
+#[test]
+fn drain_returns_unconsumed_responses_in_batch_order() {
+    let rack = soft_rack(
+        vec![GtaConfig::lanes16(), GtaConfig::lanes16()],
+        CoalesceConfig::default(),
+        policy_by_name("rr").unwrap(),
+    )
+    .unwrap();
+    let n = 24u64;
+    let (reqs, _) = mixed_stream(n);
+    let mut session = rack.open_session(ServeOptions::with_workers(4));
+    for req in reqs {
+        session.submit(req).unwrap();
+    }
+    let out = session.drain();
+    assert_eq!(out.len(), n as usize);
+    // the shared completion-ordering rule: same order as batch serve
+    for (i, r) in out.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+    }
+}
+
+#[test]
+fn submit_after_close_is_an_explicit_error() {
+    let rack = soft_rack(
+        vec![GtaConfig::lanes16()],
+        CoalesceConfig::default(),
+        policy_by_name("rr").unwrap(),
+    )
+    .unwrap();
+    let mut session = rack.open_session(ServeOptions::default());
+    session.submit(gated_request(0)).ok(); // "gate" is unknown to SoftBackend: error response, still a response
+    let _ = session.close();
+    let err = session.submit(gated_request(1)).expect_err("closed session");
+    assert_eq!(err, AdmitError::Closed);
+    // and the richer variant hands the id back without a shard
+    let rejected = session.try_submit(gated_request(2)).expect_err("closed session");
+    assert_eq!(rejected.id, 2);
+    assert_eq!(rejected.shard, None, "never routed");
+    assert_eq!(rejected.error, AdmitError::Closed);
+}
+
+#[test]
+fn concurrent_sessions_share_the_schedule_cache() {
+    let rack = Arc::new(Rack::sim_only(
+        vec![GtaConfig::lanes16(), GtaConfig::lanes16()],
+        Box::new(RoundRobin::default()),
+    ));
+    let shape = TensorOp::gemm(96, 169, 576, Precision::Int8);
+    let mk_req = |id: u64| Request { id, op: shape, exec: ExecKind::Simulate };
+
+    std::thread::scope(|scope| {
+        for t in 0..2u64 {
+            let rack = Arc::clone(&rack);
+            let mk = &mk_req;
+            scope.spawn(move || {
+                let mut session = rack.open_session(ServeOptions::with_workers(2));
+                for i in 0..8u64 {
+                    session.submit(mk(t * 100 + i)).unwrap();
+                }
+                let out = session.drain();
+                assert_eq!(out.len(), 8);
+                assert!(out.iter().all(|r| r.is_ok()));
+            });
+        }
+    });
+
+    // 16 schedules of ONE shape on equal-config shards across two live
+    // sessions: exactly one search rack-wide, everything else memo hits
+    assert_eq!(rack.explorer.selected.misses(), 1, "one search for one (shape, config)");
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.schedule_cache_hits + snap.aggregate.schedule_cache_misses, 16);
+    assert_eq!(snap.aggregate.schedule_cache_misses, 1);
+}
+
+#[test]
+fn capacity_weighted_routing_respects_lane_ratios() {
+    // 16-lane vs 4-lane: a 4:1 capacity ratio must show up as a 4:1
+    // traffic split under the capacity policy (deterministic: sim-only,
+    // single submitter, queue never backs up)
+    let rack = Arc::new(Rack::sim_only(
+        vec![GtaConfig::lanes16(), GtaConfig::with_lanes(4)],
+        policy_by_name("capacity").unwrap(),
+    ));
+    let n = 100u64;
+    let (reqs, _) = mixed_stream(n);
+    let resps = rack.serve(reqs, 4);
+    assert_eq!(resps.len(), n as usize);
+    let snap = rack.snapshot();
+    assert_eq!(snap.shards[0].routed, 80, "16 of 20 lanes -> 4/5 of traffic");
+    assert_eq!(snap.shards[1].routed, 20, "4 of 20 lanes -> 1/5 of traffic");
+}
