@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     println!("streaming {n} mixed requests through one RackSession ({workers} workers)…\n");
 
-    let mut session = rack.open_session(ServeOptions::with_workers(workers));
+    let session = rack.open_session(ServeOptions::with_workers(workers));
     let (requests, _expected) = mixed_stream(n);
 
     let mut tickets = HashSet::new();

@@ -1,0 +1,76 @@
+//! Transport overhead: the SAME seeded open-loop workload replayed (a)
+//! through an in-process `RackSession` and (b) through a loopback TCP
+//! `NetServer`/`GtaClient` pair, at the same arrival rate. What to look
+//! for:
+//!
+//! * both paths serve every request with zero errors and identical
+//!   verification counts (the wire changes the transport, not the
+//!   answers);
+//! * the per-request overhead of framing + JSON + loopback TCP, printed
+//!   as µs/request — the price of leaving the process.
+//!
+//! ```bash
+//! cargo bench --bench net_throughput
+//! ```
+
+use gta::coordinator::rack::policy_by_name;
+use gta::coordinator::{CoalesceConfig, ServeOptions};
+use gta::net::NetServer;
+use gta::serve::{
+    mixed_stream, run_open_loop_client, run_open_loop_stream, shard_configs, soft_rack,
+};
+use std::sync::Arc;
+
+fn main() {
+    let n = 256u64;
+    let workers = 4usize;
+    let seed = 2024u64;
+    println!(
+        "open-loop transport comparison: {n} mixed requests, 2-shard soft rack, \
+         {workers} workers, seeded Poisson arrivals\n"
+    );
+    for rate in [2_000.0f64, 20_000.0] {
+        let mk_rack = || {
+            soft_rack(
+                shard_configs(2, &[]),
+                CoalesceConfig::with_adaptive_window(),
+                policy_by_name("rr").expect("rr is a known policy"),
+            )
+            .expect("soft rack builds offline")
+        };
+
+        let local_rack = mk_rack();
+        let (reqs, expected) = mixed_stream(n);
+        let local = run_open_loop_stream(&local_rack, reqs, &expected, workers, rate, seed);
+
+        let served = mk_rack();
+        let mut server = NetServer::spawn(
+            Arc::clone(&served),
+            "127.0.0.1:0",
+            ServeOptions::with_workers(workers),
+        )
+        .expect("loopback bind");
+        let wire = run_open_loop_client(&server.addr().to_string(), n, rate, seed)
+            .expect("loopback replay");
+        server.shutdown();
+
+        for (name, s) in [("in-process", &local), ("loopback TCP", &wire)] {
+            assert_eq!(s.requests, n, "{name}: one response per request");
+            assert_eq!(s.errors, 0, "{name}");
+            assert_eq!(s.verified_failed, 0, "{name}: numerics stay exact");
+        }
+        assert_eq!(
+            wire.verified_ok, local.verified_ok,
+            "the wire changes the transport, not the answers"
+        );
+
+        let overhead_us =
+            (wire.wall_seconds - local.wall_seconds) * 1e6 / n as f64;
+        println!(
+            "offered {rate:>8.0} req/s: in-process {:>8.1} req/s  loopback {:>8.1} req/s  \
+             (overhead {overhead_us:>+7.1} us/req)",
+            local.throughput_rps, wire.throughput_rps,
+        );
+    }
+    println!("\nnet throughput OK: wire path verified against the in-process path");
+}

@@ -47,8 +47,8 @@ pub mod rack;
 pub mod session;
 
 pub use rack::{
-    order_responses, CapacityWeighted, LeastLoaded, Rack, RoundRobin, RoutePolicy, ShapeAffinity,
-    Shard, ShardStatus,
+    order_responses, unserved_response, CapacityWeighted, LeastLoaded, Rack, RoundRobin,
+    RoutePolicy, ShapeAffinity, Shard, ShardStatus, BUSY_MESSAGE,
 };
 pub use session::{RackSession, SessionStats, SubmitError, Ticket};
 
@@ -505,8 +505,32 @@ impl Drop for Dispatcher {
 pub enum AdmissionPolicy {
     /// Block the caller until a slot frees (backpressure).
     Block,
-    /// Fail fast with [`AdmitError::Busy`], handing the item back.
-    Reject,
+    /// Fail with [`AdmitError::Busy`], handing the item back. The session
+    /// submit path softens the failure with up to `retries` requeue
+    /// attempts spaced `backoff_us` apart (each counted as
+    /// `admission_requeued` in [`Metrics`]) before the Busy surfaces to
+    /// the caller — over the wire, as a `Busy` frame. The queue itself
+    /// never retries: `AdmissionQueue::admit` fails fast regardless of
+    /// the fields.
+    Reject {
+        /// Requeue attempts before giving up (0 = fail on first full).
+        retries: u32,
+        /// Sleep between attempts, in microseconds.
+        backoff_us: u64,
+    },
+}
+
+impl AdmissionPolicy {
+    /// The default fail-fast policy: one 100µs-spaced requeue retry,
+    /// exactly the pre-tunable hard-coded behavior.
+    pub fn reject() -> AdmissionPolicy {
+        AdmissionPolicy::Reject { retries: 1, backoff_us: 100 }
+    }
+
+    /// Fail-fast with no retry at all (first full queue is final).
+    pub fn reject_now() -> AdmissionPolicy {
+        AdmissionPolicy::Reject { retries: 0, backoff_us: 0 }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -557,7 +581,7 @@ impl<T> AdmissionQueue<T> {
                 return Ok(());
             }
             match policy {
-                AdmissionPolicy::Reject => return Err((item, AdmitError::Busy)),
+                AdmissionPolicy::Reject { .. } => return Err((item, AdmitError::Busy)),
                 AdmissionPolicy::Block => s = self.not_full.wait(s).unwrap(),
             }
         }
@@ -900,9 +924,9 @@ mod tests {
     fn admission_queue_blocks_rejects_and_closes() {
         let q: AdmissionQueue<i32> = AdmissionQueue::new(2);
         assert_eq!(q.capacity(), 2);
-        assert!(q.admit(1, AdmissionPolicy::Reject).is_ok());
-        assert!(q.admit(2, AdmissionPolicy::Reject).is_ok());
-        assert_eq!(q.admit(3, AdmissionPolicy::Reject).unwrap_err(), (3, AdmitError::Busy));
+        assert!(q.admit(1, AdmissionPolicy::reject()).is_ok());
+        assert!(q.admit(2, AdmissionPolicy::reject()).is_ok());
+        assert_eq!(q.admit(3, AdmissionPolicy::reject()).unwrap_err(), (3, AdmitError::Busy));
         assert_eq!(q.depth(), 2);
         // Block policy exerts backpressure: the admit parks until pop
         std::thread::scope(|scope| {
@@ -997,7 +1021,7 @@ mod tests {
                 exec: ExecKind::Simulate,
             })
             .collect();
-        let opts = ServeOptions { workers: 2, queue_capacity: 2, policy: AdmissionPolicy::Reject };
+        let opts = ServeOptions { workers: 2, queue_capacity: 2, policy: AdmissionPolicy::reject() };
         let resps = c.serve_with(reqs, opts);
         assert_eq!(resps.len(), 64, "every request gets a response, served or rejected");
         let busy = resps.iter().filter(|r| r.error.is_some()).count() as u64;

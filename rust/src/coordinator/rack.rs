@@ -385,8 +385,16 @@ pub(super) fn route_on(policy: &dyn RoutePolicy, shards: &[Arc<Shard>], req: &Re
     policy.route(req, &statuses).min(shards.len() - 1)
 }
 
-/// A response for a request that never reached a shard worker.
-pub(super) fn unserved_response(id: u64, shard: usize, msg: String) -> Response {
+/// The per-request error message a `Busy` rejection synthesizes — ONE
+/// string shared by the batch wrapper ([`Rack::serve_with`]) and the
+/// network client (`net::client`), so in-process and over-the-wire
+/// replays stay comparable response-for-response.
+pub const BUSY_MESSAGE: &str = "busy: admission queue at capacity";
+
+/// A response for a request that never reached a shard worker (admission
+/// rejection, closed session, wire-level `Busy`) — the one synthesized
+/// shape shared by the batch wrapper and the network client.
+pub fn unserved_response(id: u64, shard: usize, msg: String) -> Response {
     Response {
         id,
         shard,
@@ -539,7 +547,7 @@ impl Rack {
     /// drop another shard's responses.
     pub fn serve_with(&self, requests: Vec<Request>, opts: ServeOptions) -> Vec<Response> {
         let n = requests.len();
-        let mut session = self.open_session(opts);
+        let session = self.open_session(opts);
         // Rejections become responses here, not errors: the batch
         // contract is one response per request, served or not.
         let mut out: Vec<Response> = Vec::with_capacity(n);
@@ -548,7 +556,7 @@ impl Rack {
                 Ok(_ticket) => {}
                 Err(SubmitError { id, shard, error }) => {
                     let msg = match error {
-                        AdmitError::Busy => "busy: admission queue at capacity",
+                        AdmitError::Busy => BUSY_MESSAGE,
                         AdmitError::Closed => "admission queue closed",
                     };
                     out.push(unserved_response(id, shard.unwrap_or(0), msg.to_string()));

@@ -16,17 +16,27 @@
 //! request-queue model). `Rack::serve_with` is now a thin wrapper:
 //! submit everything, then [`drain`](RackSession::drain).
 //!
+//! Every method takes `&self` (lifecycle counters are atomics, the
+//! completion channel and worker handles sit behind mutexes), so one
+//! session can be driven from two threads at once — which is exactly
+//! what the network transport does: `net::server`'s reader thread
+//! submits while its writer thread pumps
+//! [`recv_timeout`](RackSession::recv_timeout) completions back to the
+//! socket.
+//!
 //! Determinism: routing happens on the submitting thread in submission
 //! order, exactly like the old single feeder — a deterministic policy
-//! over a fixed stream from one thread yields the same shard assignment
-//! (and therefore bit-identical responses) as the batch path.
+//! over a fixed stream from ONE submitting thread yields the same shard
+//! assignment (and therefore bit-identical responses) as the batch
+//! path. Concurrent submitters keep every delivery guarantee but
+//! interleave routing decisions nondeterministically.
 
 use super::metrics::RackSnapshot;
 use super::rack::{order_responses, route_on, RoutePolicy, Shard};
 use super::{AdmissionPolicy, AdmissionQueue, AdmitError, Request, Response, ServeOptions};
 use crate::serve::ServeSummary;
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Receipt for one admitted request: its id and the shard the router
@@ -73,18 +83,22 @@ pub struct RackSession {
     shards: Vec<Arc<Shard>>,
     policy: Arc<dyn RoutePolicy>,
     queue: Arc<AdmissionQueue<(usize, Request)>>,
-    rx: mpsc::Receiver<Response>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Completion channel. The mutex makes consumption `&self`; there is
+    /// still effectively one consumer at a time (a blocked `recv` holds
+    /// the lock until a response or channel disconnect arrives).
+    rx: Mutex<mpsc::Receiver<Response>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     opts: ServeOptions,
     opened: Instant,
-    closed: bool,
-    // lifecycle counters (single-owner, so plain fields suffice)
-    submitted: u64,
-    completed: u64,
-    rejected: u64,
-    errors: u64,
-    functional: u64,
-    total_sim_cycles: u64,
+    closed: AtomicBool,
+    // lifecycle counters (atomics: submit and recv may run on different
+    // threads — the network server's reader/writer split)
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    errors: AtomicU64,
+    functional: AtomicU64,
+    total_sim_cycles: AtomicU64,
 }
 
 impl RackSession {
@@ -123,39 +137,41 @@ impl RackSession {
             shards,
             policy,
             queue,
-            rx,
-            workers,
+            rx: Mutex::new(rx),
+            workers: Mutex::new(workers),
             opts,
             opened: Instant::now(),
-            closed: false,
-            submitted: 0,
-            completed: 0,
-            rejected: 0,
-            errors: 0,
-            functional: 0,
-            total_sim_cycles: 0,
+            closed: AtomicBool::new(false),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            functional: AtomicU64::new(0),
+            total_sim_cycles: AtomicU64::new(0),
         }
     }
 
     /// Submit one request. Routes on THIS thread in call order (see the
     /// module docs on determinism), then admits to the bounded queue
     /// under the session's [`AdmissionPolicy`]: `Block` exerts
-    /// backpressure by stalling the caller until a slot frees; `Reject`
-    /// retries once after 100µs (counted as `admission_requeued`), then
-    /// fails fast with [`AdmitError::Busy`] (counted as
-    /// `admission_rejected`). After [`close`](Self::close)/
+    /// backpressure by stalling the caller until a slot frees;
+    /// `Reject { retries, backoff_us }` requeues up to `retries` times,
+    /// sleeping `backoff_us` between attempts (each counted as
+    /// `admission_requeued`), then fails fast with [`AdmitError::Busy`]
+    /// (counted as `admission_rejected`). After [`close`](Self::close)/
     /// [`drain`](Self::drain) every submission fails with an explicit
     /// [`AdmitError::Closed`] — tickets are never silently dropped.
-    pub fn submit(&mut self, req: Request) -> Result<Ticket, AdmitError> {
+    pub fn submit(&self, req: Request) -> Result<Ticket, AdmitError> {
         self.try_submit(req).map_err(|e| e.error)
     }
 
     /// [`submit`](Self::submit), but the rejection hands back the id and
     /// routed shard so the caller can synthesize a per-request response
-    /// (what the batch `serve_with` wrapper does).
-    pub fn try_submit(&mut self, req: Request) -> Result<Ticket, SubmitError> {
+    /// (what the batch `serve_with` wrapper does, and what the network
+    /// server turns into a wire-level `Busy` frame).
+    pub fn try_submit(&self, req: Request) -> Result<Ticket, SubmitError> {
         let id = req.id;
-        if self.closed {
+        if self.is_closed() {
             return Err(SubmitError { id, shard: None, error: AdmitError::Closed });
         }
         let is_functional = matches!(req.exec, super::ExecKind::Functional { .. });
@@ -164,29 +180,50 @@ impl RackSession {
         shard.routed.fetch_add(1, Ordering::Relaxed);
         shard.in_flight.fetch_add(1, Ordering::Relaxed);
         shard.queued.fetch_add(1, Ordering::Relaxed);
-        // one requeue attempt on Busy before giving up, as the old
-        // batch feeder did
-        let mut requeued = false;
-        let attempt = match self.queue.admit((sidx, req), self.opts.policy) {
-            Err((item, AdmitError::Busy)) => {
-                requeued = true;
-                shard.metrics.record_admission_requeued();
-                std::thread::sleep(Duration::from_micros(100));
-                self.queue.admit(item, AdmissionPolicy::Reject)
+        // Count the submission BEFORE admitting (and roll back on
+        // rejection): once the item is in the queue a concurrent
+        // consumer thread — the network server's egress pump — may count
+        // the completion immediately, and `completed > submitted` would
+        // underflow `outstanding`.
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        if is_functional {
+            self.functional.fetch_add(1, Ordering::Relaxed);
+        }
+        // the Reject policy's tunable requeue loop: retry a Busy up to
+        // `retries` times before surfacing it
+        let mut attempt = self.queue.admit((sidx, req), self.opts.policy);
+        if let AdmissionPolicy::Reject { retries, backoff_us } = self.opts.policy {
+            let mut tries = 0u32;
+            loop {
+                match attempt {
+                    Err((item, AdmitError::Busy)) if tries < retries => {
+                        tries += 1;
+                        shard.metrics.record_admission_requeued();
+                        if backoff_us > 0 {
+                            std::thread::sleep(Duration::from_micros(backoff_us));
+                        }
+                        attempt = self.queue.admit(item, self.opts.policy);
+                    }
+                    other => {
+                        attempt = other;
+                        break;
+                    }
+                }
             }
-            other => other,
-        };
+        }
         match attempt {
             Ok(()) => {
                 shard.metrics.record_queue_depth(self.queue.depth());
-                self.submitted += 1;
-                self.functional += is_functional as u64;
                 Ok(Ticket { id, shard: sidx })
             }
             Err((_, error)) => {
-                if requeued {
+                self.submitted.fetch_sub(1, Ordering::Relaxed);
+                if is_functional {
+                    self.functional.fetch_sub(1, Ordering::Relaxed);
+                }
+                if error == AdmitError::Busy {
                     shard.metrics.record_admission_rejected();
-                    self.rejected += 1;
+                    self.rejected.fetch_add(1, Ordering::Relaxed);
                 }
                 shard.in_flight.fetch_sub(1, Ordering::Relaxed);
                 shard.queued.fetch_sub(1, Ordering::Relaxed);
@@ -199,19 +236,33 @@ impl RackSession {
     /// Returns `None` when nothing is outstanding (so a submit/recv loop
     /// can never deadlock on its own session) or after the workers shut
     /// down.
-    pub fn recv(&mut self) -> Option<Response> {
+    pub fn recv(&self) -> Option<Response> {
         if self.outstanding() == 0 {
             return None;
         }
-        match self.rx.recv() {
+        match self.rx.lock().unwrap().recv() {
             Ok(resp) => Some(self.count(resp)),
             Err(_) => None,
         }
     }
 
     /// Next completed response if one is ready right now.
-    pub fn try_recv(&mut self) -> Option<Response> {
-        match self.rx.try_recv() {
+    pub fn try_recv(&self) -> Option<Response> {
+        match self.rx.lock().unwrap().try_recv() {
+            Ok(resp) => Some(self.count(resp)),
+            Err(_) => None,
+        }
+    }
+
+    /// Next completed response, waiting at most `timeout` — regardless
+    /// of whether anything is currently outstanding (a concurrent
+    /// submitter may admit work at any moment). `None` on timeout or
+    /// after the workers shut down; pair with
+    /// [`is_closed`](Self::is_closed) to tell the two apart. This is the
+    /// egress pump's accessor: `net::server`'s writer thread calls it in
+    /// a loop while the reader thread keeps submitting.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        match self.rx.lock().unwrap().recv_timeout(timeout) {
             Ok(resp) => Some(self.count(resp)),
             Err(_) => None,
         }
@@ -219,33 +270,50 @@ impl RackSession {
 
     /// Blocking iterator over completions: yields until every currently
     /// outstanding request has been consumed, then stops (submit more
-    /// and iterate again, or interleave — the session is one owner).
-    pub fn iter(&mut self) -> impl Iterator<Item = Response> + '_ {
+    /// and iterate again, or interleave — see [`recv`](Self::recv)).
+    pub fn iter(&self) -> impl Iterator<Item = Response> + '_ {
         std::iter::from_fn(move || self.recv())
     }
 
     /// Tickets admitted but not yet consumed by the caller.
+    /// (Saturating: with a concurrent submitter and consumer the two
+    /// loads are not one atomic snapshot.)
     pub fn outstanding(&self) -> u64 {
-        self.submitted - self.completed
+        self.submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.completed.load(Ordering::Relaxed))
+    }
+
+    /// Whether [`drain`](Self::drain)/[`close`](Self::close) has begun:
+    /// all subsequent submissions fail with [`AdmitError::Closed`].
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Relaxed)
+    }
+
+    /// The options this session was opened with.
+    pub fn opts(&self) -> ServeOptions {
+        self.opts
     }
 
     /// Live session counters (queue depth, submitted/completed/rejected).
     pub fn stats(&self) -> SessionStats {
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        let completed = self.completed.load(Ordering::Relaxed);
         SessionStats {
-            submitted: self.submitted,
-            completed: self.completed,
-            rejected: self.rejected,
-            outstanding: self.outstanding(),
+            submitted,
+            completed,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            outstanding: submitted.saturating_sub(completed),
             queue_depth: self.queue.depth(),
         }
     }
 
     /// Fold one consumed response into the lifecycle counters.
-    fn count(&mut self, resp: Response) -> Response {
-        self.completed += 1;
-        self.total_sim_cycles += resp.sim.cycles;
+    fn count(&self, resp: Response) -> Response {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.total_sim_cycles.fetch_add(resp.sim.cycles, Ordering::Relaxed);
         if resp.error.is_some() {
-            self.errors += 1;
+            self.errors.fetch_add(1, Ordering::Relaxed);
         }
         resp
     }
@@ -254,17 +322,24 @@ impl RackSession {
     /// request, and return all not-yet-consumed responses, ordered by
     /// the same completion-ordering rule as the batch path
     /// ([`order_responses`] — sorted by id). Subsequent
-    /// [`submit`](Self::submit)s fail with [`AdmitError::Closed`].
-    pub fn drain(&mut self) -> Vec<Response> {
-        self.closed = true;
+    /// [`submit`](Self::submit)s fail with [`AdmitError::Closed`]. A
+    /// concurrent consumer (e.g. a still-running egress pump) may take
+    /// some of the final responses instead; they are folded into the
+    /// session counters either way.
+    pub fn drain(&self) -> Vec<Response> {
+        self.closed.store(true, Ordering::SeqCst);
         self.queue.close();
-        for h in self.workers.drain(..) {
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
         // workers are gone: everything they completed is in the channel
         let mut out = Vec::new();
-        while let Ok(resp) = self.rx.try_recv() {
-            out.push(self.count(resp));
+        {
+            let rx = self.rx.lock().unwrap();
+            while let Ok(resp) = rx.try_recv() {
+                out.push(self.count(resp));
+            }
         }
         order_responses(&mut out);
         out
@@ -277,26 +352,27 @@ impl RackSession {
     /// rollup and per-shard telemetry. Verification counters are zero —
     /// checking outputs against an oracle is the driver's job
     /// (`serve::run_stream` and friends), not the session's.
-    pub fn close(&mut self) -> ServeSummary {
+    pub fn close(&self) -> ServeSummary {
         let unconsumed = self.drain();
         drop(unconsumed); // already folded into the counters by drain()
         let wall = self.opened.elapsed().as_secs_f64();
         let shards = RackSnapshot::from_shards(self.shards.iter().map(|s| s.telemetry()).collect());
         let snap = shards.aggregate.clone();
+        let completed = self.completed.load(Ordering::Relaxed);
         ServeSummary {
-            requests: self.completed,
-            functional: self.functional,
+            requests: completed,
+            functional: self.functional.load(Ordering::Relaxed),
             verified_ok: 0,
             verified_failed: 0,
-            errors: self.errors,
+            errors: self.errors.load(Ordering::Relaxed),
             prescheduled: 0,
             coalesced_batches: snap.batches,
             max_batch: snap.max_batch,
             coalesce_window_us: snap.coalesce_window_us,
             shards: Some(shards),
             wall_seconds: wall,
-            throughput_rps: self.completed as f64 / wall.max(1e-9),
-            total_sim_cycles: self.total_sim_cycles,
+            throughput_rps: completed as f64 / wall.max(1e-9),
+            total_sim_cycles: self.total_sim_cycles.load(Ordering::Relaxed),
             metrics: snap,
         }
     }
@@ -304,7 +380,7 @@ impl RackSession {
 
 impl Drop for RackSession {
     fn drop(&mut self) {
-        if !self.closed || !self.workers.is_empty() {
+        if !self.is_closed() || !self.workers.lock().unwrap().is_empty() {
             let _ = self.drain();
         }
     }

@@ -46,10 +46,18 @@
 //!   batch `serve`/`serve_with` as thin wrappers over it and an
 //!   open-loop seeded arrival driver in `serve`
 //!   (`gta serve --stream`, see `docs/serving.md`)
+//! * [`net`] — the session over a real transport: a dependency-free
+//!   TCP wire protocol (length-prefixed frames, JSON bodies), a
+//!   `NetServer` giving every accepted connection its own
+//!   `RackSession` against one shared `Rack`, and the blocking
+//!   `GtaClient` mirror of the session API
+//!   (`gta serve --listen` / `gta client --connect`, see
+//!   `docs/transport.md`)
 //! * [`report`] — regenerates every table and figure of the paper
 
 pub mod arch;
 pub mod coordinator;
+pub mod net;
 pub mod util;
 pub mod lowering;
 pub mod ops;

@@ -28,6 +28,7 @@ USAGE:
             [--shards N] [--policy rr|least|affinity|capacity]
             [--shard-lanes L1,L2,...]
             [--stream] [--arrival-rate R] [--seed S]
+            [--listen ADDR]
                                     e2e driver: mixed request stream through
                                     the batched (admission queue + coalescing)
                                     serve path; `--backend soft` runs the
@@ -39,7 +40,19 @@ USAGE:
                                     as an open-loop Poisson arrival process at
                                     `--arrival-rate R` req/s (default 5000)
                                     with a seeded inter-arrival RNG
-                                    (see docs/serving.md)
+                                    (see docs/serving.md);
+                                    `--listen ADDR` (e.g. 0.0.0.0:7070) puts
+                                    the same rack on TCP instead: every
+                                    connection gets its own streaming session
+                                    (see docs/transport.md)
+  gta client --connect ADDR [--requests N] [--stream] [--arrival-rate R]
+             [--seed S]
+                                    replay the mixed e2e stream against a
+                                    `gta serve --listen` server over TCP:
+                                    batch submit-then-drain by default,
+                                    `--stream` replays the seeded open-loop
+                                    Poisson driver (bit-comparable with the
+                                    in-process `serve --stream` path)
 ";
 
 fn main() -> Result<()> {
@@ -123,6 +136,7 @@ fn main() -> Result<()> {
         "schedule" => cmd_schedule(&flags)?,
         "verify" => cmd_verify(&flags)?,
         "serve" => cmd_serve(&flags)?,
+        "client" => cmd_client(&flags)?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprint!("{USAGE}");
@@ -269,6 +283,28 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .get("shard-lanes")
         .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
         .unwrap_or_default();
+    if let Some(addr) = flags.get("listen") {
+        // server mode: the same rack the in-process drivers build, on TCP
+        let backend = flags.get("backend").unwrap_or("pjrt");
+        let artifacts = flags.get("artifacts").map(Into::into);
+        let rack = gta::serve::listen_rack(backend, artifacts, shards, &lanes, policy)?;
+        let mut server = gta::net::NetServer::spawn(
+            rack,
+            addr,
+            gta::coordinator::ServeOptions::with_workers(workers),
+        )?;
+        println!(
+            "gta serving on {} ({} shard(s), {} backend, policy {}) — \
+             connect with `gta client --connect {}`",
+            server.addr(),
+            shards.max(1),
+            backend,
+            policy,
+            server.addr()
+        );
+        server.join();
+        return Ok(());
+    }
     let sharded = shards > 1 || !lanes.is_empty();
     let stream = flags.get("stream").is_some();
     let rate: f64 = flags.get("arrival-rate").and_then(|v| v.parse().ok()).unwrap_or(5000.0);
@@ -298,6 +334,23 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             }
         }
         (other, _) => bail!("unknown backend {other:?} (pjrt|soft)"),
+    };
+    print!("{}", summary.render());
+    Ok(())
+}
+
+fn cmd_client(flags: &Flags) -> Result<()> {
+    let addr = flags.get("connect").ok_or_else(|| anyhow!("--connect ADDR required"))?;
+    let n = flags.get_u64("requests", 64);
+    let summary = if flags.get("stream").is_some() {
+        let rate: f64 = flags.get("arrival-rate").and_then(|v| v.parse().ok()).unwrap_or(5000.0);
+        if !(rate > 0.0) {
+            bail!("--arrival-rate must be a positive req/s rate, got {rate}");
+        }
+        let seed = flags.get_u64("seed", 2024);
+        gta::serve::run_open_loop_client(addr, n, rate, seed)?
+    } else {
+        gta::serve::run_client_mixed(addr, n)?
     };
     print!("{}", summary.render());
     Ok(())

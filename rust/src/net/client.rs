@@ -1,0 +1,295 @@
+//! The blocking GTA network client: a [`GtaClient`] mirrors the
+//! in-process [`crate::coordinator::RackSession`] API over one TCP
+//! connection — `submit` a [`Request`] and get a ticket id back
+//! immediately (submissions pipeline; nothing waits for a round trip),
+//! consume completions **out of submission order** with
+//! [`recv`](GtaClient::recv)/[`try_recv`](GtaClient::try_recv), then
+//! [`drain`](GtaClient::drain) (every outstanding response, ordered by
+//! id) and [`close`](GtaClient::close) (the server session's final
+//! [`ServeSummary`], per-shard telemetry included).
+//!
+//! Wire-level backpressure surfaces exactly like the in-process batch
+//! wrapper's: a server-side `AdmitError::Busy` arrives as a `Busy`
+//! frame and is synthesized into an error-carrying [`Response`] with
+//! the same `"busy: admission queue at capacity"` message the batch
+//! path uses, so a replay over TCP is comparable response-for-response
+//! with an in-process replay. Under a blocking-admission server the
+//! socket itself is the backpressure: the server stops reading and the
+//! client's `submit` eventually stalls in `write`.
+//!
+//! A dedicated reader thread owns the socket's read side and turns
+//! every incoming frame into an event; the caller's thread owns the
+//! write side. Fatal protocol errors from the server (or a vanished
+//! connection) surface as `Err` from whichever call observes them.
+
+use super::proto::{
+    busy_shard, client_hello, error_message, read_frame, write_frame, DecodeError, Frame,
+    FrameType, PROTO_VERSION,
+};
+use crate::coordinator::{order_responses, unserved_response, Request, Response};
+use crate::serve::ServeSummary;
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc;
+
+/// The message a `Busy` frame synthesizes into — the SAME string the
+/// in-process batch wrapper uses (re-exported from the coordinator), so
+/// the two paths stay comparable response-for-response.
+pub use crate::coordinator::BUSY_MESSAGE;
+
+/// What the server said in its `Hello`.
+#[derive(Debug, Clone)]
+pub struct ServerInfo {
+    pub proto: u64,
+    pub shards: usize,
+    pub policy: String,
+}
+
+/// One decoded frame, classified for the consuming thread.
+enum Event {
+    Response(Box<Response>),
+    Busy { id: u64, shard: Option<usize> },
+    RequestError { id: u64, message: String },
+    Drained,
+    Closed(Box<ServeSummary>),
+    Fatal(String),
+    Disconnected,
+}
+
+/// A blocking client for one GTA serving connection. Not `Sync`: one
+/// thread drives it (the reader thread behind it is an implementation
+/// detail).
+pub struct GtaClient {
+    stream: TcpStream,
+    writer: BufWriter<TcpStream>,
+    events: mpsc::Receiver<Event>,
+    reader: Option<std::thread::JoinHandle<()>>,
+    server: ServerInfo,
+    submitted: u64,
+    completed: u64,
+    closed: bool,
+}
+
+impl GtaClient {
+    /// Connect, negotiate the protocol version, and return a live
+    /// client. Fails if the server speaks a different version.
+    pub fn connect(addr: &str) -> Result<GtaClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let mut writer = BufWriter::new(stream.try_clone()?);
+        let mut sock_reader = BufReader::new(stream.try_clone()?);
+        write_frame(&mut writer, &Frame::new(FrameType::Hello, 0, client_hello()))?;
+        writer.flush()?;
+        // the Hello reply is read synchronously, before the reader
+        // thread takes over the socket
+        let hello = match read_frame(&mut sock_reader) {
+            Ok(f) if f.ty == FrameType::Hello => f,
+            Ok(f) if f.ty == FrameType::Error => bail!("server refused: {}", error_message(&f.body)),
+            Ok(f) => bail!("expected Hello from server, got {:?}", f.ty),
+            Err(e) => bail!("handshake failed: {e}"),
+        };
+        let proto = super::proto::hello_proto(&hello.body)
+            .ok_or_else(|| anyhow!("server Hello without a protocol version"))?;
+        if proto != PROTO_VERSION {
+            bail!("server speaks protocol {proto}, this client speaks {PROTO_VERSION}");
+        }
+        let server = ServerInfo {
+            proto,
+            shards: hello
+                .body
+                .get("shards")
+                .and_then(crate::util::json::Json::as_u64)
+                .unwrap_or(1) as usize,
+            policy: hello
+                .body
+                .get("policy")
+                .and_then(crate::util::json::Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+        };
+        let (tx, events) = mpsc::channel::<Event>();
+        let reader = std::thread::Builder::new()
+            .name("gta-client-reader".into())
+            .spawn(move || loop {
+                let event = match read_frame(&mut sock_reader) {
+                    Ok(f) => match f.ty {
+                        FrameType::Response => match super::proto::decode_response(&f.body) {
+                            Ok(resp) => Event::Response(Box::new(resp)),
+                            Err(e) => Event::Fatal(format!("undecodable response: {e:#}")),
+                        },
+                        FrameType::Busy => Event::Busy { id: f.id, shard: busy_shard(&f.body) },
+                        FrameType::Error if f.id != 0 => {
+                            Event::RequestError { id: f.id, message: error_message(&f.body) }
+                        }
+                        FrameType::Error => Event::Fatal(error_message(&f.body)),
+                        FrameType::Drained => Event::Drained,
+                        FrameType::Closed => match super::proto::decode_summary(&f.body) {
+                            Ok(s) => Event::Closed(Box::new(s)),
+                            Err(e) => Event::Fatal(format!("undecodable summary: {e:#}")),
+                        },
+                        other => Event::Fatal(format!("unexpected {other:?} frame from server")),
+                    },
+                    Err(DecodeError::Eof) | Err(DecodeError::Io(_)) => Event::Disconnected,
+                    Err(DecodeError::Malformed(m)) => Event::Fatal(m),
+                };
+                let terminal = matches!(
+                    event,
+                    Event::Fatal(_) | Event::Disconnected | Event::Closed(_)
+                );
+                if tx.send(event).is_err() || terminal {
+                    break;
+                }
+            })?;
+        Ok(GtaClient {
+            stream,
+            writer,
+            events,
+            reader: Some(reader),
+            server,
+            submitted: 0,
+            completed: 0,
+            closed: false,
+        })
+    }
+
+    /// The server's `Hello` (shard count, routing policy).
+    pub fn server(&self) -> &ServerInfo {
+        &self.server
+    }
+
+    /// Tickets submitted but not yet resolved by a response, a `Busy`,
+    /// or a per-request error.
+    pub fn outstanding(&self) -> u64 {
+        self.submitted - self.completed
+    }
+
+    /// Submit one request, returning its ticket id immediately (the
+    /// shard assignment happens server-side; a rejection arrives later
+    /// as a `Busy`-synthesized error response). Under a blocking-
+    /// admission server an overloaded queue stalls this call in the
+    /// socket write — TCP is the backpressure.
+    pub fn submit(&mut self, req: &Request) -> Result<u64> {
+        if self.closed {
+            bail!("client already closed");
+        }
+        let frame = Frame::new(FrameType::Submit, req.id, super::proto::encode_request(req));
+        write_frame(&mut self.writer, &frame)?;
+        self.writer.flush()?;
+        self.submitted += 1;
+        Ok(req.id)
+    }
+
+    /// Map one event to a response (counting it), or a fatal error.
+    fn resolve(&mut self, event: Event) -> Result<Option<Response>> {
+        match event {
+            Event::Response(resp) => {
+                self.completed += 1;
+                Ok(Some(*resp))
+            }
+            Event::Busy { id, shard } => {
+                self.completed += 1;
+                Ok(Some(unserved_response(id, shard.unwrap_or(0), BUSY_MESSAGE.to_string())))
+            }
+            Event::RequestError { id, message } => {
+                self.completed += 1;
+                Ok(Some(unserved_response(id, 0, message)))
+            }
+            Event::Drained | Event::Closed(_) => {
+                bail!("unexpected lifecycle frame while receiving responses")
+            }
+            Event::Fatal(m) => bail!("protocol error: {m}"),
+            Event::Disconnected => bail!("server disconnected"),
+        }
+    }
+
+    /// Next completion, blocking while tickets are outstanding; `None`
+    /// when nothing is outstanding. A server-side rejection or
+    /// per-request error comes back as an error-carrying [`Response`],
+    /// exactly like the in-process batch wrapper synthesizes.
+    pub fn recv(&mut self) -> Result<Option<Response>> {
+        if self.outstanding() == 0 {
+            return Ok(None);
+        }
+        match self.events.recv() {
+            Ok(event) => self.resolve(event),
+            Err(_) => bail!("server disconnected"),
+        }
+    }
+
+    /// Next completion if one is already here.
+    pub fn try_recv(&mut self) -> Result<Option<Response>> {
+        match self.events.try_recv() {
+            Ok(event) => self.resolve(event),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => bail!("server disconnected"),
+        }
+    }
+
+    /// Ask the server to drain: every admitted request finishes, every
+    /// not-yet-consumed response comes back (ordered by id, the shared
+    /// completion-ordering rule). After this, submits fail server-side;
+    /// only [`close`](Self::close) remains useful.
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        if self.closed {
+            bail!("client already closed");
+        }
+        write_frame(&mut self.writer, &Frame::new(FrameType::Drained, 0, crate::util::json::Json::Null))?;
+        self.writer.flush()?;
+        let mut out = Vec::new();
+        loop {
+            match self.events.recv() {
+                Ok(Event::Drained) => break,
+                Ok(Event::Closed(_)) => bail!("server closed during drain"),
+                Ok(event) => {
+                    if let Some(resp) = self.resolve(event)? {
+                        out.push(resp);
+                    }
+                }
+                Err(_) => bail!("server disconnected mid-drain"),
+            }
+        }
+        order_responses(&mut out);
+        Ok(out)
+    }
+
+    /// Close the session: the server drains it (any responses still in
+    /// flight are folded into the summary, as in-process `close` does)
+    /// and sends back the final [`ServeSummary`] with its rack
+    /// telemetry. Consumes the connection.
+    pub fn close(mut self) -> Result<ServeSummary> {
+        self.closed = true;
+        write_frame(&mut self.writer, &Frame::new(FrameType::Closed, 0, crate::util::json::Json::Null))?;
+        self.writer.flush()?;
+        let summary = loop {
+            match self.events.recv() {
+                Ok(Event::Closed(summary)) => break *summary,
+                Ok(Event::Drained) => continue,
+                Ok(Event::Fatal(m)) => bail!("protocol error: {m}"),
+                Ok(Event::Disconnected) => bail!("server disconnected before the final summary"),
+                Ok(event) => {
+                    // responses still in flight: folded server-side,
+                    // dropped here (call drain() first to keep them)
+                    let _ = self.resolve(event)?;
+                }
+                Err(_) => bail!("server disconnected before the final summary"),
+            }
+        };
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        Ok(summary)
+    }
+}
+
+impl Drop for GtaClient {
+    fn drop(&mut self) {
+        // kill the socket so the reader thread unblocks, then join it
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+

@@ -1,0 +1,34 @@
+//! The network serving subsystem: the [`crate::coordinator::RackSession`]
+//! put on a real transport, with **zero new dependencies** — plain
+//! `std::net` TCP carrying a versioned, length-prefixed frame protocol
+//! with JSON bodies (the in-tree [`crate::util::json`]).
+//!
+//! Three layers:
+//!
+//! * [`proto`] — the wire format: frame codec
+//!   (`len:u32 | type:u8 | id:u64 | JSON body`), the
+//!   `Hello/SubmitRequest/Response/Busy/Drained/Closed/Error` message
+//!   grammar, and exact JSON codecs for requests, responses and the
+//!   final serve summary. Hostile bytes decode to clean errors, never
+//!   panics.
+//! * [`server`] — [`NetServer`]: a `TcpListener` accept loop; each
+//!   connection gets its own `RackSession` over one shared
+//!   [`crate::coordinator::Rack`], a reader thread that submits and a
+//!   writer thread that pumps completions out as they finish (out of
+//!   submission order). Admission `Busy` becomes a wire frame;
+//!   disconnects drain the session so no admitted work is ever lost.
+//! * [`client`] — [`GtaClient`]: the blocking client mirror of the
+//!   session API (`submit` → ticket id, `recv`/`try_recv`, `drain`,
+//!   `close` → final `ServeSummary`).
+//!
+//! `gta serve --listen ADDR` serves a rack over this; `gta client
+//! --connect ADDR --stream` replays the seeded open-loop driver through
+//! it, bit-comparable with the in-process path. See `docs/transport.md`.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use client::{GtaClient, ServerInfo, BUSY_MESSAGE};
+pub use proto::{Frame, FrameType, MAX_BODY_BYTES, PROTO_VERSION};
+pub use server::NetServer;

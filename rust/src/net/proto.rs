@@ -1,0 +1,957 @@
+//! The GTA wire protocol: versioned, length-prefixed frames with JSON
+//! bodies (via the in-tree [`crate::util::json`] — no serde, no new
+//! dependencies). See `docs/transport.md` for the full frame layout and
+//! message grammar; the short version:
+//!
+//! ```text
+//! frame := len:u32(BE)  type:u8  id:u64(BE)  body:UTF-8 JSON
+//! ```
+//!
+//! `len` counts everything after itself (type + id + body, so `len >= 9`),
+//! `type` is a [`FrameType`] discriminant, `id` is the ticket/request id
+//! the frame refers to (0 when it refers to the connection), and the
+//! body is one JSON document (an empty body decodes as `null`).
+//! Oversized (`len − 9 > MAX_BODY_BYTES`), truncated, or undecodable
+//! frames are [`DecodeError::Malformed`] — the peer answers with an
+//! `Error` frame and closes the connection, never a panic.
+//!
+//! Integers that may exceed 2^53 (ids live in the binary header, but
+//! config fingerprints, cycle counts and i64 tensor elements travel in
+//! bodies) are encoded as decimal *strings* when they would lose
+//! precision as a JSON number, and both forms are accepted on decode —
+//! so every `u64`/`i64` round-trips bit-exactly.
+
+use crate::coordinator::metrics::{RackSnapshot, ShardTelemetry, Snapshot};
+use crate::coordinator::lane_scheduler::LaneUsage;
+use crate::coordinator::{ExecKind, Request, Response};
+use crate::ops::{PGemm, TensorOp, VectorKind, VectorOp};
+use crate::precision::Precision;
+use crate::runtime::HostTensor;
+use crate::scheduler::{Candidate, ScheduleConfig};
+use crate::serve::ServeSummary;
+use crate::sim::SimReport;
+use crate::util::json::Json;
+use crate::{Arrangement, Dataflow};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Protocol version spoken by this build. `Hello` frames carry it; a
+/// mismatch is answered with a fatal `Error` frame.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Hard cap on one frame's body. A `len` prefix implying more is
+/// malformed and kills the connection — a 4-byte prefix must never make
+/// the server allocate gigabytes.
+pub const MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Frame header bytes after the length prefix: type (1) + id (8).
+const HEADER_AFTER_LEN: usize = 9;
+
+/// The message grammar (see `docs/transport.md` for who sends what
+/// when). Several types are used in both directions: a client sends
+/// `Drained`/`Closed` with an empty body to *request* the transition,
+/// and the server echoes the same type back once it is complete.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// Version negotiation; first frame in each direction.
+    Hello,
+    /// Client → server: one [`Request`] to admit (`SubmitRequest`).
+    Submit,
+    /// Server → client: one completed [`Response`] (out of submission
+    /// order).
+    Response,
+    /// Server → client: the submission with this id was rejected with
+    /// `AdmitError::Busy` — wire-level backpressure.
+    Busy,
+    /// Drain request (client, empty body) / drain-complete ack (server).
+    Drained,
+    /// Close request (client, empty body) / final frame (server, body =
+    /// the session's [`ServeSummary`] with its `RackSnapshot`).
+    Closed,
+    /// Per-request (`id` != 0 refers to a ticket) or fatal
+    /// (`{"fatal": true}`) protocol error.
+    Error,
+}
+
+impl FrameType {
+    pub fn code(self) -> u8 {
+        match self {
+            FrameType::Hello => 1,
+            FrameType::Submit => 2,
+            FrameType::Response => 3,
+            FrameType::Busy => 4,
+            FrameType::Drained => 5,
+            FrameType::Closed => 6,
+            FrameType::Error => 7,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<FrameType> {
+        Some(match code {
+            1 => FrameType::Hello,
+            2 => FrameType::Submit,
+            3 => FrameType::Response,
+            4 => FrameType::Busy,
+            5 => FrameType::Drained,
+            6 => FrameType::Closed,
+            7 => FrameType::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub ty: FrameType,
+    /// Ticket/request id this frame refers to (0 = the connection).
+    pub id: u64,
+    /// JSON body (`Json::Null` for an empty body).
+    pub body: Json,
+}
+
+impl Frame {
+    pub fn new(ty: FrameType, id: u64, body: Json) -> Frame {
+        Frame { ty, id, body }
+    }
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum DecodeError {
+    /// Clean end of stream at a frame boundary (peer closed).
+    Eof,
+    /// Transport error mid-read.
+    Io(std::io::Error),
+    /// The bytes violate the protocol (truncated header/body, unknown
+    /// type, oversized length, bad UTF-8, bad JSON). The connection is
+    /// unrecoverable — framing can no longer be trusted.
+    Malformed(String),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Eof => write!(f, "end of stream"),
+            DecodeError::Io(e) => write!(f, "transport error: {e}"),
+            DecodeError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Serialize one frame. An empty/`null` body is written as zero bytes.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let body = match &frame.body {
+        Json::Null => String::new(),
+        b => b.render(),
+    };
+    let len = (HEADER_AFTER_LEN + body.len()) as u32;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(&[frame.ty.code()])?;
+    w.write_all(&frame.id.to_be_bytes())?;
+    w.write_all(body.as_bytes())
+}
+
+/// Read one frame. Distinguishes a clean EOF at a frame boundary
+/// ([`DecodeError::Eof`]) from a truncation mid-frame (malformed).
+/// Never panics on hostile input: unknown types, oversized length
+/// prefixes, bad UTF-8 and bad JSON all come back as
+/// [`DecodeError::Malformed`].
+pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<Frame, DecodeError> {
+    let mut len_buf = [0u8; 4];
+    read_exact_or_eof(r, &mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len < HEADER_AFTER_LEN {
+        return Err(DecodeError::Malformed(format!(
+            "frame length {len} shorter than the {HEADER_AFTER_LEN}-byte header"
+        )));
+    }
+    let body_len = len - HEADER_AFTER_LEN;
+    if body_len > MAX_BODY_BYTES {
+        return Err(DecodeError::Malformed(format!(
+            "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    let mut head = [0u8; HEADER_AFTER_LEN];
+    read_exact_mid_frame(r, &mut head)?;
+    let ty = FrameType::from_code(head[0])
+        .ok_or_else(|| DecodeError::Malformed(format!("unknown frame type {}", head[0])))?;
+    let id = u64::from_be_bytes(head[1..9].try_into().expect("8-byte slice"));
+    let mut body_bytes = vec![0u8; body_len];
+    read_exact_mid_frame(r, &mut body_bytes)?;
+    let body = if body_bytes.is_empty() {
+        Json::Null
+    } else {
+        let text = std::str::from_utf8(&body_bytes)
+            .map_err(|e| DecodeError::Malformed(format!("body is not UTF-8: {e}")))?;
+        crate::util::json::parse(text)
+            .map_err(|e| DecodeError::Malformed(format!("body is not JSON: {e}")))?
+    };
+    Ok(Frame { ty, id, body })
+}
+
+/// Fill `buf`, treating 0 bytes at the first read as a clean EOF.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> std::result::Result<(), DecodeError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Err(DecodeError::Eof),
+            Ok(0) => {
+                return Err(DecodeError::Malformed("stream truncated mid frame header".into()))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(DecodeError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Fill `buf` strictly inside a frame: any EOF is a truncation.
+fn read_exact_mid_frame<R: Read>(r: &mut R, buf: &mut [u8]) -> std::result::Result<(), DecodeError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(DecodeError::Malformed("stream truncated mid frame".into()))
+        }
+        Err(e) => Err(DecodeError::Io(e)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON mapping helpers: exact u64/i64 round-trips.
+
+/// Largest integer a JSON `f64` number holds exactly.
+const MAX_SAFE_INT: u64 = 1 << 53;
+
+fn ju64(v: u64) -> Json {
+    if v <= MAX_SAFE_INT {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+fn ji64(v: i64) -> Json {
+    if v.unsigned_abs() <= MAX_SAFE_INT {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// f32 tensor elements: finite values ride as JSON numbers (f32→f64 is
+/// exact); NaN/±inf — which JSON cannot express and `Json::render`
+/// would degrade to `null` — ride as the strings `"NaN"`/`"inf"`/
+/// `"-inf"` instead, so a functional response containing them crosses
+/// the wire as the same special value rather than killing the
+/// connection (NaN payload bits are not preserved).
+fn jf32(x: f32) -> Json {
+    if x.is_finite() {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(format!("{x}"))
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    let v = j.get(key).ok_or_else(|| anyhow!("missing field {key:?}"))?;
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= MAX_SAFE_INT as f64 => Ok(*n as u64),
+        Json::Str(s) => s.parse().with_context(|| format!("field {key:?} is not a u64")),
+        _ => bail!("field {key:?} is not a u64"),
+    }
+}
+
+fn get_i64_val(v: &Json) -> Result<i64> {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && n.abs() <= MAX_SAFE_INT as f64 => Ok(*n as i64),
+        Json::Str(s) => s.parse().map_err(|_| anyhow!("not an i64: {s:?}")),
+        _ => bail!("not an i64"),
+    }
+}
+
+fn get_u64_val(v: &Json) -> Result<u64> {
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= MAX_SAFE_INT as f64 => Ok(*n as u64),
+        Json::Str(s) => s.parse().map_err(|_| anyhow!("not a u64: {s:?}")),
+        _ => bail!("not a u64"),
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    match j.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        Some(Json::Null) => Ok(f64::NAN), // non-finite degraded to null on encode
+        _ => bail!("missing or non-numeric field {key:?}"),
+    }
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key).and_then(Json::as_str).ok_or_else(|| anyhow!("missing string field {key:?}"))
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+// ---------------------------------------------------------------------
+// Operator / tensor codecs.
+
+fn encode_tensor(t: &HostTensor) -> Json {
+    match t {
+        HostTensor::I32(v) => obj(vec![
+            ("dtype", Json::Str("i32".into())),
+            ("data", Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())),
+        ]),
+        HostTensor::I64(v) => obj(vec![
+            ("dtype", Json::Str("i64".into())),
+            ("data", Json::Arr(v.iter().map(|&x| ji64(x)).collect())),
+        ]),
+        HostTensor::F32(v) => obj(vec![
+            ("dtype", Json::Str("f32".into())),
+            ("data", Json::Arr(v.iter().map(|&x| jf32(x)).collect())),
+        ]),
+    }
+}
+
+fn decode_tensor(j: &Json) -> Result<HostTensor> {
+    let data = j.get("data").and_then(Json::as_arr).ok_or_else(|| anyhow!("tensor without data"))?;
+    Ok(match get_str(j, "dtype")? {
+        "i32" => HostTensor::I32(
+            data.iter()
+                .map(|v| get_i64_val(v).and_then(|x| i32::try_from(x).map_err(|_| anyhow!("i32 overflow"))))
+                .collect::<Result<_>>()?,
+        ),
+        "i64" => HostTensor::I64(data.iter().map(get_i64_val).collect::<Result<_>>()?),
+        "f32" => HostTensor::F32(
+            data.iter()
+                .map(|v| match v {
+                    Json::Num(n) => Ok(*n as f32),
+                    Json::Str(s) => s.parse::<f32>().map_err(|_| anyhow!("bad f32 element {s:?}")),
+                    _ => bail!("f32 tensor with non-numeric element"),
+                })
+                .collect::<Result<_>>()?,
+        ),
+        other => bail!("unknown tensor dtype {other:?}"),
+    })
+}
+
+fn vector_kind_name(k: VectorKind) -> &'static str {
+    match k {
+        VectorKind::Map => "map",
+        VectorKind::Axpy => "axpy",
+        VectorKind::Reduce => "reduce",
+        VectorKind::Activation => "activation",
+    }
+}
+
+fn parse_vector_kind(s: &str) -> Result<VectorKind> {
+    Ok(match s {
+        "map" => VectorKind::Map,
+        "axpy" => VectorKind::Axpy,
+        "reduce" => VectorKind::Reduce,
+        "activation" => VectorKind::Activation,
+        other => bail!("unknown vector kind {other:?}"),
+    })
+}
+
+fn encode_op(op: &TensorOp) -> Json {
+    match op {
+        TensorOp::PGemm(g) => obj(vec![
+            ("kind", Json::Str("pgemm".into())),
+            ("m", ju64(g.m)),
+            ("n", ju64(g.n)),
+            ("k", ju64(g.k)),
+            ("precision", Json::Str(g.precision.name().into())),
+        ]),
+        TensorOp::Vector(v) => obj(vec![
+            ("kind", Json::Str("vector".into())),
+            ("len", ju64(v.len)),
+            ("precision", Json::Str(v.precision.name().into())),
+            ("vkind", Json::Str(vector_kind_name(v.kind).into())),
+        ]),
+    }
+}
+
+fn decode_op(j: &Json) -> Result<TensorOp> {
+    let precision = Precision::parse(get_str(j, "precision")?)
+        .ok_or_else(|| anyhow!("unknown precision"))?;
+    Ok(match get_str(j, "kind")? {
+        "pgemm" => {
+            let (m, n, k) = (get_u64(j, "m")?, get_u64(j, "n")?, get_u64(j, "k")?);
+            if m == 0 || n == 0 || k == 0 {
+                bail!("degenerate p-GEMM dims are 1, not 0");
+            }
+            TensorOp::PGemm(PGemm::new(m, n, k, precision))
+        }
+        "vector" => {
+            let len = get_u64(j, "len")?;
+            if len == 0 {
+                bail!("vector op over 0 elements");
+            }
+            TensorOp::Vector(VectorOp::new(len, precision, parse_vector_kind(get_str(j, "vkind")?)?))
+        }
+        other => bail!("unknown op kind {other:?}"),
+    })
+}
+
+/// Encode one [`Request`] as a frame body (the id also travels in the
+/// frame header; the header wins on decode mismatch).
+pub fn encode_request(req: &Request) -> Json {
+    let exec = match &req.exec {
+        ExecKind::Simulate => obj(vec![("kind", Json::Str("simulate".into()))]),
+        ExecKind::Functional { artifact, inputs } => obj(vec![
+            ("kind", Json::Str("functional".into())),
+            ("artifact", Json::Str(artifact.clone())),
+            ("inputs", Json::Arr(inputs.iter().map(encode_tensor).collect())),
+        ]),
+    };
+    obj(vec![("id", ju64(req.id)), ("op", encode_op(&req.op)), ("exec", exec)])
+}
+
+pub fn decode_request(j: &Json) -> Result<Request> {
+    let id = get_u64(j, "id")?;
+    let op = decode_op(j.get("op").ok_or_else(|| anyhow!("request without op"))?)?;
+    let exec_j = j.get("exec").ok_or_else(|| anyhow!("request without exec"))?;
+    let exec = match get_str(exec_j, "kind")? {
+        "simulate" => ExecKind::Simulate,
+        "functional" => ExecKind::Functional {
+            artifact: get_str(exec_j, "artifact")?.to_string(),
+            inputs: exec_j
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("functional exec without inputs"))?
+                .iter()
+                .map(decode_tensor)
+                .collect::<Result<_>>()?,
+        },
+        other => bail!("unknown exec kind {other:?}"),
+    };
+    Ok(Request { id, op, exec })
+}
+
+// ---------------------------------------------------------------------
+// Response codecs.
+
+fn encode_sim(s: &SimReport) -> Json {
+    obj(vec![
+        ("cycles", ju64(s.cycles)),
+        ("freq_mhz", Json::Num(s.freq_mhz as f64)),
+        ("sram_bytes", ju64(s.sram_bytes)),
+        ("dram_bytes", ju64(s.dram_bytes)),
+        ("macs", ju64(s.macs)),
+        ("utilization", Json::Num(s.utilization)),
+        ("energy_pj", Json::Num(s.energy_pj)),
+    ])
+}
+
+fn decode_sim(j: &Json) -> Result<SimReport> {
+    Ok(SimReport {
+        cycles: get_u64(j, "cycles")?,
+        freq_mhz: get_u64(j, "freq_mhz")? as u32,
+        sram_bytes: get_u64(j, "sram_bytes")?,
+        dram_bytes: get_u64(j, "dram_bytes")?,
+        macs: get_u64(j, "macs")?,
+        utilization: get_f64(j, "utilization")?,
+        energy_pj: get_f64(j, "energy_pj")?,
+    })
+}
+
+fn dataflow_from_name(s: &str) -> Result<Dataflow> {
+    Ok(match s {
+        "WS" => Dataflow::WS,
+        "IS" => Dataflow::IS,
+        "OS" => Dataflow::OS,
+        "SIMD" => Dataflow::Simd,
+        other => bail!("unknown dataflow {other:?}"),
+    })
+}
+
+fn encode_schedule(c: &ScheduleConfig) -> Json {
+    obj(vec![
+        ("dataflow", Json::Str(c.dataflow.name().into())),
+        ("lane_rows", Json::Num(c.arrangement.lane_rows as f64)),
+        ("lane_cols", Json::Num(c.arrangement.lane_cols as f64)),
+        ("k_segments", ju64(c.k_segments)),
+        (
+            "tile_dir",
+            Json::Str(
+                match c.tile_dir {
+                    crate::scheduler::pattern::TileDir::Lateral => "lateral",
+                    crate::scheduler::pattern::TileDir::Vertical => "vertical",
+                }
+                .into(),
+            ),
+        ),
+    ])
+}
+
+fn decode_schedule(j: &Json) -> Result<ScheduleConfig> {
+    let rows = get_u64(j, "lane_rows")? as u32;
+    let cols = get_u64(j, "lane_cols")? as u32;
+    if rows == 0 || cols == 0 {
+        bail!("degenerate lane arrangement");
+    }
+    Ok(ScheduleConfig {
+        arrangement: Arrangement::new(rows, cols),
+        dataflow: dataflow_from_name(get_str(j, "dataflow")?)?,
+        k_segments: get_u64(j, "k_segments")?,
+        tile_dir: match get_str(j, "tile_dir")? {
+            "lateral" => crate::scheduler::pattern::TileDir::Lateral,
+            "vertical" => crate::scheduler::pattern::TileDir::Vertical,
+            other => bail!("unknown tile direction {other:?}"),
+        },
+    })
+}
+
+/// Encode one [`Response`] as a frame body. The schedule travels as its
+/// [`ScheduleConfig`] only; the client reconstructs a [`Candidate`]
+/// whose report is the response's own `sim` (identical by construction
+/// for p-GEMMs — the shard answers with the winning candidate's report)
+/// and whose pattern-coverage detail is dropped.
+pub fn encode_response(resp: &Response) -> Json {
+    obj(vec![
+        ("id", ju64(resp.id)),
+        ("shard", Json::Num(resp.shard as f64)),
+        (
+            "schedule",
+            match &resp.schedule {
+                Some(c) => encode_schedule(&c.config),
+                None => Json::Null,
+            },
+        ),
+        ("sim", encode_sim(&resp.sim)),
+        (
+            "outputs",
+            match &resp.outputs {
+                Some(outs) => Json::Arr(outs.iter().map(encode_tensor).collect()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "error",
+            match &resp.error {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        ),
+        ("latency_us", ju64(resp.latency.as_micros() as u64)),
+    ])
+}
+
+pub fn decode_response(j: &Json) -> Result<Response> {
+    let sim = decode_sim(j.get("sim").ok_or_else(|| anyhow!("response without sim"))?)?;
+    let schedule = match j.get("schedule") {
+        None | Some(Json::Null) => None,
+        Some(s) => Some(Candidate { config: decode_schedule(s)?, report: sim, coverage: None }),
+    };
+    let outputs = match j.get("outputs") {
+        None | Some(Json::Null) => None,
+        Some(Json::Arr(items)) => Some(items.iter().map(decode_tensor).collect::<Result<_>>()?),
+        Some(_) => bail!("outputs is neither null nor an array"),
+    };
+    let error = match j.get("error") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => bail!("error is neither null nor a string"),
+    };
+    Ok(Response {
+        id: get_u64(j, "id")?,
+        shard: get_u64(j, "shard")? as usize,
+        schedule,
+        sim,
+        outputs,
+        error,
+        latency: Duration::from_micros(get_u64(j, "latency_us")?),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Telemetry codecs (the Closed frame's ServeSummary + RackSnapshot).
+
+fn encode_count_map<K: ToString>(m: &BTreeMap<K, u64>) -> Json {
+    Json::Obj(m.iter().map(|(k, v)| (k.to_string(), ju64(*v))).collect())
+}
+
+fn encode_snapshot(s: &Snapshot) -> Json {
+    obj(vec![
+        ("requests", ju64(s.requests)),
+        ("pgemm_ops", ju64(s.pgemm_ops)),
+        ("vector_ops", ju64(s.vector_ops)),
+        ("functional_execs", ju64(s.functional_execs)),
+        ("functional_errors", ju64(s.functional_errors)),
+        ("schedule_cache_hits", ju64(s.schedule_cache_hits)),
+        ("schedule_cache_misses", ju64(s.schedule_cache_misses)),
+        ("per_artifact", encode_count_map(&s.per_artifact)),
+        ("admission_rejected", ju64(s.admission_rejected)),
+        ("admission_requeued", ju64(s.admission_requeued)),
+        ("queue_peak_depth", ju64(s.queue_peak_depth)),
+        ("batches", ju64(s.batches)),
+        ("batched_requests", ju64(s.batched_requests)),
+        ("batch_hist", encode_count_map(&s.batch_hist)),
+        ("max_batch", ju64(s.max_batch)),
+        ("sim_cycles", ju64(s.sim_cycles)),
+        ("mean_sim_utilization", Json::Num(s.mean_sim_utilization)),
+        ("coalesce_window_us", ju64(s.coalesce_window_us)),
+        ("latency_ewma_us", Json::Num(s.latency_ewma_us)),
+        ("latency_count", ju64(s.latency_count)),
+        ("p50_us", ju64(s.p50_us)),
+        ("p95_us", ju64(s.p95_us)),
+        ("p99_us", ju64(s.p99_us)),
+        ("mean_us", Json::Num(s.mean_us)),
+    ])
+}
+
+fn decode_snapshot(j: &Json) -> Result<Snapshot> {
+    let per_artifact = j
+        .get("per_artifact")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("snapshot without per_artifact"))?
+        .iter()
+        .map(|(k, v)| Ok((k.clone(), get_u64_val(v)?)))
+        .collect::<Result<BTreeMap<String, u64>>>()?;
+    let batch_hist = j
+        .get("batch_hist")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("snapshot without batch_hist"))?
+        .iter()
+        .map(|(k, v)| Ok((k.parse::<u64>().map_err(|_| anyhow!("bad batch size key"))?, get_u64_val(v)?)))
+        .collect::<Result<BTreeMap<u64, u64>>>()?;
+    Ok(Snapshot {
+        requests: get_u64(j, "requests")?,
+        pgemm_ops: get_u64(j, "pgemm_ops")?,
+        vector_ops: get_u64(j, "vector_ops")?,
+        functional_execs: get_u64(j, "functional_execs")?,
+        functional_errors: get_u64(j, "functional_errors")?,
+        schedule_cache_hits: get_u64(j, "schedule_cache_hits")?,
+        schedule_cache_misses: get_u64(j, "schedule_cache_misses")?,
+        per_artifact,
+        admission_rejected: get_u64(j, "admission_rejected")?,
+        admission_requeued: get_u64(j, "admission_requeued")?,
+        queue_peak_depth: get_u64(j, "queue_peak_depth")?,
+        batches: get_u64(j, "batches")?,
+        batched_requests: get_u64(j, "batched_requests")?,
+        batch_hist,
+        max_batch: get_u64(j, "max_batch")?,
+        sim_cycles: get_u64(j, "sim_cycles")?,
+        mean_sim_utilization: get_f64(j, "mean_sim_utilization")?,
+        coalesce_window_us: get_u64(j, "coalesce_window_us")?,
+        latency_ewma_us: get_f64(j, "latency_ewma_us")?,
+        latency_count: get_u64(j, "latency_count")?,
+        p50_us: get_u64(j, "p50_us")?,
+        p95_us: get_u64(j, "p95_us")?,
+        p99_us: get_u64(j, "p99_us")?,
+        mean_us: get_f64(j, "mean_us")?,
+    })
+}
+
+fn encode_shard_telemetry(t: &ShardTelemetry) -> Json {
+    obj(vec![
+        ("shard", Json::Num(t.shard as f64)),
+        ("lanes", Json::Num(t.lanes as f64)),
+        ("config_fingerprint", ju64(t.config_fingerprint)),
+        ("routed", ju64(t.routed)),
+        ("queued", ju64(t.queued)),
+        ("lanes_total", Json::Num(t.lane_usage.total as f64)),
+        ("lanes_free", Json::Num(t.lane_usage.free as f64)),
+        ("live_partitions", Json::Num(t.lane_usage.live_partitions as f64)),
+        ("snapshot", encode_snapshot(&t.snapshot)),
+    ])
+}
+
+fn decode_shard_telemetry(j: &Json) -> Result<ShardTelemetry> {
+    Ok(ShardTelemetry {
+        shard: get_u64(j, "shard")? as usize,
+        lanes: get_u64(j, "lanes")? as u32,
+        config_fingerprint: get_u64(j, "config_fingerprint")?,
+        routed: get_u64(j, "routed")?,
+        queued: get_u64(j, "queued")?,
+        lane_usage: LaneUsage {
+            total: get_u64(j, "lanes_total")? as u32,
+            free: get_u64(j, "lanes_free")? as u32,
+            live_partitions: get_u64(j, "live_partitions")? as usize,
+        },
+        snapshot: decode_snapshot(
+            j.get("snapshot").ok_or_else(|| anyhow!("telemetry without snapshot"))?,
+        )?,
+    })
+}
+
+/// Encode the final [`ServeSummary`] (the `Closed` frame's body),
+/// including the per-shard [`RackSnapshot`] when present.
+pub fn encode_summary(s: &ServeSummary) -> Json {
+    obj(vec![
+        ("requests", ju64(s.requests)),
+        ("functional", ju64(s.functional)),
+        ("verified_ok", ju64(s.verified_ok)),
+        ("verified_failed", ju64(s.verified_failed)),
+        ("errors", ju64(s.errors)),
+        ("prescheduled", ju64(s.prescheduled)),
+        ("coalesced_batches", ju64(s.coalesced_batches)),
+        ("max_batch", ju64(s.max_batch)),
+        ("coalesce_window_us", ju64(s.coalesce_window_us)),
+        (
+            "shards",
+            match &s.shards {
+                Some(rs) => Json::Arr(rs.shards.iter().map(encode_shard_telemetry).collect()),
+                None => Json::Null,
+            },
+        ),
+        ("wall_seconds", Json::Num(s.wall_seconds)),
+        ("throughput_rps", Json::Num(s.throughput_rps)),
+        ("total_sim_cycles", ju64(s.total_sim_cycles)),
+        ("metrics", encode_snapshot(&s.metrics)),
+    ])
+}
+
+pub fn decode_summary(j: &Json) -> Result<ServeSummary> {
+    let shards = match j.get("shards") {
+        None | Some(Json::Null) => None,
+        Some(Json::Arr(items)) => Some(RackSnapshot::from_shards(
+            items.iter().map(decode_shard_telemetry).collect::<Result<_>>()?,
+        )),
+        Some(_) => bail!("shards is neither null nor an array"),
+    };
+    Ok(ServeSummary {
+        requests: get_u64(j, "requests")?,
+        functional: get_u64(j, "functional")?,
+        verified_ok: get_u64(j, "verified_ok")?,
+        verified_failed: get_u64(j, "verified_failed")?,
+        errors: get_u64(j, "errors")?,
+        prescheduled: get_u64(j, "prescheduled")?,
+        coalesced_batches: get_u64(j, "coalesced_batches")?,
+        max_batch: get_u64(j, "max_batch")?,
+        coalesce_window_us: get_u64(j, "coalesce_window_us")?,
+        shards,
+        wall_seconds: get_f64(j, "wall_seconds")?,
+        throughput_rps: get_f64(j, "throughput_rps")?,
+        total_sim_cycles: get_u64(j, "total_sim_cycles")?,
+        metrics: decode_snapshot(j.get("metrics").ok_or_else(|| anyhow!("summary without metrics"))?)?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Small body builders shared by server and client.
+
+/// `Hello` body a client opens with.
+pub fn client_hello() -> Json {
+    obj(vec![("proto", ju64(PROTO_VERSION)), ("client", Json::Str("gta".into()))])
+}
+
+/// `Hello` body the server answers with.
+pub fn server_hello(shards: usize, policy: &str) -> Json {
+    obj(vec![
+        ("proto", ju64(PROTO_VERSION)),
+        ("shards", Json::Num(shards as f64)),
+        ("policy", Json::Str(policy.into())),
+    ])
+}
+
+/// Protocol version carried by a `Hello` body.
+pub fn hello_proto(body: &Json) -> Option<u64> {
+    get_u64(body, "proto").ok()
+}
+
+/// `Busy` frame body: the shard the router had picked (if any).
+pub fn busy_body(shard: Option<usize>) -> Json {
+    obj(vec![(
+        "shard",
+        match shard {
+            Some(s) => Json::Num(s as f64),
+            None => Json::Null,
+        },
+    )])
+}
+
+/// Shard carried by a `Busy` body.
+pub fn busy_shard(body: &Json) -> Option<usize> {
+    get_u64(body, "shard").ok().map(|s| s as usize)
+}
+
+/// `Error` frame body.
+pub fn error_body(message: &str, fatal: bool) -> Json {
+    obj(vec![("message", Json::Str(message.into())), ("fatal", Json::Bool(fatal))])
+}
+
+/// Message carried by an `Error` body.
+pub fn error_message(body: &Json) -> String {
+    body.get("message").and_then(Json::as_str).unwrap_or("unspecified protocol error").to_string()
+}
+
+/// `Drained` ack body: how many unconsumed responses the drain returned.
+pub fn drained_body(returned: u64) -> Json {
+    obj(vec![("returned", ju64(returned))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::gemm_tile_request;
+
+    fn round_trip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        let mut r = &buf[..];
+        let out = read_frame(&mut r).unwrap();
+        assert!(r.is_empty(), "decoder consumed the exact frame");
+        out
+    }
+
+    #[test]
+    fn frames_round_trip_for_every_type() {
+        for (ty, id, body) in [
+            (FrameType::Hello, 0u64, client_hello()),
+            (FrameType::Submit, 7, encode_request(&gemm_tile_request(7, "mpra_gemm_i8_64", 3))),
+            (FrameType::Response, 9, Json::Num(1.0)),
+            (FrameType::Busy, u64::MAX, busy_body(Some(3))),
+            (FrameType::Drained, 0, drained_body(12)),
+            (FrameType::Closed, 0, Json::Null),
+            (FrameType::Error, 1 << 60, error_body("boom", true)),
+        ] {
+            let f = Frame::new(ty, id, body);
+            assert_eq!(round_trip(&f), f);
+        }
+    }
+
+    #[test]
+    fn request_and_response_bodies_round_trip() {
+        let req = gemm_tile_request(42, "mpra_gemm_i8_64", 17);
+        let back = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.op, req.op);
+        match (&back.exec, &req.exec) {
+            (
+                ExecKind::Functional { artifact: a1, inputs: i1 },
+                ExecKind::Functional { artifact: a2, inputs: i2 },
+            ) => {
+                assert_eq!(a1, a2);
+                assert_eq!(i1, i2);
+            }
+            _ => panic!("exec kind diverged"),
+        }
+
+        let sim = SimReport {
+            cycles: (1 << 60) + 3, // beyond 2^53: string-encoded, still exact
+            freq_mhz: 1000,
+            sram_bytes: 12345,
+            dram_bytes: 678,
+            macs: 262144,
+            utilization: 0.875,
+            energy_pj: 1.5e9,
+        };
+        let resp = Response {
+            id: 42,
+            shard: 1,
+            schedule: Some(Candidate {
+                config: ScheduleConfig {
+                    arrangement: Arrangement::new(4, 4),
+                    dataflow: Dataflow::OS,
+                    k_segments: 2,
+                    tile_dir: crate::scheduler::pattern::TileDir::Vertical,
+                },
+                report: sim,
+                coverage: None,
+            }),
+            sim,
+            outputs: Some(vec![
+                HostTensor::I32(vec![-5, 0, 7]),
+                HostTensor::I64(vec![i64::MIN, -1, i64::MAX]),
+                HostTensor::F32(vec![0.1, -3.5e7]),
+            ]),
+            error: Some("partly cloudy".into()),
+            latency: Duration::from_micros(321),
+        };
+        let back = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.shard, resp.shard);
+        assert_eq!(back.sim, resp.sim);
+        assert_eq!(back.outputs, resp.outputs);
+        assert_eq!(back.error, resp.error);
+        assert_eq!(back.latency, resp.latency);
+        assert_eq!(back.schedule.map(|c| c.config), resp.schedule.map(|c| c.config));
+    }
+
+    #[test]
+    fn non_finite_f32_tensor_elements_survive_the_wire() {
+        let t = HostTensor::F32(vec![1.5, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.25]);
+        let back = decode_tensor(&encode_tensor(&t)).unwrap();
+        let got = match back {
+            HostTensor::F32(v) => v,
+            other => panic!("dtype diverged: {other:?}"),
+        };
+        assert_eq!(got[0], 1.5);
+        assert!(got[1].is_nan(), "NaN crosses as NaN, not a fatal null");
+        assert_eq!(got[2], f32::INFINITY);
+        assert_eq!(got[3], f32::NEG_INFINITY);
+        assert_eq!(got[4], -0.25);
+    }
+
+    #[test]
+    fn oversized_truncated_and_garbage_frames_fail_cleanly() {
+        // oversized length prefix: rejected before any allocation
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(((MAX_BODY_BYTES + HEADER_AFTER_LEN) as u32) + 1).to_be_bytes());
+        buf.extend_from_slice(&[FrameType::Hello.code()]);
+        buf.extend_from_slice(&0u64.to_be_bytes());
+        assert!(matches!(read_frame(&mut &buf[..]), Err(DecodeError::Malformed(_))));
+
+        // every strict prefix of a valid frame is Malformed (or Eof at 0)
+        let mut full = Vec::new();
+        write_frame(&mut full, &Frame::new(FrameType::Error, 5, error_body("x", false))).unwrap();
+        assert!(matches!(read_frame(&mut &full[..0]), Err(DecodeError::Eof)));
+        for cut in 1..full.len() {
+            match read_frame(&mut &full[..cut]) {
+                Err(DecodeError::Malformed(_)) => {}
+                other => panic!("prefix of {cut} bytes: {other:?}"),
+            }
+        }
+
+        // unknown type byte and non-JSON body
+        let mut bad_ty = full.clone();
+        bad_ty[4] = 200;
+        assert!(matches!(read_frame(&mut &bad_ty[..]), Err(DecodeError::Malformed(_))));
+        let mut bad_json = Vec::new();
+        let body = b"{not json";
+        bad_json.extend_from_slice(&((HEADER_AFTER_LEN + body.len()) as u32).to_be_bytes());
+        bad_json.push(FrameType::Hello.code());
+        bad_json.extend_from_slice(&0u64.to_be_bytes());
+        bad_json.extend_from_slice(body);
+        assert!(matches!(read_frame(&mut &bad_json[..]), Err(DecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn summary_round_trips_with_rack_snapshot() {
+        use crate::coordinator::CoalesceConfig;
+        use crate::serve::{mixed_stream, run_stream_rack, soft_rack};
+        let rack = soft_rack(
+            vec![crate::GtaConfig::lanes16(), crate::GtaConfig::with_lanes(4)],
+            CoalesceConfig::default(),
+            crate::coordinator::rack::policy_by_name("rr").unwrap(),
+        )
+        .unwrap();
+        let (reqs, expected) = mixed_stream(16);
+        let summary = run_stream_rack(&rack, reqs, &expected, 4);
+        let back = decode_summary(&encode_summary(&summary)).unwrap();
+        assert_eq!(back.requests, summary.requests);
+        assert_eq!(back.total_sim_cycles, summary.total_sim_cycles);
+        assert_eq!(back.metrics.requests, summary.metrics.requests);
+        assert_eq!(back.metrics.batch_hist, summary.metrics.batch_hist);
+        assert_eq!(back.metrics.per_artifact, summary.metrics.per_artifact);
+        let (a, b) = (back.shards.unwrap(), summary.shards.unwrap());
+        assert_eq!(a.shards.len(), b.shards.len());
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.shard, y.shard);
+            assert_eq!(x.config_fingerprint, y.config_fingerprint);
+            assert_eq!(x.routed, y.routed);
+            assert_eq!(x.snapshot.sim_cycles, y.snapshot.sim_cycles);
+        }
+        // the re-aggregated rollup matches the original aggregate
+        assert_eq!(a.aggregate.requests, b.aggregate.requests);
+        assert_eq!(a.aggregate.sim_cycles, b.aggregate.sim_cycles);
+    }
+}

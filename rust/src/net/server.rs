@@ -1,0 +1,310 @@
+//! The TCP serving front-end: a [`NetServer`] binds a
+//! `std::net::TcpListener` and gives every accepted connection its own
+//! [`RackSession`] against ONE shared [`Rack`] — the session-native
+//! transport the ROADMAP asked for, with zero new dependencies.
+//!
+//! Per connection, two threads split the session exactly along its
+//! `&self` API:
+//!
+//! * the **reader** (the connection thread) decodes frames off the
+//!   socket and submits — routing therefore happens in wire order on
+//!   one thread, so deterministic policies stay deterministic per
+//!   connection; an `AdmitError::Busy` becomes a wire-level `Busy`
+//!   frame, so admission backpressure reaches the client instead of
+//!   dying inside the server (and under `AdmissionPolicy::Block` the
+//!   reader itself stalls, which backpressures the socket the TCP way);
+//! * the **writer** pumps [`RackSession::recv_timeout`] completions
+//!   back as `Response` frames **as they finish, out of submission
+//!   order** — the same out-of-order egress the in-process session
+//!   gives.
+//!
+//! Disconnect — graceful (`Closed`), protocol violation, or the peer
+//! vanishing mid-stream — always takes the same exit: the session is
+//! drained (every queued and in-flight request still executes, so rack
+//! metrics/telemetry never lose work) and closed. On a graceful close
+//! the final [`crate::serve::ServeSummary`] (with its `RackSnapshot`)
+//! travels back in the `Closed` frame. See `docs/transport.md`.
+
+use super::proto::{
+    busy_body, drained_body, error_body, error_message, read_frame, server_hello, write_frame,
+    DecodeError, Frame, FrameType, PROTO_VERSION,
+};
+use crate::coordinator::{AdmitError, Rack, RackSession, ServeOptions, SubmitError};
+use crate::util::json::Json;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long the egress pump waits on the completion channel before
+/// re-checking whether the session closed under it.
+const PUMP_TICK: Duration = Duration::from_millis(20);
+
+/// Shared, lock-guarded frame writer: the reader (Busy/Error/acks) and
+/// the pump (Responses) interleave whole frames, never bytes.
+type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
+
+fn send_frame(w: &SharedWriter, ty: FrameType, id: u64, body: Json) -> std::io::Result<()> {
+    let mut guard = w.lock().unwrap();
+    write_frame(&mut *guard, &Frame::new(ty, id, body))?;
+    guard.flush()
+}
+
+/// A listening GTA server. Dropping it stops accepting new connections;
+/// live connections keep their sessions until their clients disconnect.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting connections, each served by its own session over
+    /// `rack` opened with `opts`.
+    pub fn spawn(rack: Arc<Rack>, addr: &str, opts: ServeOptions) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        // non-blocking accept so shutdown() can stop the loop without a
+        // wake-up connection
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("gta-net-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                let mut conn_id = 0usize;
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            conn_id += 1;
+                            let rack = Arc::clone(&rack);
+                            let h = std::thread::Builder::new()
+                                .name(format!("gta-net-conn-{conn_id}"))
+                                .spawn(move || {
+                                    let _ = handle_connection(stream, rack, opts);
+                                })
+                                .expect("spawning connection thread");
+                            conns.push(h);
+                            conns.retain(|h| !h.is_finished());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                // join whatever already finished; a connection still
+                // held open by its client outlives the accept loop and
+                // cleans itself up on disconnect
+                for h in conns.into_iter().filter(|h| h.is_finished()) {
+                    let _ = h.join();
+                }
+            })?;
+        Ok(NetServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting new connections and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop exits (it runs until
+    /// [`shutdown`](Self::shutdown) — this is `gta serve --listen`'s
+    /// foreground wait).
+    pub fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Why the ingest loop stopped reading.
+enum Exit {
+    /// Client asked to close; send the final summary.
+    Close,
+    /// Peer vanished (EOF / transport error): silent cleanup.
+    Disconnect,
+    /// Protocol violation: tell the peer (best effort), then drop the
+    /// connection — framing can no longer be trusted.
+    Fatal(String),
+}
+
+/// Serve one connection to completion. All exits drain the session.
+fn handle_connection(stream: TcpStream, rack: Arc<Rack>, opts: ServeOptions) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
+
+    // ---- version negotiation: Hello must be the first frame
+    match read_frame(&mut reader) {
+        Ok(f) if f.ty == FrameType::Hello => {
+            if super::proto::hello_proto(&f.body) != Some(PROTO_VERSION) {
+                let _ = send_frame(
+                    &writer,
+                    FrameType::Error,
+                    0,
+                    error_body(&format!("unsupported protocol version (server speaks {PROTO_VERSION})"), true),
+                );
+                let _ = stream.shutdown(Shutdown::Both);
+                return Ok(());
+            }
+        }
+        Ok(f) => {
+            let _ = send_frame(
+                &writer,
+                FrameType::Error,
+                0,
+                error_body(&format!("expected Hello, got {:?}", f.ty), true),
+            );
+            let _ = stream.shutdown(Shutdown::Both);
+            return Ok(());
+        }
+        Err(e) => {
+            let _ = send_frame(&writer, FrameType::Error, 0, error_body(&e.to_string(), true));
+            let _ = stream.shutdown(Shutdown::Both);
+            return Ok(());
+        }
+    }
+    send_frame(&writer, FrameType::Hello, 0, server_hello(rack.len(), rack.policy_name()))?;
+
+    let session: Arc<RackSession> = Arc::new(rack.open_session(opts));
+
+    // ---- egress pump: completions -> Response frames, out of order
+    let mut pump = Some({
+        let session = Arc::clone(&session);
+        let writer = Arc::clone(&writer);
+        std::thread::Builder::new()
+            .name("gta-net-pump".into())
+            .spawn(move || {
+                loop {
+                    match session.recv_timeout(PUMP_TICK) {
+                        Some(resp) => {
+                            let body = super::proto::encode_response(&resp);
+                            if send_frame(&writer, FrameType::Response, resp.id, body).is_err() {
+                                // peer gone: stop writing; the reader
+                                // will notice and drain
+                                break;
+                            }
+                        }
+                        None => {
+                            if session.is_closed() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawning egress pump thread")
+    });
+
+    // Drain the session and hand every remaining response to the wire
+    // (unless the socket already failed). Joins the pump first so the
+    // follow-up ack frame is provably the last thing sent.
+    let drain_to_wire = |pump: &mut Option<std::thread::JoinHandle<()>>| -> u64 {
+        let rest = session.drain();
+        if let Some(h) = pump.take() {
+            let _ = h.join();
+        }
+        let mut returned = 0u64;
+        for resp in &rest {
+            let body = super::proto::encode_response(resp);
+            if send_frame(&writer, FrameType::Response, resp.id, body).is_err() {
+                break;
+            }
+            returned += 1;
+        }
+        returned
+    };
+
+    // ---- ingest loop: this thread owns the socket's read side
+    let exit = loop {
+        match read_frame(&mut reader) {
+            Ok(f) => match f.ty {
+                FrameType::Submit => match super::proto::decode_request(&f.body) {
+                    Ok(mut req) => {
+                        // the header id is authoritative
+                        req.id = f.id;
+                        match session.try_submit(req) {
+                            Ok(_ticket) => {}
+                            Err(SubmitError { id, shard, error: AdmitError::Busy }) => {
+                                if send_frame(&writer, FrameType::Busy, id, busy_body(shard))
+                                    .is_err()
+                                {
+                                    break Exit::Disconnect;
+                                }
+                            }
+                            Err(SubmitError { id, error: AdmitError::Closed, .. }) => {
+                                let body = error_body("session closed (drained)", false);
+                                if send_frame(&writer, FrameType::Error, id, body).is_err() {
+                                    break Exit::Disconnect;
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => break Exit::Fatal(format!("undecodable request body: {e:#}")),
+                },
+                FrameType::Drained => {
+                    // drain request: finish everything, flush it, ack
+                    let returned = drain_to_wire(&mut pump);
+                    if send_frame(&writer, FrameType::Drained, 0, drained_body(returned)).is_err() {
+                        break Exit::Disconnect;
+                    }
+                    // the session is closed now; later Submits get
+                    // per-request Error frames, Closed still answers
+                }
+                FrameType::Closed => break Exit::Close,
+                FrameType::Error => {
+                    // client-side abort: log-free silent cleanup
+                    let _ = error_message(&f.body);
+                    break Exit::Disconnect;
+                }
+                other => break Exit::Fatal(format!("unexpected {other:?} frame from a client")),
+            },
+            Err(DecodeError::Eof) => break Exit::Disconnect,
+            Err(DecodeError::Io(_)) => break Exit::Disconnect,
+            Err(DecodeError::Malformed(m)) => break Exit::Fatal(m),
+        }
+    };
+
+    // ---- one exit path: drain (work is never lost), then say goodbye
+    match exit {
+        Exit::Close => {
+            let _ = drain_to_wire(&mut pump);
+            let summary = session.close();
+            let _ = send_frame(
+                &writer,
+                FrameType::Closed,
+                0,
+                super::proto::encode_summary(&summary),
+            );
+        }
+        Exit::Disconnect => {
+            let _ = drain_to_wire(&mut pump);
+            let _ = session.close();
+        }
+        Exit::Fatal(message) => {
+            let _ = send_frame(&writer, FrameType::Error, 0, error_body(&message, true));
+            let _ = drain_to_wire(&mut pump);
+            let _ = session.close();
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    Ok(())
+}

@@ -24,9 +24,10 @@
 use crate::coordinator::metrics::RackSnapshot;
 use crate::coordinator::rack::{policy_by_name, Rack, RoutePolicy};
 use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request, Response, ServeOptions};
+use crate::net::GtaClient;
 use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
-use crate::runtime::{Engine, ExecBackend, HostTensor, SoftBackend};
+use crate::runtime::{default_artifact_dir, Engine, ExecBackend, HostTensor, SoftBackend};
 use crate::util::rng::Rng;
 use crate::GtaConfig;
 use anyhow::{anyhow, Result};
@@ -335,12 +336,51 @@ pub fn run_open_loop_stream(
     seed: u64,
 ) -> ServeSummary {
     let functional_ids = functional_ids(&requests);
-    let n = requests.len();
-    let mut session = rack.open_session(ServeOptions::with_workers(workers));
-    let mut rng = Rng::new(seed);
+    let session = rack.open_session(ServeOptions::with_workers(workers));
     let t0 = Instant::now();
+    let mut responses = open_loop_replay(
+        requests,
+        rate_rps,
+        seed,
+        t0,
+        |req| {
+            session
+                .submit(req)
+                .map(|_ticket| ())
+                .map_err(|e| anyhow!("open-loop submission under blocking admission rejected: {e:?}"))
+        },
+        || Ok(session.try_recv()),
+    )
+    .expect("in-process open-loop submission cannot fail");
+    while let Some(r) = session.recv() {
+        responses.push(r);
+    }
+    responses.append(&mut session.drain());
+    crate::coordinator::order_responses(&mut responses);
+    let wall = t0.elapsed().as_secs_f64();
+    let rs = rack.snapshot();
+    summarize(&responses, expected, &functional_ids, wall, 0, rs.aggregate.clone(), Some(rs))
+}
+
+/// THE seeded open-loop arrival loop — one copy of the exponential
+/// inter-arrival draw (Poisson arrivals at `rate_rps`, `Rng::new(seed)`)
+/// and the submit/consume interleaving, shared by the in-process session
+/// driver ([`run_open_loop_stream`]) and the TCP client driver
+/// ([`run_open_loop_client`]); a replay of one seed is comparable
+/// in-process vs. over the wire *by construction*. Submits each request
+/// at its arrival time, opportunistically consuming completions between
+/// arrivals; returns everything consumed (the caller drains the rest).
+fn open_loop_replay(
+    requests: Vec<Request>,
+    rate_rps: f64,
+    seed: u64,
+    t0: Instant,
+    mut submit: impl FnMut(Request) -> Result<()>,
+    mut try_recv: impl FnMut() -> Result<Option<Response>>,
+) -> Result<Vec<Response>> {
+    let mut rng = Rng::new(seed);
     let mut due = std::time::Duration::ZERO;
-    let mut responses: Vec<Response> = Vec::with_capacity(n);
+    let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
     for req in requests {
         // exponential inter-arrival gap for a Poisson process at rate_rps
         let gap = -(1.0 - rng.f64()).ln() / rate_rps.max(1e-9);
@@ -351,30 +391,24 @@ pub fn run_open_loop_stream(
                 break;
             }
             // consume completions while waiting for the next arrival
-            if session.try_recv().map(|r| responses.push(r)).is_none() {
-                let remaining = due - elapsed;
-                if remaining > std::time::Duration::from_micros(200) {
-                    std::thread::sleep(std::time::Duration::from_micros(100));
-                } else {
-                    std::thread::yield_now();
+            match try_recv()? {
+                Some(r) => responses.push(r),
+                None => {
+                    let remaining = due - elapsed;
+                    if remaining > std::time::Duration::from_micros(200) {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    } else {
+                        std::thread::yield_now();
+                    }
                 }
             }
         }
-        while let Some(r) = session.try_recv() {
+        while let Some(r) = try_recv()? {
             responses.push(r);
         }
-        session
-            .submit(req)
-            .expect("open-loop submission under blocking admission cannot be rejected");
+        submit(req)?;
     }
-    while let Some(r) = session.recv() {
-        responses.push(r);
-    }
-    responses.append(&mut session.drain());
-    crate::coordinator::order_responses(&mut responses);
-    let wall = t0.elapsed().as_secs_f64();
-    let rs = rack.snapshot();
-    summarize(&responses, expected, &functional_ids, wall, 0, rs.aggregate.clone(), Some(rs))
+    Ok(responses)
 }
 
 /// Ids of the functional requests in a stream.
@@ -541,6 +575,101 @@ pub fn run_open_loop_soft_rack(
     )?;
     let (requests, expected) = mixed_stream(n);
     Ok(run_open_loop_stream(&rack, requests, &expected, workers, rate_rps, seed))
+}
+
+/// Build the rack `gta serve --listen` exposes over TCP: soft or PJRT
+/// backend, `shards`/`lanes`/`policy` exactly as the in-process serve
+/// modes, with the adaptive coalescing window on — continuous open-loop
+/// arrivals are the expected traffic for a network server.
+pub fn listen_rack(
+    backend: &str,
+    artifact_dir: Option<PathBuf>,
+    shards: usize,
+    lanes: &[u32],
+    policy: &str,
+) -> Result<Arc<Rack>> {
+    let coalesce = CoalesceConfig::with_adaptive_window();
+    match backend {
+        "soft" => soft_rack(shard_configs(shards, lanes), coalesce, parse_policy(policy)?),
+        "pjrt" => {
+            let dir = artifact_dir.unwrap_or_else(default_artifact_dir);
+            Ok(Arc::new(Rack::with_backend(
+                shard_configs(shards, lanes),
+                move |_shard| Ok(Box::new(Engine::load(&dir)?) as Box<dyn ExecBackend>),
+                coalesce,
+                parse_policy(policy)?,
+            )?))
+        }
+        other => Err(anyhow!("unknown backend {other:?} (pjrt|soft)")),
+    }
+}
+
+/// Replay `n` mixed requests through a remote GTA server
+/// (`gta client --connect ADDR`): submit everything, drain, then verify
+/// client-side against the same oracle as [`run_stream`]. The summary's
+/// metrics/telemetry are the server session's (cumulative for the
+/// server's rack, like repeated streams through one coordinator).
+pub fn run_client_mixed(addr: &str, n: u64) -> Result<ServeSummary> {
+    let mut client = GtaClient::connect(addr)?;
+    let (requests, expected) = mixed_stream(n);
+    let functional_ids = functional_ids(&requests);
+    let t0 = Instant::now();
+    for req in &requests {
+        client.submit(req)?;
+    }
+    let mut responses = client.drain()?;
+    let server = client.close()?;
+    let wall = t0.elapsed().as_secs_f64();
+    crate::coordinator::order_responses(&mut responses);
+    Ok(summarize(
+        &responses,
+        &expected,
+        &functional_ids,
+        wall,
+        0,
+        server.metrics.clone(),
+        server.shards.clone(),
+    ))
+}
+
+/// The seeded open-loop Poisson driver over TCP (`gta client --connect
+/// ADDR --stream --arrival-rate R --seed S`): the same seeded arrival
+/// schedule, submit/consume interleaving and verification as
+/// [`run_open_loop_stream`], with a [`GtaClient`] in place of the
+/// in-process session — so one seed is bit-comparable in-process vs.
+/// over the wire.
+pub fn run_open_loop_client(addr: &str, n: u64, rate_rps: f64, seed: u64) -> Result<ServeSummary> {
+    let client = std::cell::RefCell::new(GtaClient::connect(addr)?);
+    let (requests, expected) = mixed_stream(n);
+    let functional_ids = functional_ids(&requests);
+    let t0 = Instant::now();
+    // the RefCell lets the two single-threaded closures share the one
+    // &mut client (they never run at once)
+    let mut responses = open_loop_replay(
+        requests,
+        rate_rps,
+        seed,
+        t0,
+        |req| client.borrow_mut().submit(&req).map(|_id| ()),
+        || client.borrow_mut().try_recv(),
+    )?;
+    let mut client = client.into_inner();
+    while let Some(r) = client.recv()? {
+        responses.push(r);
+    }
+    responses.append(&mut client.drain()?);
+    let server = client.close()?;
+    crate::coordinator::order_responses(&mut responses);
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(summarize(
+        &responses,
+        &expected,
+        &functional_ids,
+        wall,
+        0,
+        server.metrics.clone(),
+        server.shards.clone(),
+    ))
 }
 
 /// `gta serve --stream` against the PJRT engine: the open-loop arrival

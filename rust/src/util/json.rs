@@ -48,6 +48,73 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|m| m.get(key))
     }
+
+    /// Serialize to a compact JSON document that [`parse`] round-trips:
+    /// strings are escaped, numbers use Rust's shortest round-trip float
+    /// formatting, and non-finite numbers (which JSON cannot express)
+    /// degrade to `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                    // `{}` prints integral floats without a dot; that is
+                    // still valid JSON, so leave them bare
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse error with byte offset.
@@ -313,5 +380,24 @@ mod tests {
     #[test]
     fn unicode_passthrough() {
         assert_eq!(parse(r#""héllo §""#).unwrap().as_str(), Some("héllo §"));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let doc = r#"{"a": [1, -2.5, 1e300], "b": "x\n\"y\"\\z", "c": null, "d": true, "é": {}}"#;
+        let v = parse(doc).unwrap();
+        let rendered = v.render();
+        assert_eq!(parse(&rendered).unwrap(), v, "{rendered}");
+        // control characters escape and survive
+        let s = Json::Str("a\u{1}\u{8}\u{c}b".to_string());
+        assert_eq!(parse(&s.render()).unwrap(), s);
+        // non-finite numbers degrade to null instead of invalid JSON
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        // floats round-trip bit-exactly through the shortest repr
+        for x in [0.1f64, 1.0 / 3.0, 2.0f64.powi(60), -1.5e-9] {
+            let r = Json::Num(x).render();
+            assert_eq!(parse(&r).unwrap(), Json::Num(x), "{r}");
+        }
     }
 }

@@ -1,0 +1,73 @@
+//! Shared integration-test scaffolding: the deterministic **gated**
+//! execution backend — executions park inside the backend until the
+//! test releases them, which is the reproducible way to hold a session
+//! worker busy and fill a bounded admission queue (used by the
+//! backpressure tests in `serve_stream.rs` and `net_loopback.rs`).
+
+use gta::coordinator::{CoalesceConfig, ExecKind, Rack, Request, RoundRobin};
+use gta::precision::Precision;
+use gta::runtime::{ExecBackend, HostTensor};
+use gta::{GtaConfig, TensorOp};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// An `ExecBackend` whose executions block until released: signals
+/// `started` on entry, then parks on `release`.
+pub struct GatedBackend {
+    pub started: mpsc::Sender<()>,
+    pub release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl ExecBackend for GatedBackend {
+    fn execute(&self, _name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        self.started.send(()).ok();
+        self.release.lock().unwrap().recv().ok();
+        Ok(inputs.to_vec())
+    }
+
+    fn names(&self) -> Vec<String> {
+        vec!["gate".to_string()]
+    }
+}
+
+/// A one-shard 16-lane rack over a [`GatedBackend`] (zero coalescing
+/// window so the gated execution starts immediately), plus its control
+/// channels: recv on the first to learn a worker reached the backend,
+/// send on the second to release one parked execution.
+pub fn gated_rack() -> (Arc<Rack>, mpsc::Receiver<()>, mpsc::Sender<()>) {
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    // Sender/Receiver are !Sync; the Sync factory hands them to the one
+    // backend through take-once slots
+    let started_slot = Mutex::new(Some(started_tx));
+    let release_slot = Mutex::new(Some(release_rx));
+    let rack = Arc::new(
+        Rack::with_backend(
+            vec![GtaConfig::lanes16()],
+            move |_shard| {
+                Ok(Box::new(GatedBackend {
+                    started: started_slot.lock().unwrap().take().expect("one shard, one backend"),
+                    release: Mutex::new(
+                        release_slot.lock().unwrap().take().expect("one shard, one backend"),
+                    ),
+                }) as Box<dyn ExecBackend>)
+            },
+            CoalesceConfig { window: Duration::ZERO, ..Default::default() },
+            Box::new(RoundRobin::default()),
+        )
+        .unwrap(),
+    );
+    (rack, started_rx, release_tx)
+}
+
+/// A functional request against the gated backend's `"gate"` artifact.
+pub fn gated_request(id: u64) -> Request {
+    Request {
+        id,
+        op: TensorOp::gemm(64, 64, 64, Precision::Int8),
+        exec: ExecKind::Functional {
+            artifact: "gate".to_string(),
+            inputs: vec![HostTensor::I32(vec![id as i32; 4])],
+        },
+    }
+}

@@ -1,0 +1,317 @@
+//! E2E over real TCP: a `NetServer` on a loopback socket, driven by
+//! `GtaClient`. The acceptance gates of the network subsystem:
+//!
+//! * a replay over the wire is **bit-identical** to the in-process
+//!   serve path (batch and seeded open-loop);
+//! * admission `Busy` reaches the client as wire-level backpressure,
+//!   deterministically;
+//! * a client vanishing mid-stream never loses admitted work — the
+//!   server session drains, the rack stays healthy, and the next
+//!   connection serves the same workload bit-identically;
+//! * hostile bytes get a protocol `Error` frame and a closed
+//!   connection, never a panic.
+//!
+//! All offline (soft rust-oracle backend), so these run in every build.
+
+mod common;
+
+use common::{gated_rack, gated_request};
+use gta::coordinator::rack::policy_by_name;
+use gta::coordinator::{AdmissionPolicy, CoalesceConfig, Rack, Response, ServeOptions};
+use gta::net::proto::{self, Frame, FrameType};
+use gta::net::{GtaClient, NetServer};
+use gta::serve::{mixed_stream, run_open_loop_stream, soft_rack};
+use gta::util::json::Json;
+use gta::GtaConfig;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A heterogeneous two-shard soft rack (16 + 4 lanes) under `policy`.
+fn hetero_rack(policy: &str) -> Arc<Rack> {
+    soft_rack(
+        vec![GtaConfig::lanes16(), GtaConfig::with_lanes(4)],
+        CoalesceConfig::default(),
+        policy_by_name(policy).unwrap(),
+    )
+    .unwrap()
+}
+
+/// Field-by-field response equality (latency excluded — wall time is
+/// never deterministic; schedule compared by config).
+fn assert_same_response(a: &Response, b: &Response) {
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.shard, b.shard, "request {} routed differently", a.id);
+    assert_eq!(a.error, b.error, "request {}", a.id);
+    assert_eq!(a.outputs, b.outputs, "request {} outputs diverge", a.id);
+    assert_eq!(a.sim.cycles, b.sim.cycles, "request {} sim diverges", a.id);
+    assert_eq!(
+        a.schedule.map(|c| c.config),
+        b.schedule.map(|c| c.config),
+        "request {} schedule diverges",
+        a.id
+    );
+}
+
+#[test]
+fn wire_replay_is_bit_identical_to_in_process_serve() {
+    let n = 32u64;
+    let in_process = hetero_rack("rr");
+    let (reqs, _) = mixed_stream(n);
+    let batch = in_process.serve(reqs, 4);
+
+    let served = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(Arc::clone(&served), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+    assert_eq!(client.server().proto, proto::PROTO_VERSION);
+    assert_eq!(client.server().shards, 2);
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    let streamed = client.drain().unwrap();
+    let summary = client.close().unwrap();
+
+    assert_eq!(batch.len(), streamed.len());
+    for (a, b) in batch.iter().zip(&streamed) {
+        assert_same_response(a, b);
+    }
+    assert_eq!(summary.requests, n, "server summary counted every request");
+    assert_eq!(summary.errors, 0);
+    let shards = summary.shards.expect("rack telemetry travels in the Closed frame");
+    assert_eq!(shards.shards.len(), 2);
+    assert_eq!(shards.shards[0].routed + shards.shards[1].routed, n);
+    server.shutdown();
+}
+
+#[test]
+fn open_loop_over_tcp_matches_in_process_run() {
+    let (n, workers, rate, seed) = (48u64, 4usize, 20_000.0, 2024u64);
+    let in_process = hetero_rack("rr");
+    let (reqs, expected) = mixed_stream(n);
+    let local = run_open_loop_stream(&in_process, reqs, &expected, workers, rate, seed);
+
+    let served = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(served, "127.0.0.1:0", ServeOptions::with_workers(workers)).unwrap();
+    let wire =
+        gta::serve::run_open_loop_client(&server.addr().to_string(), n, rate, seed).unwrap();
+
+    assert_eq!(wire.requests, local.requests);
+    assert_eq!(wire.functional, local.functional);
+    assert_eq!(wire.verified_ok, local.verified_ok, "same numerics over the wire");
+    assert_eq!(wire.verified_failed, local.verified_failed);
+    assert_eq!(wire.verified_failed, 0);
+    assert_eq!(wire.errors, local.errors);
+    assert_eq!(wire.total_sim_cycles, local.total_sim_cycles, "same schedules, same shards");
+    server.shutdown();
+}
+
+#[test]
+fn busy_backpressure_reaches_the_client_mid_stream() {
+    // the gated backend (tests/common) parks executions until released
+    let (rack, started_rx, release_tx) = gated_rack();
+    let mut server = NetServer::spawn(
+        Arc::clone(&rack),
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, queue_capacity: 1, policy: AdmissionPolicy::reject_now() },
+    )
+    .unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+
+    // r0 parks in the gated backend, r1 fills the single queue slot —
+    // the started signal makes the ordering deterministic, and the
+    // server's reader thread admits in wire order
+    client.submit(&gated_request(0)).unwrap();
+    started_rx.recv().expect("worker reached the gated backend");
+    client.submit(&gated_request(1)).unwrap();
+    client.submit(&gated_request(2)).unwrap();
+
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let out = client.drain().unwrap();
+    assert_eq!(out.len(), 3, "every ticket resolves: two served, one Busy");
+    assert!(out[0].is_ok());
+    assert!(out[1].is_ok());
+    let busy = out[2].error.as_ref().expect("r2 was rejected");
+    assert!(busy.contains("busy"), "wire-level backpressure surfaced: {busy}");
+    let summary = client.close().unwrap();
+    assert_eq!(summary.metrics.admission_rejected, 1, "explainable from telemetry");
+    assert_eq!(rack.snapshot().aggregate.admission_rejected, 1);
+    server.shutdown();
+}
+
+#[test]
+fn client_disconnect_mid_stream_drains_and_the_next_connection_reproduces() {
+    let n = 24u64;
+    // shape-affinity: routing is a pure function of the request, so a
+    // fresh in-process rack and a post-disconnect server rack place the
+    // same work on the same (heterogeneous) shards
+    let served = hetero_rack("affinity");
+    let mut server =
+        NetServer::spawn(Arc::clone(&served), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+
+    // connection 1: submit everything, then vanish without drain/close
+    {
+        let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+        let (reqs, _) = mixed_stream(n);
+        for req in &reqs {
+            client.submit(req).unwrap();
+        }
+        // Drop kills the socket with all n requests in flight
+    }
+
+    // the server must finish every admitted request and settle
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let snap = served.snapshot();
+        let settled = snap.aggregate.requests == n
+            && served.shards().iter().all(|s| s.in_flight() == 0 && s.queued() == 0);
+        if settled {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "server did not drain the abandoned session: {} of {n} requests handled",
+            snap.aggregate.requests
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // connection 2 against the SAME rack serves the workload
+    // bit-identically to a fresh in-process rack
+    let in_process = hetero_rack("affinity");
+    let (reqs, _) = mixed_stream(n);
+    let want = in_process.serve(reqs, 4);
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    let got = client.drain().unwrap();
+    let summary = client.close().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_same_response(a, b);
+    }
+    // the summary's telemetry is rack-cumulative: both connections' work
+    assert_eq!(summary.metrics.requests, 2 * n);
+    server.shutdown();
+}
+
+#[test]
+fn submits_after_drain_fail_per_request_not_fatally() {
+    let rack = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(rack, "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+    let (reqs, _) = mixed_stream(4);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    let drained = client.drain().unwrap();
+    assert_eq!(drained.len(), 4);
+    // the session is drained server-side: a late submit resolves to an
+    // explicit per-request error response, and the connection lives on
+    client.submit(&reqs[0]).unwrap();
+    let late = client.recv().unwrap().expect("a ticket always resolves");
+    let err = late.error.expect("submit-after-drain is an error");
+    assert!(err.contains("closed"), "explicit session-closed error: {err}");
+    let summary = client.close().unwrap();
+    assert_eq!(summary.requests, 4);
+    server.shutdown();
+}
+
+/// Raw-socket helper: read exactly one frame off a `TcpStream`.
+fn read_raw_frame(stream: &mut TcpStream) -> Frame {
+    gta::net::proto::read_frame(stream).expect("server answers with a well-formed frame")
+}
+
+#[test]
+fn malformed_and_oversized_frames_get_an_error_frame_and_a_close() {
+    let rack = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(Arc::clone(&rack), "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
+    let addr = server.addr().to_string();
+
+    // case 1: well-formed Hello, then an oversized length prefix
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, proto::client_hello()))
+            .unwrap();
+        stream.write_all(&buf).unwrap();
+        let hello = read_raw_frame(&mut stream);
+        assert_eq!(hello.ty, FrameType::Hello);
+        stream.write_all(&u32::MAX.to_be_bytes()).unwrap();
+        stream.write_all(&[0u8; 64]).unwrap();
+        let err = read_raw_frame(&mut stream);
+        assert_eq!(err.ty, FrameType::Error, "oversized frame answered with Error");
+        // the server closes the connection afterwards
+        let mut rest = Vec::new();
+        stream.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "nothing after the fatal Error frame");
+    }
+
+    // case 2: garbage instead of a Hello
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // 'G' = 0x47: a huge length prefix — the server must reject it
+        // without allocating, panicking, or hanging
+        let err = read_raw_frame(&mut stream);
+        assert_eq!(err.ty, FrameType::Error);
+        assert!(proto::error_message(&err.body).len() > 0);
+    }
+
+    // case 3: a Submit whose body is valid JSON but not a request
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let mut buf = Vec::new();
+        proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, proto::client_hello()))
+            .unwrap();
+        proto::write_frame(&mut buf, &Frame::new(FrameType::Submit, 1, Json::Bool(true)))
+            .unwrap();
+        stream.write_all(&buf).unwrap();
+        let hello = read_raw_frame(&mut stream);
+        assert_eq!(hello.ty, FrameType::Hello);
+        let err = read_raw_frame(&mut stream);
+        assert_eq!(err.ty, FrameType::Error, "undecodable request body is fatal");
+    }
+
+    // the server survived all three: a normal client still works
+    let mut client = GtaClient::connect(&addr).unwrap();
+    let (reqs, _) = mixed_stream(4);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    assert_eq!(client.drain().unwrap().len(), 4);
+    let _ = client.close().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn version_mismatch_is_refused_cleanly() {
+    let rack = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(rack, "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
+    let mut stream = TcpStream::connect(&server.addr().to_string()).unwrap();
+    let mut buf = Vec::new();
+    let body = Json::Obj(
+        [("proto".to_string(), Json::Num(99.0))].into_iter().collect(),
+    );
+    proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, body)).unwrap();
+    stream.write_all(&buf).unwrap();
+    let err = read_raw_frame(&mut stream);
+    assert_eq!(err.ty, FrameType::Error);
+    assert!(
+        proto::error_message(&err.body).contains("version"),
+        "mismatch names the version: {}",
+        proto::error_message(&err.body)
+    );
+    server.shutdown();
+}

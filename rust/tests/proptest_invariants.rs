@@ -195,3 +195,119 @@ fn prop_simd_gain_formula_consistent() {
         assert!((got - want).abs() < 1e-12, "{p:?}");
     }
 }
+
+// ---------------------------------------------------------------------
+// Wire-protocol frame codec (net::proto): randomized round-trips and
+// hostile-input hardening. The decoder contract is "clean error, never
+// a panic" — a public TCP port sees arbitrary bytes.
+
+use gta::net::proto::{self, DecodeError, Frame, FrameType};
+use gta::util::json::Json;
+
+const ALL_FRAME_TYPES: [FrameType; 7] = [
+    FrameType::Hello,
+    FrameType::Submit,
+    FrameType::Response,
+    FrameType::Busy,
+    FrameType::Drained,
+    FrameType::Closed,
+    FrameType::Error,
+];
+
+fn random_string(rng: &mut Rng) -> String {
+    // quotes, escapes, control chars, multibyte UTF-8 — the parser's
+    // hard cases
+    let alphabet =
+        ['a', 'Z', '0', '"', '\\', '/', '\n', '\t', '\r', '\u{1}', '\u{8}', 'é', '§', '汉', '🦀', ' '];
+    let len = rng.range_u64(0, 8);
+    (0..len).map(|_| *rng.choose(&alphabet)).collect()
+}
+
+fn random_json(rng: &mut Rng, depth: u32) -> Json {
+    let pick = rng.range_u64(0, if depth == 0 { 3 } else { 5 });
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.range_u64(0, 1) == 1),
+        2 => match rng.range_u64(0, 2) {
+            0 => Json::Num(rng.range_i64(-1_000_000, 1_000_000) as f64),
+            1 => Json::Num(rng.f64() * 1e9 - 5e8),
+            // any ≤2^53 integer is exactly representable
+            _ => Json::Num((rng.next_u64() >> 11) as f64),
+        },
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr((0..rng.range_u64(0, 3)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range_u64(0, 3))
+                .map(|_| (random_string(rng), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+fn encode(frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    proto::write_frame(&mut buf, frame).expect("writing to a Vec cannot fail");
+    buf
+}
+
+#[test]
+fn prop_frame_codec_round_trips_every_type() {
+    property("frame decode ∘ encode == id", 300, |rng: &mut Rng| {
+        let frame = Frame::new(*rng.choose(&ALL_FRAME_TYPES), rng.next_u64(), random_json(rng, 3));
+        let buf = encode(&frame);
+        let mut r = &buf[..];
+        let decoded = proto::read_frame(&mut r).expect("own encoding must decode");
+        assert!(r.is_empty(), "decoder consumed exactly one frame");
+        assert_eq!(decoded, frame);
+    });
+}
+
+#[test]
+fn prop_truncated_frames_are_malformed_never_panics() {
+    property("strict prefixes fail cleanly", 300, |rng: &mut Rng| {
+        let frame = Frame::new(*rng.choose(&ALL_FRAME_TYPES), rng.next_u64(), random_json(rng, 2));
+        let buf = encode(&frame);
+        let cut = (rng.next_u64() as usize) % buf.len(); // strict prefix
+        match proto::read_frame(&mut &buf[..cut]) {
+            Err(DecodeError::Eof) => assert_eq!(cut, 0, "Eof only at a frame boundary"),
+            Err(DecodeError::Malformed(_)) => assert!(cut > 0),
+            Err(DecodeError::Io(e)) => panic!("in-memory read cannot io-fail: {e}"),
+            Ok(f) => panic!("a strict prefix decoded as {f:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_garbage_and_bitflips_never_panic_the_decoder() {
+    property("hostile bytes -> error or harmless frame", 300, |rng: &mut Rng| {
+        // pure garbage
+        let len = rng.range_u64(0, 64) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| rng.range_u64(0, 255) as u8).collect();
+        let _ = proto::read_frame(&mut &garbage[..]); // must not panic
+
+        // a valid frame with one flipped byte: any outcome but a panic
+        let frame = Frame::new(*rng.choose(&ALL_FRAME_TYPES), rng.next_u64(), random_json(rng, 2));
+        let mut buf = encode(&frame);
+        let idx = (rng.next_u64() as usize) % buf.len();
+        buf[idx] ^= 1u8 << (rng.range_u64(0, 7) as u32);
+        let _ = proto::read_frame(&mut &buf[..]);
+
+        // oversized length prefixes are rejected before any allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&rng.range_u64(proto::MAX_BODY_BYTES as u64 + 10, u32::MAX as u64).to_be_bytes()[4..]);
+        huge.extend_from_slice(&[2u8; 9]);
+        assert!(matches!(proto::read_frame(&mut &huge[..]), Err(DecodeError::Malformed(_))));
+    });
+}
+
+#[test]
+fn prop_request_body_decoder_never_panics_on_arbitrary_json() {
+    property("hostile request bodies -> Err, not panic", 300, |rng: &mut Rng| {
+        // arbitrary JSON (including shapes that look almost right) must
+        // come back as Err — the zero-dim / unknown-kind guards, not the
+        // constructors' asserts, do the rejecting
+        let _ = proto::decode_request(&random_json(rng, 3));
+        let _ = proto::decode_response(&random_json(rng, 3));
+        let _ = proto::decode_summary(&random_json(rng, 2));
+    });
+}

@@ -202,7 +202,7 @@ fn rack_serve_with_reject_policy_accounts_every_request() {
     let opts = gta::coordinator::ServeOptions {
         workers: 2,
         queue_capacity: 2,
-        policy: gta::coordinator::AdmissionPolicy::Reject,
+        policy: gta::coordinator::AdmissionPolicy::reject(),
     };
     let responses = rack.serve_with(requests, opts);
     assert_eq!(responses.len(), 64, "served or rejected, never lost");

@@ -6,16 +6,18 @@
 //! (soft rust-oracle backend / sim-only racks), so these run in every
 //! build.
 
+mod common;
+
+use common::{gated_rack, gated_request};
 use gta::coordinator::rack::policy_by_name;
 use gta::coordinator::{
     AdmissionPolicy, AdmitError, CoalesceConfig, ExecKind, Rack, Request, Response, RoundRobin,
     ServeOptions,
 };
 use gta::precision::Precision;
-use gta::runtime::{ExecBackend, HostTensor};
 use gta::serve::{mixed_stream, soft_rack};
 use gta::{GtaConfig, TensorOp};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::Arc;
 
 /// Two identically configured heterogeneous soft racks: what one does
 /// in batch mode, the other must reproduce in streaming mode.
@@ -57,7 +59,7 @@ fn interleaved_streaming_is_bit_identical_to_batch_serve() {
 
     let batch: Vec<Response> = batch_rack.serve(batch_reqs, 4);
 
-    let mut session = stream_rack.open_session(ServeOptions::with_workers(4));
+    let session = stream_rack.open_session(ServeOptions::with_workers(4));
     let mut streamed: Vec<Response> = Vec::new();
     for req in stream_reqs {
         session.submit(req).expect("blocking admission cannot reject");
@@ -98,66 +100,16 @@ fn batch_serve_wrapper_still_honors_its_contract() {
     assert_eq!(snap.shards[0].queued, 0, "nothing left in the queue after drain");
 }
 
-/// An `ExecBackend` whose executions block until the test releases
-/// them: the deterministic way to hold a worker busy and fill the
-/// admission queue.
-struct GatedBackend {
-    started: mpsc::Sender<()>,
-    release: Mutex<mpsc::Receiver<()>>,
-}
-
-impl ExecBackend for GatedBackend {
-    fn execute(&self, _name: &str, inputs: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
-        self.started.send(()).ok();
-        self.release.lock().unwrap().recv().ok();
-        Ok(inputs.to_vec())
-    }
-
-    fn names(&self) -> Vec<String> {
-        vec!["gate".to_string()]
-    }
-}
-
-fn gated_request(id: u64) -> Request {
-    Request {
-        id,
-        op: TensorOp::gemm(64, 64, 64, Precision::Int8),
-        exec: ExecKind::Functional {
-            artifact: "gate".to_string(),
-            inputs: vec![HostTensor::I32(vec![id as i32; 4])],
-        },
-    }
-}
-
 #[test]
 fn reject_policy_applies_backpressure_mid_stream() {
-    let (started_tx, started_rx) = mpsc::channel::<()>();
-    let (release_tx, release_rx) = mpsc::channel::<()>();
-    // Sender/Receiver are !Sync; the Sync factory hands them to the one
-    // backend through take-once slots
-    let started_slot = Mutex::new(Some(started_tx));
-    let release_slot = Mutex::new(Some(release_rx));
-    let rack = Arc::new(
-        Rack::with_backend(
-            vec![GtaConfig::lanes16()],
-            move |_shard| {
-                Ok(Box::new(GatedBackend {
-                    started: started_slot.lock().unwrap().take().expect("one shard, one backend"),
-                    release: Mutex::new(
-                        release_slot.lock().unwrap().take().expect("one shard, one backend"),
-                    ),
-                }) as Box<dyn ExecBackend>)
-            },
-            // zero window: the gated execution starts immediately
-            CoalesceConfig { window: std::time::Duration::ZERO, ..Default::default() },
-            Box::new(RoundRobin::default()),
-        )
-        .unwrap(),
-    );
-    let mut session = rack.open_session(ServeOptions {
+    // the gated backend (tests/common) parks executions until released:
+    // the deterministic way to hold the one worker busy and fill the
+    // single admission-queue slot
+    let (rack, started_rx, release_tx) = gated_rack();
+    let session = rack.open_session(ServeOptions {
         workers: 1,
         queue_capacity: 1,
-        policy: AdmissionPolicy::Reject,
+        policy: AdmissionPolicy::reject(),
     });
 
     // r0 is picked up by the only worker and parks inside the backend
@@ -185,6 +137,49 @@ fn reject_policy_applies_backpressure_mid_stream() {
 }
 
 #[test]
+fn reject_retries_are_tunable_and_counted() {
+    // retries=3, zero backoff: a full queue costs exactly three counted
+    // requeue attempts before the Busy surfaces
+    let (rack, started_rx, release_tx) = gated_rack();
+    let session = rack.open_session(ServeOptions {
+        workers: 1,
+        queue_capacity: 1,
+        policy: AdmissionPolicy::Reject { retries: 3, backoff_us: 0 },
+    });
+    session.submit(gated_request(0)).expect("first submit admits");
+    started_rx.recv().expect("worker reached the gated backend");
+    session.submit(gated_request(1)).expect("second submit queues");
+    let err = session.submit(gated_request(2)).expect_err("queue is full");
+    assert_eq!(err, AdmitError::Busy);
+    assert_eq!(session.stats().rejected, 1);
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let out = session.drain();
+    assert_eq!(out.len(), 2);
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.admission_requeued, 3, "every retry attempt is counted");
+    assert_eq!(snap.aggregate.admission_rejected, 1);
+
+    // retries=0: no requeue at all, the first full queue is final
+    let (rack, started_rx, release_tx) = gated_rack();
+    let session = rack.open_session(ServeOptions {
+        workers: 1,
+        queue_capacity: 1,
+        policy: AdmissionPolicy::reject_now(),
+    });
+    session.submit(gated_request(0)).unwrap();
+    started_rx.recv().unwrap();
+    session.submit(gated_request(1)).unwrap();
+    assert_eq!(session.submit(gated_request(2)).expect_err("full"), AdmitError::Busy);
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let _ = session.drain();
+    let snap = rack.snapshot();
+    assert_eq!(snap.aggregate.admission_requeued, 0, "reject_now never requeues");
+    assert_eq!(snap.aggregate.admission_rejected, 1);
+}
+
+#[test]
 fn close_drains_every_in_flight_request() {
     let rack = soft_rack(
         vec![GtaConfig::lanes16()],
@@ -194,7 +189,7 @@ fn close_drains_every_in_flight_request() {
     .unwrap();
     let n = 40u64;
     let (reqs, _) = mixed_stream(n);
-    let mut session = rack.open_session(ServeOptions::with_workers(4));
+    let session = rack.open_session(ServeOptions::with_workers(4));
     for req in reqs {
         session.submit(req).expect("blocking admission");
     }
@@ -217,7 +212,7 @@ fn drain_returns_unconsumed_responses_in_batch_order() {
     .unwrap();
     let n = 24u64;
     let (reqs, _) = mixed_stream(n);
-    let mut session = rack.open_session(ServeOptions::with_workers(4));
+    let session = rack.open_session(ServeOptions::with_workers(4));
     for req in reqs {
         session.submit(req).unwrap();
     }
@@ -237,7 +232,7 @@ fn submit_after_close_is_an_explicit_error() {
         policy_by_name("rr").unwrap(),
     )
     .unwrap();
-    let mut session = rack.open_session(ServeOptions::default());
+    let session = rack.open_session(ServeOptions::default());
     session.submit(gated_request(0)).ok(); // "gate" is unknown to SoftBackend: error response, still a response
     let _ = session.close();
     let err = session.submit(gated_request(1)).expect_err("closed session");
@@ -263,7 +258,7 @@ fn concurrent_sessions_share_the_schedule_cache() {
             let rack = Arc::clone(&rack);
             let mk = &mk_req;
             scope.spawn(move || {
-                let mut session = rack.open_session(ServeOptions::with_workers(2));
+                let session = rack.open_session(ServeOptions::with_workers(2));
                 for i in 0..8u64 {
                     session.submit(mk(t * 100 + i)).unwrap();
                 }
