@@ -1,27 +1,202 @@
-//! Transport overhead: the SAME seeded open-loop workload replayed (a)
-//! through an in-process `RackSession` and (b) through a loopback TCP
-//! `NetServer`/`GtaClient` pair, at the same arrival rate. What to look
-//! for:
+//! Wire-protocol cost: v1 (JSON tensor bodies) vs v2 (zero-copy binary
+//! tensor frames), then the full loopback-TCP replay under both
+//! protocol versions against the in-process path. What to look for:
 //!
-//! * both paths serve every request with zero errors and identical
-//!   verification counts (the wire changes the transport, not the
-//!   answers);
-//! * the per-request overhead of framing + JSON + loopback TCP, printed
-//!   as µs/request — the price of leaving the process.
+//! * the frame-codec microbench prints encode+decode time and wire
+//!   bytes per dtype — the v2 acceptance targets (large f32 tensors
+//!   ≥10x faster to encode+decode, ≥5x smaller on the wire) are
+//!   asserted, the i32/i64 ratios are informational;
+//! * the replay section serves the SAME seeded open-loop workload
+//!   in-process, over TCP at v1 (forced), and over TCP at v2 — all
+//!   three verify identically (the wire changes the transport, not the
+//!   answers), and the per-request overhead of each protocol is
+//!   printed side by side.
 //!
 //! ```bash
 //! cargo bench --bench net_throughput
 //! ```
 
 use gta::coordinator::rack::policy_by_name;
-use gta::coordinator::{CoalesceConfig, ServeOptions};
+use gta::coordinator::{CoalesceConfig, ExecKind, Request, Response, ServeOptions};
+use gta::net::proto::{self, Frame, FrameType};
 use gta::net::NetServer;
+use gta::ops::TensorOp;
+use gta::precision::Precision;
+use gta::runtime::HostTensor;
 use gta::serve::{
-    mixed_stream, run_open_loop_client, run_open_loop_stream, shard_configs, soft_rack,
+    mixed_stream, run_open_loop_client_proto, run_open_loop_stream, shard_configs, soft_rack,
 };
+use gta::sim::SimReport;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ELEMS: usize = 65_536;
+const ITERS: u32 = 5;
+
+/// f32 payload with full mantissas spread across negative decimal
+/// exponents — representative of real activation tensors, and the
+/// worst case for the v1 JSON path (each element renders as ~17
+/// significant digits plus leading zeros when promoted to f64).
+fn f32_payload(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let mant = (i as u32).wrapping_mul(2_654_435_761) & 0x007f_ffff;
+            let v = f32::from_bits(0x3f80_0000 | mant); // [1, 2)
+            let scaled = v * 10f32.powi(-((i % 7) as i32));
+            if i % 2 == 0 {
+                scaled
+            } else {
+                -scaled
+            }
+        })
+        .collect()
+}
+
+fn request_for(t: &HostTensor) -> Request {
+    Request {
+        id: 7,
+        op: TensorOp::gemm(256, 256, 256, Precision::Fp32),
+        exec: ExecKind::Functional {
+            artifact: "bench_tensor_frames".to_string(),
+            inputs: vec![t.clone(), t.clone()],
+        },
+    }
+}
+
+fn response_for(t: &HostTensor) -> Response {
+    Response {
+        id: 7,
+        shard: 0,
+        schedule: None,
+        sim: SimReport { cycles: 123_456, freq_mhz: 1000, ..SimReport::default() },
+        outputs: Some(vec![t.clone()]),
+        error: None,
+        latency: Duration::from_micros(250),
+    }
+}
+
+struct CodecCost {
+    encode_s: f64,
+    decode_s: f64,
+    wire_bytes: usize,
+}
+
+/// Encode one request + one response as full frames `ITERS` times,
+/// then decode them back; `sink` defeats dead-code elimination.
+fn measure<E, D>(mut encode: E, mut decode: D) -> CodecCost
+where
+    E: FnMut(&mut Vec<u8>),
+    D: FnMut(&[u8]) -> usize,
+{
+    let mut buf = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        buf.clear();
+        encode(&mut buf);
+    }
+    let encode_s = t0.elapsed().as_secs_f64();
+    let wire_bytes = buf.len();
+    let mut sink = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..ITERS {
+        sink += decode(&buf);
+    }
+    let decode_s = t0.elapsed().as_secs_f64();
+    assert_eq!(sink, ITERS as usize * 3 * ELEMS, "decoded tensors kept every element");
+    CodecCost { encode_s, decode_s, wire_bytes }
+}
+
+fn decoded_elems(req: &Request, resp: &Response) -> usize {
+    let ins: usize = match &req.exec {
+        ExecKind::Functional { inputs, .. } => inputs.iter().map(HostTensor::len).sum(),
+        ExecKind::Simulate => 0,
+    };
+    let outs: usize = resp.outputs.as_ref().map_or(0, |o| o.iter().map(HostTensor::len).sum());
+    ins + outs
+}
+
+fn codec_comparison(name: &str, t: HostTensor) -> (f64, f64) {
+    let req = request_for(&t);
+    let resp = response_for(&t);
+
+    let v1 = measure(
+        |buf| {
+            proto::write_frame(buf, &Frame::new(FrameType::Submit, 7, proto::encode_request(&req)))
+                .unwrap();
+            proto::write_frame(
+                buf,
+                &Frame::new(FrameType::Response, 7, proto::encode_response(&resp)),
+            )
+            .unwrap();
+        },
+        |bytes| {
+            let mut r = bytes;
+            let f1 = proto::read_frame(&mut r).unwrap();
+            let rq = proto::decode_request(&f1.body).unwrap();
+            let f2 = proto::read_frame(&mut r).unwrap();
+            let rs = proto::decode_response(&f2.body).unwrap();
+            decoded_elems(&rq, &rs)
+        },
+    );
+    let v2 = measure(
+        |buf| {
+            proto::write_frame(
+                buf,
+                &Frame::binary(FrameType::SubmitBin, 7, proto::encode_request_bin(&req)),
+            )
+            .unwrap();
+            proto::write_frame(
+                buf,
+                &Frame::binary(FrameType::ResponseBin, 7, proto::encode_response_bin(&resp)),
+            )
+            .unwrap();
+        },
+        |bytes| {
+            let mut r = bytes;
+            let f1 = proto::read_frame(&mut r).unwrap();
+            let rq = proto::decode_request_bin(f1.id, &f1.bin).unwrap();
+            let f2 = proto::read_frame(&mut r).unwrap();
+            let rs = proto::decode_response_bin(&f2.bin).unwrap();
+            decoded_elems(&rq, &rs)
+        },
+    );
+
+    let speed = (v1.encode_s + v1.decode_s) / (v2.encode_s + v2.decode_s);
+    let bytes = v1.wire_bytes as f64 / v2.wire_bytes as f64;
+    println!(
+        "  {name:<4} v1 {:>9.2}ms enc {:>9.2}ms dec {:>10} B | v2 {:>7.2}ms enc {:>7.2}ms dec \
+         {:>9} B | enc+dec {speed:>5.1}x  bytes {bytes:>4.2}x",
+        v1.encode_s * 1e3 / ITERS as f64,
+        v1.decode_s * 1e3 / ITERS as f64,
+        v1.wire_bytes,
+        v2.encode_s * 1e3 / ITERS as f64,
+        v2.decode_s * 1e3 / ITERS as f64,
+        v2.wire_bytes,
+    );
+    (speed, bytes)
+}
 
 fn main() {
+    println!(
+        "frame codec: one Submit (2 x {ELEMS}-elem inputs) + one Response \
+         (1 x {ELEMS}-elem output), v1 JSON vs v2 binary, averaged over {ITERS} iters\n"
+    );
+    let i32s: Vec<i32> = (0..ELEMS).map(|i| (i as i32).wrapping_mul(-1_640_531_527)).collect();
+    let i64s: Vec<i64> =
+        (0..ELEMS).map(|i| (i as i64).wrapping_mul(-7_046_029_254_386_353_131)).collect();
+    codec_comparison("i32", HostTensor::I32(i32s));
+    codec_comparison("i64", HostTensor::I64(i64s));
+    let (speed, bytes) = codec_comparison("f32", HostTensor::F32(f32_payload(ELEMS)));
+    assert!(
+        speed >= 10.0,
+        "v2 target: large-tensor encode+decode >=10x faster than v1, got {speed:.1}x"
+    );
+    assert!(bytes >= 5.0, "v2 target: wire bytes >=5x smaller than v1, got {bytes:.2}x");
+    println!(
+        "\nv2 targets met on the f32 large-tensor frames: {speed:.1}x encode+decode \
+         (>=10x required), {bytes:.2}x wire bytes (>=5x required)\n"
+    );
+
     let n = 256u64;
     let workers = 4usize;
     let seed = 2024u64;
@@ -43,34 +218,46 @@ fn main() {
         let (reqs, expected) = mixed_stream(n);
         let local = run_open_loop_stream(&local_rack, reqs, &expected, workers, rate, seed);
 
-        let served = mk_rack();
-        let mut server = NetServer::spawn(
-            Arc::clone(&served),
-            "127.0.0.1:0",
-            ServeOptions::with_workers(workers),
-        )
-        .expect("loopback bind");
-        let wire = run_open_loop_client(&server.addr().to_string(), n, rate, seed)
-            .expect("loopback replay");
-        server.shutdown();
+        let mut wire = Vec::new();
+        for proto_version in [1u64, 2] {
+            let served = mk_rack();
+            let mut server = NetServer::spawn(
+                Arc::clone(&served),
+                "127.0.0.1:0",
+                ServeOptions::with_workers(workers),
+            )
+            .expect("loopback bind");
+            let summary =
+                run_open_loop_client_proto(&server.addr().to_string(), n, rate, seed, proto_version)
+                    .expect("loopback replay");
+            server.shutdown();
+            wire.push((proto_version, summary));
+        }
 
-        for (name, s) in [("in-process", &local), ("loopback TCP", &wire)] {
+        for (name, s) in [
+            ("in-process".to_string(), &local),
+            (format!("loopback v{}", wire[0].0), &wire[0].1),
+            (format!("loopback v{}", wire[1].0), &wire[1].1),
+        ] {
             assert_eq!(s.requests, n, "{name}: one response per request");
             assert_eq!(s.errors, 0, "{name}");
             assert_eq!(s.verified_failed, 0, "{name}: numerics stay exact");
+            assert_eq!(
+                s.verified_ok, local.verified_ok,
+                "{name}: the wire changes the transport, not the answers"
+            );
         }
-        assert_eq!(
-            wire.verified_ok, local.verified_ok,
-            "the wire changes the transport, not the answers"
-        );
 
-        let overhead_us =
-            (wire.wall_seconds - local.wall_seconds) * 1e6 / n as f64;
+        let us = |s: &gta::serve::ServeSummary| (s.wall_seconds - local.wall_seconds) * 1e6 / n as f64;
         println!(
-            "offered {rate:>8.0} req/s: in-process {:>8.1} req/s  loopback {:>8.1} req/s  \
-             (overhead {overhead_us:>+7.1} us/req)",
-            local.throughput_rps, wire.throughput_rps,
+            "offered {rate:>8.0} req/s: in-process {:>8.1} req/s  v1 {:>8.1} req/s \
+             ({:>+7.1} us/req)  v2 {:>8.1} req/s ({:>+7.1} us/req)",
+            local.throughput_rps,
+            wire[0].1.throughput_rps,
+            us(&wire[0].1),
+            wire[1].1.throughput_rps,
+            us(&wire[1].1),
         );
     }
-    println!("\nnet throughput OK: wire path verified against the in-process path");
+    println!("\nnet throughput OK: v1 and v2 wire paths verified against the in-process path");
 }

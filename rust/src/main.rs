@@ -28,7 +28,7 @@ USAGE:
             [--shards N] [--policy rr|least|affinity|capacity]
             [--shard-lanes L1,L2,...]
             [--stream] [--arrival-rate R] [--seed S]
-            [--listen ADDR]
+            [--listen ADDR] [--max-proto V]
                                     e2e driver: mixed request stream through
                                     the batched (admission queue + coalescing)
                                     serve path; `--backend soft` runs the
@@ -44,15 +44,20 @@ USAGE:
                                     `--listen ADDR` (e.g. 0.0.0.0:7070) puts
                                     the same rack on TCP instead: every
                                     connection gets its own streaming session
-                                    (see docs/transport.md)
+                                    (see docs/transport.md); `--max-proto V`
+                                    caps the negotiated wire protocol
+                                    (default 2: binary tensor frames; 1 =
+                                    JSON-only v1 server)
   gta client --connect ADDR [--requests N] [--stream] [--arrival-rate R]
-             [--seed S]
+             [--seed S] [--proto V]
                                     replay the mixed e2e stream against a
                                     `gta serve --listen` server over TCP:
                                     batch submit-then-drain by default,
                                     `--stream` replays the seeded open-loop
                                     Poisson driver (bit-comparable with the
-                                    in-process `serve --stream` path)
+                                    in-process `serve --stream` path);
+                                    `--proto V` caps the version this client
+                                    announces (1 = v1-forced JSON replay)
 ";
 
 fn main() -> Result<()> {
@@ -287,19 +292,22 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         // server mode: the same rack the in-process drivers build, on TCP
         let backend = flags.get("backend").unwrap_or("pjrt");
         let artifacts = flags.get("artifacts").map(Into::into);
+        let max_proto = flags.get_u64("max-proto", gta::net::PROTO_VERSION);
         let rack = gta::serve::listen_rack(backend, artifacts, shards, &lanes, policy)?;
-        let mut server = gta::net::NetServer::spawn(
+        let mut server = gta::net::NetServer::spawn_proto(
             rack,
             addr,
             gta::coordinator::ServeOptions::with_workers(workers),
+            max_proto,
         )?;
         println!(
-            "gta serving on {} ({} shard(s), {} backend, policy {}) — \
+            "gta serving on {} ({} shard(s), {} backend, policy {}, proto <= {}) — \
              connect with `gta client --connect {}`",
             server.addr(),
             shards.max(1),
             backend,
             policy,
+            max_proto,
             server.addr()
         );
         server.join();
@@ -342,15 +350,16 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 fn cmd_client(flags: &Flags) -> Result<()> {
     let addr = flags.get("connect").ok_or_else(|| anyhow!("--connect ADDR required"))?;
     let n = flags.get_u64("requests", 64);
+    let proto = flags.get_u64("proto", gta::net::PROTO_VERSION);
     let summary = if flags.get("stream").is_some() {
         let rate: f64 = flags.get("arrival-rate").and_then(|v| v.parse().ok()).unwrap_or(5000.0);
         if !(rate > 0.0) {
             bail!("--arrival-rate must be a positive req/s rate, got {rate}");
         }
         let seed = flags.get_u64("seed", 2024);
-        gta::serve::run_open_loop_client(addr, n, rate, seed)?
+        gta::serve::run_open_loop_client_proto(addr, n, rate, seed, proto)?
     } else {
-        gta::serve::run_client_mixed(addr, n)?
+        gta::serve::run_client_mixed_proto(addr, n, proto)?
     };
     print!("{}", summary.render());
     Ok(())

@@ -23,8 +23,8 @@
 //! connection) surface as `Err` from whichever call observes them.
 
 use super::proto::{
-    busy_shard, client_hello, error_message, read_frame, write_frame, DecodeError, Frame,
-    FrameType, PROTO_VERSION,
+    busy_shard, client_hello_v, error_message, negotiate, read_frame, write_frame, DecodeError,
+    Frame, FrameType, MIN_PROTO_VERSION, PROTO_VERSION,
 };
 use crate::coordinator::{order_responses, unserved_response, Request, Response};
 use crate::serve::ServeSummary;
@@ -38,7 +38,9 @@ use std::sync::mpsc;
 /// the two paths stay comparable response-for-response.
 pub use crate::coordinator::BUSY_MESSAGE;
 
-/// What the server said in its `Hello`.
+/// What the server said in its `Hello`. `proto` is the **negotiated**
+/// version this connection speaks: tensor payloads travel as v2 binary
+/// frames when it is ≥ 2, as v1 JSON otherwise.
 #[derive(Debug, Clone)]
 pub struct ServerInfo {
     pub proto: u64,
@@ -73,13 +75,30 @@ pub struct GtaClient {
 
 impl GtaClient {
     /// Connect, negotiate the protocol version, and return a live
-    /// client. Fails if the server speaks a different version.
+    /// client. The connection speaks `min(client, server)`; connecting
+    /// fails only if the negotiated version falls below
+    /// [`MIN_PROTO_VERSION`] (or the server answers with a version it
+    /// was never offered).
     pub fn connect(addr: &str) -> Result<GtaClient> {
+        GtaClient::connect_proto(addr, PROTO_VERSION)
+    }
+
+    /// [`connect`](Self::connect) with an explicit cap on the version
+    /// this client announces — `connect_proto(addr, 1)` is a v1-forced
+    /// client producing the PR 5 wire behavior byte-for-byte, useful
+    /// for compatibility replays against newer servers.
+    pub fn connect_proto(addr: &str, max_proto: u64) -> Result<GtaClient> {
+        if !(MIN_PROTO_VERSION..=PROTO_VERSION).contains(&max_proto) {
+            bail!(
+                "this build speaks protocol versions \
+                 {MIN_PROTO_VERSION}..={PROTO_VERSION}, not {max_proto}"
+            );
+        }
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         let mut writer = BufWriter::new(stream.try_clone()?);
         let mut sock_reader = BufReader::new(stream.try_clone()?);
-        write_frame(&mut writer, &Frame::new(FrameType::Hello, 0, client_hello()))?;
+        write_frame(&mut writer, &Frame::new(FrameType::Hello, 0, client_hello_v(max_proto)))?;
         writer.flush()?;
         // the Hello reply is read synchronously, before the reader
         // thread takes over the socket
@@ -91,8 +110,12 @@ impl GtaClient {
         };
         let proto = super::proto::hello_proto(&hello.body)
             .ok_or_else(|| anyhow!("server Hello without a protocol version"))?;
-        if proto != PROTO_VERSION {
-            bail!("server speaks protocol {proto}, this client speaks {PROTO_VERSION}");
+        // the server's answer must be a version we offered and can speak
+        if proto > max_proto || negotiate(proto, max_proto) != Some(proto) {
+            bail!(
+                "server answered protocol {proto}, \
+                 outside this client's {MIN_PROTO_VERSION}..={max_proto}"
+            );
         }
         let server = ServerInfo {
             proto,
@@ -118,6 +141,16 @@ impl GtaClient {
                             Ok(resp) => Event::Response(Box::new(resp)),
                             Err(e) => Event::Fatal(format!("undecodable response: {e:#}")),
                         },
+                        // decodes straight into HostTensor buffers —
+                        // no intermediate JSON values
+                        FrameType::ResponseBin => {
+                            match super::proto::decode_response_bin(&f.bin) {
+                                Ok(resp) => Event::Response(Box::new(resp)),
+                                Err(e) => {
+                                    Event::Fatal(format!("undecodable binary response: {e:#}"))
+                                }
+                            }
+                        }
                         FrameType::Busy => Event::Busy { id: f.id, shard: busy_shard(&f.body) },
                         FrameType::Error if f.id != 0 => {
                             Event::RequestError { id: f.id, message: error_message(&f.body) }
@@ -173,7 +206,13 @@ impl GtaClient {
         if self.closed {
             bail!("client already closed");
         }
-        let frame = Frame::new(FrameType::Submit, req.id, super::proto::encode_request(req));
+        let frame = if self.server.proto >= 2 {
+            // binary tensor frame: element bytes go out as-is, no
+            // per-element formatting
+            Frame::binary(FrameType::SubmitBin, req.id, super::proto::encode_request_bin(req))
+        } else {
+            Frame::new(FrameType::Submit, req.id, super::proto::encode_request(req))
+        };
         write_frame(&mut self.writer, &frame)?;
         self.writer.flush()?;
         self.submitted += 1;

@@ -1,15 +1,18 @@
 //! The network serving subsystem: the [`crate::coordinator::RackSession`]
 //! put on a real transport, with **zero new dependencies** — plain
 //! `std::net` TCP carrying a versioned, length-prefixed frame protocol
-//! with JSON bodies (the in-tree [`crate::util::json`]).
+//! (the in-tree [`crate::util::json`] for control bodies; protocol v2
+//! moves tensor payloads to zero-copy binary frames, negotiated per
+//! connection in the `Hello` exchange).
 //!
 //! Three layers:
 //!
 //! * [`proto`] — the wire format: frame codec
-//!   (`len:u32 | type:u8 | id:u64 | JSON body`), the
+//!   (`len:u32 | type:u8 | id:u64 | body`), the
 //!   `Hello/SubmitRequest/Response/Busy/Drained/Closed/Error` message
-//!   grammar, and exact JSON codecs for requests, responses and the
-//!   final serve summary. Hostile bytes decode to clean errors, never
+//!   grammar plus the v2 `SubmitBin`/`ResponseBin` binary tensor
+//!   frames, and exact codecs for requests, responses and the final
+//!   serve summary. Hostile bytes decode to clean errors, never
 //!   panics.
 //! * [`server`] — [`NetServer`]: a `TcpListener` accept loop; each
 //!   connection gets its own `RackSession` over one shared
@@ -30,5 +33,5 @@ pub mod proto;
 pub mod server;
 
 pub use client::{GtaClient, ServerInfo, BUSY_MESSAGE};
-pub use proto::{Frame, FrameType, MAX_BODY_BYTES, PROTO_VERSION};
+pub use proto::{Frame, FrameType, MAX_BODY_BYTES, MIN_PROTO_VERSION, PROTO_VERSION};
 pub use server::NetServer;

@@ -1,25 +1,40 @@
-//! The GTA wire protocol: versioned, length-prefixed frames with JSON
-//! bodies (via the in-tree [`crate::util::json`] — no serde, no new
-//! dependencies). See `docs/transport.md` for the full frame layout and
-//! message grammar; the short version:
+//! The GTA wire protocol: versioned, length-prefixed frames (via the
+//! in-tree [`crate::util::json`] — no serde, no new dependencies). See
+//! `docs/transport.md` for the full frame layout and message grammar;
+//! the short version:
 //!
 //! ```text
-//! frame := len:u32(BE)  type:u8  id:u64(BE)  body:UTF-8 JSON
+//! frame := len:u32(BE)  type:u8  id:u64(BE)  body
 //! ```
 //!
 //! `len` counts everything after itself (type + id + body, so `len >= 9`),
 //! `type` is a [`FrameType`] discriminant, `id` is the ticket/request id
 //! the frame refers to (0 when it refers to the connection), and the
-//! body is one JSON document (an empty body decodes as `null`).
-//! Oversized (`len − 9 > MAX_BODY_BYTES`), truncated, or undecodable
-//! frames are [`DecodeError::Malformed`] — the peer answers with an
-//! `Error` frame and closes the connection, never a panic.
+//! body is one UTF-8 JSON document (an empty body decodes as `null`) —
+//! except for the **v2 binary tensor frames** ([`FrameType::SubmitBin`]
+//! and [`FrameType::ResponseBin`]), whose bodies are a compact binary
+//! header plus raw little-endian element bytes (see the "v2 binary
+//! bodies" section below). Oversized (`len − 9 > MAX_BODY_BYTES`),
+//! truncated, or undecodable frames are [`DecodeError::Malformed`] —
+//! the peer answers with an `Error` frame and closes the connection,
+//! never a panic.
+//!
+//! Protocol versions are negotiated in the opening `Hello` exchange:
+//! the client announces the highest version it speaks, the server
+//! answers with `min(client, server)` and both sides then speak that
+//! version for the life of the connection. v1 keeps every body JSON;
+//! v2 moves tensor payloads (`Submit` and `Response`) to the binary
+//! frames and keeps JSON only for control frames and response
+//! metadata.
 //!
 //! Integers that may exceed 2^53 (ids live in the binary header, but
 //! config fingerprints, cycle counts and i64 tensor elements travel in
-//! bodies) are encoded as decimal *strings* when they would lose
+//! JSON bodies) are encoded as decimal *strings* when they would lose
 //! precision as a JSON number, and both forms are accepted on decode —
-//! so every `u64`/`i64` round-trips bit-exactly.
+//! so every `u64`/`i64` round-trips bit-exactly. In v2 binary bodies
+//! tensor elements travel as their native little-endian bytes, so the
+//! question does not arise (and f32 NaN payload bits, which v1's JSON
+//! path canonicalizes, survive untouched).
 
 use crate::coordinator::metrics::{RackSnapshot, ShardTelemetry, Snapshot};
 use crate::coordinator::lane_scheduler::LaneUsage;
@@ -37,9 +52,29 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::time::Duration;
 
-/// Protocol version spoken by this build. `Hello` frames carry it; a
-/// mismatch is answered with a fatal `Error` frame.
-pub const PROTO_VERSION: u64 = 1;
+/// Highest protocol version this build speaks. `Hello` frames carry
+/// the peer's maximum; both sides settle on [`negotiate`]'s answer.
+///
+/// * **v1** — every body is JSON, tensors as JSON number arrays.
+/// * **v2** — tensor payloads move to the binary
+///   [`SubmitBin`](FrameType::SubmitBin)/
+///   [`ResponseBin`](FrameType::ResponseBin) frames; control frames
+///   (`Hello/Busy/Drained/Closed/Error`) and response metadata stay
+///   JSON.
+pub const PROTO_VERSION: u64 = 2;
+
+/// Oldest protocol version this build still serves (v1 clients keep
+/// working against a v2 server, bit-identically).
+pub const MIN_PROTO_VERSION: u64 = 1;
+
+/// Version-negotiation rule, shared by both sides: settle on the lower
+/// of the two maxima, refuse anything below [`MIN_PROTO_VERSION`].
+/// A peer announcing a *future* version is served at ours — that is
+/// what lets old clients talk to new servers and vice versa.
+pub fn negotiate(peer_max: u64, own_max: u64) -> Option<u64> {
+    let v = peer_max.min(own_max);
+    (v >= MIN_PROTO_VERSION).then_some(v)
+}
 
 /// Hard cap on one frame's body. A `len` prefix implying more is
 /// malformed and kills the connection — a 4-byte prefix must never make
@@ -73,6 +108,13 @@ pub enum FrameType {
     /// Per-request (`id` != 0 refers to a ticket) or fatal
     /// (`{"fatal": true}`) protocol error.
     Error,
+    /// v2 client → server: one [`Request`] as a **binary** body
+    /// (compact header + raw little-endian tensor bytes). Only valid
+    /// once both peers negotiated v2.
+    SubmitBin,
+    /// v2 server → client: one [`Response`] as a **binary** body (JSON
+    /// metadata blob + raw little-endian output tensor bytes).
+    ResponseBin,
 }
 
 impl FrameType {
@@ -85,6 +127,8 @@ impl FrameType {
             FrameType::Drained => 5,
             FrameType::Closed => 6,
             FrameType::Error => 7,
+            FrameType::SubmitBin => 8,
+            FrameType::ResponseBin => 9,
         }
     }
 
@@ -97,24 +141,44 @@ impl FrameType {
             5 => FrameType::Drained,
             6 => FrameType::Closed,
             7 => FrameType::Error,
+            8 => FrameType::SubmitBin,
+            9 => FrameType::ResponseBin,
             _ => return None,
         })
     }
+
+    /// Whether this frame's body is binary (v2 tensor frames) rather
+    /// than a JSON document.
+    pub fn is_binary(self) -> bool {
+        matches!(self, FrameType::SubmitBin | FrameType::ResponseBin)
+    }
 }
 
-/// One decoded frame.
+/// One decoded frame. JSON-bodied frames carry their document in
+/// `body` (`bin` empty); binary frames carry their raw payload in
+/// `bin` (`body` is `Json::Null`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
     pub ty: FrameType,
     /// Ticket/request id this frame refers to (0 = the connection).
     pub id: u64,
-    /// JSON body (`Json::Null` for an empty body).
+    /// JSON body (`Json::Null` for an empty or binary body).
     pub body: Json,
+    /// Raw payload of a binary frame (empty for JSON frames).
+    pub bin: Vec<u8>,
 }
 
 impl Frame {
+    /// A JSON-bodied frame (every v1 frame, and v2 control frames).
     pub fn new(ty: FrameType, id: u64, body: Json) -> Frame {
-        Frame { ty, id, body }
+        debug_assert!(!ty.is_binary(), "binary frame types take Frame::binary");
+        Frame { ty, id, body, bin: Vec::new() }
+    }
+
+    /// A binary-bodied v2 tensor frame.
+    pub fn binary(ty: FrameType, id: u64, bin: Vec<u8>) -> Frame {
+        debug_assert!(ty.is_binary(), "JSON frame types take Frame::new");
+        Frame { ty, id, body: Json::Null, bin }
     }
 }
 
@@ -143,17 +207,25 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
-/// Serialize one frame. An empty/`null` body is written as zero bytes.
+/// Serialize one frame. An empty/`null` body is written as zero bytes;
+/// binary frame types write their `bin` payload verbatim (no
+/// per-element formatting anywhere on the v2 path).
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
-    let body = match &frame.body {
-        Json::Null => String::new(),
-        b => b.render(),
+    let json_body;
+    let body: &[u8] = if frame.ty.is_binary() {
+        &frame.bin
+    } else {
+        json_body = match &frame.body {
+            Json::Null => String::new(),
+            b => b.render(),
+        };
+        json_body.as_bytes()
     };
     let len = (HEADER_AFTER_LEN + body.len()) as u32;
     w.write_all(&len.to_be_bytes())?;
     w.write_all(&[frame.ty.code()])?;
     w.write_all(&frame.id.to_be_bytes())?;
-    w.write_all(body.as_bytes())
+    w.write_all(body)
 }
 
 /// Read one frame. Distinguishes a clean EOF at a frame boundary
@@ -183,6 +255,12 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<Frame, DecodeError>
     let id = u64::from_be_bytes(head[1..9].try_into().expect("8-byte slice"));
     let mut body_bytes = vec![0u8; body_len];
     read_exact_mid_frame(r, &mut body_bytes)?;
+    if ty.is_binary() {
+        // v2 tensor frames: the payload stays raw; the message-level
+        // decoders (decode_request_bin / decode_response_bin) validate
+        // it with the same clean-error contract
+        return Ok(Frame { ty, id, body: Json::Null, bin: body_bytes });
+    }
     let body = if body_bytes.is_empty() {
         Json::Null
     } else {
@@ -191,7 +269,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<Frame, DecodeError>
         crate::util::json::parse(text)
             .map_err(|e| DecodeError::Malformed(format!("body is not JSON: {e}")))?
     };
-    Ok(Frame { ty, id, body })
+    Ok(Frame { ty, id, body, bin: Vec::new() })
 }
 
 /// Fill `buf`, treating 0 bytes at the first read as a clean EOF.
@@ -281,6 +359,20 @@ fn get_u64_val(v: &Json) -> Result<u64> {
         Json::Str(s) => s.parse().map_err(|_| anyhow!("not a u64: {s:?}")),
         _ => bail!("not a u64"),
     }
+}
+
+/// Checked u64 → u32 field read: a value past `u32::MAX` is a decode
+/// error, never an `as`-wrap — a hostile-but-well-formed JSON body
+/// must not be able to smuggle a wrapped config value past validation.
+fn get_u32(j: &Json, key: &str) -> Result<u32> {
+    let v = get_u64(j, key)?;
+    u32::try_from(v).map_err(|_| anyhow!("field {key:?} value {v} exceeds u32"))
+}
+
+/// Checked u64 → usize field read (same contract as [`get_u32`]).
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    let v = get_u64(j, key)?;
+    usize::try_from(v).map_err(|_| anyhow!("field {key:?} value {v} exceeds usize"))
 }
 
 fn get_f64(j: &Json, key: &str) -> Result<f64> {
@@ -453,7 +545,7 @@ fn encode_sim(s: &SimReport) -> Json {
 fn decode_sim(j: &Json) -> Result<SimReport> {
     Ok(SimReport {
         cycles: get_u64(j, "cycles")?,
-        freq_mhz: get_u64(j, "freq_mhz")? as u32,
+        freq_mhz: get_u32(j, "freq_mhz")?,
         sram_bytes: get_u64(j, "sram_bytes")?,
         dram_bytes: get_u64(j, "dram_bytes")?,
         macs: get_u64(j, "macs")?,
@@ -492,8 +584,8 @@ fn encode_schedule(c: &ScheduleConfig) -> Json {
 }
 
 fn decode_schedule(j: &Json) -> Result<ScheduleConfig> {
-    let rows = get_u64(j, "lane_rows")? as u32;
-    let cols = get_u64(j, "lane_cols")? as u32;
+    let rows = get_u32(j, "lane_rows")?;
+    let cols = get_u32(j, "lane_cols")?;
     if rows == 0 || cols == 0 {
         bail!("degenerate lane arrangement");
     }
@@ -509,13 +601,10 @@ fn decode_schedule(j: &Json) -> Result<ScheduleConfig> {
     })
 }
 
-/// Encode one [`Response`] as a frame body. The schedule travels as its
-/// [`ScheduleConfig`] only; the client reconstructs a [`Candidate`]
-/// whose report is the response's own `sim` (identical by construction
-/// for p-GEMMs — the shard answers with the winning candidate's report)
-/// and whose pattern-coverage detail is dropped.
-pub fn encode_response(resp: &Response) -> Json {
-    obj(vec![
+/// Everything in a [`Response`] except the output tensors — the part
+/// that stays JSON in both protocol versions ("response metadata").
+fn response_meta_fields(resp: &Response) -> Vec<(&'static str, Json)> {
+    vec![
         ("id", ju64(resp.id)),
         ("shard", Json::Num(resp.shard as f64)),
         (
@@ -527,13 +616,6 @@ pub fn encode_response(resp: &Response) -> Json {
         ),
         ("sim", encode_sim(&resp.sim)),
         (
-            "outputs",
-            match &resp.outputs {
-                Some(outs) => Json::Arr(outs.iter().map(encode_tensor).collect()),
-                None => Json::Null,
-            },
-        ),
-        (
             "error",
             match &resp.error {
                 Some(e) => Json::Str(e.clone()),
@@ -541,7 +623,24 @@ pub fn encode_response(resp: &Response) -> Json {
             },
         ),
         ("latency_us", ju64(resp.latency.as_micros() as u64)),
-    ])
+    ]
+}
+
+/// Encode one [`Response`] as a v1 frame body. The schedule travels as
+/// its [`ScheduleConfig`] only; the client reconstructs a [`Candidate`]
+/// whose report is the response's own `sim` (identical by construction
+/// for p-GEMMs — the shard answers with the winning candidate's report)
+/// and whose pattern-coverage detail is dropped.
+pub fn encode_response(resp: &Response) -> Json {
+    let mut fields = response_meta_fields(resp);
+    fields.push((
+        "outputs",
+        match &resp.outputs {
+            Some(outs) => Json::Arr(outs.iter().map(encode_tensor).collect()),
+            None => Json::Null,
+        },
+    ));
+    obj(fields)
 }
 
 pub fn decode_response(j: &Json) -> Result<Response> {
@@ -562,13 +661,360 @@ pub fn decode_response(j: &Json) -> Result<Response> {
     };
     Ok(Response {
         id: get_u64(j, "id")?,
-        shard: get_u64(j, "shard")? as usize,
+        shard: get_usize(j, "shard")?,
         schedule,
         sim,
         outputs,
         error,
         latency: Duration::from_micros(get_u64(j, "latency_us")?),
     })
+}
+
+// ---------------------------------------------------------------------
+// v2 binary bodies: zero-copy tensor frames.
+//
+// Layouts (all multi-byte integers little-endian — native on every
+// deployment target, so element bytes are memcpy'd; the frame header
+// around the body stays big-endian as in v1):
+//
+// ```text
+// tensor          := dtype:u8 (1=i32, 2=i64, 3=f32)
+//                    count:u64
+//                    raw element bytes (count x elem size, LE)
+// SubmitBin body  := op_kind:u8 (1=pgemm, 2=vector)  precision:u8
+//                    pgemm:  m:u64 n:u64 k:u64
+//                    vector: len:u64 vkind:u8 (1=map..4=activation)
+//                    exec:u8 (0=simulate, 1=functional)
+//                    functional: artifact_len:u32 artifact:UTF-8
+//                                n_inputs:u32 tensor*
+// ResponseBin body:= meta_len:u32
+//                    meta:UTF-8 JSON (the v1 response body minus
+//                                     "outputs")
+//                    has_outputs:u8 (0|1)
+//                    n_outputs:u32 tensor*      (when has_outputs=1)
+// ```
+//
+// Decode goes straight into [`HostTensor`] buffers with one allocation
+// per tensor and no intermediate `Vec<Json>`; encode writes from the
+// tensor slice with no per-element formatting. Every read is
+// bounds-checked against the declared body, element counts are
+// overflow-checked *before* any allocation (an allocation can never
+// exceed the already-read body), and trailing bytes are malformed —
+// hostile bytes get a clean `Err`, never a panic and never a silently
+// wrong tensor.
+
+const DT_I32: u8 = 1;
+const DT_I64: u8 = 2;
+const DT_F32: u8 = 3;
+
+const OP_PGEMM: u8 = 1;
+const OP_VECTOR: u8 = 2;
+
+const EXEC_SIMULATE: u8 = 0;
+const EXEC_FUNCTIONAL: u8 = 1;
+
+fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::Int8 => 1,
+        Precision::Int16 => 2,
+        Precision::Int32 => 3,
+        Precision::Int64 => 4,
+        Precision::Bp16 => 5,
+        Precision::Fp16 => 6,
+        Precision::Fp32 => 7,
+        Precision::Fp64 => 8,
+    }
+}
+
+fn precision_from_code(c: u8) -> Result<Precision> {
+    Ok(match c {
+        1 => Precision::Int8,
+        2 => Precision::Int16,
+        3 => Precision::Int32,
+        4 => Precision::Int64,
+        5 => Precision::Bp16,
+        6 => Precision::Fp16,
+        7 => Precision::Fp32,
+        8 => Precision::Fp64,
+        other => bail!("unknown binary precision tag {other}"),
+    })
+}
+
+fn vector_kind_code(k: VectorKind) -> u8 {
+    match k {
+        VectorKind::Map => 1,
+        VectorKind::Axpy => 2,
+        VectorKind::Reduce => 3,
+        VectorKind::Activation => 4,
+    }
+}
+
+fn vector_kind_from_code(c: u8) -> Result<VectorKind> {
+    Ok(match c {
+        1 => VectorKind::Map,
+        2 => VectorKind::Axpy,
+        3 => VectorKind::Reduce,
+        4 => VectorKind::Activation,
+        other => bail!("unknown binary vector kind tag {other}"),
+    })
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked reader over a binary body: every primitive read and
+/// slice take fails cleanly at the end of the buffer.
+struct Cur<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() < n {
+            bail!("binary body truncated: wanted {n} more bytes, have {}", self.buf.len());
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().expect("8-byte slice")))
+    }
+
+    /// Trailing bytes after a complete message are malformed — framing
+    /// mistakes must never pass silently.
+    fn finish(self) -> Result<()> {
+        if !self.buf.is_empty() {
+            bail!("binary body has {} trailing bytes", self.buf.len());
+        }
+        Ok(())
+    }
+}
+
+/// Append one tensor in the v2 binary layout: dtype tag, element
+/// count, raw little-endian element bytes straight from the slice.
+fn encode_tensor_bin(t: &HostTensor, out: &mut Vec<u8>) {
+    match t {
+        HostTensor::I32(v) => {
+            out.push(DT_I32);
+            put_u64(out, v.len() as u64);
+            out.reserve(v.len() * 4);
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        HostTensor::I64(v) => {
+            out.push(DT_I64);
+            put_u64(out, v.len() as u64);
+            out.reserve(v.len() * 8);
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        HostTensor::F32(v) => {
+            out.push(DT_F32);
+            put_u64(out, v.len() as u64);
+            out.reserve(v.len() * 4);
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Wire bytes one tensor occupies in the v2 binary layout.
+fn tensor_bin_len(t: &HostTensor) -> usize {
+    let elem = match t {
+        HostTensor::I32(_) | HostTensor::F32(_) => 4,
+        HostTensor::I64(_) => 8,
+    };
+    1 + 8 + t.len() * elem
+}
+
+/// Decode one tensor from the v2 binary layout into a [`HostTensor`]
+/// with a single exact-size allocation. The declared element count is
+/// overflow-checked and bounds-checked against the remaining body
+/// before anything is allocated.
+fn decode_tensor_bin(c: &mut Cur<'_>) -> Result<HostTensor> {
+    let dtype = c.u8()?;
+    let count = c.u64()?;
+    let n = usize::try_from(count)
+        .map_err(|_| anyhow!("tensor element count {count} overflows this platform"))?;
+    let elem = match dtype {
+        DT_I32 | DT_F32 => 4usize,
+        DT_I64 => 8,
+        other => bail!("unknown binary tensor dtype tag {other}"),
+    };
+    let nbytes = n
+        .checked_mul(elem)
+        .ok_or_else(|| anyhow!("tensor byte length overflows ({count} x {elem})"))?;
+    let raw = c.bytes(nbytes)?;
+    Ok(match dtype {
+        DT_I32 => HostTensor::I32(
+            raw.chunks_exact(4).map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
+        ),
+        DT_I64 => HostTensor::I64(
+            raw.chunks_exact(8)
+                .map(|b| i64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                .collect(),
+        ),
+        _ => HostTensor::F32(
+            raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
+        ),
+    })
+}
+
+/// Encode one [`Request`] as a v2 `SubmitBin` body. The request id
+/// travels only in the frame header (it is authoritative in v1 too).
+pub fn encode_request_bin(req: &Request) -> Vec<u8> {
+    let tensor_bytes = match &req.exec {
+        ExecKind::Functional { inputs, .. } => inputs.iter().map(tensor_bin_len).sum(),
+        ExecKind::Simulate => 0,
+    };
+    let mut out = Vec::with_capacity(64 + tensor_bytes);
+    match &req.op {
+        TensorOp::PGemm(g) => {
+            out.push(OP_PGEMM);
+            out.push(precision_code(g.precision));
+            put_u64(&mut out, g.m);
+            put_u64(&mut out, g.n);
+            put_u64(&mut out, g.k);
+        }
+        TensorOp::Vector(v) => {
+            out.push(OP_VECTOR);
+            out.push(precision_code(v.precision));
+            put_u64(&mut out, v.len);
+            out.push(vector_kind_code(v.kind));
+        }
+    }
+    match &req.exec {
+        ExecKind::Simulate => out.push(EXEC_SIMULATE),
+        ExecKind::Functional { artifact, inputs } => {
+            out.push(EXEC_FUNCTIONAL);
+            put_u32(&mut out, artifact.len() as u32);
+            out.extend_from_slice(artifact.as_bytes());
+            put_u32(&mut out, inputs.len() as u32);
+            for t in inputs {
+                encode_tensor_bin(t, &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a v2 `SubmitBin` body. `id` is the frame header's request id
+/// (v2 bodies do not repeat it). Same validation surface as the v1
+/// JSON [`decode_request`]: degenerate dims, unknown tags, truncations
+/// and trailing bytes are all clean errors.
+pub fn decode_request_bin(id: u64, bytes: &[u8]) -> Result<Request> {
+    let mut c = Cur::new(bytes);
+    let op_kind = c.u8()?;
+    let precision = precision_from_code(c.u8()?)?;
+    let op = match op_kind {
+        OP_PGEMM => {
+            let (m, n, k) = (c.u64()?, c.u64()?, c.u64()?);
+            if m == 0 || n == 0 || k == 0 {
+                bail!("degenerate p-GEMM dims are 1, not 0");
+            }
+            TensorOp::PGemm(PGemm::new(m, n, k, precision))
+        }
+        OP_VECTOR => {
+            let len = c.u64()?;
+            if len == 0 {
+                bail!("vector op over 0 elements");
+            }
+            TensorOp::Vector(VectorOp::new(len, precision, vector_kind_from_code(c.u8()?)?))
+        }
+        other => bail!("unknown binary op kind {other}"),
+    };
+    let exec = match c.u8()? {
+        EXEC_SIMULATE => ExecKind::Simulate,
+        EXEC_FUNCTIONAL => {
+            let alen = c.u32()? as usize;
+            let artifact = std::str::from_utf8(c.bytes(alen)?)
+                .map_err(|e| anyhow!("artifact name is not UTF-8: {e}"))?
+                .to_string();
+            let n_inputs = c.u32()?;
+            // no preallocation from the claimed count: a hostile header
+            // cannot make the server reserve more than it sent
+            let mut inputs = Vec::new();
+            for _ in 0..n_inputs {
+                inputs.push(decode_tensor_bin(&mut c)?);
+            }
+            ExecKind::Functional { artifact, inputs }
+        }
+        other => bail!("unknown binary exec kind {other}"),
+    };
+    c.finish()?;
+    Ok(Request { id, op, exec })
+}
+
+/// Encode one [`Response`] as a v2 `ResponseBin` body: the metadata
+/// (id, shard, schedule, sim, error, latency) as one small JSON blob,
+/// the output tensors as raw binary sections.
+pub fn encode_response_bin(resp: &Response) -> Vec<u8> {
+    let meta = obj(response_meta_fields(resp)).render();
+    let tensor_bytes: usize = match &resp.outputs {
+        Some(outs) => outs.iter().map(tensor_bin_len).sum(),
+        None => 0,
+    };
+    let mut out = Vec::with_capacity(4 + meta.len() + 5 + tensor_bytes);
+    put_u32(&mut out, meta.len() as u32);
+    out.extend_from_slice(meta.as_bytes());
+    match &resp.outputs {
+        None => out.push(0),
+        Some(outs) => {
+            out.push(1);
+            put_u32(&mut out, outs.len() as u32);
+            for t in outs {
+                encode_tensor_bin(t, &mut out);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a v2 `ResponseBin` body (metadata JSON + binary outputs).
+pub fn decode_response_bin(bytes: &[u8]) -> Result<Response> {
+    let mut c = Cur::new(bytes);
+    let meta_len = c.u32()? as usize;
+    let meta_text = std::str::from_utf8(c.bytes(meta_len)?)
+        .map_err(|e| anyhow!("response metadata is not UTF-8: {e}"))?;
+    let meta = crate::util::json::parse(meta_text)
+        .map_err(|e| anyhow!("response metadata is not JSON: {e}"))?;
+    let mut resp = decode_response(&meta)?;
+    resp.outputs = match c.u8()? {
+        0 => None,
+        1 => {
+            let n = c.u32()?;
+            let mut outs = Vec::new();
+            for _ in 0..n {
+                outs.push(decode_tensor_bin(&mut c)?);
+            }
+            Some(outs)
+        }
+        other => bail!("bad has_outputs tag {other}"),
+    };
+    c.finish()?;
+    Ok(resp)
 }
 
 // ---------------------------------------------------------------------
@@ -666,15 +1112,15 @@ fn encode_shard_telemetry(t: &ShardTelemetry) -> Json {
 
 fn decode_shard_telemetry(j: &Json) -> Result<ShardTelemetry> {
     Ok(ShardTelemetry {
-        shard: get_u64(j, "shard")? as usize,
-        lanes: get_u64(j, "lanes")? as u32,
+        shard: get_usize(j, "shard")?,
+        lanes: get_u32(j, "lanes")?,
         config_fingerprint: get_u64(j, "config_fingerprint")?,
         routed: get_u64(j, "routed")?,
         queued: get_u64(j, "queued")?,
         lane_usage: LaneUsage {
-            total: get_u64(j, "lanes_total")? as u32,
-            free: get_u64(j, "lanes_free")? as u32,
-            live_partitions: get_u64(j, "live_partitions")? as usize,
+            total: get_u32(j, "lanes_total")?,
+            free: get_u32(j, "lanes_free")?,
+            live_partitions: get_usize(j, "live_partitions")?,
         },
         snapshot: decode_snapshot(
             j.get("snapshot").ok_or_else(|| anyhow!("telemetry without snapshot"))?,
@@ -738,15 +1184,25 @@ pub fn decode_summary(j: &Json) -> Result<ServeSummary> {
 // ---------------------------------------------------------------------
 // Small body builders shared by server and client.
 
-/// `Hello` body a client opens with.
+/// `Hello` body a client opens with, announcing the newest protocol it
+/// speaks. The server answers with `min(client, server)` — see
+/// [`negotiate`].
 pub fn client_hello() -> Json {
-    obj(vec![("proto", ju64(PROTO_VERSION)), ("client", Json::Str("gta".into()))])
+    client_hello_v(PROTO_VERSION)
 }
 
-/// `Hello` body the server answers with.
-pub fn server_hello(shards: usize, policy: &str) -> Json {
+/// [`client_hello`] pinned to an explicit maximum version (a v1-forced
+/// client sends `client_hello_v(1)` and gets exactly the PR 5 wire
+/// behavior back).
+pub fn client_hello_v(max_proto: u64) -> Json {
+    obj(vec![("proto", ju64(max_proto)), ("client", Json::Str("gta".into()))])
+}
+
+/// `Hello` body the server answers with; `proto` is the negotiated
+/// version the connection will speak.
+pub fn server_hello(proto: u64, shards: usize, policy: &str) -> Json {
     obj(vec![
-        ("proto", ju64(PROTO_VERSION)),
+        ("proto", ju64(proto)),
         ("shards", Json::Num(shards as f64)),
         ("policy", Json::Str(policy.into())),
     ])
@@ -768,9 +1224,10 @@ pub fn busy_body(shard: Option<usize>) -> Json {
     )])
 }
 
-/// Shard carried by a `Busy` body.
+/// Shard carried by a `Busy` body (out-of-range values read as absent,
+/// never wrapped).
 pub fn busy_shard(body: &Json) -> Option<usize> {
-    get_u64(body, "shard").ok().map(|s| s as usize)
+    get_u64(body, "shard").ok().and_then(|s| usize::try_from(s).ok())
 }
 
 /// `Error` frame body.
@@ -953,5 +1410,175 @@ mod tests {
         // the re-aggregated rollup matches the original aggregate
         assert_eq!(a.aggregate.requests, b.aggregate.requests);
         assert_eq!(a.aggregate.sim_cycles, b.aggregate.sim_cycles);
+    }
+
+    #[test]
+    fn negotiation_settles_on_the_lower_version_and_refuses_below_min() {
+        assert_eq!(negotiate(1, PROTO_VERSION), Some(1)); // v1 client, v2 server
+        assert_eq!(negotiate(PROTO_VERSION, PROTO_VERSION), Some(PROTO_VERSION));
+        assert_eq!(negotiate(99, PROTO_VERSION), Some(PROTO_VERSION)); // future client
+        assert_eq!(negotiate(PROTO_VERSION, 1), Some(1)); // v1-capped server
+        assert_eq!(negotiate(0, PROTO_VERSION), None); // pre-protocol peer
+    }
+
+    #[test]
+    fn binary_frames_round_trip_verbatim() {
+        for (ty, id, bin) in [
+            (FrameType::SubmitBin, 7u64, vec![1u8, 2, 3, 0, 255]),
+            (FrameType::ResponseBin, u64::MAX, Vec::new()),
+        ] {
+            let f = Frame::binary(ty, id, bin);
+            assert_eq!(round_trip(&f), f);
+        }
+    }
+
+    #[test]
+    fn binary_request_round_trips_and_matches_the_json_decode() {
+        let req = gemm_tile_request(42, "mpra_gemm_i8_64", 17);
+        let back = decode_request_bin(req.id, &encode_request_bin(&req)).unwrap();
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.op, req.op);
+        match (&back.exec, &req.exec) {
+            (
+                ExecKind::Functional { artifact: a1, inputs: i1 },
+                ExecKind::Functional { artifact: a2, inputs: i2 },
+            ) => {
+                assert_eq!(a1, a2);
+                assert_eq!(i1, i2);
+            }
+            _ => panic!("exec kind diverged"),
+        }
+        // a simulate-only request (no tensors) round-trips too
+        let sim_only = Request {
+            id: 9,
+            op: TensorOp::Vector(VectorOp::new(1024, Precision::Fp32, VectorKind::Reduce)),
+            exec: ExecKind::Simulate,
+        };
+        let back = decode_request_bin(9, &encode_request_bin(&sim_only)).unwrap();
+        assert_eq!(back.op, sim_only.op);
+        assert!(matches!(back.exec, ExecKind::Simulate));
+    }
+
+    #[test]
+    fn binary_response_round_trips_with_exact_tensor_bits() {
+        let sim = SimReport {
+            cycles: (1 << 60) + 3,
+            freq_mhz: 1000,
+            sram_bytes: 12345,
+            dram_bytes: 678,
+            macs: 262144,
+            utilization: 0.875,
+            energy_pj: 1.5e9,
+        };
+        // a NaN with a non-canonical payload: v1's JSON path flattens
+        // this to null, the v2 binary path must carry the exact bits
+        let odd_nan = f32::from_bits(0x7fc0_1234);
+        let resp = Response {
+            id: 42,
+            shard: 1,
+            schedule: None,
+            sim,
+            outputs: Some(vec![
+                HostTensor::I32(vec![i32::MIN, -5, 0, 7, i32::MAX]),
+                HostTensor::I64(vec![i64::MIN, -1, i64::MAX]),
+                HostTensor::F32(vec![0.1, -3.5e7, odd_nan, f32::NEG_INFINITY, -0.0]),
+            ]),
+            error: Some("partly cloudy".into()),
+            latency: Duration::from_micros(321),
+        };
+        let back = decode_response_bin(&encode_response_bin(&resp)).unwrap();
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.shard, resp.shard);
+        assert_eq!(back.sim, resp.sim);
+        assert_eq!(back.error, resp.error);
+        assert_eq!(back.latency, resp.latency);
+        let outs = back.outputs.unwrap();
+        assert_eq!(outs[0], HostTensor::I32(vec![i32::MIN, -5, 0, 7, i32::MAX]));
+        assert_eq!(outs[1], HostTensor::I64(vec![i64::MIN, -1, i64::MAX]));
+        let HostTensor::F32(f) = &outs[2] else { panic!("dtype diverged") };
+        assert_eq!(f[2].to_bits(), odd_nan.to_bits(), "NaN payload bits preserved");
+        assert_eq!(f[4].to_bits(), (-0.0f32).to_bits(), "signed zero preserved");
+
+        // outputs: None survives
+        let bare = Response { outputs: None, ..resp };
+        let back = decode_response_bin(&encode_response_bin(&bare)).unwrap();
+        assert!(back.outputs.is_none());
+    }
+
+    #[test]
+    fn binary_decoders_reject_hostile_bodies_cleanly() {
+        let req = gemm_tile_request(3, "mpra_gemm_i8_64", 5);
+        let good = encode_request_bin(&req);
+        // every strict prefix is an error, never a panic
+        for cut in 0..good.len() {
+            assert!(decode_request_bin(3, &good[..cut]).is_err(), "prefix of {cut} bytes");
+        }
+        // trailing bytes are malformed
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(decode_request_bin(3, &padded).is_err());
+        // an element count far beyond the body must error before
+        // allocating, not wrap or OOM
+        let mut huge = Vec::new();
+        huge.push(OP_VECTOR);
+        huge.push(precision_code(Precision::Fp32));
+        put_u64(&mut huge, 8);
+        huge.push(vector_kind_code(VectorKind::Map));
+        huge.push(EXEC_FUNCTIONAL);
+        put_u32(&mut huge, 0); // empty artifact name
+        put_u32(&mut huge, 1); // one tensor...
+        huge.push(DT_F32);
+        put_u64(&mut huge, u64::MAX); // ...claiming 2^64-1 elements
+        assert!(decode_request_bin(1, &huge).is_err());
+        // unknown dtype / op / exec tags
+        for (pos, bad) in [(0usize, 99u8)] {
+            let mut b = good.clone();
+            b[pos] = bad;
+            assert!(decode_request_bin(3, &b).is_err());
+        }
+        let resp_good = {
+            let resp = Response {
+                id: 1,
+                shard: 0,
+                schedule: None,
+                sim: SimReport::default(),
+                outputs: Some(vec![HostTensor::I32(vec![1, 2, 3])]),
+                error: None,
+                latency: Duration::from_micros(1),
+            };
+            encode_response_bin(&resp)
+        };
+        for cut in 0..resp_good.len() {
+            assert!(decode_response_bin(&resp_good[..cut]).is_err(), "prefix of {cut} bytes");
+        }
+    }
+
+    #[test]
+    fn out_of_range_integers_are_rejected_not_wrapped() {
+        // a u64 that would wrap to a small u32 if cast with `as`
+        let big = (1u64 << 32) + 4;
+        let sim = obj(vec![
+            ("cycles", ju64(1)),
+            ("freq_mhz", ju64(big)),
+            ("sram_bytes", ju64(0)),
+            ("dram_bytes", ju64(0)),
+            ("macs", ju64(0)),
+            ("utilization", Json::Num(0.0)),
+            ("energy_pj", Json::Num(0.0)),
+        ]);
+        let err = decode_sim(&sim).unwrap_err().to_string();
+        assert!(err.contains("freq_mhz"), "names the offending field: {err}");
+
+        // lane_rows = 2^32 + 4 used to wrap to 4 under `as u32` and
+        // smuggle a tiny arrangement into the Rack; now it is refused
+        let sched = obj(vec![
+            ("dataflow", Json::Str("OS".into())),
+            ("lane_rows", Json::Str(format!("{big}"))),
+            ("lane_cols", Json::Num(4.0)),
+            ("k_segments", ju64(2)),
+            ("tile_dir", Json::Str("vertical".into())),
+        ]);
+        let err = decode_schedule(&sched).unwrap_err().to_string();
+        assert!(err.contains("lane_rows"), "names the offending field: {err}");
     }
 }

@@ -26,10 +26,10 @@
 //! travels back in the `Closed` frame. See `docs/transport.md`.
 
 use super::proto::{
-    busy_body, drained_body, error_body, error_message, read_frame, server_hello, write_frame,
-    DecodeError, Frame, FrameType, PROTO_VERSION,
+    busy_body, drained_body, error_body, error_message, negotiate, read_frame, server_hello,
+    write_frame, DecodeError, Frame, FrameType, MIN_PROTO_VERSION, PROTO_VERSION,
 };
-use crate::coordinator::{AdmitError, Rack, RackSession, ServeOptions, SubmitError};
+use crate::coordinator::{AdmitError, Rack, RackSession, Response, ServeOptions, SubmitError};
 use crate::util::json::Json;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -45,9 +45,37 @@ const PUMP_TICK: Duration = Duration::from_millis(20);
 /// the pump (Responses) interleave whole frames, never bytes.
 type SharedWriter = Arc<Mutex<BufWriter<TcpStream>>>;
 
+/// Lock the shared writer, treating poison as a dead connection. A
+/// poisoned mutex means the other writer thread panicked mid-frame, so
+/// framing on this socket can no longer be trusted — but that is a
+/// *disconnect* for this connection, never a cascading panic: the
+/// caller sees an `Err`, stops writing, and the session still drains.
+fn lock_writer(w: &SharedWriter) -> std::io::Result<std::sync::MutexGuard<'_, BufWriter<TcpStream>>> {
+    w.lock().map_err(|_| {
+        std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "frame writer poisoned by a peer thread panic",
+        )
+    })
+}
+
 fn send_frame(w: &SharedWriter, ty: FrameType, id: u64, body: Json) -> std::io::Result<()> {
-    let mut guard = w.lock().unwrap();
+    let mut guard = lock_writer(w)?;
     write_frame(&mut *guard, &Frame::new(ty, id, body))?;
+    guard.flush()
+}
+
+/// Send one completed [`Response`] in the connection's negotiated
+/// encoding: a binary `ResponseBin` frame on v2, the v1 JSON
+/// `Response` frame otherwise.
+fn send_response(w: &SharedWriter, proto: u64, resp: &Response) -> std::io::Result<()> {
+    let frame = if proto >= 2 {
+        Frame::binary(FrameType::ResponseBin, resp.id, super::proto::encode_response_bin(resp))
+    } else {
+        Frame::new(FrameType::Response, resp.id, super::proto::encode_response(resp))
+    };
+    let mut guard = lock_writer(w)?;
+    write_frame(&mut *guard, &frame)?;
     guard.flush()
 }
 
@@ -62,8 +90,26 @@ pub struct NetServer {
 impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
     /// start accepting connections, each served by its own session over
-    /// `rack` opened with `opts`.
+    /// `rack` opened with `opts`. Serves every protocol version up to
+    /// [`PROTO_VERSION`].
     pub fn spawn(rack: Arc<Rack>, addr: &str, opts: ServeOptions) -> anyhow::Result<NetServer> {
+        NetServer::spawn_proto(rack, addr, opts, PROTO_VERSION)
+    }
+
+    /// [`spawn`](Self::spawn) with an explicit cap on the protocol
+    /// version this server will negotiate — `spawn_proto(.., 1)` is a
+    /// pure-v1 server (the PR 5 wire behavior), useful for replaying
+    /// compatibility baselines.
+    pub fn spawn_proto(
+        rack: Arc<Rack>,
+        addr: &str,
+        opts: ServeOptions,
+        max_proto: u64,
+    ) -> anyhow::Result<NetServer> {
+        anyhow::ensure!(
+            (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&max_proto),
+            "this build speaks protocol versions {MIN_PROTO_VERSION}..={PROTO_VERSION}, not {max_proto}"
+        );
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         // non-blocking accept so shutdown() can stop the loop without a
@@ -81,14 +127,41 @@ impl NetServer {
                         Ok((stream, _peer)) => {
                             conn_id += 1;
                             let rack = Arc::clone(&rack);
-                            let h = std::thread::Builder::new()
+                            // pre-clone so a failed spawn can still
+                            // tell the client before dropping it
+                            let refusal = stream.try_clone().ok();
+                            let spawned = std::thread::Builder::new()
                                 .name(format!("gta-net-conn-{conn_id}"))
                                 .spawn(move || {
-                                    let _ = handle_connection(stream, rack, opts);
-                                })
-                                .expect("spawning connection thread");
-                            conns.push(h);
-                            conns.retain(|h| !h.is_finished());
+                                    let _ = handle_connection(stream, rack, opts, max_proto);
+                                });
+                            match spawned {
+                                Ok(h) => {
+                                    conns.push(h);
+                                    conns.retain(|h| !h.is_finished());
+                                }
+                                Err(e) => {
+                                    // OS out of threads: fail this one
+                                    // connection, keep accepting
+                                    eprintln!(
+                                        "gta-net: connection thread spawn failed \
+                                         (refusing connection {conn_id}): {e}"
+                                    );
+                                    if let Some(s) = refusal {
+                                        let mut w = BufWriter::new(s);
+                                        let body = error_body(
+                                            "server cannot take this connection right now \
+                                             (thread spawn failed); retry later",
+                                            true,
+                                        );
+                                        let _ = write_frame(
+                                            &mut w,
+                                            &Frame::new(FrameType::Error, 0, body),
+                                        );
+                                        let _ = w.flush();
+                                    }
+                                }
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(2));
@@ -147,23 +220,40 @@ enum Exit {
 }
 
 /// Serve one connection to completion. All exits drain the session.
-fn handle_connection(stream: TcpStream, rack: Arc<Rack>, opts: ServeOptions) -> anyhow::Result<()> {
+fn handle_connection(
+    stream: TcpStream,
+    rack: Arc<Rack>,
+    opts: ServeOptions,
+    max_proto: u64,
+) -> anyhow::Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let writer: SharedWriter = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
 
-    // ---- version negotiation: Hello must be the first frame
-    match read_frame(&mut reader) {
+    // ---- version negotiation: Hello must be the first frame. The
+    // client announces the newest version it speaks; the connection
+    // runs at min(client, server), refusing only peers below
+    // MIN_PROTO_VERSION.
+    let proto = match read_frame(&mut reader) {
         Ok(f) if f.ty == FrameType::Hello => {
-            if super::proto::hello_proto(&f.body) != Some(PROTO_VERSION) {
-                let _ = send_frame(
-                    &writer,
-                    FrameType::Error,
-                    0,
-                    error_body(&format!("unsupported protocol version (server speaks {PROTO_VERSION})"), true),
-                );
-                let _ = stream.shutdown(Shutdown::Both);
-                return Ok(());
+            match super::proto::hello_proto(&f.body).and_then(|peer| negotiate(peer, max_proto)) {
+                Some(v) => v,
+                None => {
+                    let _ = send_frame(
+                        &writer,
+                        FrameType::Error,
+                        0,
+                        error_body(
+                            &format!(
+                                "unsupported protocol version \
+                                 (server speaks {MIN_PROTO_VERSION}..={max_proto})"
+                            ),
+                            true,
+                        ),
+                    );
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return Ok(());
+                }
             }
         }
         Ok(f) => {
@@ -181,38 +271,57 @@ fn handle_connection(stream: TcpStream, rack: Arc<Rack>, opts: ServeOptions) -> 
             let _ = stream.shutdown(Shutdown::Both);
             return Ok(());
         }
-    }
-    send_frame(&writer, FrameType::Hello, 0, server_hello(rack.len(), rack.policy_name()))?;
+    };
+    send_frame(&writer, FrameType::Hello, 0, server_hello(proto, rack.len(), rack.policy_name()))?;
 
     let session: Arc<RackSession> = Arc::new(rack.open_session(opts));
 
     // ---- egress pump: completions -> Response frames, out of order
-    let mut pump = Some({
+    let pump_spawn = {
         let session = Arc::clone(&session);
         let writer = Arc::clone(&writer);
-        std::thread::Builder::new()
-            .name("gta-net-pump".into())
-            .spawn(move || {
-                loop {
-                    match session.recv_timeout(PUMP_TICK) {
-                        Some(resp) => {
-                            let body = super::proto::encode_response(&resp);
-                            if send_frame(&writer, FrameType::Response, resp.id, body).is_err() {
-                                // peer gone: stop writing; the reader
-                                // will notice and drain
-                                break;
-                            }
+        std::thread::Builder::new().name("gta-net-pump".into()).spawn(move || {
+            loop {
+                match session.recv_timeout(PUMP_TICK) {
+                    Some(resp) => {
+                        if send_response(&writer, proto, &resp).is_err() {
+                            // peer gone: stop writing; the reader
+                            // will notice and drain
+                            break;
                         }
-                        None => {
-                            if session.is_closed() {
-                                break;
-                            }
+                    }
+                    None => {
+                        if session.is_closed() {
+                            break;
                         }
                     }
                 }
-            })
-            .expect("spawning egress pump thread")
-    });
+            }
+        })
+    };
+    let mut pump = match pump_spawn {
+        Ok(h) => Some(h),
+        Err(e) => {
+            // OS out of threads: fail only this connection — tell the
+            // client, drain the (empty) session so accounting stays
+            // consistent, and leave the server accepting.
+            eprintln!("gta-net: egress pump spawn failed (closing connection): {e}");
+            let _ = send_frame(
+                &writer,
+                FrameType::Error,
+                0,
+                error_body(
+                    "server cannot serve this connection right now \
+                     (thread spawn failed); retry later",
+                    true,
+                ),
+            );
+            let _ = session.drain();
+            let _ = session.close();
+            let _ = stream.shutdown(Shutdown::Both);
+            return Ok(());
+        }
+    };
 
     // Drain the session and hand every remaining response to the wire
     // (unless the socket already failed). Joins the pump first so the
@@ -224,8 +333,7 @@ fn handle_connection(stream: TcpStream, rack: Arc<Rack>, opts: ServeOptions) -> 
         }
         let mut returned = 0u64;
         for resp in &rest {
-            let body = super::proto::encode_response(resp);
-            if send_frame(&writer, FrameType::Response, resp.id, body).is_err() {
+            if send_response(&writer, proto, resp).is_err() {
                 break;
             }
             returned += 1;
@@ -237,11 +345,23 @@ fn handle_connection(stream: TcpStream, rack: Arc<Rack>, opts: ServeOptions) -> 
     let exit = loop {
         match read_frame(&mut reader) {
             Ok(f) => match f.ty {
-                FrameType::Submit => match super::proto::decode_request(&f.body) {
-                    Ok(mut req) => {
-                        // the header id is authoritative
-                        req.id = f.id;
-                        match session.try_submit(req) {
+                FrameType::Submit | FrameType::SubmitBin => {
+                    if f.ty == FrameType::SubmitBin && proto < 2 {
+                        break Exit::Fatal(format!(
+                            "binary Submit on a v{proto} connection (negotiate v2 first)"
+                        ));
+                    }
+                    let decoded = if f.ty == FrameType::SubmitBin {
+                        super::proto::decode_request_bin(f.id, &f.bin)
+                    } else {
+                        super::proto::decode_request(&f.body).map(|mut req| {
+                            // the header id is authoritative
+                            req.id = f.id;
+                            req
+                        })
+                    };
+                    match decoded {
+                        Ok(req) => match session.try_submit(req) {
                             Ok(_ticket) => {}
                             Err(SubmitError { id, shard, error: AdmitError::Busy }) => {
                                 if send_frame(&writer, FrameType::Busy, id, busy_body(shard))
@@ -256,10 +376,10 @@ fn handle_connection(stream: TcpStream, rack: Arc<Rack>, opts: ServeOptions) -> 
                                     break Exit::Disconnect;
                                 }
                             }
-                        }
+                        },
+                        Err(e) => break Exit::Fatal(format!("undecodable request body: {e:#}")),
                     }
-                    Err(e) => break Exit::Fatal(format!("undecodable request body: {e:#}")),
-                },
+                }
                 FrameType::Drained => {
                     // drain request: finish everything, flush it, ack
                     let returned = drain_to_wire(&mut pump);

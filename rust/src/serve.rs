@@ -610,7 +610,14 @@ pub fn listen_rack(
 /// metrics/telemetry are the server session's (cumulative for the
 /// server's rack, like repeated streams through one coordinator).
 pub fn run_client_mixed(addr: &str, n: u64) -> Result<ServeSummary> {
-    let mut client = GtaClient::connect(addr)?;
+    run_client_mixed_proto(addr, n, crate::net::PROTO_VERSION)
+}
+
+/// [`run_client_mixed`] with an explicit protocol-version cap for the
+/// client's `Hello` (`gta client --proto 1` replays the PR 5 v1 wire
+/// behavior against any server).
+pub fn run_client_mixed_proto(addr: &str, n: u64, max_proto: u64) -> Result<ServeSummary> {
+    let mut client = GtaClient::connect_proto(addr, max_proto)?;
     let (requests, expected) = mixed_stream(n);
     let functional_ids = functional_ids(&requests);
     let t0 = Instant::now();
@@ -639,7 +646,19 @@ pub fn run_client_mixed(addr: &str, n: u64) -> Result<ServeSummary> {
 /// in-process session — so one seed is bit-comparable in-process vs.
 /// over the wire.
 pub fn run_open_loop_client(addr: &str, n: u64, rate_rps: f64, seed: u64) -> Result<ServeSummary> {
-    let client = std::cell::RefCell::new(GtaClient::connect(addr)?);
+    run_open_loop_client_proto(addr, n, rate_rps, seed, crate::net::PROTO_VERSION)
+}
+
+/// [`run_open_loop_client`] with an explicit protocol-version cap for
+/// the client's `Hello`.
+pub fn run_open_loop_client_proto(
+    addr: &str,
+    n: u64,
+    rate_rps: f64,
+    seed: u64,
+    max_proto: u64,
+) -> Result<ServeSummary> {
+    let client = std::cell::RefCell::new(GtaClient::connect_proto(addr, max_proto)?);
     let (requests, expected) = mixed_stream(n);
     let functional_ids = functional_ids(&requests);
     let t0 = Instant::now();

@@ -295,14 +295,15 @@ fn malformed_and_oversized_frames_get_an_error_frame_and_a_close() {
 }
 
 #[test]
-fn version_mismatch_is_refused_cleanly() {
+fn version_below_minimum_is_refused_cleanly() {
     let rack = hetero_rack("rr");
     let mut server =
         NetServer::spawn(rack, "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
     let mut stream = TcpStream::connect(&server.addr().to_string()).unwrap();
     let mut buf = Vec::new();
+    // a pre-protocol peer: below MIN_PROTO_VERSION, nothing to negotiate
     let body = Json::Obj(
-        [("proto".to_string(), Json::Num(99.0))].into_iter().collect(),
+        [("proto".to_string(), Json::Num(0.0))].into_iter().collect(),
     );
     proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, body)).unwrap();
     stream.write_all(&buf).unwrap();
@@ -314,4 +315,105 @@ fn version_mismatch_is_refused_cleanly() {
         proto::error_message(&err.body)
     );
     server.shutdown();
+}
+
+#[test]
+fn future_version_peer_negotiates_down_to_the_servers_version() {
+    let rack = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(rack, "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
+    let mut stream = TcpStream::connect(&server.addr().to_string()).unwrap();
+    let mut buf = Vec::new();
+    // a client from the future announces v99; the server serves it at
+    // its own maximum instead of refusing
+    let body = Json::Obj(
+        [("proto".to_string(), Json::Num(99.0))].into_iter().collect(),
+    );
+    proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, body)).unwrap();
+    stream.write_all(&buf).unwrap();
+    let hello = read_raw_frame(&mut stream);
+    assert_eq!(hello.ty, FrameType::Hello);
+    assert_eq!(proto::hello_proto(&hello.body), Some(proto::PROTO_VERSION));
+    server.shutdown();
+}
+
+#[test]
+fn binary_submit_on_a_v1_connection_is_a_protocol_error() {
+    let rack = hetero_rack("rr");
+    let mut server =
+        NetServer::spawn(rack, "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
+    let mut stream = TcpStream::connect(&server.addr().to_string()).unwrap();
+    let mut buf = Vec::new();
+    proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, proto::client_hello_v(1)))
+        .unwrap();
+    proto::write_frame(&mut buf, &Frame::binary(FrameType::SubmitBin, 1, vec![0, 1, 2]))
+        .unwrap();
+    stream.write_all(&buf).unwrap();
+    let hello = read_raw_frame(&mut stream);
+    assert_eq!(hello.ty, FrameType::Hello);
+    assert_eq!(proto::hello_proto(&hello.body), Some(1), "v1 negotiated");
+    let err = read_raw_frame(&mut stream);
+    assert_eq!(err.ty, FrameType::Error, "binary frames need a v2 connection");
+    server.shutdown();
+}
+
+#[test]
+fn v1_client_against_v2_server_replays_bit_identically() {
+    let n = 32u64;
+    // the PR 5 baseline: a v1-capped server serving a default client —
+    // both sides settle on v1, the original JSON wire path
+    let v1_rack = hetero_rack("affinity");
+    let mut v1_server = NetServer::spawn_proto(
+        Arc::clone(&v1_rack),
+        "127.0.0.1:0",
+        ServeOptions::with_workers(4),
+        1,
+    )
+    .unwrap();
+    let mut client = GtaClient::connect(&v1_server.addr().to_string()).unwrap();
+    assert_eq!(client.server().proto, 1, "v1-capped server negotiates down");
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    let baseline = client.drain().unwrap();
+    client.close().unwrap();
+    v1_server.shutdown();
+
+    // a v2 server serving a v1-forced client: the same wire behavior,
+    // response for response (shape-affinity routing is a pure function
+    // of the request, so fresh racks place work identically)
+    let v2_rack = hetero_rack("affinity");
+    let mut v2_server =
+        NetServer::spawn(Arc::clone(&v2_rack), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+    let addr = v2_server.addr().to_string();
+    let mut v1_client = GtaClient::connect_proto(&addr, 1).unwrap();
+    assert_eq!(v1_client.server().proto, 1, "v1 client served by the v2 server");
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        v1_client.submit(req).unwrap();
+    }
+    let v1_replay = v1_client.drain().unwrap();
+    v1_client.close().unwrap();
+    assert_eq!(baseline.len(), v1_replay.len());
+    for (a, b) in baseline.iter().zip(&v1_replay) {
+        assert_same_response(a, b);
+    }
+
+    // and a v2 client against the same server: identical responses over
+    // the binary tensor frames
+    let mut v2_client = GtaClient::connect(&addr).unwrap();
+    assert_eq!(v2_client.server().proto, proto::PROTO_VERSION);
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        v2_client.submit(req).unwrap();
+    }
+    let v2_replay = v2_client.drain().unwrap();
+    v2_client.close().unwrap();
+    assert_eq!(baseline.len(), v2_replay.len());
+    for (a, b) in baseline.iter().zip(&v2_replay) {
+        assert_same_response(a, b);
+    }
+    v2_server.shutdown();
 }

@@ -311,3 +311,154 @@ fn prop_request_body_decoder_never_panics_on_arbitrary_json() {
         let _ = proto::decode_summary(&random_json(rng, 2));
     });
 }
+
+// ---------------------------------------------------------------------
+// v2 binary tensor frames: round-trips and hostile-byte hardening. The
+// same contract as the JSON bodies — clean `Err`, never a panic, and
+// never a silently wrong tensor.
+
+use gta::coordinator::{ExecKind, Request, Response};
+use gta::ops::{TensorOp, VectorKind, VectorOp};
+use gta::runtime::HostTensor;
+use gta::sim::SimReport;
+use std::time::Duration;
+
+fn random_tensor(rng: &mut Rng) -> HostTensor {
+    let len = rng.range_u64(0, 64) as usize;
+    match rng.range_u64(0, 2) {
+        0 => HostTensor::I32((0..len).map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32).collect()),
+        1 => HostTensor::I64((0..len).map(|_| rng.next_u64() as i64).collect()),
+        // finite f32s: the equality assert below uses PartialEq (NaN
+        // payload preservation has its own bit-level unit test)
+        _ => HostTensor::F32((0..len).map(|_| (rng.f64() * 2e6 - 1e6) as f32).collect()),
+    }
+}
+
+fn random_request(rng: &mut Rng) -> Request {
+    let precision = *rng.choose(&Precision::ALL);
+    let op = if rng.range_u64(0, 1) == 0 {
+        TensorOp::PGemm(PGemm::new(
+            rng.range_u64(1, 512),
+            rng.range_u64(1, 512),
+            rng.range_u64(1, 512),
+            precision,
+        ))
+    } else {
+        TensorOp::Vector(VectorOp::new(
+            rng.range_u64(1, 4096),
+            precision,
+            *rng.choose(&[VectorKind::Map, VectorKind::Axpy, VectorKind::Reduce, VectorKind::Activation]),
+        ))
+    };
+    let exec = if rng.range_u64(0, 1) == 0 {
+        ExecKind::Simulate
+    } else {
+        ExecKind::Functional {
+            artifact: random_string(rng),
+            inputs: (0..rng.range_u64(0, 3)).map(|_| random_tensor(rng)).collect(),
+        }
+    };
+    Request { id: rng.next_u64(), op, exec }
+}
+
+#[test]
+fn prop_binary_request_and_response_round_trip() {
+    property("v2 binary decode ∘ encode == id", 200, |rng: &mut Rng| {
+        let req = random_request(rng);
+        let back = proto::decode_request_bin(req.id, &proto::encode_request_bin(&req))
+            .expect("own binary encoding must decode");
+        assert_eq!(back.id, req.id);
+        assert_eq!(back.op, req.op);
+        match (&back.exec, &req.exec) {
+            (ExecKind::Simulate, ExecKind::Simulate) => {}
+            (
+                ExecKind::Functional { artifact: a1, inputs: i1 },
+                ExecKind::Functional { artifact: a2, inputs: i2 },
+            ) => {
+                assert_eq!(a1, a2);
+                assert_eq!(i1, i2);
+            }
+            _ => panic!("exec kind diverged"),
+        }
+
+        let resp = Response {
+            id: rng.next_u64(),
+            shard: rng.range_u64(0, 7) as usize,
+            schedule: None,
+            sim: SimReport { cycles: rng.next_u64(), freq_mhz: 1000, ..SimReport::default() },
+            outputs: if rng.range_u64(0, 1) == 0 {
+                None
+            } else {
+                Some((0..rng.range_u64(0, 3)).map(|_| random_tensor(rng)).collect())
+            },
+            error: if rng.range_u64(0, 1) == 0 { None } else { Some(random_string(rng)) },
+            latency: Duration::from_micros(rng.range_u64(0, 1 << 40)),
+        };
+        let back = proto::decode_response_bin(&proto::encode_response_bin(&resp))
+            .expect("own binary encoding must decode");
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.shard, resp.shard);
+        assert_eq!(back.sim, resp.sim);
+        assert_eq!(back.outputs, resp.outputs);
+        assert_eq!(back.error, resp.error);
+        assert_eq!(back.latency, resp.latency);
+    });
+}
+
+#[test]
+fn prop_binary_bodies_survive_truncation_and_bitflips() {
+    property("hostile v2 bytes -> Err, not panic", 200, |rng: &mut Rng| {
+        let req = random_request(rng);
+        let body = proto::encode_request_bin(&req);
+
+        // every strict prefix is an error (the element counts and
+        // lengths inside the body no longer match the bytes)
+        let cut = (rng.next_u64() as usize) % body.len();
+        assert!(
+            proto::decode_request_bin(req.id, &body[..cut]).is_err(),
+            "prefix of {cut}/{} bytes decoded",
+            body.len()
+        );
+
+        // a flipped byte: any outcome but a panic — and if it still
+        // decodes, the declared lengths all matched the bytes
+        let mut flipped = body.clone();
+        let idx = (rng.next_u64() as usize) % flipped.len();
+        flipped[idx] ^= 1u8 << (rng.range_u64(0, 7) as u32);
+        let _ = proto::decode_request_bin(req.id, &flipped);
+
+        // trailing garbage is malformed, never silently ignored
+        let mut padded = body.clone();
+        padded.extend_from_slice(&[0u8; 3]);
+        assert!(proto::decode_request_bin(req.id, &padded).is_err());
+
+        // pure garbage into both binary decoders
+        let len = rng.range_u64(0, 96) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| rng.range_u64(0, 255) as u8).collect();
+        let _ = proto::decode_request_bin(0, &garbage);
+        let _ = proto::decode_response_bin(&garbage);
+
+        // an element count that overflows the body (or usize) errors
+        // before any allocation happens
+        let mut huge = Vec::new();
+        huge.push(2u8); // op: vector
+        huge.push(7u8); // precision: fp32
+        huge.extend_from_slice(&8u64.to_le_bytes()); // len
+        huge.push(1u8); // vkind: map
+        huge.push(1u8); // exec: functional
+        huge.extend_from_slice(&0u32.to_le_bytes()); // artifact_len = 0
+        huge.extend_from_slice(&1u32.to_le_bytes()); // n_inputs = 1
+        huge.push(3u8); // dtype: f32
+        huge.extend_from_slice(&rng.range_u64(1 << 33, u64::MAX).to_le_bytes());
+        assert!(proto::decode_request_bin(0, &huge).is_err());
+
+        // binary frames round-trip byte-for-byte through the frame codec
+        let ty = *rng.choose(&[FrameType::SubmitBin, FrameType::ResponseBin]);
+        let frame = Frame::binary(ty, rng.next_u64(), garbage);
+        let buf = encode(&frame);
+        let mut r = &buf[..];
+        let decoded = proto::read_frame(&mut r).expect("binary frame must decode");
+        assert!(r.is_empty());
+        assert_eq!(decoded, frame);
+    });
+}
