@@ -1,32 +1,67 @@
-//! Wire-protocol cost: v1 (JSON tensor bodies) vs v2 (zero-copy binary
-//! tensor frames), then the full loopback-TCP replay under both
-//! protocol versions against the in-process path. What to look for:
+//! Wire-protocol and connection-scaling cost: v1 (JSON tensor bodies)
+//! vs v2 (zero-copy binary tensor frames), the full loopback-TCP
+//! replay under every protocol version and both server architectures
+//! (threaded `NetServer`, event-loop `EventServer`) against the
+//! in-process path, and session-multiplexing scaling. What to look
+//! for:
 //!
 //! * the frame-codec microbench prints encode+decode time and wire
 //!   bytes per dtype — the v2 acceptance targets (large f32 tensors
 //!   ≥10x faster to encode+decode, ≥5x smaller on the wire) are
 //!   asserted, the i32/i64 ratios are informational;
 //! * the replay section serves the SAME seeded open-loop workload
-//!   in-process, over TCP at v1 (forced), and over TCP at v2 — all
-//!   three verify identically (the wire changes the transport, not the
-//!   answers), and the per-request overhead of each protocol is
-//!   printed side by side.
+//!   in-process, over TCP at v1 (forced), at v2, and over the
+//!   event-loop server at v3 — all four verify identically (the wire
+//!   changes the transport, not the answers), and the per-request
+//!   overhead of each path is printed side by side;
+//! * the mux section replays a fixed workload sliced across K logical
+//!   sessions on one event-loop connection (K = 1, 8, 64) — the
+//!   per-session overhead of v3 multiplexing.
 //!
 //! ```bash
 //! cargo bench --bench net_throughput
 //! ```
+//!
+//! Besides the human-readable report, the run writes a
+//! machine-readable **`BENCH_net.json`** to the working directory
+//! (committed as `rust/BENCH_net.json`, the tracked baseline). Schema
+//! (`"schema": "gta.bench.net/1"`):
+//!
+//! ```json
+//! {
+//!   "schema": "gta.bench.net/1",   // bump on layout changes
+//!   "seed": 2024,                  // the open-loop arrival seed
+//!   "provisional": false,          // true = placeholder, numbers not
+//!                                  //   from a real run of this tree
+//!   "codec": [                     // one row per dtype
+//!     {"dtype": "f32", "v1_wire_bytes": 0, "v2_wire_bytes": 0,
+//!      "encdec_speedup": 0.0, "wire_bytes_ratio": 0.0}],
+//!   "replay": [                    // one row per offered rate
+//!     {"rate_rps": 0.0, "in_process_rps": 0.0, "v1_rps": 0.0,
+//!      "v2_rps": 0.0, "event_loop_v3_rps": 0.0}],
+//!   "mux": [                       // one row per session count
+//!     {"sessions": 1, "requests": 0, "throughput_rps": 0.0}]
+//! }
+//! ```
+//!
+//! Counts and byte totals are exact and reproducible (seeded workload,
+//! deterministic codecs); the `*_rps`/`*_speedup` fields are wall-time
+//! measurements and vary with the machine — compare trends, not
+//! digits.
 
 use gta::coordinator::rack::policy_by_name;
 use gta::coordinator::{CoalesceConfig, ExecKind, Request, Response, ServeOptions};
 use gta::net::proto::{self, Frame, FrameType};
-use gta::net::NetServer;
+use gta::net::{EventServer, NetServer};
 use gta::ops::TensorOp;
 use gta::precision::Precision;
 use gta::runtime::HostTensor;
 use gta::serve::{
-    mixed_stream, run_open_loop_client_proto, run_open_loop_stream, shard_configs, soft_rack,
+    mixed_stream, run_client_mux, run_open_loop_client, run_open_loop_client_proto,
+    run_open_loop_stream, shard_configs, soft_rack,
 };
 use gta::sim::SimReport;
+use gta::util::json::Json;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -115,7 +150,7 @@ fn decoded_elems(req: &Request, resp: &Response) -> usize {
     ins + outs
 }
 
-fn codec_comparison(name: &str, t: HostTensor) -> (f64, f64) {
+fn codec_comparison(name: &str, t: HostTensor) -> CodecRow {
     let req = request_for(&t);
     let resp = response_for(&t);
 
@@ -173,7 +208,19 @@ fn codec_comparison(name: &str, t: HostTensor) -> (f64, f64) {
         v2.decode_s * 1e3 / ITERS as f64,
         v2.wire_bytes,
     );
-    (speed, bytes)
+    CodecRow { dtype: name.to_string(), speed, bytes, v1_wire: v1.wire_bytes, v2_wire: v2.wire_bytes }
+}
+
+struct CodecRow {
+    dtype: String,
+    speed: f64,
+    bytes: f64,
+    v1_wire: usize,
+    v2_wire: usize,
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 fn main() {
@@ -184,9 +231,13 @@ fn main() {
     let i32s: Vec<i32> = (0..ELEMS).map(|i| (i as i32).wrapping_mul(-1_640_531_527)).collect();
     let i64s: Vec<i64> =
         (0..ELEMS).map(|i| (i as i64).wrapping_mul(-7_046_029_254_386_353_131)).collect();
-    codec_comparison("i32", HostTensor::I32(i32s));
-    codec_comparison("i64", HostTensor::I64(i64s));
-    let (speed, bytes) = codec_comparison("f32", HostTensor::F32(f32_payload(ELEMS)));
+    let mut codec_rows = vec![
+        codec_comparison("i32", HostTensor::I32(i32s)),
+        codec_comparison("i64", HostTensor::I64(i64s)),
+        codec_comparison("f32", HostTensor::F32(f32_payload(ELEMS))),
+    ];
+    let f32_row = codec_rows.last().expect("f32 row");
+    let (speed, bytes) = (f32_row.speed, f32_row.bytes);
     assert!(
         speed >= 10.0,
         "v2 target: large-tensor encode+decode >=10x faster than v1, got {speed:.1}x"
@@ -200,20 +251,20 @@ fn main() {
     let n = 256u64;
     let workers = 4usize;
     let seed = 2024u64;
+    let mk_rack = || {
+        soft_rack(
+            shard_configs(2, &[]),
+            CoalesceConfig::with_adaptive_window(),
+            policy_by_name("rr").expect("rr is a known policy"),
+        )
+        .expect("soft rack builds offline")
+    };
     println!(
         "open-loop transport comparison: {n} mixed requests, 2-shard soft rack, \
          {workers} workers, seeded Poisson arrivals\n"
     );
+    let mut replay_rows = Vec::new();
     for rate in [2_000.0f64, 20_000.0] {
-        let mk_rack = || {
-            soft_rack(
-                shard_configs(2, &[]),
-                CoalesceConfig::with_adaptive_window(),
-                policy_by_name("rr").expect("rr is a known policy"),
-            )
-            .expect("soft rack builds offline")
-        };
-
         let local_rack = mk_rack();
         let (reqs, expected) = mixed_stream(n);
         let local = run_open_loop_stream(&local_rack, reqs, &expected, workers, rate, seed);
@@ -234,10 +285,20 @@ fn main() {
             wire.push((proto_version, summary));
         }
 
+        // the same workload through the event-loop server at v3
+        let served = mk_rack();
+        let mut ev =
+            EventServer::spawn(Arc::clone(&served), "127.0.0.1:0", ServeOptions::with_workers(workers))
+                .expect("loopback bind");
+        let ev_summary = run_open_loop_client(&ev.addr().to_string(), n, rate, seed)
+            .expect("event-loop replay");
+        ev.shutdown();
+
         for (name, s) in [
             ("in-process".to_string(), &local),
             (format!("loopback v{}", wire[0].0), &wire[0].1),
             (format!("loopback v{}", wire[1].0), &wire[1].1),
+            ("event loop v3".to_string(), &ev_summary),
         ] {
             assert_eq!(s.requests, n, "{name}: one response per request");
             assert_eq!(s.errors, 0, "{name}");
@@ -251,13 +312,75 @@ fn main() {
         let us = |s: &gta::serve::ServeSummary| (s.wall_seconds - local.wall_seconds) * 1e6 / n as f64;
         println!(
             "offered {rate:>8.0} req/s: in-process {:>8.1} req/s  v1 {:>8.1} req/s \
-             ({:>+7.1} us/req)  v2 {:>8.1} req/s ({:>+7.1} us/req)",
+             ({:>+7.1} us/req)  v2 {:>8.1} req/s ({:>+7.1} us/req)  ev-loop v3 {:>8.1} req/s \
+             ({:>+7.1} us/req)",
             local.throughput_rps,
             wire[0].1.throughput_rps,
             us(&wire[0].1),
             wire[1].1.throughput_rps,
             us(&wire[1].1),
+            ev_summary.throughput_rps,
+            us(&ev_summary),
         );
+        replay_rows.push(obj(vec![
+            ("rate_rps", Json::Num(rate)),
+            ("in_process_rps", Json::Num(local.throughput_rps)),
+            ("v1_rps", Json::Num(wire[0].1.throughput_rps)),
+            ("v2_rps", Json::Num(wire[1].1.throughput_rps)),
+            ("event_loop_v3_rps", Json::Num(ev_summary.throughput_rps)),
+        ]));
     }
-    println!("\nnet throughput OK: v1 and v2 wire paths verified against the in-process path");
+
+    // session-multiplexing scaling: the same workload sliced across K
+    // logical sessions on ONE event-loop connection
+    println!("\nsession multiplexing: {n} mixed requests over one connection, K sessions\n");
+    let served = mk_rack();
+    let mut ev =
+        EventServer::spawn(served, "127.0.0.1:0", ServeOptions::with_workers(workers))
+            .expect("loopback bind");
+    let mut mux_rows = Vec::new();
+    for sessions in [1u32, 8, 64] {
+        let s = run_client_mux(&ev.addr().to_string(), n, sessions).expect("mux replay");
+        assert_eq!(s.requests, n, "K={sessions}: one response per request");
+        assert_eq!(s.errors, 0, "K={sessions}");
+        assert_eq!(s.verified_failed, 0, "K={sessions}: slicing changes nothing");
+        println!("  K={sessions:<3} {:>8.1} req/s", s.throughput_rps);
+        mux_rows.push(obj(vec![
+            ("sessions", Json::Num(sessions as f64)),
+            ("requests", Json::Num(n as f64)),
+            ("throughput_rps", Json::Num(s.throughput_rps)),
+        ]));
+    }
+    ev.shutdown();
+
+    // the machine-readable baseline (schema in the module docs)
+    let report = obj(vec![
+        ("schema", Json::Str("gta.bench.net/1".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("provisional", Json::Bool(false)),
+        (
+            "codec",
+            Json::Arr(
+                codec_rows
+                    .drain(..)
+                    .map(|r| {
+                        obj(vec![
+                            ("dtype", Json::Str(r.dtype)),
+                            ("v1_wire_bytes", Json::Num(r.v1_wire as f64)),
+                            ("v2_wire_bytes", Json::Num(r.v2_wire as f64)),
+                            ("encdec_speedup", Json::Num(r.speed)),
+                            ("wire_bytes_ratio", Json::Num(r.bytes)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("replay", Json::Arr(replay_rows)),
+        ("mux", Json::Arr(mux_rows)),
+    ]);
+    std::fs::write("BENCH_net.json", report.render() + "\n").expect("write BENCH_net.json");
+    println!(
+        "\nnet throughput OK: v1, v2 and event-loop v3 wire paths verified against the \
+         in-process path; machine-readable baseline written to BENCH_net.json"
+    );
 }

@@ -360,12 +360,36 @@ pub struct ShardTelemetry {
     pub snapshot: Snapshot,
 }
 
+/// Live network-serving gauges and counters, attached to a
+/// [`RackSnapshot`] when the rack is fronted by a server: connection
+/// and logical-session gauges (current, not cumulative) plus total
+/// wire bytes in each direction summed over all connections, live and
+/// closed.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetGauges {
+    pub active_connections: u64,
+    pub active_sessions: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl NetGauges {
+    pub fn render(&self) -> String {
+        format!(
+            "  net: {} connections, {} sessions active  wire bytes in={} out={}\n",
+            self.active_connections, self.active_sessions, self.bytes_in, self.bytes_out,
+        )
+    }
+}
+
 /// Rack-wide telemetry: per-shard counters plus the aggregate rollup
 /// (the ROADMAP "aggregate utilization/traffic per shard" report).
 #[derive(Debug, Clone)]
 pub struct RackSnapshot {
     pub shards: Vec<ShardTelemetry>,
     pub aggregate: Snapshot,
+    /// Network-serving gauges — `None` for a rack not behind a server.
+    pub net: Option<NetGauges>,
 }
 
 impl RackSnapshot {
@@ -374,7 +398,13 @@ impl RackSnapshot {
         for t in &shards {
             aggregate.absorb(&t.snapshot);
         }
-        RackSnapshot { shards, aggregate }
+        RackSnapshot { shards, aggregate, net: None }
+    }
+
+    /// Attach live network gauges (builder-style, used by the servers).
+    pub fn with_net(mut self, net: NetGauges) -> RackSnapshot {
+        self.net = Some(net);
+        self
     }
 
     /// Fraction of rack traffic the given shard carried (0.0 when the
@@ -409,6 +439,9 @@ impl RackSnapshot {
                 t.lane_usage.total,
                 t.lane_usage.live_partitions,
             ));
+        }
+        if let Some(net) = &self.net {
+            s.push_str(&net.render());
         }
         s.push_str(&format!("  rack aggregate: {}", self.aggregate.render()));
         s
@@ -563,5 +596,21 @@ mod tests {
         let rendered = rs.render();
         assert!(rendered.contains("shard 0"), "{rendered}");
         assert!(rendered.contains("rack aggregate"), "{rendered}");
+        assert!(!rendered.contains("net:"), "no net gauges unless attached: {rendered}");
+    }
+
+    #[test]
+    fn net_gauges_render_when_attached() {
+        let rs = RackSnapshot::from_shards(Vec::new()).with_net(NetGauges {
+            active_connections: 3,
+            active_sessions: 7,
+            bytes_in: 1024,
+            bytes_out: 2048,
+        });
+        let rendered = rs.render();
+        assert!(
+            rendered.contains("net: 3 connections, 7 sessions active  wire bytes in=1024 out=2048"),
+            "{rendered}"
+        );
     }
 }

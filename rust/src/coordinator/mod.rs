@@ -50,7 +50,8 @@ pub use rack::{
     order_responses, unserved_response, CapacityWeighted, LeastLoaded, Rack, RoundRobin,
     RoutePolicy, ShapeAffinity, Shard, ShardStatus, BUSY_MESSAGE,
 };
-pub use session::{RackSession, SessionStats, SubmitError, Ticket};
+pub use metrics::NetGauges;
+pub use session::{NotifyFn, RackSession, SessionStats, SubmitError, Ticket, WorkerPool};
 
 use crate::arch::GtaConfig;
 use crate::ops::{PGemm, TensorOp};

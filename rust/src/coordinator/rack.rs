@@ -21,7 +21,7 @@
 
 use super::lane_scheduler::{LaneAllocator, LaneUsage, Partition, PartitionId};
 use super::metrics::{Metrics, RackSnapshot, ShardTelemetry};
-use super::session::{RackSession, SubmitError};
+use super::session::{RackSession, SubmitError, WorkerPool};
 use super::{
     panic_message, AdmitError, CoalesceConfig, Dispatcher, ExecKind, Executor, Request, Response,
     ServeOptions, DEFAULT_SCHEDULE_CAPACITY,
@@ -529,6 +529,15 @@ impl Rack {
     /// [`Rack::serve_with`] is a thin wrapper over one of these.
     pub fn open_session(&self, opts: ServeOptions) -> RackSession {
         RackSession::open(self.shards.clone(), Arc::clone(&self.policy), opts)
+    }
+
+    /// [`Rack::open_session`], but thread-less: execution rides the
+    /// shared [`WorkerPool`] instead of per-session worker threads, so
+    /// a server multiplexing thousands of logical sessions stays at
+    /// O(pool) threads. Semantics (admission bounds, backpressure,
+    /// drain/close, telemetry) are identical to [`Rack::open_session`].
+    pub fn open_session_on(&self, opts: ServeOptions, pool: &Arc<WorkerPool>) -> RackSession {
+        RackSession::open_on_pool(self.shards.clone(), Arc::clone(&self.policy), opts, pool)
     }
 
     /// Serve a batch of requests across the rack on `workers` threads

@@ -35,9 +35,161 @@ use super::metrics::RackSnapshot;
 use super::rack::{order_responses, route_on, RoutePolicy, Shard};
 use super::{AdmissionPolicy, AdmissionQueue, AdmitError, Request, Response, ServeOptions};
 use crate::serve::ServeSummary;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Completion-notification callback: invoked by a worker after each
+/// response lands in the session's completion channel. Used by the
+/// event-loop server to wake its `poll` instead of parking a thread in
+/// [`RackSession::recv_timeout`]; must be cheap and must not block.
+pub type NotifyFn = Arc<dyn Fn() + Send + Sync>;
+
+/// The per-session state a pool worker needs to execute one admitted
+/// request: the session's own bounded queue (the worker pops exactly
+/// one item per dispatched token), its completion channel, the pending
+/// counter `drain` waits on, and the notify hook.
+struct SessionWork {
+    shards: Vec<Arc<Shard>>,
+    queue: Arc<AdmissionQueue<(usize, Request)>>,
+    tx: mpsc::Sender<Response>,
+    pending: Mutex<u64>,
+    idle: Condvar,
+    notify: Arc<Mutex<Option<NotifyFn>>>,
+}
+
+impl SessionWork {
+    /// Service one dispatch token: pop one item from the session queue
+    /// (present by construction — exactly one token is enqueued per
+    /// admitted item and pool workers are the queue's only consumers),
+    /// execute it, deliver the response, then account the token.
+    fn run_one(&self) {
+        if let Some((sidx, req)) = self.queue.pop() {
+            let shard = &self.shards[sidx];
+            shard.queued.fetch_sub(1, Ordering::Relaxed);
+            let resp = shard.handle_caught(req);
+            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+            let _ = self.tx.send(resp);
+        }
+        {
+            let mut p = self.pending.lock().unwrap();
+            *p = p.saturating_sub(1);
+            if *p == 0 {
+                self.idle.notify_all();
+            }
+        }
+        let cb = self.notify.lock().unwrap().clone();
+        if let Some(cb) = cb {
+            cb();
+        }
+    }
+
+    /// Block until every dispatched token has been serviced (the
+    /// pool-mode replacement for joining dedicated worker threads).
+    fn wait_idle(&self) {
+        let mut p = self.pending.lock().unwrap();
+        while *p > 0 {
+            p = self.idle.wait(p).unwrap();
+        }
+    }
+}
+
+struct PoolInner {
+    /// Dispatch tokens: one per admitted request, each naming the
+    /// session whose queue holds the actual item. Unbounded, but its
+    /// length is capped by the sum of the bounded per-session queues.
+    tokens: Mutex<VecDeque<Arc<SessionWork>>>,
+    ready: Condvar,
+    closed: AtomicBool,
+}
+
+/// A fixed pool of worker threads servicing MANY sessions — the
+/// event-loop server's execution backend, where thread count must be
+/// O(pool), not O(connections). Sessions opened with
+/// [`super::rack::Rack::open_session_on`] spawn no threads of their
+/// own; every admitted request instead dispatches one token here, and
+/// whichever pool worker picks it up pops that one item from the
+/// session's own bounded queue. Admission bounds, backpressure and
+/// per-shard gauges are byte-for-byte the dedicated-thread semantics —
+/// only thread ownership moves.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` (min 1) pool workers.
+    pub fn new(threads: usize) -> WorkerPool {
+        let inner = Arc::new(PoolInner {
+            tokens: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        let handles = (0..threads.max(1))
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("gta-pool-worker-{w}"))
+                    .spawn(move || loop {
+                        let work = {
+                            let mut q = inner.tokens.lock().unwrap();
+                            loop {
+                                if let Some(w) = q.pop_front() {
+                                    break Some(w);
+                                }
+                                if inner.closed.load(Ordering::Relaxed) {
+                                    break None;
+                                }
+                                q = inner.ready.wait(q).unwrap();
+                            }
+                        };
+                        match work {
+                            Some(w) => w.run_one(),
+                            None => return,
+                        }
+                    })
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        WorkerPool { inner, handles: Mutex::new(handles) }
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.handles.lock().unwrap().len()
+    }
+
+    /// Enqueue one dispatch token. After [`shutdown`](Self::shutdown)
+    /// the token is serviced inline on the calling thread instead —
+    /// liveness over parallelism on the rare post-shutdown submit.
+    fn dispatch(&self, work: Arc<SessionWork>) {
+        if self.inner.closed.load(Ordering::Relaxed) {
+            work.run_one();
+            return;
+        }
+        self.inner.tokens.lock().unwrap().push_back(work);
+        self.inner.ready.notify_one();
+    }
+
+    /// Stop the workers: already-dispatched tokens are still serviced
+    /// (a pool shutdown never strands an admitted request), then the
+    /// threads exit and are joined.
+    pub fn shutdown(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.inner.ready.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
 
 /// Receipt for one admitted request: its id and the shard the router
 /// placed it on. The matching [`Response`] carries the same `id` and
@@ -88,6 +240,12 @@ pub struct RackSession {
     /// the lock until a response or channel disconnect arrives).
     rx: Mutex<mpsc::Receiver<Response>>,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Pool mode (see [`WorkerPool`]): `workers` stays empty and every
+    /// admitted request dispatches one token to the shared pool.
+    pool: Option<(Arc<WorkerPool>, Arc<SessionWork>)>,
+    /// Completion-notification hook, shared with whichever workers
+    /// (dedicated or pooled) execute this session's requests.
+    notify: Arc<Mutex<Option<NotifyFn>>>,
     opts: ServeOptions,
     opened: Instant,
     closed: AtomicBool,
@@ -110,35 +268,82 @@ impl RackSession {
         policy: Arc<dyn RoutePolicy>,
         opts: ServeOptions,
     ) -> RackSession {
+        Self::build(shards, policy, opts, None)
+    }
+
+    /// Open a session that spawns NO threads of its own: execution is
+    /// delegated to the shared [`WorkerPool`], so a server can hold
+    /// thousands of live sessions with O(pool) threads. Called through
+    /// [`super::rack::Rack::open_session_on`]. `opts.workers` is
+    /// ignored in this mode (the pool's size governs).
+    pub(super) fn open_on_pool(
+        shards: Vec<Arc<Shard>>,
+        policy: Arc<dyn RoutePolicy>,
+        opts: ServeOptions,
+        pool: &Arc<WorkerPool>,
+    ) -> RackSession {
+        Self::build(shards, policy, opts, Some(Arc::clone(pool)))
+    }
+
+    fn build(
+        shards: Vec<Arc<Shard>>,
+        policy: Arc<dyn RoutePolicy>,
+        opts: ServeOptions,
+        pool: Option<Arc<WorkerPool>>,
+    ) -> RackSession {
         let queue = Arc::new(AdmissionQueue::<(usize, Request)>::new(opts.queue_capacity));
         let (tx, rx) = mpsc::channel::<Response>();
-        let workers = (0..opts.workers.max(1))
-            .map(|w| {
-                let queue = Arc::clone(&queue);
-                let tx = tx.clone();
-                let shards = shards.clone();
-                std::thread::Builder::new()
-                    .name(format!("gta-session-worker-{w}"))
-                    .spawn(move || {
-                        while let Some((sidx, req)) = queue.pop() {
-                            let shard = &shards[sidx];
-                            shard.queued.fetch_sub(1, Ordering::Relaxed);
-                            let resp = shard.handle_caught(req);
-                            shard.in_flight.fetch_sub(1, Ordering::Relaxed);
-                            if tx.send(resp).is_err() {
-                                break;
-                            }
-                        }
+        let notify: Arc<Mutex<Option<NotifyFn>>> = Arc::new(Mutex::new(None));
+        let (workers, pool) = match pool {
+            Some(pool) => {
+                let work = Arc::new(SessionWork {
+                    shards: shards.clone(),
+                    queue: Arc::clone(&queue),
+                    tx,
+                    pending: Mutex::new(0),
+                    idle: Condvar::new(),
+                    notify: Arc::clone(&notify),
+                });
+                (Vec::new(), Some((pool, work)))
+            }
+            None => {
+                let workers = (0..opts.workers.max(1))
+                    .map(|w| {
+                        let queue = Arc::clone(&queue);
+                        let tx = tx.clone();
+                        let shards = shards.clone();
+                        let notify = Arc::clone(&notify);
+                        std::thread::Builder::new()
+                            .name(format!("gta-session-worker-{w}"))
+                            .spawn(move || {
+                                while let Some((sidx, req)) = queue.pop() {
+                                    let shard = &shards[sidx];
+                                    shard.queued.fetch_sub(1, Ordering::Relaxed);
+                                    let resp = shard.handle_caught(req);
+                                    shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                                    if tx.send(resp).is_err() {
+                                        break;
+                                    }
+                                    let cb = notify.lock().unwrap().clone();
+                                    if let Some(cb) = cb {
+                                        cb();
+                                    }
+                                }
+                            })
+                            .expect("spawning session worker thread")
                     })
-                    .expect("spawning session worker thread")
-            })
-            .collect();
+                    .collect();
+                (workers, None)
+            }
+        };
         RackSession {
             shards,
             policy,
             queue,
             rx: Mutex::new(rx),
             workers: Mutex::new(workers),
+            pool,
+            notify,
             opts,
             opened: Instant::now(),
             closed: AtomicBool::new(false),
@@ -214,6 +419,10 @@ impl RackSession {
         match attempt {
             Ok(()) => {
                 shard.metrics.record_queue_depth(self.queue.depth());
+                if let Some((pool, work)) = &self.pool {
+                    *work.pending.lock().unwrap() += 1;
+                    pool.dispatch(Arc::clone(work));
+                }
                 Ok(Ticket { id, shard: sidx })
             }
             Err((_, error)) => {
@@ -290,6 +499,38 @@ impl RackSession {
         self.closed.load(Ordering::Relaxed)
     }
 
+    /// Whether the admission queue has a free slot RIGHT NOW. Only
+    /// meaningful to a sole submitter (depth can rise concurrently
+    /// otherwise) — which the event-loop server is: it checks this
+    /// before decoding the next `Submit` so a `Block`-policy session
+    /// exerts backpressure by pausing the connection's reads instead of
+    /// parking the loop thread in `admit`.
+    pub fn has_capacity(&self) -> bool {
+        self.queue.depth() < self.queue.capacity()
+    }
+
+    /// Install (or clear) the completion-notification hook: called by a
+    /// worker after each response is delivered to the completion
+    /// channel. The event-loop server registers a wakeup-fd write here
+    /// and then consumes with [`try_recv`](Self::try_recv) only — no
+    /// thread ever parks in [`recv_timeout`](Self::recv_timeout). The
+    /// callback runs on worker threads: keep it cheap, never block.
+    pub fn set_notify(&self, f: Option<NotifyFn>) {
+        *self.notify.lock().unwrap() = f;
+    }
+
+    /// Non-blocking first half of [`drain`](Self::drain): stop
+    /// admissions (subsequent submits fail with
+    /// [`AdmitError::Closed`]) and let workers finish what was
+    /// admitted, WITHOUT waiting for them. The event loop seals a
+    /// session the moment a drain/close request arrives, keeps pumping
+    /// completions, and calls `drain`/[`close`](Self::close) — then
+    /// instant — once [`outstanding`](Self::outstanding) hits zero.
+    pub fn seal(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+
     /// The options this session was opened with.
     pub fn opts(&self) -> ServeOptions {
         self.opts
@@ -327,13 +568,16 @@ impl RackSession {
     /// some of the final responses instead; they are folded into the
     /// session counters either way.
     pub fn drain(&self) -> Vec<Response> {
-        self.closed.store(true, Ordering::SeqCst);
-        self.queue.close();
+        self.seal();
+        if let Some((_, work)) = &self.pool {
+            // pool mode: wait for the last dispatched token, not threads
+            work.wait_idle();
+        }
         let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
-        // workers are gone: everything they completed is in the channel
+        // workers are done: everything they completed is in the channel
         let mut out = Vec::new();
         {
             let rx = self.rx.lock().unwrap();

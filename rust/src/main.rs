@@ -28,7 +28,7 @@ USAGE:
             [--shards N] [--policy rr|least|affinity|capacity]
             [--shard-lanes L1,L2,...]
             [--stream] [--arrival-rate R] [--seed S]
-            [--listen ADDR] [--max-proto V]
+            [--listen ADDR] [--max-proto V] [--event-loop] [--max-conns C]
                                     e2e driver: mixed request stream through
                                     the batched (admission queue + coalescing)
                                     serve path; `--backend soft` runs the
@@ -46,10 +46,15 @@ USAGE:
                                     connection gets its own streaming session
                                     (see docs/transport.md); `--max-proto V`
                                     caps the negotiated wire protocol
-                                    (default 2: binary tensor frames; 1 =
-                                    JSON-only v1 server)
+                                    (3 = session multiplexing, 2 = binary
+                                    tensor frames, 1 = JSON-only v1 server);
+                                    `--event-loop` serves with the poll-based
+                                    event-loop server — O(workers) threads
+                                    however many connections, multiplexed v3
+                                    sessions, `--max-conns C` concurrent
+                                    connections (default 16384)
   gta client --connect ADDR [--requests N] [--stream] [--arrival-rate R]
-             [--seed S] [--proto V]
+             [--seed S] [--proto V] [--sessions K] [--timeout-ms T]
                                     replay the mixed e2e stream against a
                                     `gta serve --listen` server over TCP:
                                     batch submit-then-drain by default,
@@ -57,7 +62,13 @@ USAGE:
                                     Poisson driver (bit-comparable with the
                                     in-process `serve --stream` path);
                                     `--proto V` caps the version this client
-                                    announces (1 = v1-forced JSON replay)
+                                    announces (1 = v1-forced JSON replay);
+                                    `--sessions K` slices the replay across K
+                                    logical sessions multiplexed on ONE
+                                    connection (needs a v3 `--event-loop`
+                                    server); `--timeout-ms T` bounds connect
+                                    and per-response waits (default
+                                    10000/30000)
 ";
 
 fn main() -> Result<()> {
@@ -294,12 +305,29 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         let artifacts = flags.get("artifacts").map(Into::into);
         let max_proto = flags.get_u64("max-proto", gta::net::PROTO_VERSION);
         let rack = gta::serve::listen_rack(backend, artifacts, shards, &lanes, policy)?;
-        let mut server = gta::net::NetServer::spawn_proto(
-            rack,
-            addr,
-            gta::coordinator::ServeOptions::with_workers(workers),
-            max_proto,
-        )?;
+        let opts = gta::coordinator::ServeOptions::with_workers(workers);
+        if flags.get("event-loop").is_some() {
+            let max_conns =
+                flags.get_u64("max-conns", gta::net::DEFAULT_MAX_CONNS as u64) as usize;
+            let mut server =
+                gta::net::EventServer::spawn_with(rack, addr, opts, max_proto, max_conns)?;
+            println!(
+                "gta serving on {} (event loop, {} worker(s), {} shard(s), {} backend, \
+                 policy {}, proto <= {}, max {} conns) — \
+                 connect with `gta client --connect {}`",
+                server.addr(),
+                workers.max(1),
+                shards.max(1),
+                backend,
+                policy,
+                max_proto,
+                max_conns,
+                server.addr()
+            );
+            server.join();
+            return Ok(());
+        }
+        let mut server = gta::net::NetServer::spawn_proto(rack, addr, opts, max_proto)?;
         println!(
             "gta serving on {} ({} shard(s), {} backend, policy {}, proto <= {}) — \
              connect with `gta client --connect {}`",
@@ -350,16 +378,33 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 fn cmd_client(flags: &Flags) -> Result<()> {
     let addr = flags.get("connect").ok_or_else(|| anyhow!("--connect ADDR required"))?;
     let n = flags.get_u64("requests", 64);
-    let proto = flags.get_u64("proto", gta::net::PROTO_VERSION);
+    let sessions = flags.get_u64("sessions", 1) as u32;
+    let mut opts = gta::net::ClientOptions {
+        max_proto: flags.get_u64("proto", gta::net::PROTO_VERSION),
+        ..gta::net::ClientOptions::default()
+    };
+    if let Some(ms) = flags.get("timeout-ms").and_then(|v| v.parse::<u64>().ok()) {
+        if ms == 0 {
+            bail!("--timeout-ms must be positive (omit the flag for the defaults)");
+        }
+        let t = std::time::Duration::from_millis(ms);
+        opts.connect_timeout = t;
+        opts.read_timeout = Some(t);
+    }
     let summary = if flags.get("stream").is_some() {
+        if sessions > 1 {
+            bail!("--sessions multiplexes the batch replay; it does not combine with --stream");
+        }
         let rate: f64 = flags.get("arrival-rate").and_then(|v| v.parse().ok()).unwrap_or(5000.0);
         if !(rate > 0.0) {
             bail!("--arrival-rate must be a positive req/s rate, got {rate}");
         }
         let seed = flags.get_u64("seed", 2024);
-        gta::serve::run_open_loop_client_proto(addr, n, rate, seed, proto)?
+        gta::serve::run_open_loop_client_with(addr, n, rate, seed, opts)?
+    } else if sessions > 1 {
+        gta::serve::run_client_mux_with(addr, n, sessions, opts)?
     } else {
-        gta::serve::run_client_mixed_proto(addr, n, proto)?
+        gta::serve::run_client_mixed_with(addr, n, opts)?
     };
     print!("{}", summary.render());
     Ok(())

@@ -8,6 +8,20 @@
 //! id) and [`close`](GtaClient::close) (the server session's final
 //! [`ServeSummary`], per-shard telemetry included).
 //!
+//! On a v3 connection one socket carries many logical sessions:
+//! [`open_session`](GtaClient::open_session) returns a session id whose
+//! `*_on` twins (`submit_on`/`recv_on`/`try_recv_on`/`drain_on`/
+//! [`close_session`](GtaClient::close_session)) behave exactly like the
+//! defaults — which are themselves just the `*_on` calls for session 0,
+//! the implicit session every connection starts with. Frames from
+//! different sessions interleave freely on the wire; the client routes
+//! them by the v3 `session` header field.
+//!
+//! Every blocking call is bounded by [`ClientOptions`]: `connect` and
+//! the `Hello` exchange by `connect_timeout`, every later wait for a
+//! server frame by `read_timeout` — a dead or wedged server surfaces as
+//! a clean `Err`, never a hang.
+//!
 //! Wire-level backpressure surfaces exactly like the in-process batch
 //! wrapper's: a server-side `AdmitError::Busy` arrives as a `Busy`
 //! frame and is synthesized into an error-carrying [`Response`] with
@@ -18,29 +32,58 @@
 //! client's `submit` eventually stalls in `write`.
 //!
 //! A dedicated reader thread owns the socket's read side and turns
-//! every incoming frame into an event; the caller's thread owns the
-//! write side. Fatal protocol errors from the server (or a vanished
-//! connection) surface as `Err` from whichever call observes them.
+//! every incoming frame into a `(session, event)` pair; the caller's
+//! thread owns the write side. Fatal protocol errors from the server
+//! (or a vanished connection) surface as `Err` from whichever call
+//! observes them.
 
 use super::proto::{
-    busy_shard, client_hello_v, error_message, negotiate, read_frame, write_frame, DecodeError,
-    Frame, FrameType, MIN_PROTO_VERSION, PROTO_VERSION,
+    busy_shard, client_hello_v, error_message, negotiate, read_frame, read_frame_v, write_frame,
+    write_frame_v, DecodeError, Frame, FrameType, MIN_PROTO_VERSION, PROTO_VERSION,
 };
 use crate::coordinator::{order_responses, unserved_response, Request, Response};
 use crate::serve::ServeSummary;
 use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{Shutdown, TcpStream};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
 use std::sync::mpsc;
+use std::time::Duration;
 
 /// The message a `Busy` frame synthesizes into — the SAME string the
 /// in-process batch wrapper uses (re-exported from the coordinator), so
 /// the two paths stay comparable response-for-response.
 pub use crate::coordinator::BUSY_MESSAGE;
 
+/// Connection knobs. The defaults make every blocking call bounded:
+/// a client pointed at a dead, unreachable, or wedged server gets a
+/// clean error, never an indefinite hang.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientOptions {
+    /// Highest protocol version to announce (the connection speaks
+    /// `min(client, server)`).
+    pub max_proto: u64,
+    /// Bound on TCP connect AND on each `Hello`-exchange read.
+    pub connect_timeout: Duration,
+    /// Bound on every later wait for a server frame (`recv`, `drain`,
+    /// `close`, …). `None` waits forever — only sensible when the
+    /// workload itself has unbounded latency.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            max_proto: PROTO_VERSION,
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
 /// What the server said in its `Hello`. `proto` is the **negotiated**
 /// version this connection speaks: tensor payloads travel as v2 binary
-/// frames when it is ≥ 2, as v1 JSON otherwise.
+/// frames when it is ≥ 2, logical sessions multiplex when it is ≥ 3.
 #[derive(Debug, Clone)]
 pub struct ServerInfo {
     pub proto: u64,
@@ -54,9 +97,20 @@ enum Event {
     Busy { id: u64, shard: Option<usize> },
     RequestError { id: u64, message: String },
     Drained,
+    SessionOpened,
+    SessionClosed(Box<ServeSummary>),
     Closed(Box<ServeSummary>),
     Fatal(String),
     Disconnected,
+}
+
+/// Per-session bookkeeping: ticket counters plus events that arrived
+/// while the caller was waiting on a different session.
+#[derive(Default)]
+struct SessionTrack {
+    submitted: u64,
+    completed: u64,
+    stashed: VecDeque<Event>,
 }
 
 /// A blocking client for one GTA serving connection. Not `Sync`: one
@@ -65,22 +119,38 @@ enum Event {
 pub struct GtaClient {
     stream: TcpStream,
     writer: BufWriter<TcpStream>,
-    events: mpsc::Receiver<Event>,
+    events: mpsc::Receiver<(u32, Event)>,
     reader: Option<std::thread::JoinHandle<()>>,
     server: ServerInfo,
-    submitted: u64,
-    completed: u64,
+    read_timeout: Option<Duration>,
+    /// Session 0 (the connection's implicit default) is always present;
+    /// `open_session` adds more on v3 connections.
+    sessions: HashMap<u32, SessionTrack>,
+    next_session: u32,
     closed: bool,
 }
 
+/// Resolve `addr` and try each candidate under the connect timeout.
+fn connect_stream(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let mut last: Option<std::io::Error> = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    match last {
+        Some(e) => Err(anyhow!("connecting to {addr} failed within {timeout:?}: {e}")),
+        None => Err(anyhow!("{addr} resolved to no addresses")),
+    }
+}
+
 impl GtaClient {
-    /// Connect, negotiate the protocol version, and return a live
-    /// client. The connection speaks `min(client, server)`; connecting
-    /// fails only if the negotiated version falls below
-    /// [`MIN_PROTO_VERSION`] (or the server answers with a version it
-    /// was never offered).
+    /// Connect with default options: negotiate the highest shared
+    /// protocol version, 10s connect/handshake timeout, 30s read
+    /// timeout.
     pub fn connect(addr: &str) -> Result<GtaClient> {
-        GtaClient::connect_proto(addr, PROTO_VERSION)
+        GtaClient::connect_with(addr, ClientOptions::default())
     }
 
     /// [`connect`](Self::connect) with an explicit cap on the version
@@ -88,16 +158,33 @@ impl GtaClient {
     /// client producing the PR 5 wire behavior byte-for-byte, useful
     /// for compatibility replays against newer servers.
     pub fn connect_proto(addr: &str, max_proto: u64) -> Result<GtaClient> {
+        GtaClient::connect_with(addr, ClientOptions { max_proto, ..ClientOptions::default() })
+    }
+
+    /// Connect, negotiate the protocol version, and return a live
+    /// client. The connection speaks `min(client, server)`; connecting
+    /// fails if the negotiated version falls below
+    /// [`MIN_PROTO_VERSION`], the server answers with a version it was
+    /// never offered, or the server does not complete the `Hello`
+    /// exchange within `opts.connect_timeout`.
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<GtaClient> {
+        let max_proto = opts.max_proto;
         if !(MIN_PROTO_VERSION..=PROTO_VERSION).contains(&max_proto) {
             bail!(
                 "this build speaks protocol versions \
                  {MIN_PROTO_VERSION}..={PROTO_VERSION}, not {max_proto}"
             );
         }
-        let stream = TcpStream::connect(addr)?;
+        let stream = connect_stream(addr, opts.connect_timeout)?;
         stream.set_nodelay(true).ok();
+        // the whole handshake runs under a read deadline: a server that
+        // accepted the connection but never answers is an error, not a
+        // hang
+        stream.set_read_timeout(Some(opts.connect_timeout))?;
         let mut writer = BufWriter::new(stream.try_clone()?);
         let mut sock_reader = BufReader::new(stream.try_clone()?);
+        // the Hello exchange always travels in the v1 header layout —
+        // neither side knows the negotiated version yet
         write_frame(&mut writer, &Frame::new(FrameType::Hello, 0, client_hello_v(max_proto)))?;
         writer.flush()?;
         // the Hello reply is read synchronously, before the reader
@@ -106,8 +193,18 @@ impl GtaClient {
             Ok(f) if f.ty == FrameType::Hello => f,
             Ok(f) if f.ty == FrameType::Error => bail!("server refused: {}", error_message(&f.body)),
             Ok(f) => bail!("expected Hello from server, got {:?}", f.ty),
+            Err(DecodeError::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                bail!("handshake timed out after {:?} (server accepted but never answered)",
+                    opts.connect_timeout)
+            }
             Err(e) => bail!("handshake failed: {e}"),
         };
+        // steady-state waits are bounded at the event channel instead,
+        // so the reader thread can block on the socket indefinitely
+        stream.set_read_timeout(None)?;
         let proto = super::proto::hello_proto(&hello.body)
             .ok_or_else(|| anyhow!("server Hello without a protocol version"))?;
         // the server's answer must be a version we offered and can speak
@@ -131,57 +228,78 @@ impl GtaClient {
                 .unwrap_or("unknown")
                 .to_string(),
         };
-        let (tx, events) = mpsc::channel::<Event>();
+        let (tx, events) = mpsc::channel::<(u32, Event)>();
         let reader = std::thread::Builder::new()
             .name("gta-client-reader".into())
             .spawn(move || loop {
-                let event = match read_frame(&mut sock_reader) {
-                    Ok(f) => match f.ty {
-                        FrameType::Response => match super::proto::decode_response(&f.body) {
-                            Ok(resp) => Event::Response(Box::new(resp)),
-                            Err(e) => Event::Fatal(format!("undecodable response: {e:#}")),
-                        },
-                        // decodes straight into HostTensor buffers —
-                        // no intermediate JSON values
-                        FrameType::ResponseBin => {
-                            match super::proto::decode_response_bin(&f.bin) {
+                // post-handshake frames travel in the negotiated layout
+                let (session, event) = match read_frame_v(&mut sock_reader, proto) {
+                    Ok(f) => {
+                        let session = f.session;
+                        let event = match f.ty {
+                            FrameType::Response => match super::proto::decode_response(&f.body) {
                                 Ok(resp) => Event::Response(Box::new(resp)),
-                                Err(e) => {
-                                    Event::Fatal(format!("undecodable binary response: {e:#}"))
+                                Err(e) => Event::Fatal(format!("undecodable response: {e:#}")),
+                            },
+                            // decodes straight into HostTensor buffers —
+                            // no intermediate JSON values
+                            FrameType::ResponseBin => {
+                                match super::proto::decode_response_bin(&f.bin) {
+                                    Ok(resp) => Event::Response(Box::new(resp)),
+                                    Err(e) => {
+                                        Event::Fatal(format!("undecodable binary response: {e:#}"))
+                                    }
                                 }
                             }
-                        }
-                        FrameType::Busy => Event::Busy { id: f.id, shard: busy_shard(&f.body) },
-                        FrameType::Error if f.id != 0 => {
-                            Event::RequestError { id: f.id, message: error_message(&f.body) }
-                        }
-                        FrameType::Error => Event::Fatal(error_message(&f.body)),
-                        FrameType::Drained => Event::Drained,
-                        FrameType::Closed => match super::proto::decode_summary(&f.body) {
-                            Ok(s) => Event::Closed(Box::new(s)),
-                            Err(e) => Event::Fatal(format!("undecodable summary: {e:#}")),
-                        },
-                        other => Event::Fatal(format!("unexpected {other:?} frame from server")),
-                    },
-                    Err(DecodeError::Eof) | Err(DecodeError::Io(_)) => Event::Disconnected,
-                    Err(DecodeError::Malformed(m)) => Event::Fatal(m),
+                            FrameType::Busy => {
+                                Event::Busy { id: f.id, shard: busy_shard(&f.body) }
+                            }
+                            FrameType::Error if f.id != 0 => {
+                                Event::RequestError { id: f.id, message: error_message(&f.body) }
+                            }
+                            FrameType::Error => Event::Fatal(error_message(&f.body)),
+                            FrameType::Drained => Event::Drained,
+                            FrameType::OpenSession => Event::SessionOpened,
+                            FrameType::SessionClosed => {
+                                match super::proto::decode_summary(&f.body) {
+                                    Ok(s) => Event::SessionClosed(Box::new(s)),
+                                    Err(e) => {
+                                        Event::Fatal(format!("undecodable summary: {e:#}"))
+                                    }
+                                }
+                            }
+                            FrameType::Closed => match super::proto::decode_summary(&f.body) {
+                                Ok(s) => Event::Closed(Box::new(s)),
+                                Err(e) => Event::Fatal(format!("undecodable summary: {e:#}")),
+                            },
+                            other => {
+                                Event::Fatal(format!("unexpected {other:?} frame from server"))
+                            }
+                        };
+                        (session, event)
+                    }
+                    Err(DecodeError::Eof) | Err(DecodeError::Io(_)) => (0, Event::Disconnected),
+                    Err(DecodeError::Malformed(m)) => (0, Event::Fatal(m)),
                 };
                 let terminal = matches!(
                     event,
                     Event::Fatal(_) | Event::Disconnected | Event::Closed(_)
                 );
-                if tx.send(event).is_err() || terminal {
+                if tx.send((session, event)).is_err() || terminal {
                     break;
                 }
             })?;
+        let mut sessions = HashMap::new();
+        sessions.insert(0u32, SessionTrack::default());
         Ok(GtaClient {
             stream,
             writer,
             events,
             reader: Some(reader),
             server,
-            submitted: 0,
-            completed: 0,
+            read_timeout: opts.read_timeout,
+            sessions,
+            next_session: 1,
             closed: false,
         })
     }
@@ -191,20 +309,99 @@ impl GtaClient {
         &self.server
     }
 
-    /// Tickets submitted but not yet resolved by a response, a `Busy`,
-    /// or a per-request error.
+    /// Tickets submitted on the default session but not yet resolved by
+    /// a response, a `Busy`, or a per-request error.
     pub fn outstanding(&self) -> u64 {
-        self.submitted - self.completed
+        self.outstanding_on(0)
     }
 
-    /// Submit one request, returning its ticket id immediately (the
-    /// shard assignment happens server-side; a rejection arrives later
-    /// as a `Busy`-synthesized error response). Under a blocking-
-    /// admission server an overloaded queue stalls this call in the
-    /// socket write — TCP is the backpressure.
-    pub fn submit(&mut self, req: &Request) -> Result<u64> {
+    /// [`outstanding`](Self::outstanding) for one logical session.
+    pub fn outstanding_on(&self, session: u32) -> u64 {
+        self.sessions.get(&session).map_or(0, |t| t.submitted - t.completed)
+    }
+
+    /// Next event from the wire, bounded by the read timeout.
+    fn recv_event(&self) -> Result<(u32, Event)> {
+        match self.read_timeout {
+            Some(t) => self.events.recv_timeout(t).map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => {
+                    anyhow!("no server response within {t:?} (read timeout)")
+                }
+                mpsc::RecvTimeoutError::Disconnected => anyhow!("server disconnected"),
+            }),
+            None => self.events.recv().map_err(|_| anyhow!("server disconnected")),
+        }
+    }
+
+    /// Next event addressed to `session`: stashed first, then the wire
+    /// (events for other sessions are stashed for their own consumers;
+    /// connection-fatal events surface immediately regardless).
+    fn next_event_for(&mut self, session: u32) -> Result<Event> {
+        if let Some(ev) = self.sessions.get_mut(&session).and_then(|t| t.stashed.pop_front()) {
+            return Ok(ev);
+        }
+        loop {
+            let (esid, event) = self.recv_event()?;
+            match event {
+                Event::Fatal(m) => bail!("protocol error: {m}"),
+                Event::Disconnected => bail!("server disconnected"),
+                event if esid == session => return Ok(event),
+                event => match self.sessions.get_mut(&esid) {
+                    Some(t) => t.stashed.push_back(event),
+                    None => bail!("server sent a frame for unknown session {esid}"),
+                },
+            }
+        }
+    }
+
+    /// Open a new logical session multiplexed over this connection
+    /// (protocol v3). It has its own admission queue, ticket space and
+    /// summary on the server; close it with
+    /// [`close_session`](Self::close_session). Session 0 — the implicit
+    /// default every connection starts with — needs no opening.
+    pub fn open_session(&mut self) -> Result<u32> {
         if self.closed {
             bail!("client already closed");
+        }
+        if self.server.proto < 3 {
+            bail!(
+                "session multiplexing needs protocol v3 \
+                 (this connection negotiated v{})",
+                self.server.proto
+            );
+        }
+        let sid = self.next_session;
+        self.next_session += 1;
+        self.sessions.insert(sid, SessionTrack::default());
+        write_frame_v(
+            &mut self.writer,
+            &Frame::new(FrameType::OpenSession, 0, crate::util::json::Json::Null)
+                .with_session(sid),
+            self.server.proto,
+        )?;
+        self.writer.flush()?;
+        match self.next_event_for(sid)? {
+            Event::SessionOpened => Ok(sid),
+            _ => bail!("expected OpenSession ack for session {sid}"),
+        }
+    }
+
+    /// Submit one request on the default session, returning its ticket
+    /// id immediately (the shard assignment happens server-side; a
+    /// rejection arrives later as a `Busy`-synthesized error response).
+    /// Under a blocking-admission server an overloaded queue stalls
+    /// this call in the socket write — TCP is the backpressure.
+    pub fn submit(&mut self, req: &Request) -> Result<u64> {
+        self.submit_on(0, req)
+    }
+
+    /// [`submit`](Self::submit) on one logical session.
+    pub fn submit_on(&mut self, session: u32, req: &Request) -> Result<u64> {
+        if self.closed {
+            bail!("client already closed");
+        }
+        if !self.sessions.contains_key(&session) {
+            bail!("unknown session {session} (open_session first, or 0 for the default)");
         }
         let frame = if self.server.proto >= 2 {
             // binary tensor frame: element bytes go out as-is, no
@@ -213,28 +410,34 @@ impl GtaClient {
         } else {
             Frame::new(FrameType::Submit, req.id, super::proto::encode_request(req))
         };
-        write_frame(&mut self.writer, &frame)?;
+        write_frame_v(&mut self.writer, &frame.with_session(session), self.server.proto)?;
         self.writer.flush()?;
-        self.submitted += 1;
+        self.sessions.get_mut(&session).expect("checked above").submitted += 1;
         Ok(req.id)
     }
 
-    /// Map one event to a response (counting it), or a fatal error.
-    fn resolve(&mut self, event: Event) -> Result<Option<Response>> {
+    /// Map one event to a response (counting it against `session`), or
+    /// a fatal error.
+    fn resolve(&mut self, session: u32, event: Event) -> Result<Option<Response>> {
+        let completed = |client: &mut Self| {
+            if let Some(t) = client.sessions.get_mut(&session) {
+                t.completed += 1;
+            }
+        };
         match event {
             Event::Response(resp) => {
-                self.completed += 1;
+                completed(self);
                 Ok(Some(*resp))
             }
             Event::Busy { id, shard } => {
-                self.completed += 1;
+                completed(self);
                 Ok(Some(unserved_response(id, shard.unwrap_or(0), BUSY_MESSAGE.to_string())))
             }
             Event::RequestError { id, message } => {
-                self.completed += 1;
+                completed(self);
                 Ok(Some(unserved_response(id, 0, message)))
             }
-            Event::Drained | Event::Closed(_) => {
+            Event::Drained | Event::Closed(_) | Event::SessionOpened | Event::SessionClosed(_) => {
                 bail!("unexpected lifecycle frame while receiving responses")
             }
             Event::Fatal(m) => bail!("protocol error: {m}"),
@@ -242,76 +445,155 @@ impl GtaClient {
         }
     }
 
-    /// Next completion, blocking while tickets are outstanding; `None`
-    /// when nothing is outstanding. A server-side rejection or
-    /// per-request error comes back as an error-carrying [`Response`],
-    /// exactly like the in-process batch wrapper synthesizes.
+    /// Next completion on the default session, blocking (up to the read
+    /// timeout) while tickets are outstanding; `None` when nothing is
+    /// outstanding. A server-side rejection or per-request error comes
+    /// back as an error-carrying [`Response`], exactly like the
+    /// in-process batch wrapper synthesizes.
     pub fn recv(&mut self) -> Result<Option<Response>> {
-        if self.outstanding() == 0 {
+        self.recv_on(0)
+    }
+
+    /// [`recv`](Self::recv) on one logical session.
+    pub fn recv_on(&mut self, session: u32) -> Result<Option<Response>> {
+        let stashed =
+            self.sessions.get(&session).map_or(false, |t| !t.stashed.is_empty());
+        if !stashed && self.outstanding_on(session) == 0 {
             return Ok(None);
         }
-        match self.events.recv() {
-            Ok(event) => self.resolve(event),
-            Err(_) => bail!("server disconnected"),
-        }
+        let event = self.next_event_for(session)?;
+        self.resolve(session, event)
     }
 
-    /// Next completion if one is already here.
+    /// Next completion on the default session, if one is already here.
     pub fn try_recv(&mut self) -> Result<Option<Response>> {
-        match self.events.try_recv() {
-            Ok(event) => self.resolve(event),
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
-            Err(mpsc::TryRecvError::Disconnected) => bail!("server disconnected"),
+        self.try_recv_on(0)
+    }
+
+    /// [`try_recv`](Self::try_recv) on one logical session.
+    pub fn try_recv_on(&mut self, session: u32) -> Result<Option<Response>> {
+        loop {
+            if let Some(ev) =
+                self.sessions.get_mut(&session).and_then(|t| t.stashed.pop_front())
+            {
+                return self.resolve(session, ev);
+            }
+            match self.events.try_recv() {
+                Ok((esid, Event::Fatal(m))) => {
+                    let _ = esid;
+                    bail!("protocol error: {m}")
+                }
+                Ok((_, Event::Disconnected)) => bail!("server disconnected"),
+                Ok((esid, event)) if esid == session => return self.resolve(session, event),
+                Ok((esid, event)) => match self.sessions.get_mut(&esid) {
+                    Some(t) => t.stashed.push_back(event),
+                    None => bail!("server sent a frame for unknown session {esid}"),
+                },
+                Err(mpsc::TryRecvError::Empty) => return Ok(None),
+                Err(mpsc::TryRecvError::Disconnected) => bail!("server disconnected"),
+            }
         }
     }
 
-    /// Ask the server to drain: every admitted request finishes, every
-    /// not-yet-consumed response comes back (ordered by id, the shared
-    /// completion-ordering rule). After this, submits fail server-side;
-    /// only [`close`](Self::close) remains useful.
+    /// Ask the server to drain the default session: every admitted
+    /// request finishes, every not-yet-consumed response comes back
+    /// (ordered by id, the shared completion-ordering rule). After
+    /// this, submits fail server-side; only [`close`](Self::close)
+    /// remains useful.
     pub fn drain(&mut self) -> Result<Vec<Response>> {
+        self.drain_on(0)
+    }
+
+    /// [`drain`](Self::drain) for one logical session (the others keep
+    /// serving).
+    pub fn drain_on(&mut self, session: u32) -> Result<Vec<Response>> {
         if self.closed {
             bail!("client already closed");
         }
-        write_frame(&mut self.writer, &Frame::new(FrameType::Drained, 0, crate::util::json::Json::Null))?;
+        if !self.sessions.contains_key(&session) {
+            bail!("unknown session {session}");
+        }
+        write_frame_v(
+            &mut self.writer,
+            &Frame::new(FrameType::Drained, 0, crate::util::json::Json::Null)
+                .with_session(session),
+            self.server.proto,
+        )?;
         self.writer.flush()?;
         let mut out = Vec::new();
         loop {
-            match self.events.recv() {
-                Ok(Event::Drained) => break,
-                Ok(Event::Closed(_)) => bail!("server closed during drain"),
-                Ok(event) => {
-                    if let Some(resp) = self.resolve(event)? {
+            match self.next_event_for(session)? {
+                Event::Drained => break,
+                Event::Closed(_) => bail!("server closed during drain"),
+                event => {
+                    if let Some(resp) = self.resolve(session, event)? {
                         out.push(resp);
                     }
                 }
-                Err(_) => bail!("server disconnected mid-drain"),
             }
         }
         order_responses(&mut out);
         Ok(out)
     }
 
-    /// Close the session: the server drains it (any responses still in
-    /// flight are folded into the summary, as in-process `close` does)
-    /// and sends back the final [`ServeSummary`] with its rack
-    /// telemetry. Consumes the connection.
-    pub fn close(mut self) -> Result<ServeSummary> {
-        self.closed = true;
-        write_frame(&mut self.writer, &Frame::new(FrameType::Closed, 0, crate::util::json::Json::Null))?;
+    /// Close one logical session: the server drains it (responses still
+    /// in flight are folded into the summary — call
+    /// [`drain_on`](Self::drain_on) first to keep them) and answers
+    /// with that session's final [`ServeSummary`]. The connection and
+    /// its other sessions keep serving.
+    pub fn close_session(&mut self, session: u32) -> Result<ServeSummary> {
+        if self.closed {
+            bail!("client already closed");
+        }
+        if session == 0 {
+            bail!("session 0 is the connection's default session; close() the client instead");
+        }
+        if !self.sessions.contains_key(&session) {
+            bail!("unknown session {session}");
+        }
+        write_frame_v(
+            &mut self.writer,
+            &Frame::new(FrameType::SessionClosed, 0, crate::util::json::Json::Null)
+                .with_session(session),
+            self.server.proto,
+        )?;
         self.writer.flush()?;
         let summary = loop {
-            match self.events.recv() {
-                Ok(Event::Closed(summary)) => break *summary,
-                Ok(Event::Drained) => continue,
-                Ok(Event::Fatal(m)) => bail!("protocol error: {m}"),
-                Ok(Event::Disconnected) => bail!("server disconnected before the final summary"),
-                Ok(event) => {
+            match self.next_event_for(session)? {
+                Event::SessionClosed(summary) => break *summary,
+                Event::Drained => continue,
+                event => {
+                    // responses still in flight: folded server-side,
+                    // dropped here
+                    let _ = self.resolve(session, event)?;
+                }
+            }
+        };
+        self.sessions.remove(&session);
+        Ok(summary)
+    }
+
+    /// Close the connection: the server drains every remaining session
+    /// (any responses still in flight are folded into the summary, as
+    /// in-process `close` does) and sends back the final
+    /// [`ServeSummary`] with its rack telemetry. Consumes the client.
+    pub fn close(mut self) -> Result<ServeSummary> {
+        self.closed = true;
+        write_frame_v(
+            &mut self.writer,
+            &Frame::new(FrameType::Closed, 0, crate::util::json::Json::Null),
+            self.server.proto,
+        )?;
+        self.writer.flush()?;
+        let summary = loop {
+            match self.next_event_for(0)? {
+                Event::Closed(summary) => break *summary,
+                Event::Drained => continue,
+                event => {
                     // responses still in flight: folded server-side,
                     // dropped here (call drain() first to keep them)
-                    let _ = self.resolve(event)?;
+                    let _ = self.resolve(0, event)?;
                 }
-                Err(_) => bail!("server disconnected before the final summary"),
             }
         };
         let _ = self.stream.shutdown(Shutdown::Both);
@@ -331,4 +613,3 @@ impl Drop for GtaClient {
         }
     }
 }
-

@@ -5,33 +5,45 @@
 //! moves tensor payloads to zero-copy binary frames, negotiated per
 //! connection in the `Hello` exchange).
 //!
-//! Three layers:
+//! Four layers:
 //!
-//! * [`proto`] — the wire format: frame codec
-//!   (`len:u32 | type:u8 | id:u64 | body`), the
+//! * [`proto`] — the wire format: the versioned frame codec
+//!   (`len:u32 | type:u8 | id:u64 | body` through v2; v3 inserts a
+//!   `session:u32` between type and id), the
 //!   `Hello/SubmitRequest/Response/Busy/Drained/Closed/Error` message
 //!   grammar plus the v2 `SubmitBin`/`ResponseBin` binary tensor
+//!   frames and the v3 `OpenSession`/`SessionClosed` multiplexing
 //!   frames, and exact codecs for requests, responses and the final
 //!   serve summary. Hostile bytes decode to clean errors, never
 //!   panics.
-//! * [`server`] — [`NetServer`]: a `TcpListener` accept loop; each
-//!   connection gets its own `RackSession` over one shared
-//!   [`crate::coordinator::Rack`], a reader thread that submits and a
-//!   writer thread that pumps completions out as they finish (out of
-//!   submission order). Admission `Busy` becomes a wire frame;
-//!   disconnects drain the session so no admitted work is ever lost.
+//! * [`poll`] — a hand-declared `poll(2)` shim plus a self-pipe
+//!   [`poll::Waker`]: the event loop's only OS dependency, still zero
+//!   external crates.
+//! * [`server`] — two servers over one shared
+//!   [`crate::coordinator::Rack`]. [`NetServer`]: the threaded
+//!   baseline — a `TcpListener` accept loop, two OS threads per
+//!   connection, one `RackSession` each. [`EventServer`]: one poll
+//!   thread drives every connection as a non-blocking state machine
+//!   over a fixed worker pool, and (on v3 connections) one socket
+//!   multiplexes many logical sessions. Both: admission `Busy` becomes
+//!   a wire frame; disconnects drain the session so no admitted work
+//!   is ever lost.
 //! * [`client`] — [`GtaClient`]: the blocking client mirror of the
 //!   session API (`submit` → ticket id, `recv`/`try_recv`, `drain`,
-//!   `close` → final `ServeSummary`).
+//!   `close` → final `ServeSummary`), with configurable connect/read
+//!   timeouts and `open_session` for logical sessions multiplexed over
+//!   one socket.
 //!
-//! `gta serve --listen ADDR` serves a rack over this; `gta client
-//! --connect ADDR --stream` replays the seeded open-loop driver through
-//! it, bit-comparable with the in-process path. See `docs/transport.md`.
+//! `gta serve --listen ADDR [--event-loop --max-conns N]` serves a rack
+//! over this; `gta client --connect ADDR --stream [--sessions K]`
+//! replays the seeded open-loop driver through it, bit-comparable with
+//! the in-process path. See `docs/transport.md`.
 
 pub mod client;
+pub mod poll;
 pub mod proto;
 pub mod server;
 
-pub use client::{GtaClient, ServerInfo, BUSY_MESSAGE};
+pub use client::{ClientOptions, GtaClient, ServerInfo, BUSY_MESSAGE};
 pub use proto::{Frame, FrameType, MAX_BODY_BYTES, MIN_PROTO_VERSION, PROTO_VERSION};
-pub use server::NetServer;
+pub use server::{EventServer, NetServer, DEFAULT_MAX_CONNS};

@@ -1,0 +1,236 @@
+//! A minimal `poll(2)` shim — the event loop's only OS dependency,
+//! declared by hand so the crate stays free of external crates.
+//!
+//! [`Poller`] wraps one readiness wait over a set of file descriptors
+//! with per-fd read/write interest; [`Waker`] is a self-pipe (a
+//! non-blocking `UnixStream` pair) other threads write one byte into to
+//! interrupt the wait — the completion-notification path from rack
+//! workers into the event loop.
+//!
+//! On non-unix targets (no `poll`, no fd-bearing sockets in std's
+//! portable surface) the shim degrades to a bounded sleep that reports
+//! every registered fd ready: correctness is preserved because all
+//! event-loop I/O is non-blocking and level-triggered (a spurious
+//! "ready" is just a `WouldBlock`), only wakeup latency suffers.
+
+/// Readiness interest / result bits, mirroring `<poll.h>`.
+pub const POLL_IN: i16 = 0x001;
+pub const POLL_OUT: i16 = 0x004;
+pub const POLL_ERR: i16 = 0x008;
+pub const POLL_HUP: i16 = 0x010;
+pub const POLL_NVAL: i16 = 0x020;
+
+/// One registered descriptor: which readiness `events` the caller wants
+/// and which `revents` the last [`poll_wait`] reported. `repr(C)` —
+/// this IS the `struct pollfd` the syscall sees.
+#[derive(Debug, Clone, Copy)]
+#[repr(C)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Readable, or in an error/hangup state the caller must observe by
+    /// attempting the read (the portable way to learn *which* error).
+    pub fn readable(&self) -> bool {
+        self.revents & (POLL_IN | POLL_ERR | POLL_HUP | POLL_NVAL) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLL_OUT | POLL_ERR | POLL_HUP | POLL_NVAL) != 0
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use super::PollFd;
+
+    // `struct pollfd` has exactly this layout on every unix libc; nfds_t
+    // is unsigned long on linux and unsigned int elsewhere — u64/u32
+    // respectively on the targets this crate builds for.
+    #[cfg(target_os = "linux")]
+    type NFds = u64;
+    #[cfg(not(target_os = "linux"))]
+    type NFds = u32;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: i32) -> i32;
+    }
+
+    /// Block until a registered fd is ready or `timeout_ms` elapses
+    /// (negative = forever). Returns how many fds have nonzero
+    /// `revents`. `EINTR` reads as a zero-ready wakeup, not an error —
+    /// the loop re-derives its state on every iteration anyway.
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        for f in fds.iter_mut() {
+            f.revents = 0;
+        }
+        // SAFETY: PollFd is repr(C) with pollfd's exact field order,
+        // sizes and alignment (i32, i16, i16 — no padding); the slice
+        // pointer/length pair is valid for the call's duration.
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        Ok(n as usize)
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use super::{PollFd, POLL_IN, POLL_OUT};
+
+    /// Portable fallback: sleep a bounded slice and report every
+    /// registered interest as ready. All event-loop I/O is non-blocking,
+    /// so false positives cost a `WouldBlock` each, nothing more.
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        let ms = if timeout_ms < 0 { 10 } else { timeout_ms.min(10) };
+        std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+        for f in fds.iter_mut() {
+            f.revents = f.events & (POLL_IN | POLL_OUT);
+        }
+        Ok(fds.len())
+    }
+}
+
+/// One `poll(2)` wait over a caller-built fd set.
+pub fn poll_wait(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    if fds.is_empty() {
+        // poll(NULL, 0, ms) is a valid sleep, but express it portably
+        if timeout_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(timeout_ms as u64));
+        }
+        return Ok(0);
+    }
+    sys::wait(fds, timeout_ms)
+}
+
+/// A cross-thread wakeup for the event loop: `wake()` from any thread
+/// makes a `poll` that includes [`Waker::fd`] return immediately;
+/// [`Waker::drain`] swallows the pending bytes so the next wait blocks
+/// again. Built on a non-blocking `UnixStream` pair on unix; on other
+/// targets the fallback poller's bounded sleep bounds wakeup latency
+/// instead and this is a no-op handle.
+#[derive(Debug)]
+pub struct Waker {
+    #[cfg(unix)]
+    tx: std::os::unix::net::UnixStream,
+    #[cfg(unix)]
+    rx: std::os::unix::net::UnixStream,
+}
+
+impl Waker {
+    #[cfg(unix)]
+    pub fn new() -> std::io::Result<Waker> {
+        let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Waker { tx, rx })
+    }
+
+    #[cfg(not(unix))]
+    pub fn new() -> std::io::Result<Waker> {
+        Ok(Waker {})
+    }
+
+    /// The fd to register with [`POLL_IN`] interest, or `None` on
+    /// targets where the fallback poller never blocks for long.
+    #[cfg(unix)]
+    pub fn fd(&self) -> Option<i32> {
+        use std::os::unix::io::AsRawFd;
+        Some(self.rx.as_raw_fd())
+    }
+
+    #[cfg(not(unix))]
+    pub fn fd(&self) -> Option<i32> {
+        None
+    }
+
+    /// Interrupt the current (or next) poll wait. A full pipe means a
+    /// wakeup is already pending — success either way; any other error
+    /// is ignored too, because the poller's bounded timeout is the
+    /// fallback wakeup path.
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            let _ = (&self.tx).write(&[1u8]);
+        }
+    }
+
+    /// Swallow pending wakeup bytes (call once per loop iteration).
+    pub fn drain(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Read;
+            let mut buf = [0u8; 64];
+            while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waker_fd_becomes_readable_on_wake_and_quiet_after_drain() {
+        let w = Waker::new().expect("waker");
+        let Some(fd) = w.fd() else { return };
+        let mut fds = [PollFd::new(fd, POLL_IN)];
+        assert_eq!(poll_wait(&mut fds, 0).unwrap(), 0, "no wakeup pending");
+        w.wake();
+        assert_eq!(poll_wait(&mut fds, 1000).unwrap(), 1);
+        assert!(fds[0].readable());
+        w.drain();
+        assert_eq!(poll_wait(&mut fds, 0).unwrap(), 0, "drained");
+    }
+
+    #[test]
+    fn wake_from_another_thread_interrupts_a_blocking_wait() {
+        let w = std::sync::Arc::new(Waker::new().expect("waker"));
+        let Some(fd) = w.fd() else { return };
+        let w2 = std::sync::Arc::clone(&w);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            w2.wake();
+        });
+        let mut fds = [PollFd::new(fd, POLL_IN)];
+        let start = std::time::Instant::now();
+        let n = poll_wait(&mut fds, 10_000).unwrap();
+        assert_eq!(n, 1);
+        assert!(start.elapsed() < std::time::Duration::from_secs(5));
+        t.join().unwrap();
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn tcp_listener_readiness_via_poll() {
+        use std::io::Write;
+        use std::os::unix::io::AsRawFd;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut fds = [PollFd::new(listener.as_raw_fd(), POLL_IN)];
+        assert_eq!(poll_wait(&mut fds, 0).unwrap(), 0, "nothing to accept yet");
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        assert_eq!(poll_wait(&mut fds, 2000).unwrap(), 1);
+        assert!(fds[0].readable(), "pending accept reads as POLLIN");
+        let (conn, _) = listener.accept().unwrap();
+        conn.set_nonblocking(true).unwrap();
+        client.write_all(b"hi").unwrap();
+        let mut cfds = [PollFd::new(conn.as_raw_fd(), POLL_IN | POLL_OUT)];
+        assert_eq!(poll_wait(&mut cfds, 2000).unwrap(), 1);
+        assert!(cfds[0].readable() && cfds[0].writable());
+    }
+}

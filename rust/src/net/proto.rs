@@ -36,7 +36,7 @@
 //! question does not arise (and f32 NaN payload bits, which v1's JSON
 //! path canonicalizes, survive untouched).
 
-use crate::coordinator::metrics::{RackSnapshot, ShardTelemetry, Snapshot};
+use crate::coordinator::metrics::{NetGauges, RackSnapshot, ShardTelemetry, Snapshot};
 use crate::coordinator::lane_scheduler::LaneUsage;
 use crate::coordinator::{ExecKind, Request, Response};
 use crate::ops::{PGemm, TensorOp, VectorKind, VectorOp};
@@ -61,7 +61,15 @@ use std::time::Duration;
 ///   [`ResponseBin`](FrameType::ResponseBin) frames; control frames
 ///   (`Hello/Busy/Drained/Closed/Error`) and response metadata stay
 ///   JSON.
-pub const PROTO_VERSION: u64 = 2;
+/// * **v3** — session multiplexing: the frame header grows a
+///   `session:u32` field (between `type` and `id`) and the
+///   [`OpenSession`](FrameType::OpenSession)/
+///   [`SessionClosed`](FrameType::SessionClosed) control frames let one
+///   connection carry many logical `RackSession`s. The `Hello`
+///   exchange itself always uses the v1 header layout (the version is
+///   not known yet); both sides switch layouts the frame after
+///   negotiation settles on ≥ 3.
+pub const PROTO_VERSION: u64 = 3;
 
 /// Oldest protocol version this build still serves (v1 clients keep
 /// working against a v2 server, bit-identically).
@@ -83,6 +91,19 @@ pub const MAX_BODY_BYTES: usize = 16 << 20;
 
 /// Frame header bytes after the length prefix: type (1) + id (8).
 const HEADER_AFTER_LEN: usize = 9;
+
+/// v3 frame header bytes after the length prefix:
+/// type (1) + session (4) + id (8).
+const HEADER_AFTER_LEN_V3: usize = 13;
+
+/// Header bytes after the length prefix for a given negotiated version.
+fn header_after_len(proto: u64) -> usize {
+    if proto >= 3 {
+        HEADER_AFTER_LEN_V3
+    } else {
+        HEADER_AFTER_LEN
+    }
+}
 
 /// The message grammar (see `docs/transport.md` for who sends what
 /// when). Several types are used in both directions: a client sends
@@ -115,6 +136,16 @@ pub enum FrameType {
     /// v2 server → client: one [`Response`] as a **binary** body (JSON
     /// metadata blob + raw little-endian output tensor bytes).
     ResponseBin,
+    /// v3 client → server: open the logical session named by the
+    /// header's `session` field (client-chosen, nonzero); the server
+    /// acks with the same type and session. Only valid once both peers
+    /// negotiated v3.
+    OpenSession,
+    /// v3: close one logical session. Client → server with an empty
+    /// body requests the close; the server drains that session and
+    /// answers with the same type/session carrying its final
+    /// [`ServeSummary`].
+    SessionClosed,
 }
 
 impl FrameType {
@@ -129,6 +160,8 @@ impl FrameType {
             FrameType::Error => 7,
             FrameType::SubmitBin => 8,
             FrameType::ResponseBin => 9,
+            FrameType::OpenSession => 10,
+            FrameType::SessionClosed => 11,
         }
     }
 
@@ -143,6 +176,8 @@ impl FrameType {
             7 => FrameType::Error,
             8 => FrameType::SubmitBin,
             9 => FrameType::ResponseBin,
+            10 => FrameType::OpenSession,
+            11 => FrameType::SessionClosed,
             _ => return None,
         })
     }
@@ -162,6 +197,10 @@ pub struct Frame {
     pub ty: FrameType,
     /// Ticket/request id this frame refers to (0 = the connection).
     pub id: u64,
+    /// Logical session this frame belongs to (v3; 0 = the connection's
+    /// implicit default session, and the only value v1/v2 can express —
+    /// their header has no session field).
+    pub session: u32,
     /// JSON body (`Json::Null` for an empty or binary body).
     pub body: Json,
     /// Raw payload of a binary frame (empty for JSON frames).
@@ -169,16 +208,23 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// A JSON-bodied frame (every v1 frame, and v2 control frames).
+    /// A JSON-bodied frame (every v1 frame, and v2 control frames), on
+    /// the default session.
     pub fn new(ty: FrameType, id: u64, body: Json) -> Frame {
         debug_assert!(!ty.is_binary(), "binary frame types take Frame::binary");
-        Frame { ty, id, body, bin: Vec::new() }
+        Frame { ty, id, session: 0, body, bin: Vec::new() }
     }
 
-    /// A binary-bodied v2 tensor frame.
+    /// A binary-bodied v2 tensor frame, on the default session.
     pub fn binary(ty: FrameType, id: u64, bin: Vec<u8>) -> Frame {
         debug_assert!(ty.is_binary(), "JSON frame types take Frame::new");
-        Frame { ty, id, body: Json::Null, bin }
+        Frame { ty, id, session: 0, body: Json::Null, bin }
+    }
+
+    /// Tag this frame with a v3 logical-session id.
+    pub fn with_session(mut self, session: u32) -> Frame {
+        self.session = session;
+        self
     }
 }
 
@@ -207,10 +253,25 @@ impl std::fmt::Display for DecodeError {
 
 impl std::error::Error for DecodeError {}
 
-/// Serialize one frame. An empty/`null` body is written as zero bytes;
-/// binary frame types write their `bin` payload verbatim (no
-/// per-element formatting anywhere on the v2 path).
+/// Serialize one frame in the v1/v2 header layout (no session field;
+/// the frame's `session` must be 0 — v1/v2 cannot express another). An
+/// empty/`null` body is written as zero bytes; binary frame types write
+/// their `bin` payload verbatim (no per-element formatting anywhere on
+/// the v2 path).
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    write_frame_v(w, frame, 1)
+}
+
+/// Serialize one frame in the header layout of negotiated version
+/// `proto`: v3 inserts the `session:u32` (big-endian) between `type`
+/// and `id`; v1/v2 omit it (and a nonzero session on a v1/v2 frame is
+/// a caller bug — debug-asserted, silently dropped in release).
+pub fn write_frame_v<W: Write>(w: &mut W, frame: &Frame, proto: u64) -> std::io::Result<()> {
+    debug_assert!(
+        proto >= 3 || frame.session == 0,
+        "a v{proto} header cannot carry session {}",
+        frame.session
+    );
     let json_body;
     let body: &[u8] = if frame.ty.is_binary() {
         &frame.bin
@@ -221,55 +282,112 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
         };
         json_body.as_bytes()
     };
-    let len = (HEADER_AFTER_LEN + body.len()) as u32;
+    let len = (header_after_len(proto) + body.len()) as u32;
     w.write_all(&len.to_be_bytes())?;
     w.write_all(&[frame.ty.code()])?;
+    if proto >= 3 {
+        w.write_all(&frame.session.to_be_bytes())?;
+    }
     w.write_all(&frame.id.to_be_bytes())?;
     w.write_all(body)
 }
 
-/// Read one frame. Distinguishes a clean EOF at a frame boundary
-/// ([`DecodeError::Eof`]) from a truncation mid-frame (malformed).
-/// Never panics on hostile input: unknown types, oversized length
-/// prefixes, bad UTF-8 and bad JSON all come back as
-/// [`DecodeError::Malformed`].
+/// Read one frame in the v1/v2 header layout. Distinguishes a clean
+/// EOF at a frame boundary ([`DecodeError::Eof`]) from a truncation
+/// mid-frame (malformed). Never panics on hostile input: unknown
+/// types, oversized length prefixes, bad UTF-8 and bad JSON all come
+/// back as [`DecodeError::Malformed`].
 pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<Frame, DecodeError> {
+    read_frame_v(r, 1)
+}
+
+/// [`read_frame`] in the header layout of negotiated version `proto`
+/// (v3 reads the `session:u32` field; v1/v2 decode it as 0).
+pub fn read_frame_v<R: Read>(r: &mut R, proto: u64) -> std::result::Result<Frame, DecodeError> {
     let mut len_buf = [0u8; 4];
     read_exact_or_eof(r, &mut len_buf)?;
     let len = u32::from_be_bytes(len_buf) as usize;
-    if len < HEADER_AFTER_LEN {
+    let header = header_after_len(proto);
+    if len < header {
         return Err(DecodeError::Malformed(format!(
-            "frame length {len} shorter than the {HEADER_AFTER_LEN}-byte header"
+            "frame length {len} shorter than the {header}-byte header"
         )));
     }
-    let body_len = len - HEADER_AFTER_LEN;
+    let body_len = len - header;
     if body_len > MAX_BODY_BYTES {
         return Err(DecodeError::Malformed(format!(
             "frame body of {body_len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
         )));
     }
-    let mut head = [0u8; HEADER_AFTER_LEN];
-    read_exact_mid_frame(r, &mut head)?;
-    let ty = FrameType::from_code(head[0])
-        .ok_or_else(|| DecodeError::Malformed(format!("unknown frame type {}", head[0])))?;
-    let id = u64::from_be_bytes(head[1..9].try_into().expect("8-byte slice"));
-    let mut body_bytes = vec![0u8; body_len];
-    read_exact_mid_frame(r, &mut body_bytes)?;
+    let mut payload = vec![0u8; len];
+    read_exact_mid_frame(r, &mut payload)?;
+    parse_frame_payload(&payload, proto)
+}
+
+/// Decode the bytes after a frame's length prefix (header fields +
+/// body) under the `proto` header layout. Shared by the blocking
+/// reader ([`read_frame_v`]) and the event loop's incremental decoder
+/// ([`frame_from_slice`]); `payload.len()` has already been validated
+/// against the header size and [`MAX_BODY_BYTES`].
+fn parse_frame_payload(payload: &[u8], proto: u64) -> std::result::Result<Frame, DecodeError> {
+    let ty = FrameType::from_code(payload[0])
+        .ok_or_else(|| DecodeError::Malformed(format!("unknown frame type {}", payload[0])))?;
+    let (session, id_at) = if proto >= 3 {
+        (u32::from_be_bytes(payload[1..5].try_into().expect("4-byte slice")), 5)
+    } else {
+        (0, 1)
+    };
+    let id = u64::from_be_bytes(payload[id_at..id_at + 8].try_into().expect("8-byte slice"));
+    let body_bytes = &payload[id_at + 8..];
     if ty.is_binary() {
         // v2 tensor frames: the payload stays raw; the message-level
         // decoders (decode_request_bin / decode_response_bin) validate
         // it with the same clean-error contract
-        return Ok(Frame { ty, id, body: Json::Null, bin: body_bytes });
+        return Ok(Frame { ty, id, session, body: Json::Null, bin: body_bytes.to_vec() });
     }
     let body = if body_bytes.is_empty() {
         Json::Null
     } else {
-        let text = std::str::from_utf8(&body_bytes)
+        let text = std::str::from_utf8(body_bytes)
             .map_err(|e| DecodeError::Malformed(format!("body is not UTF-8: {e}")))?;
         crate::util::json::parse(text)
             .map_err(|e| DecodeError::Malformed(format!("body is not JSON: {e}")))?
     };
-    Ok(Frame { ty, id, body, bin: Vec::new() })
+    Ok(Frame { ty, id, session, body, bin: Vec::new() })
+}
+
+/// Incremental decode for a non-blocking read buffer: `Ok(None)` means
+/// the buffer holds less than one whole frame (read more bytes and
+/// retry — never an error), `Ok(Some((frame, consumed)))` hands back
+/// one decoded frame and how many bytes it occupied, and
+/// `Err(Malformed)` means the stream can no longer be trusted. This is
+/// the event-loop server's decoder: nothing here blocks, and hostile
+/// bytes keep the no-panic contract of [`read_frame`].
+pub fn frame_from_slice(
+    buf: &[u8],
+    proto: u64,
+) -> std::result::Result<Option<(Frame, usize)>, DecodeError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes(buf[..4].try_into().expect("4-byte slice")) as usize;
+    let header = header_after_len(proto);
+    if len < header {
+        return Err(DecodeError::Malformed(format!(
+            "frame length {len} shorter than the {header}-byte header"
+        )));
+    }
+    if len - header > MAX_BODY_BYTES {
+        return Err(DecodeError::Malformed(format!(
+            "frame body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap",
+            len - header
+        )));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let frame = parse_frame_payload(&buf[4..4 + len], proto)?;
+    Ok(Some((frame, 4 + len)))
 }
 
 /// Fill `buf`, treating 0 bytes at the first read as a clean EOF.
@@ -1148,6 +1266,18 @@ pub fn encode_summary(s: &ServeSummary) -> Json {
                 None => Json::Null,
             },
         ),
+        (
+            "net",
+            match s.shards.as_ref().and_then(|rs| rs.net.as_ref()) {
+                Some(g) => obj(vec![
+                    ("active_connections", ju64(g.active_connections)),
+                    ("active_sessions", ju64(g.active_sessions)),
+                    ("bytes_in", ju64(g.bytes_in)),
+                    ("bytes_out", ju64(g.bytes_out)),
+                ]),
+                None => Json::Null,
+            },
+        ),
         ("wall_seconds", Json::Num(s.wall_seconds)),
         ("throughput_rps", Json::Num(s.throughput_rps)),
         ("total_sim_cycles", ju64(s.total_sim_cycles)),
@@ -1156,13 +1286,23 @@ pub fn encode_summary(s: &ServeSummary) -> Json {
 }
 
 pub fn decode_summary(j: &Json) -> Result<ServeSummary> {
-    let shards = match j.get("shards") {
+    let mut shards = match j.get("shards") {
         None | Some(Json::Null) => None,
         Some(Json::Arr(items)) => Some(RackSnapshot::from_shards(
             items.iter().map(decode_shard_telemetry).collect::<Result<_>>()?,
         )),
         Some(_) => bail!("shards is neither null nor an array"),
     };
+    // Optional network gauges (absent/null from pre-v3 or in-process
+    // summaries — tolerated for compatibility in both directions).
+    if let (Some(rs), Some(g @ Json::Obj(_))) = (shards.as_mut(), j.get("net")) {
+        rs.net = Some(NetGauges {
+            active_connections: get_u64(g, "active_connections")?,
+            active_sessions: get_u64(g, "active_sessions")?,
+            bytes_in: get_u64(g, "bytes_in")?,
+            bytes_out: get_u64(g, "bytes_out")?,
+        });
+    }
     Ok(ServeSummary {
         requests: get_u64(j, "requests")?,
         functional: get_u64(j, "functional")?,
@@ -1580,5 +1720,136 @@ mod tests {
         ]);
         let err = decode_schedule(&sched).unwrap_err().to_string();
         assert!(err.contains("lane_rows"), "names the offending field: {err}");
+    }
+
+    fn round_trip_v(frame: &Frame, proto: u64) -> Frame {
+        let mut buf = Vec::new();
+        write_frame_v(&mut buf, frame, proto).unwrap();
+        let mut r = &buf[..];
+        let out = read_frame_v(&mut r, proto).unwrap();
+        assert!(r.is_empty(), "decoder consumed the exact frame");
+        out
+    }
+
+    #[test]
+    fn v3_frames_round_trip_with_their_session_field() {
+        for (ty, session, id) in [
+            (FrameType::Submit, 0u32, 7u64),
+            (FrameType::Submit, 1, 8),
+            (FrameType::Response, u32::MAX, 9),
+            (FrameType::OpenSession, 5, 0),
+            (FrameType::SessionClosed, 5, 0),
+            (FrameType::Drained, 3, 0),
+            (FrameType::Busy, 2, u64::MAX),
+        ] {
+            let f = Frame::new(ty, id, Json::Null).with_session(session);
+            let back = round_trip_v(&f, 3);
+            assert_eq!(back.session, session);
+            assert_eq!(back, f);
+        }
+        // binary frames carry the session field too
+        let f = Frame::binary(FrameType::SubmitBin, 11, vec![1, 2, 3]).with_session(42);
+        assert_eq!(round_trip_v(&f, 3), f);
+    }
+
+    #[test]
+    fn v1_and_v3_header_layouts_differ_by_exactly_the_session_field() {
+        let f = Frame::new(FrameType::Drained, 9, Json::Null);
+        let (mut v1, mut v3) = (Vec::new(), Vec::new());
+        write_frame_v(&mut v1, &f, 1).unwrap();
+        write_frame_v(&mut v3, &f, 3).unwrap();
+        assert_eq!(v3.len(), v1.len() + 4, "v3 adds a 4-byte session field");
+        // len prefix reflects the longer header
+        assert_eq!(
+            u32::from_be_bytes(v3[..4].try_into().unwrap()),
+            u32::from_be_bytes(v1[..4].try_into().unwrap()) + 4
+        );
+        // type byte in the same place; session zero sits between it and
+        // the id, which is bitwise identical after the shift
+        assert_eq!(v1[4], v3[4]);
+        assert_eq!(&v3[5..9], &[0u8; 4], "session 0");
+        assert_eq!(&v1[5..13], &v3[9..17], "id bytes shifted by the session field");
+        // a v1-layout frame read as v3 misparses into a clean error or a
+        // different frame — never a panic (here: 9-byte header claims
+        // less than the 13 bytes a v3 header needs)
+        assert!(matches!(read_frame_v(&mut &v1[..], 3), Err(DecodeError::Malformed(_))));
+        // writing a nonzero session needs a v3 connection: the v1/v2
+        // layouts simply have no place for it
+        let s = Frame::new(FrameType::Submit, 1, Json::Null).with_session(7);
+        let mut buf = Vec::new();
+        write_frame_v(&mut buf, &s, 3).unwrap();
+        let back = read_frame_v(&mut &buf[..], 3).unwrap();
+        assert_eq!(back.session, 7);
+    }
+
+    #[test]
+    fn frame_from_slice_decodes_incrementally_and_agrees_with_read_frame() {
+        for proto in [1u64, 2, 3] {
+            let frames = [
+                Frame::new(FrameType::Hello, 0, client_hello()),
+                Frame::binary(FrameType::SubmitBin, 7, vec![9u8; 100])
+                    .with_session(if proto >= 3 { 3 } else { 0 }),
+                Frame::new(FrameType::Drained, 0, drained_body(2)),
+            ];
+            let mut wire = Vec::new();
+            for f in &frames {
+                write_frame_v(&mut wire, f, proto).unwrap();
+            }
+            // whole-buffer walk consumes frame-for-frame
+            let mut off = 0;
+            for f in &frames {
+                let (got, used) = frame_from_slice(&wire[off..], proto).unwrap().unwrap();
+                assert_eq!(&got, f);
+                let mut r = &wire[off..off + used];
+                assert_eq!(read_frame_v(&mut r, proto).unwrap(), *f, "agrees with read_frame_v");
+                off += used;
+            }
+            assert_eq!(off, wire.len());
+            // every strict prefix of the first frame is "incomplete",
+            // never an error or a panic
+            let first_len = {
+                let (_, used) = frame_from_slice(&wire, proto).unwrap().unwrap();
+                used
+            };
+            for cut in 0..first_len {
+                assert!(
+                    frame_from_slice(&wire[..cut], proto).unwrap().is_none(),
+                    "prefix of {cut} bytes is incomplete, not an error"
+                );
+            }
+        }
+        // the oversized-length guard fires from the prefix alone,
+        // without waiting for the (never-arriving) body
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(((MAX_BODY_BYTES + HEADER_AFTER_LEN_V3) as u32) + 1).to_be_bytes());
+        huge.push(FrameType::Submit.code());
+        assert!(matches!(frame_from_slice(&huge, 3), Err(DecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn summary_net_gauges_round_trip_and_stay_optional() {
+        use crate::coordinator::CoalesceConfig;
+        use crate::serve::{mixed_stream, run_stream_rack, soft_rack};
+        let rack = soft_rack(
+            vec![crate::GtaConfig::with_lanes(4)],
+            CoalesceConfig::default(),
+            crate::coordinator::rack::policy_by_name("rr").unwrap(),
+        )
+        .unwrap();
+        let (reqs, expected) = mixed_stream(4);
+        let mut summary = run_stream_rack(&rack, reqs, &expected, 2);
+        // absent gauges stay absent through the codec
+        let back = decode_summary(&encode_summary(&summary)).unwrap();
+        assert!(back.shards.unwrap().net.is_none());
+        // attached gauges round-trip exactly
+        let gauges = crate::coordinator::NetGauges {
+            active_connections: 3,
+            active_sessions: 1000,
+            bytes_in: u64::MAX,
+            bytes_out: 1 << 40,
+        };
+        summary.shards.as_mut().unwrap().net = Some(gauges);
+        let back = decode_summary(&encode_summary(&summary)).unwrap();
+        assert_eq!(back.shards.unwrap().net, Some(gauges));
     }
 }

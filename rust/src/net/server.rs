@@ -25,15 +25,21 @@
 //! the final [`crate::serve::ServeSummary`] (with its `RackSnapshot`)
 //! travels back in the `Closed` frame. See `docs/transport.md`.
 
+use super::poll::{poll_wait, PollFd, Waker, POLL_IN, POLL_OUT};
 use super::proto::{
-    busy_body, drained_body, error_body, error_message, negotiate, read_frame, server_hello,
-    write_frame, DecodeError, Frame, FrameType, MIN_PROTO_VERSION, PROTO_VERSION,
+    busy_body, drained_body, error_body, error_message, frame_from_slice, negotiate, read_frame,
+    read_frame_v, server_hello, write_frame, write_frame_v, DecodeError, Frame, FrameType,
+    MIN_PROTO_VERSION, PROTO_VERSION,
 };
-use crate::coordinator::{AdmitError, Rack, RackSession, Response, ServeOptions, SubmitError};
+use crate::coordinator::{
+    AdmissionPolicy, AdmitError, NetGauges, Rack, RackSession, Response, ServeOptions, SubmitError,
+    WorkerPool,
+};
 use crate::util::json::Json;
-use std::io::{BufReader, BufWriter, Write};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -59,23 +65,28 @@ fn lock_writer(w: &SharedWriter) -> std::io::Result<std::sync::MutexGuard<'_, Bu
     })
 }
 
-fn send_frame(w: &SharedWriter, ty: FrameType, id: u64, body: Json) -> std::io::Result<()> {
+fn send_frame(w: &SharedWriter, proto: u64, ty: FrameType, id: u64, body: Json) -> std::io::Result<()> {
     let mut guard = lock_writer(w)?;
-    write_frame(&mut *guard, &Frame::new(ty, id, body))?;
+    write_frame_v(&mut *guard, &Frame::new(ty, id, body), proto)?;
     guard.flush()
 }
 
-/// Send one completed [`Response`] in the connection's negotiated
-/// encoding: a binary `ResponseBin` frame on v2, the v1 JSON
+/// Build the [`Response`] frame for the connection's negotiated
+/// encoding: a binary `ResponseBin` frame on ≥v2, the v1 JSON
 /// `Response` frame otherwise.
-fn send_response(w: &SharedWriter, proto: u64, resp: &Response) -> std::io::Result<()> {
+fn response_frame(proto: u64, session: u32, resp: &Response) -> Frame {
     let frame = if proto >= 2 {
         Frame::binary(FrameType::ResponseBin, resp.id, super::proto::encode_response_bin(resp))
     } else {
         Frame::new(FrameType::Response, resp.id, super::proto::encode_response(resp))
     };
+    frame.with_session(session)
+}
+
+fn send_response(w: &SharedWriter, proto: u64, resp: &Response) -> std::io::Result<()> {
+    let frame = response_frame(proto, 0, resp);
     let mut guard = lock_writer(w)?;
-    write_frame(&mut *guard, &frame)?;
+    write_frame_v(&mut *guard, &frame, proto)?;
     guard.flush()
 }
 
@@ -241,6 +252,7 @@ fn handle_connection(
                 None => {
                     let _ = send_frame(
                         &writer,
+                        1,
                         FrameType::Error,
                         0,
                         error_body(
@@ -259,6 +271,7 @@ fn handle_connection(
         Ok(f) => {
             let _ = send_frame(
                 &writer,
+                1,
                 FrameType::Error,
                 0,
                 error_body(&format!("expected Hello, got {:?}", f.ty), true),
@@ -267,12 +280,15 @@ fn handle_connection(
             return Ok(());
         }
         Err(e) => {
-            let _ = send_frame(&writer, FrameType::Error, 0, error_body(&e.to_string(), true));
+            let _ = send_frame(&writer, 1, FrameType::Error, 0, error_body(&e.to_string(), true));
             let _ = stream.shutdown(Shutdown::Both);
             return Ok(());
         }
     };
-    send_frame(&writer, FrameType::Hello, 0, server_hello(proto, rack.len(), rack.policy_name()))?;
+    // the Hello exchange always travels in the v1 header layout (the
+    // version is unknown until it completes); both sides switch to the
+    // negotiated layout from the NEXT frame on
+    send_frame(&writer, 1, FrameType::Hello, 0, server_hello(proto, rack.len(), rack.policy_name()))?;
 
     let session: Arc<RackSession> = Arc::new(rack.open_session(opts));
 
@@ -308,6 +324,7 @@ fn handle_connection(
             eprintln!("gta-net: egress pump spawn failed (closing connection): {e}");
             let _ = send_frame(
                 &writer,
+                proto,
                 FrameType::Error,
                 0,
                 error_body(
@@ -343,7 +360,7 @@ fn handle_connection(
 
     // ---- ingest loop: this thread owns the socket's read side
     let exit = loop {
-        match read_frame(&mut reader) {
+        match read_frame_v(&mut reader, proto) {
             Ok(f) => match f.ty {
                 FrameType::Submit | FrameType::SubmitBin => {
                     if f.ty == FrameType::SubmitBin && proto < 2 {
@@ -364,7 +381,7 @@ fn handle_connection(
                         Ok(req) => match session.try_submit(req) {
                             Ok(_ticket) => {}
                             Err(SubmitError { id, shard, error: AdmitError::Busy }) => {
-                                if send_frame(&writer, FrameType::Busy, id, busy_body(shard))
+                                if send_frame(&writer, proto, FrameType::Busy, id, busy_body(shard))
                                     .is_err()
                                 {
                                     break Exit::Disconnect;
@@ -372,7 +389,7 @@ fn handle_connection(
                             }
                             Err(SubmitError { id, error: AdmitError::Closed, .. }) => {
                                 let body = error_body("session closed (drained)", false);
-                                if send_frame(&writer, FrameType::Error, id, body).is_err() {
+                                if send_frame(&writer, proto, FrameType::Error, id, body).is_err() {
                                     break Exit::Disconnect;
                                 }
                             }
@@ -383,7 +400,9 @@ fn handle_connection(
                 FrameType::Drained => {
                     // drain request: finish everything, flush it, ack
                     let returned = drain_to_wire(&mut pump);
-                    if send_frame(&writer, FrameType::Drained, 0, drained_body(returned)).is_err() {
+                    if send_frame(&writer, proto, FrameType::Drained, 0, drained_body(returned))
+                        .is_err()
+                    {
                         break Exit::Disconnect;
                     }
                     // the session is closed now; later Submits get
@@ -394,6 +413,13 @@ fn handle_connection(
                     // client-side abort: log-free silent cleanup
                     let _ = error_message(&f.body);
                     break Exit::Disconnect;
+                }
+                FrameType::OpenSession | FrameType::SessionClosed => {
+                    break Exit::Fatal(
+                        "multiplexed sessions need the event-loop server \
+                         (gta serve --event-loop)"
+                            .into(),
+                    )
                 }
                 other => break Exit::Fatal(format!("unexpected {other:?} frame from a client")),
             },
@@ -410,6 +436,7 @@ fn handle_connection(
             let summary = session.close();
             let _ = send_frame(
                 &writer,
+                proto,
                 FrameType::Closed,
                 0,
                 super::proto::encode_summary(&summary),
@@ -420,11 +447,910 @@ fn handle_connection(
             let _ = session.close();
         }
         Exit::Fatal(message) => {
-            let _ = send_frame(&writer, FrameType::Error, 0, error_body(&message, true));
+            let _ = send_frame(&writer, proto, FrameType::Error, 0, error_body(&message, true));
             let _ = drain_to_wire(&mut pump);
             let _ = session.close();
         }
     }
     let _ = stream.shutdown(Shutdown::Both);
     Ok(())
+}
+
+// =====================================================================
+// Event-loop server: one poll(2) thread, connections as state machines.
+//
+// Where [`NetServer`] spends two OS threads per connection, the
+// [`EventServer`] drives EVERY connection from one thread over
+// non-blocking sockets: per-connection read buffers feed the
+// incremental frame decoder ([`frame_from_slice`]), per-connection
+// write queues carry encoded frames out with bounded backpressure, and
+// a fixed [`WorkerPool`] (sessions opened with
+// `Rack::open_session_on`) executes the actual work — so 10k live
+// connections cost 10k socket buffers, not 20k threads. Completions
+// re-enter the loop through the session notify hook
+// ([`RackSession::set_notify`]) + [`Waker`]: the loop never parks in
+// `recv_timeout`.
+//
+// On a ≥v3 connection one socket multiplexes many logical sessions
+// (`OpenSession`/`SessionClosed`, the `session` header field); v1/v2
+// peers get the exact single-session behavior of the threaded server.
+
+/// Encoded-but-unsent bytes a connection may buffer before the loop
+/// stops pumping completions for it (they wait in the session's
+/// completion channel instead — bounded by the admission queue).
+const MAX_WRITE_BUF: usize = 4 << 20;
+
+/// Per-iteration poll timeout: a pure safety net (every state change
+/// arrives via an fd or the waker), kept finite so a lost wakeup can
+/// only ever cost one tick, not a hang.
+const POLL_TICK_MS: i32 = 100;
+
+/// Default cap on concurrent connections (`gta serve --max-conns`).
+pub const DEFAULT_MAX_CONNS: usize = 16_384;
+
+#[cfg(unix)]
+fn raw_fd<T: std::os::unix::io::AsRawFd>(s: &T) -> i32 {
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd<T>(_s: &T) -> i32 {
+    -1
+}
+
+/// Live counters the event server maintains; [`NetStats::gauges`]
+/// freezes them into the [`NetGauges`] that ride in `RackSnapshot`s.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    active_connections: AtomicU64,
+    active_sessions: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl NetStats {
+    pub fn gauges(&self) -> NetGauges {
+        NetGauges {
+            active_connections: self.active_connections.load(Ordering::Relaxed),
+            active_sessions: self.active_sessions.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Lifecycle of one logical session on a connection.
+enum SlotState {
+    Open,
+    /// `Drained` requested: ack (and return to `Open`) once idle.
+    Draining,
+    /// Summary-bearing close requested (`SessionClosed`, or the
+    /// connection-level `Closed` for session 0): answer once idle.
+    Goodbye,
+    /// Close quietly once idle (disconnect/fatal teardown, or a
+    /// non-zero session at connection close) — work still completes
+    /// and folds into rack metrics; no ack frame.
+    Folding,
+}
+
+struct Slot {
+    session: Arc<RackSession>,
+    state: SlotState,
+    /// Responses sent for this session since its `Drained` request —
+    /// the count the ack reports.
+    drain_returned: u64,
+}
+
+/// Connection state machine: handshake → open → draining → closed.
+enum ConnPhase {
+    /// Before the `Hello` exchange (frames travel in the v1 layout).
+    Handshake,
+    /// Negotiated and serving.
+    Open,
+    /// Tearing down: sessions are sealed and finishing. `graceful` =
+    /// the client asked (`Closed` frame — responses and the final
+    /// summary still go out); otherwise disconnect/protocol violation
+    /// (completions are consumed and folded, not sent).
+    Draining { graceful: bool },
+    /// Goodbye queued; flush the write queue, then drop.
+    Closed,
+}
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    phase: ConnPhase,
+    /// Negotiated protocol version (valid once phase leaves Handshake).
+    proto: u64,
+    /// Received-but-unparsed bytes.
+    rbuf: Vec<u8>,
+    /// Encoded frames waiting for the socket, plus the write offset
+    /// into the front one and the total buffered byte count.
+    wq: std::collections::VecDeque<Vec<u8>>,
+    wq_off: usize,
+    wq_bytes: usize,
+    sessions: HashMap<u32, Slot>,
+    /// Read interest dropped: the head-of-buffer `Submit` hit a full
+    /// `Block`-policy queue. Cleared (and the buffer re-parsed) when
+    /// completions free capacity.
+    paused: bool,
+    /// Completion pumping stopped at [`MAX_WRITE_BUF`]; resume when
+    /// the write queue drains.
+    pump_stalled: bool,
+    /// The write side failed or the peer vanished: queue nothing more.
+    dead_write: bool,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+impl Conn {
+    fn new(id: u64, stream: TcpStream) -> Conn {
+        Conn {
+            id,
+            stream,
+            phase: ConnPhase::Handshake,
+            proto: 1,
+            rbuf: Vec::new(),
+            wq: std::collections::VecDeque::new(),
+            wq_off: 0,
+            wq_bytes: 0,
+            sessions: HashMap::new(),
+            paused: false,
+            pump_stalled: false,
+            dead_write: false,
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    /// The header layout frames on this connection travel in right now:
+    /// v1 until the `Hello` exchange completes, the negotiated version
+    /// after.
+    fn wire_proto(&self) -> u64 {
+        if matches!(self.phase, ConnPhase::Handshake) {
+            1
+        } else {
+            self.proto
+        }
+    }
+
+    fn push_frame(&mut self, frame: &Frame) {
+        if self.dead_write {
+            return;
+        }
+        let mut bytes = Vec::new();
+        write_frame_v(&mut bytes, frame, self.wire_proto()).expect("encoding to a Vec cannot fail");
+        self.wq_bytes += bytes.len();
+        self.wq.push_back(bytes);
+    }
+
+    fn write_backlogged(&self) -> bool {
+        self.wq_bytes > MAX_WRITE_BUF
+    }
+
+    /// Whether completions still go to the wire (vs. consumed and
+    /// folded into metrics only).
+    fn forwarding(&self) -> bool {
+        !self.dead_write && !matches!(self.phase, ConnPhase::Draining { graceful: false })
+    }
+
+    /// Write queued bytes until the socket would block or the queue
+    /// empties. `Err` = the write side is gone.
+    fn flush_writes(&mut self, stats: &NetStats) -> std::io::Result<()> {
+        loop {
+            let (len, n) = {
+                let Some(front) = self.wq.front() else { break };
+                match (&self.stream).write(&front[self.wq_off..]) {
+                    Ok(0) => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::WriteZero,
+                            "socket accepted 0 bytes",
+                        ))
+                    }
+                    Ok(n) => (front.len(), n),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            self.wq_off += n;
+            self.bytes_out += n as u64;
+            stats.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+            if self.wq_off == len {
+                let done = self.wq.pop_front().expect("front frame exists");
+                self.wq_bytes -= done.len();
+                self.wq_off = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read available bytes into the parse buffer. `Ok(true)` = EOF or
+    /// a transport error (the peer is gone).
+    fn read_available(&mut self, stats: &NetStats) -> bool {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match (&self.stream).read(&mut chunk) {
+                Ok(0) => return true,
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    self.bytes_in += n as u64;
+                    stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                    // parse what we have before buffering more than the
+                    // biggest legal frame
+                    if self.rbuf.len() > super::proto::MAX_BODY_BYTES + 64 || n < chunk.len() {
+                        return false;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+}
+
+/// The event loop proper: owns every connection, runs on one thread.
+struct EvLoop {
+    rack: Arc<Rack>,
+    opts: ServeOptions,
+    max_proto: u64,
+    max_conns: usize,
+    pool: Arc<WorkerPool>,
+    listener: TcpListener,
+    waker: Arc<Waker>,
+    /// (connection, session) pairs with completions to pump, pushed by
+    /// worker notify callbacks.
+    dirty: Arc<Mutex<Vec<(u64, u32)>>>,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    conns: HashMap<u64, Conn>,
+    next_conn_id: u64,
+}
+
+impl EvLoop {
+    fn run(mut self) {
+        while !self.stop.load(Ordering::Relaxed) {
+            // ---- build the poll set (rebuilt per iteration: simple,
+            // and O(conns) is what this loop is everywhere else too)
+            let mut fds = Vec::with_capacity(self.conns.len() + 2);
+            fds.push(PollFd::new(raw_fd(&self.listener), POLL_IN));
+            let waker_slot = self.waker.fd().map(|fd| {
+                fds.push(PollFd::new(fd, POLL_IN));
+                fds.len() - 1
+            });
+            let mut slots: Vec<(usize, u64)> = Vec::with_capacity(self.conns.len());
+            for (id, c) in &self.conns {
+                let mut ev = 0i16;
+                if !c.paused && !matches!(c.phase, ConnPhase::Closed) {
+                    ev |= POLL_IN;
+                }
+                if !c.wq.is_empty() && !c.dead_write {
+                    ev |= POLL_OUT;
+                }
+                if ev != 0 {
+                    fds.push(PollFd::new(raw_fd(&c.stream), ev));
+                    slots.push((fds.len() - 1, *id));
+                }
+            }
+            let _ = poll_wait(&mut fds, POLL_TICK_MS);
+            self.waker.drain();
+            let _ = waker_slot;
+            if self.stop.load(Ordering::Relaxed) {
+                break;
+            }
+
+            // ---- accept
+            if fds[0].readable() {
+                self.accept_ready();
+            }
+
+            // ---- socket reads -> parse -> submit/control
+            let readable: Vec<u64> =
+                slots.iter().filter(|(i, _)| fds[*i].readable()).map(|(_, id)| *id).collect();
+            for id in readable {
+                self.service_read(id);
+            }
+
+            // ---- completions -> response frames
+            let mut dirty: Vec<(u64, u32)> = self.dirty.lock().unwrap().drain(..).collect();
+            dirty.sort_unstable();
+            dirty.dedup();
+            for (cid, sid) in dirty {
+                self.with_conn(cid, |lp, conn| {
+                    lp.pump_slot(conn, sid);
+                });
+            }
+
+            // ---- retry Block-policy-paused connections (completions
+            // may have freed admission capacity)
+            let paused: Vec<u64> =
+                self.conns.iter().filter(|(_, c)| c.paused).map(|(id, _)| *id).collect();
+            for id in paused {
+                self.with_conn(id, |lp, conn| {
+                    conn.paused = false;
+                    lp.parse_buffer(conn);
+                });
+            }
+
+            // ---- flush writes; resume backlog-stalled pumping
+            let writable: Vec<u64> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| !c.wq.is_empty() && !c.dead_write)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in writable {
+                self.with_conn(id, |lp, conn| {
+                    if conn.flush_writes(&lp.stats).is_err() {
+                        lp.begin_disconnect(conn);
+                    } else if conn.pump_stalled && !conn.write_backlogged() {
+                        conn.pump_stalled = false;
+                        let sids: Vec<u32> = conn.sessions.keys().copied().collect();
+                        for sid in sids {
+                            lp.pump_slot(conn, sid);
+                        }
+                    }
+                });
+            }
+
+            // ---- reap finished connections
+            self.reap();
+        }
+        self.shutdown_all();
+        self.pool.shutdown();
+    }
+
+    /// Run `f` on one connection with the loop context borrowable too
+    /// (the conn is temporarily taken out of the map).
+    fn with_conn(&mut self, id: u64, f: impl FnOnce(&mut EvLoop, &mut Conn)) {
+        if let Some(mut conn) = self.conns.remove(&id) {
+            f(self, &mut conn);
+            self.conns.insert(id, conn);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.conns.len() >= self.max_conns {
+                        // explicit refusal beats a silent backlog stall
+                        let frame = Frame::new(
+                            FrameType::Error,
+                            0,
+                            error_body("server at connection capacity; retry later", true),
+                        );
+                        let mut bytes = Vec::new();
+                        let _ = write_frame(&mut bytes, &frame);
+                        let _ = (&stream).write_all(&bytes);
+                        let _ = stream.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let id = self.next_conn_id;
+                    self.next_conn_id += 1;
+                    self.conns.insert(id, Conn::new(id, stream));
+                    self.stats.active_connections.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn service_read(&mut self, id: u64) {
+        self.with_conn(id, |lp, conn| {
+            let gone = conn.read_available(&lp.stats);
+            lp.parse_buffer(conn);
+            if gone && !matches!(conn.phase, ConnPhase::Draining { .. } | ConnPhase::Closed) {
+                lp.begin_disconnect(conn);
+            }
+        });
+    }
+
+    /// Decode and handle every complete frame in the read buffer.
+    /// Stops early (without consuming) when a `Block`-policy admission
+    /// queue is full — that pause, plus TCP flow control filling up
+    /// behind the unread socket, IS the backpressure.
+    fn parse_buffer(&mut self, conn: &mut Conn) {
+        let mut consumed = 0usize;
+        let fatal: Option<String> = loop {
+            if !matches!(conn.phase, ConnPhase::Handshake | ConnPhase::Open) {
+                break None;
+            }
+            match frame_from_slice(&conn.rbuf[consumed..], conn.wire_proto()) {
+                Ok(None) => break None,
+                Ok(Some((frame, used))) => {
+                    if self.must_pause(conn, &frame) {
+                        conn.paused = true;
+                        break None;
+                    }
+                    consumed += used;
+                    if let Err(m) = self.handle_frame(conn, frame) {
+                        break Some(m);
+                    }
+                }
+                Err(e) => break Some(e.to_string()),
+            }
+        };
+        if consumed > 0 {
+            conn.rbuf.drain(..consumed);
+        }
+        if let Some(message) = fatal {
+            self.begin_fatal(conn, &message);
+        }
+    }
+
+    /// `Block`-policy backpressure gate: a `Submit` whose session queue
+    /// is at capacity must NOT be consumed yet. The loop is each
+    /// session's only submitter, so depth can only fall concurrently —
+    /// checking before the submit can never deadlock.
+    fn must_pause(&self, conn: &Conn, frame: &Frame) -> bool {
+        if !matches!(self.opts.policy, AdmissionPolicy::Block) {
+            return false;
+        }
+        if !matches!(frame.ty, FrameType::Submit | FrameType::SubmitBin) {
+            return false;
+        }
+        match conn.sessions.get(&frame.session) {
+            Some(slot) => !slot.session.is_closed() && !slot.session.has_capacity(),
+            None => false,
+        }
+    }
+
+    /// Handle one decoded frame. `Err` = fatal protocol violation.
+    fn handle_frame(&mut self, conn: &mut Conn, f: Frame) -> Result<(), String> {
+        if matches!(conn.phase, ConnPhase::Handshake) {
+            return self.handle_hello(conn, f);
+        }
+        match f.ty {
+            FrameType::Submit | FrameType::SubmitBin => {
+                if f.ty == FrameType::SubmitBin && conn.proto < 2 {
+                    return Err(format!(
+                        "binary Submit on a v{} connection (negotiate v2 first)",
+                        conn.proto
+                    ));
+                }
+                let sid = f.session;
+                let Some(slot) = conn.sessions.get(&sid) else {
+                    // per-request, non-fatal: the stream is still
+                    // well-framed, the client just named a session
+                    // this connection never opened
+                    let body = error_body(&format!("unknown session {sid}"), false);
+                    conn.push_frame(&Frame::new(FrameType::Error, f.id, body).with_session(sid));
+                    return Ok(());
+                };
+                let session = Arc::clone(&slot.session);
+                let decoded = if f.ty == FrameType::SubmitBin {
+                    super::proto::decode_request_bin(f.id, &f.bin)
+                } else {
+                    super::proto::decode_request(&f.body).map(|mut req| {
+                        req.id = f.id; // the header id is authoritative
+                        req
+                    })
+                };
+                let req = match decoded {
+                    Ok(req) => req,
+                    Err(e) => return Err(format!("undecodable request body: {e:#}")),
+                };
+                match session.try_submit(req) {
+                    Ok(_ticket) => {}
+                    Err(SubmitError { id, shard, error: AdmitError::Busy }) => {
+                        conn.push_frame(
+                            &Frame::new(FrameType::Busy, id, busy_body(shard)).with_session(sid),
+                        );
+                    }
+                    Err(SubmitError { id, error: AdmitError::Closed, .. }) => {
+                        let body = error_body("session closed (drained)", false);
+                        conn.push_frame(&Frame::new(FrameType::Error, id, body).with_session(sid));
+                    }
+                }
+                Ok(())
+            }
+            FrameType::OpenSession => {
+                if conn.proto < 3 {
+                    return Err(format!(
+                        "OpenSession on a v{} connection (multiplexing needs v3)",
+                        conn.proto
+                    ));
+                }
+                let sid = f.session;
+                if sid == 0 {
+                    return Err("OpenSession with session 0 \
+                         (reserved for the connection's default session)"
+                        .into());
+                }
+                if conn.sessions.contains_key(&sid) {
+                    return Err(format!("session {sid} is already open"));
+                }
+                self.open_slot(conn, sid);
+                conn.push_frame(&Frame::new(FrameType::OpenSession, 0, Json::Null).with_session(sid));
+                Ok(())
+            }
+            FrameType::SessionClosed => {
+                if conn.proto < 3 {
+                    return Err(format!(
+                        "SessionClosed on a v{} connection (multiplexing needs v3)",
+                        conn.proto
+                    ));
+                }
+                let sid = f.session;
+                let Some(slot) = conn.sessions.get_mut(&sid) else {
+                    return Err(format!("SessionClosed for unknown session {sid}"));
+                };
+                slot.session.seal();
+                slot.state = SlotState::Goodbye;
+                self.try_finish_slot(conn, sid);
+                Ok(())
+            }
+            FrameType::Drained => {
+                let sid = f.session;
+                let Some(slot) = conn.sessions.get_mut(&sid) else {
+                    return Err(format!("Drained for unknown session {sid}"));
+                };
+                slot.session.seal();
+                slot.state = SlotState::Draining;
+                slot.drain_returned = 0;
+                self.try_finish_slot(conn, sid);
+                Ok(())
+            }
+            FrameType::Closed => {
+                for (sid, slot) in conn.sessions.iter_mut() {
+                    slot.session.seal();
+                    slot.state = if *sid == 0 { SlotState::Goodbye } else { SlotState::Folding };
+                }
+                conn.phase = ConnPhase::Draining { graceful: true };
+                self.settle_conn(conn);
+                Ok(())
+            }
+            FrameType::Error => {
+                // client-side abort: silent cleanup
+                let _ = error_message(&f.body);
+                self.begin_disconnect(conn);
+                Ok(())
+            }
+            other => Err(format!("unexpected {other:?} frame from a client")),
+        }
+    }
+
+    fn handle_hello(&mut self, conn: &mut Conn, f: Frame) -> Result<(), String> {
+        if f.ty != FrameType::Hello {
+            return Err(format!("expected Hello, got {:?}", f.ty));
+        }
+        let max_proto = self.max_proto;
+        let Some(proto) =
+            super::proto::hello_proto(&f.body).and_then(|peer| negotiate(peer, max_proto))
+        else {
+            return Err(format!(
+                "unsupported protocol version (server speaks {MIN_PROTO_VERSION}..={max_proto})"
+            ));
+        };
+        // the Hello reply still travels in the v1 layout (pushed while
+        // the phase is Handshake); the NEXT frame switches layouts
+        conn.push_frame(&Frame::new(
+            FrameType::Hello,
+            0,
+            server_hello(proto, self.rack.len(), self.rack.policy_name()),
+        ));
+        conn.proto = proto;
+        conn.phase = ConnPhase::Open;
+        // session 0: the connection's implicit default session
+        self.open_slot(conn, 0);
+        Ok(())
+    }
+
+    /// Open one logical session backed by the shared worker pool and
+    /// register its completion wakeup.
+    fn open_slot(&self, conn: &mut Conn, sid: u32) {
+        let session = Arc::new(self.rack.open_session_on(self.opts, &self.pool));
+        let dirty = Arc::clone(&self.dirty);
+        let waker = Arc::clone(&self.waker);
+        let cid = conn.id;
+        session.set_notify(Some(Arc::new(move || {
+            dirty.lock().unwrap().push((cid, sid));
+            waker.wake();
+        })));
+        conn.sessions.insert(sid, Slot { session, state: SlotState::Open, drain_returned: 0 });
+        self.stats.active_sessions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Move completed responses from one session's channel onto the
+    /// connection's write queue (or fold them silently when the peer is
+    /// gone), respecting the write-buffer cap.
+    fn pump_slot(&self, conn: &mut Conn, sid: u32) {
+        let Some(slot) = conn.sessions.get(&sid) else { return };
+        let session = Arc::clone(&slot.session);
+        let forward = conn.forwarding();
+        let mut pumped = 0u64;
+        loop {
+            if forward && conn.write_backlogged() {
+                conn.pump_stalled = true;
+                break;
+            }
+            match session.try_recv() {
+                Some(resp) => {
+                    if forward {
+                        let frame = response_frame(conn.proto, sid, &resp);
+                        conn.push_frame(&frame);
+                    }
+                    pumped += 1;
+                }
+                None => break,
+            }
+        }
+        if pumped > 0 {
+            if let Some(slot) = conn.sessions.get_mut(&sid) {
+                if matches!(slot.state, SlotState::Draining) {
+                    slot.drain_returned += pumped;
+                }
+            }
+        }
+        self.try_finish_slot(conn, sid);
+    }
+
+    /// Complete a pending drain/close for one session if it has gone
+    /// idle (every admitted request consumed).
+    fn try_finish_slot(&self, conn: &mut Conn, sid: u32) {
+        let Some(slot) = conn.sessions.get(&sid) else { return };
+        if matches!(slot.state, SlotState::Open) || slot.session.outstanding() > 0 {
+            return;
+        }
+        // session 0's goodbye is the connection's: it must be the last
+        // frame, so wait for every other session to finish first
+        if sid == 0 && matches!(slot.state, SlotState::Goodbye) && conn.sessions.len() > 1 {
+            return;
+        }
+        let session = Arc::clone(&slot.session);
+        let forward = conn.forwarding();
+        // `drain` is instant here (nothing outstanding) and hands back
+        // any response a pump race left unconsumed
+        let rest = session.drain();
+        let mut straggled = 0u64;
+        for resp in &rest {
+            if forward {
+                let frame = response_frame(conn.proto, sid, resp);
+                conn.push_frame(&frame);
+            }
+            straggled += 1;
+        }
+        let state = std::mem::replace(
+            &mut conn.sessions.get_mut(&sid).expect("slot exists").state,
+            SlotState::Open,
+        );
+        match state {
+            SlotState::Open => unreachable!("filtered above"),
+            SlotState::Draining => {
+                let slot = conn.sessions.get_mut(&sid).expect("slot exists");
+                slot.drain_returned += straggled;
+                let returned = slot.drain_returned;
+                slot.drain_returned = 0;
+                if forward {
+                    conn.push_frame(
+                        &Frame::new(FrameType::Drained, 0, drained_body(returned))
+                            .with_session(sid),
+                    );
+                }
+                // state already reset to Open: the session is sealed,
+                // later submits get per-request Closed errors
+            }
+            SlotState::Goodbye => {
+                let mut summary = session.close();
+                if let Some(rs) = summary.shards.as_mut() {
+                    rs.net = Some(self.stats.gauges());
+                }
+                if forward {
+                    let (ty, session_field) =
+                        if sid == 0 { (FrameType::Closed, 0) } else { (FrameType::SessionClosed, sid) };
+                    conn.push_frame(
+                        &Frame::new(ty, 0, super::proto::encode_summary(&summary))
+                            .with_session(session_field),
+                    );
+                }
+                conn.sessions.remove(&sid);
+                self.stats.active_sessions.fetch_sub(1, Ordering::Relaxed);
+                if sid == 0 {
+                    conn.phase = ConnPhase::Closed;
+                }
+            }
+            SlotState::Folding => {
+                let _ = session.close();
+                conn.sessions.remove(&sid);
+                self.stats.active_sessions.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        // removing the last sibling session may unblock a goodbye parked
+        // on session 0 (the connection-level close waits to go last)
+        if sid != 0 && conn.sessions.len() == 1 && conn.sessions.contains_key(&0) {
+            self.try_finish_slot(conn, 0);
+        }
+    }
+
+    /// Try to finish every pending session transition on a connection.
+    fn settle_conn(&self, conn: &mut Conn) {
+        let sids: Vec<u32> = conn.sessions.keys().copied().collect();
+        for sid in sids {
+            self.try_finish_slot(conn, sid);
+        }
+        // finishing non-zero sessions may have unblocked session 0's
+        // connection-level goodbye
+        if conn.sessions.len() == 1 && conn.sessions.contains_key(&0) {
+            self.try_finish_slot(conn, 0);
+        }
+    }
+
+    /// Peer vanished (EOF / transport error): consume-and-fold every
+    /// session, send nothing more.
+    fn begin_disconnect(&self, conn: &mut Conn) {
+        conn.dead_write = true;
+        conn.wq.clear();
+        conn.wq_bytes = 0;
+        conn.wq_off = 0;
+        conn.rbuf.clear();
+        for slot in conn.sessions.values_mut() {
+            slot.session.seal();
+            slot.state = SlotState::Folding;
+        }
+        conn.phase = ConnPhase::Draining { graceful: false };
+        self.settle_conn(conn);
+    }
+
+    /// Protocol violation: tell the peer (best effort — the error frame
+    /// still flushes), then tear down like a disconnect.
+    fn begin_fatal(&self, conn: &mut Conn, message: &str) {
+        conn.push_frame(&Frame::new(FrameType::Error, 0, error_body(message, true)));
+        conn.rbuf.clear();
+        for slot in conn.sessions.values_mut() {
+            slot.session.seal();
+            slot.state = SlotState::Folding;
+        }
+        conn.phase = ConnPhase::Draining { graceful: false };
+        self.settle_conn(conn);
+    }
+
+    /// Drop connections that have fully finished.
+    fn reap(&mut self) {
+        let done: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| match c.phase {
+                ConnPhase::Draining { .. } => c.sessions.is_empty() && c.wq.is_empty(),
+                ConnPhase::Closed => c.sessions.is_empty() && (c.wq.is_empty() || c.dead_write),
+                _ => false,
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in done {
+            if let Some(conn) = self.conns.remove(&id) {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+                self.stats.active_connections.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Server shutdown: finish every session's admitted work (blocking
+    /// is fine now — the loop is done), then close all sockets.
+    fn shutdown_all(&mut self) {
+        for (_, conn) in self.conns.drain() {
+            for (_, slot) in conn.sessions.iter() {
+                slot.session.seal();
+            }
+            for (_, slot) in conn.sessions.iter() {
+                let _ = slot.session.close();
+                self.stats.active_sessions.fetch_sub(1, Ordering::Relaxed);
+            }
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.stats.active_connections.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The event-loop GTA server: one poll thread drives every connection
+/// as a non-blocking state machine, a fixed [`WorkerPool`] executes the
+/// rack work, and (on v3 connections) one socket multiplexes many
+/// logical sessions. The serving semantics — negotiation, admission
+/// backpressure, drain/close, disconnect-drains-everything — match
+/// [`NetServer`] frame-for-frame for v1/v2 peers; the difference is
+/// O(pool) threads instead of O(connections).
+pub struct EventServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    stats: Arc<NetStats>,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EventServer {
+    /// Bind `addr` and start serving. `opts.workers` sizes the shared
+    /// worker pool (NOT per-connection threads).
+    pub fn spawn(rack: Arc<Rack>, addr: &str, opts: ServeOptions) -> anyhow::Result<EventServer> {
+        EventServer::spawn_with(rack, addr, opts, PROTO_VERSION, DEFAULT_MAX_CONNS)
+    }
+
+    /// [`spawn`](Self::spawn) with an explicit negotiation cap.
+    pub fn spawn_proto(
+        rack: Arc<Rack>,
+        addr: &str,
+        opts: ServeOptions,
+        max_proto: u64,
+    ) -> anyhow::Result<EventServer> {
+        EventServer::spawn_with(rack, addr, opts, max_proto, DEFAULT_MAX_CONNS)
+    }
+
+    /// [`spawn`](Self::spawn) with explicit protocol and concurrent-
+    /// connection caps (`gta serve --event-loop --max-conns N`; above
+    /// the cap new connections are refused with a clean `Error` frame).
+    pub fn spawn_with(
+        rack: Arc<Rack>,
+        addr: &str,
+        opts: ServeOptions,
+        max_proto: u64,
+        max_conns: usize,
+    ) -> anyhow::Result<EventServer> {
+        anyhow::ensure!(
+            (MIN_PROTO_VERSION..=PROTO_VERSION).contains(&max_proto),
+            "this build speaks protocol versions {MIN_PROTO_VERSION}..={PROTO_VERSION}, not {max_proto}"
+        );
+        anyhow::ensure!(max_conns > 0, "--max-conns must be at least 1");
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let waker = Arc::new(Waker::new()?);
+        let stats = Arc::new(NetStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let ev = EvLoop {
+            rack,
+            opts,
+            max_proto,
+            max_conns,
+            pool: Arc::new(WorkerPool::new(opts.workers.max(1))),
+            listener,
+            waker: Arc::clone(&waker),
+            dirty: Arc::new(Mutex::new(Vec::new())),
+            stats: Arc::clone(&stats),
+            stop: Arc::clone(&stop),
+            conns: HashMap::new(),
+            next_conn_id: 1,
+        };
+        let loop_thread =
+            std::thread::Builder::new().name("gta-net-loop".into()).spawn(move || ev.run())?;
+        Ok(EventServer { addr: local, stop, waker, stats, loop_thread: Some(loop_thread) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live connection/session gauges and wire byte counters.
+    pub fn gauges(&self) -> NetGauges {
+        self.stats.gauges()
+    }
+
+    /// Stop the loop: live sessions finish their admitted work, all
+    /// sockets close, the worker pool joins.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(h) = self.loop_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the loop exits (`gta serve`'s foreground wait).
+    pub fn join(&mut self) {
+        if let Some(h) = self.loop_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EventServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }

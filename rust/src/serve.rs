@@ -24,7 +24,7 @@
 use crate::coordinator::metrics::RackSnapshot;
 use crate::coordinator::rack::{policy_by_name, Rack, RoutePolicy};
 use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request, Response, ServeOptions};
-use crate::net::GtaClient;
+use crate::net::{ClientOptions, GtaClient};
 use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
 use crate::runtime::{default_artifact_dir, Engine, ExecBackend, HostTensor, SoftBackend};
@@ -617,7 +617,13 @@ pub fn run_client_mixed(addr: &str, n: u64) -> Result<ServeSummary> {
 /// client's `Hello` (`gta client --proto 1` replays the PR 5 v1 wire
 /// behavior against any server).
 pub fn run_client_mixed_proto(addr: &str, n: u64, max_proto: u64) -> Result<ServeSummary> {
-    let mut client = GtaClient::connect_proto(addr, max_proto)?;
+    run_client_mixed_with(addr, n, ClientOptions { max_proto, ..ClientOptions::default() })
+}
+
+/// [`run_client_mixed`] with full [`ClientOptions`] control (protocol
+/// cap, connect/read timeouts).
+pub fn run_client_mixed_with(addr: &str, n: u64, opts: ClientOptions) -> Result<ServeSummary> {
+    let mut client = GtaClient::connect_with(addr, opts)?;
     let (requests, expected) = mixed_stream(n);
     let functional_ids = functional_ids(&requests);
     let t0 = Instant::now();
@@ -625,6 +631,70 @@ pub fn run_client_mixed_proto(addr: &str, n: u64, max_proto: u64) -> Result<Serv
         client.submit(req)?;
     }
     let mut responses = client.drain()?;
+    let server = client.close()?;
+    let wall = t0.elapsed().as_secs_f64();
+    crate::coordinator::order_responses(&mut responses);
+    Ok(summarize(
+        &responses,
+        &expected,
+        &functional_ids,
+        wall,
+        0,
+        server.metrics.clone(),
+        server.shards.clone(),
+    ))
+}
+
+/// [`run_client_mixed`] over K logical sessions multiplexed on ONE
+/// connection (`gta client --sessions K`, protocol v3): requests
+/// round-robin across the sessions, every session drains independently
+/// (each drain is ordered within its session), the extra sessions close
+/// with their own summaries, and the combined responses verify against
+/// the same oracle as the single-session replay — the workload's
+/// responses are identical however it is sliced across sessions.
+pub fn run_client_mux(addr: &str, n: u64, sessions: u32) -> Result<ServeSummary> {
+    run_client_mux_proto(addr, n, sessions, crate::net::PROTO_VERSION)
+}
+
+/// [`run_client_mux`] with an explicit protocol-version cap (opening a
+/// second session fails cleanly below v3).
+pub fn run_client_mux_proto(
+    addr: &str,
+    n: u64,
+    sessions: u32,
+    max_proto: u64,
+) -> Result<ServeSummary> {
+    run_client_mux_with(addr, n, sessions, ClientOptions { max_proto, ..ClientOptions::default() })
+}
+
+/// [`run_client_mux`] with full [`ClientOptions`] control.
+pub fn run_client_mux_with(
+    addr: &str,
+    n: u64,
+    sessions: u32,
+    opts: ClientOptions,
+) -> Result<ServeSummary> {
+    let mut client = GtaClient::connect_with(addr, opts)?;
+    // session 0 comes free with the connection; open the rest
+    let mut sids = vec![0u32];
+    for _ in 1..sessions.max(1) {
+        sids.push(client.open_session()?);
+    }
+    let (requests, expected) = mixed_stream(n);
+    let functional_ids = functional_ids(&requests);
+    let t0 = Instant::now();
+    for (i, req) in requests.iter().enumerate() {
+        client.submit_on(sids[i % sids.len()], req)?;
+    }
+    let mut responses = Vec::new();
+    for &sid in &sids {
+        responses.append(&mut client.drain_on(sid)?);
+    }
+    // the opened sessions' summaries fold into the rack totals the
+    // connection summary reports
+    for &sid in sids.iter().skip(1) {
+        let _ = client.close_session(sid)?;
+    }
     let server = client.close()?;
     let wall = t0.elapsed().as_secs_f64();
     crate::coordinator::order_responses(&mut responses);
@@ -658,7 +728,19 @@ pub fn run_open_loop_client_proto(
     seed: u64,
     max_proto: u64,
 ) -> Result<ServeSummary> {
-    let client = std::cell::RefCell::new(GtaClient::connect_proto(addr, max_proto)?);
+    let opts = ClientOptions { max_proto, ..ClientOptions::default() };
+    run_open_loop_client_with(addr, n, rate_rps, seed, opts)
+}
+
+/// [`run_open_loop_client`] with full [`ClientOptions`] control.
+pub fn run_open_loop_client_with(
+    addr: &str,
+    n: u64,
+    rate_rps: f64,
+    seed: u64,
+    opts: ClientOptions,
+) -> Result<ServeSummary> {
+    let client = std::cell::RefCell::new(GtaClient::connect_with(addr, opts)?);
     let (requests, expected) = mixed_stream(n);
     let functional_ids = functional_ids(&requests);
     let t0 = Instant::now();

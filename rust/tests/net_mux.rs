@@ -1,0 +1,554 @@
+//! E2E for the event-loop server and v3 session multiplexing: an
+//! `EventServer` on a loopback socket, driven by `GtaClient`. The
+//! acceptance gates of the async serving path:
+//!
+//! * a replay over the event loop is **bit-identical** to the threaded
+//!   `NetServer` and to the in-process serve path (batch and seeded
+//!   open-loop) — the concurrency model changes, the bytes don't;
+//! * v1 and v2 peers are served by the event loop exactly as before;
+//! * K logical sessions multiplexed on one socket drain bit-identically
+//!   to the unsliced workload, with per-session summaries;
+//! * 1k concurrent logical sessions (10k behind `--ignored`) complete
+//!   on one rack with O(worker-pool) threads, live gauges tracking
+//!   them up and back down to zero;
+//! * admission backpressure (`Block` pauses the one connection, Reject
+//!   surfaces `Busy`) flows through the loop without stalling it;
+//! * connect/read timeouts, connection-capacity refusals and
+//!   unknown-session submits all surface as clean errors.
+//!
+//! All offline (soft rust-oracle backend), so these run in every build.
+
+mod common;
+
+use common::{gated_rack, gated_request};
+use gta::coordinator::rack::policy_by_name;
+use gta::coordinator::{
+    order_responses, AdmissionPolicy, CoalesceConfig, ExecKind, Rack, Request, Response,
+    ServeOptions,
+};
+use gta::net::proto::{self, Frame, FrameType};
+use gta::net::{ClientOptions, EventServer, GtaClient, NetServer};
+use gta::precision::Precision;
+use gta::serve::{mixed_stream, run_open_loop_client, run_open_loop_stream, soft_rack, ServeSummary};
+use gta::{GtaConfig, TensorOp};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A heterogeneous two-shard soft rack (16 + 4 lanes) under `policy`.
+fn hetero_rack(policy: &str) -> Arc<Rack> {
+    soft_rack(
+        vec![GtaConfig::lanes16(), GtaConfig::with_lanes(4)],
+        CoalesceConfig::default(),
+        policy_by_name(policy).unwrap(),
+    )
+    .unwrap()
+}
+
+/// Field-by-field response equality (latency excluded — wall time is
+/// never deterministic; schedule compared by config).
+fn assert_same_response(a: &Response, b: &Response) {
+    assert_eq!(a.id, b.id);
+    assert_eq!(a.shard, b.shard, "request {} routed differently", a.id);
+    assert_eq!(a.error, b.error, "request {}", a.id);
+    assert_eq!(a.outputs, b.outputs, "request {} outputs diverge", a.id);
+    assert_eq!(a.sim.cycles, b.sim.cycles, "request {} sim diverges", a.id);
+    assert_eq!(
+        a.schedule.map(|c| c.config),
+        b.schedule.map(|c| c.config),
+        "request {} schedule diverges",
+        a.id
+    );
+}
+
+/// A cheap simulate-only request (identical op for every id, so any
+/// shard of a homogeneous rack produces a bit-identical response).
+fn sim_request(id: u64) -> Request {
+    Request { id, op: TensorOp::gemm(64, 64, 64, Precision::Int8), exec: ExecKind::Simulate }
+}
+
+/// Replay the standard mixed stream through one connection: submit all,
+/// drain, close.
+fn replay_via(addr: &str, n: u64) -> (Vec<Response>, ServeSummary) {
+    let mut client = GtaClient::connect(addr).unwrap();
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    let out = client.drain().unwrap();
+    let summary = client.close().unwrap();
+    (out, summary)
+}
+
+#[test]
+fn event_loop_replay_is_bit_identical_to_threaded_and_in_process() {
+    let n = 32u64;
+    let (reqs, _) = mixed_stream(n);
+    let batch = hetero_rack("rr").serve(reqs, 4);
+
+    let mut threaded =
+        NetServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(4)).unwrap();
+    let (threaded_out, threaded_summary) = replay_via(&threaded.addr().to_string(), n);
+    threaded.shutdown();
+
+    let mut ev =
+        EventServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+    let (ev_out, ev_summary) = replay_via(&ev.addr().to_string(), n);
+
+    assert_eq!(batch.len(), ev_out.len());
+    for (a, b) in batch.iter().zip(&ev_out) {
+        assert_same_response(a, b);
+    }
+    // and frame-for-frame with the threaded baseline
+    assert_eq!(threaded_out.len(), ev_out.len());
+    for (a, b) in threaded_out.iter().zip(&ev_out) {
+        assert_same_response(a, b);
+    }
+    assert_eq!(ev_summary.requests, n);
+    assert_eq!(ev_summary.errors, 0);
+    assert_eq!(threaded_summary.requests, ev_summary.requests);
+    let shards = ev_summary.shards.expect("rack telemetry travels in the Closed frame");
+    assert_eq!(shards.shards[0].routed + shards.shards[1].routed, n);
+    ev.shutdown();
+}
+
+#[test]
+fn open_loop_over_the_event_loop_matches_in_process_run() {
+    let (n, workers, rate, seed) = (48u64, 4usize, 20_000.0, 2024u64);
+    let in_process = hetero_rack("rr");
+    let (reqs, expected) = mixed_stream(n);
+    let local = run_open_loop_stream(&in_process, reqs, &expected, workers, rate, seed);
+
+    let mut ev =
+        EventServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(workers))
+            .unwrap();
+    let wire = run_open_loop_client(&ev.addr().to_string(), n, rate, seed).unwrap();
+
+    assert_eq!(wire.requests, local.requests);
+    assert_eq!(wire.functional, local.functional);
+    assert_eq!(wire.verified_ok, local.verified_ok, "same numerics over the event loop");
+    assert_eq!(wire.verified_failed, local.verified_failed);
+    assert_eq!(wire.verified_failed, 0);
+    assert_eq!(wire.errors, local.errors);
+    assert_eq!(wire.total_sim_cycles, local.total_sim_cycles, "same schedules, same shards");
+    ev.shutdown();
+}
+
+#[test]
+fn v1_and_v2_clients_replay_bit_identically_against_the_event_loop() {
+    let n = 24u64;
+    // shape-affinity routing is a pure function of the request, so the
+    // shared server rack places every replay identically
+    let (reqs, _) = mixed_stream(n);
+    let want = hetero_rack("affinity").serve(reqs, 4);
+    let mut ev =
+        EventServer::spawn(hetero_rack("affinity"), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+    let addr = ev.addr().to_string();
+    for proto_v in [1u64, 2, 3] {
+        let mut client = GtaClient::connect_proto(&addr, proto_v).unwrap();
+        assert_eq!(client.server().proto, proto_v, "event loop serves the peer's cap");
+        let (reqs, _) = mixed_stream(n);
+        for req in &reqs {
+            client.submit(req).unwrap();
+        }
+        let got = client.drain().unwrap();
+        client.close().unwrap();
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_same_response(a, b);
+        }
+    }
+    ev.shutdown();
+}
+
+#[test]
+fn mux_sessions_drain_bit_identically_however_sliced() {
+    let n = 24u64;
+    let (reqs, _) = mixed_stream(n);
+    let want = hetero_rack("affinity").serve(reqs, 4);
+
+    let mut ev =
+        EventServer::spawn(hetero_rack("affinity"), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+    let mut client = GtaClient::connect(&ev.addr().to_string()).unwrap();
+    let mut sids = vec![0u32];
+    for _ in 0..3 {
+        sids.push(client.open_session().unwrap());
+    }
+    let g = ev.gauges();
+    assert_eq!(g.active_connections, 1);
+    assert_eq!(g.active_sessions, 4, "session 0 plus the three opened");
+
+    let (reqs, _) = mixed_stream(n);
+    for (i, req) in reqs.iter().enumerate() {
+        client.submit_on(sids[i % sids.len()], req).unwrap();
+    }
+    let mut got = Vec::new();
+    let mut per_session = Vec::new();
+    for &sid in &sids {
+        let part = client.drain_on(sid).unwrap();
+        per_session.push(part.len() as u64);
+        got.extend(part);
+    }
+    order_responses(&mut got);
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_same_response(a, b);
+    }
+
+    // per-session summaries count their own slice of the workload
+    for (i, &sid) in sids.iter().enumerate().skip(1) {
+        let s = client.close_session(sid).unwrap();
+        assert_eq!(s.requests, per_session[i], "session {sid} counted its slice");
+    }
+    let summary = client.close().unwrap();
+    assert_eq!(summary.requests, per_session[0]);
+    // live wire telemetry rides in the connection summary
+    let shards = summary.shards.expect("rack telemetry travels in the Closed frame");
+    let net = shards.net.expect("net gauges attached by the event loop");
+    assert!(net.bytes_in > 0 && net.bytes_out > 0, "byte counters moved: {net:?}");
+    let rendered = shards.render();
+    assert!(rendered.contains("net:"), "snapshot render shows the gauges:\n{rendered}");
+    ev.shutdown();
+}
+
+#[cfg(target_os = "linux")]
+fn process_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines().find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+        })
+        .unwrap_or(0)
+}
+
+/// The mux soak: `conns` connections × `sessions_per_conn` logical
+/// sessions, all live at once on one rack, one request per session.
+fn mux_soak(conns: usize, sessions_per_conn: usize) {
+    // homogeneous shards: any routing yields bit-identical responses
+    let rack = soft_rack(
+        vec![GtaConfig::lanes16(), GtaConfig::lanes16()],
+        CoalesceConfig::default(),
+        policy_by_name("rr").unwrap(),
+    )
+    .unwrap();
+    // the reference response for the one op every session submits
+    let reference = soft_rack(
+        vec![GtaConfig::lanes16()],
+        CoalesceConfig::default(),
+        policy_by_name("rr").unwrap(),
+    )
+    .unwrap()
+    .serve(vec![sim_request(0)], 1)
+    .pop()
+    .unwrap();
+
+    let mut server =
+        EventServer::spawn(rack, "127.0.0.1:0", ServeOptions::with_workers(4)).unwrap();
+    let addr = server.addr().to_string();
+    let total = conns * sessions_per_conn;
+
+    let mut clients: Vec<(GtaClient, Vec<u32>)> = Vec::new();
+    for _ in 0..conns {
+        let mut c = GtaClient::connect(&addr).unwrap();
+        let mut sids = vec![0u32];
+        for _ in 1..sessions_per_conn {
+            sids.push(c.open_session().unwrap());
+        }
+        clients.push((c, sids));
+    }
+    let g = server.gauges();
+    assert_eq!(g.active_connections, conns as u64);
+    assert_eq!(g.active_sessions, total as u64, "every logical session live at once");
+
+    // the point of the event loop: O(worker-pool) threads, not
+    // O(sessions) — a threaded server would need 2 per connection and
+    // could not mux sessions at all
+    #[cfg(target_os = "linux")]
+    {
+        let threads = process_threads();
+        assert!(threads > 0, "/proc/self/status parsed");
+        assert!(
+            threads < total / 4,
+            "expected O(pool) threads for {total} live sessions, found {threads}"
+        );
+    }
+
+    let mut id = 0u64;
+    for (c, sids) in clients.iter_mut() {
+        for &sid in sids.iter() {
+            c.submit_on(sid, &sim_request(id)).unwrap();
+            id += 1;
+        }
+    }
+    let mut expect_id = 0u64;
+    for (c, sids) in clients.iter_mut() {
+        for &sid in sids.iter() {
+            let out = c.drain_on(sid).unwrap();
+            assert_eq!(out.len(), 1, "session {sid} drains exactly its own request");
+            let resp = &out[0];
+            assert_eq!(resp.id, expect_id, "responses stay on their session");
+            assert!(resp.is_ok(), "request {}: {:?}", resp.id, resp.error);
+            // bit-identical drains: every session's response matches the
+            // single-shard reference for the identical op
+            assert_eq!(resp.sim.cycles, reference.sim.cycles);
+            assert_eq!(resp.schedule.map(|c| c.config), reference.schedule.map(|c| c.config));
+            expect_id += 1;
+        }
+    }
+    let g = server.gauges();
+    assert!(g.bytes_in > 0 && g.bytes_out > 0, "wire byte counters moved: {g:?}");
+
+    for (c, _sids) in clients.into_iter() {
+        let summary = c.close().unwrap();
+        let shards = summary.shards.expect("rack telemetry travels in the Closed frame");
+        assert!(shards.net.is_some(), "gauges attached to the connection summary");
+    }
+    // gauge teardown is asynchronous relative to the Closed frame (the
+    // reap runs after the summary flushes) — poll with a deadline
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let g = server.gauges();
+        if g.active_connections == 0 && g.active_sessions == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "connections/sessions wind down to zero: {g:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn soak_1k_sessions_multiplex_over_8_connections() {
+    mux_soak(8, 128);
+}
+
+#[test]
+#[ignore = "10k-session soak: run explicitly with --ignored"]
+fn soak_10k_sessions_multiplex_over_16_connections() {
+    mux_soak(16, 625);
+}
+
+#[test]
+fn block_admission_pauses_one_connection_without_stalling_the_loop() {
+    // the gated backend (tests/common) parks executions until released
+    let (rack, started_rx, release_tx) = gated_rack();
+    let mut server = EventServer::spawn_with(
+        rack,
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, queue_capacity: 1, policy: AdmissionPolicy::Block },
+        proto::PROTO_VERSION,
+        16,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    let mut blocked = GtaClient::connect(&addr).unwrap();
+    // r0 parks in the gated backend, r1 fills the single queue slot,
+    // r2 cannot be admitted — the server pauses THIS connection's reads
+    // instead of blocking the loop
+    blocked.submit(&gated_request(0)).unwrap();
+    started_rx.recv().expect("worker reached the gated backend");
+    blocked.submit(&gated_request(1)).unwrap();
+    blocked.submit(&gated_request(2)).unwrap();
+
+    // the loop stays responsive while that connection is paused: a
+    // second connection handshakes and runs a session lifecycle
+    let mut live = GtaClient::connect(&addr).unwrap();
+    let sid = live.open_session().unwrap();
+    assert!(sid > 0);
+    live.close_session(sid).unwrap();
+    live.close().unwrap();
+
+    for _ in 0..3 {
+        release_tx.send(()).unwrap();
+    }
+    let out = blocked.drain().unwrap();
+    assert_eq!(out.len(), 3, "Block admission: nothing rejected, nothing lost");
+    assert!(out.iter().all(|r| r.is_ok()));
+    let summary = blocked.close().unwrap();
+    assert_eq!(summary.metrics.admission_rejected, 0);
+    server.shutdown();
+}
+
+#[test]
+fn busy_backpressure_reaches_the_client_through_the_event_loop() {
+    let (rack, started_rx, release_tx) = gated_rack();
+    let mut server = EventServer::spawn_with(
+        Arc::clone(&rack),
+        "127.0.0.1:0",
+        ServeOptions { workers: 1, queue_capacity: 1, policy: AdmissionPolicy::reject_now() },
+        proto::PROTO_VERSION,
+        16,
+    )
+    .unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+    client.submit(&gated_request(0)).unwrap();
+    started_rx.recv().expect("worker reached the gated backend");
+    client.submit(&gated_request(1)).unwrap();
+    client.submit(&gated_request(2)).unwrap();
+
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let out = client.drain().unwrap();
+    assert_eq!(out.len(), 3, "every ticket resolves: two served, one Busy");
+    assert!(out[0].is_ok());
+    assert!(out[1].is_ok());
+    let busy = out[2].error.as_ref().expect("r2 was rejected");
+    assert!(busy.contains("busy"), "wire-level backpressure surfaced: {busy}");
+    let summary = client.close().unwrap();
+    assert_eq!(summary.metrics.admission_rejected, 1, "explainable from telemetry");
+    assert_eq!(rack.snapshot().aggregate.admission_rejected, 1);
+    server.shutdown();
+}
+
+#[test]
+fn open_session_against_the_threaded_server_fails_with_guidance() {
+    let mut server =
+        NetServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(2)).unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+    assert_eq!(client.server().proto, proto::PROTO_VERSION, "v3 framing negotiated");
+    let err = client.open_session().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("event-loop"), "points at the event-loop server: {msg}");
+    server.shutdown();
+}
+
+#[test]
+fn submit_on_an_unknown_session_is_a_per_request_error_not_fatal() {
+    let mut server =
+        EventServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(2))
+            .unwrap();
+    let mut stream = TcpStream::connect(&server.addr().to_string()).unwrap();
+    // the Hello exchange always travels in the v1 layout
+    let mut buf = Vec::new();
+    proto::write_frame(&mut buf, &Frame::new(FrameType::Hello, 0, proto::client_hello()))
+        .unwrap();
+    stream.write_all(&buf).unwrap();
+    let hello = proto::read_frame(&mut stream).unwrap();
+    assert_eq!(hello.ty, FrameType::Hello);
+    assert_eq!(proto::hello_proto(&hello.body), Some(proto::PROTO_VERSION));
+
+    // a Submit addressed to a session that was never opened
+    let mut buf = Vec::new();
+    proto::write_frame_v(
+        &mut buf,
+        &Frame::new(FrameType::Submit, 7, proto::encode_request(&sim_request(7)))
+            .with_session(99),
+        proto::PROTO_VERSION,
+    )
+    .unwrap();
+    stream.write_all(&buf).unwrap();
+    let err = proto::read_frame_v(&mut stream, proto::PROTO_VERSION).unwrap();
+    assert_eq!(err.ty, FrameType::Error);
+    assert_eq!(err.id, 7, "the error names the request id — per-request, not fatal");
+    assert_eq!(err.session, 99);
+    assert!(
+        proto::error_message(&err.body).contains("unknown session"),
+        "{}",
+        proto::error_message(&err.body)
+    );
+
+    // the connection survives: session 0 still serves
+    let mut buf = Vec::new();
+    proto::write_frame_v(
+        &mut buf,
+        &Frame::new(FrameType::Submit, 8, proto::encode_request(&sim_request(8))),
+        proto::PROTO_VERSION,
+    )
+    .unwrap();
+    stream.write_all(&buf).unwrap();
+    let resp = proto::read_frame_v(&mut stream, proto::PROTO_VERSION).unwrap();
+    assert!(
+        matches!(resp.ty, FrameType::Response | FrameType::ResponseBin),
+        "session 0 answered: {:?}",
+        resp.ty
+    );
+    assert_eq!(resp.id, 8);
+    server.shutdown();
+}
+
+#[test]
+fn connections_beyond_max_conns_are_refused_and_slots_recycle() {
+    let mut server = EventServer::spawn_with(
+        hetero_rack("rr"),
+        "127.0.0.1:0",
+        ServeOptions::with_workers(2),
+        proto::PROTO_VERSION,
+        1,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    let first = GtaClient::connect(&addr).unwrap();
+    assert_eq!(server.gauges().active_connections, 1);
+    let err = GtaClient::connect(&addr).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("capacity"), "the refusal says why: {msg}");
+    drop(first); // vanish; the server reaps the slot
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if let Ok(client) = GtaClient::connect(&addr) {
+            client.close().unwrap();
+            break;
+        }
+        assert!(Instant::now() < deadline, "the slot recycles after a disconnect");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn handshake_and_read_timeouts_surface_as_clean_errors() {
+    let opts = ClientOptions {
+        connect_timeout: Duration::from_millis(250),
+        read_timeout: Some(Duration::from_millis(250)),
+        ..ClientOptions::default()
+    };
+
+    // a listener that accepts but never answers the Hello
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let silent = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        // hold the socket open without speaking until the client gives up
+        let mut sink = [0u8; 256];
+        while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+    });
+    let t0 = Instant::now();
+    let err = GtaClient::connect_with(&addr, opts).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5), "fails fast instead of hanging");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("timed out"), "a clean timeout error: {msg}");
+    silent.join().unwrap();
+
+    // a server that completes the handshake, then goes silent mid-stream
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mute = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let hello = proto::read_frame(&mut s).unwrap();
+        assert_eq!(hello.ty, FrameType::Hello);
+        let mut buf = Vec::new();
+        proto::write_frame(
+            &mut buf,
+            &Frame::new(FrameType::Hello, 0, proto::server_hello(1, 1, "rr")),
+        )
+        .unwrap();
+        s.write_all(&buf).unwrap();
+        // swallow everything else and never answer
+        let mut sink = [0u8; 4096];
+        while matches!(s.read(&mut sink), Ok(n) if n > 0) {}
+    });
+    let mut client = GtaClient::connect_with(&addr, opts).unwrap();
+    assert_eq!(client.server().proto, 1);
+    client.submit(&sim_request(1)).unwrap();
+    let t0 = Instant::now();
+    let err = client.recv().unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(5), "bounded instead of hanging");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("read timeout"), "the error names the timeout: {msg}");
+    drop(client);
+    mute.join().unwrap();
+}

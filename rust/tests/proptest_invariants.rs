@@ -204,7 +204,7 @@ fn prop_simd_gain_formula_consistent() {
 use gta::net::proto::{self, DecodeError, Frame, FrameType};
 use gta::util::json::Json;
 
-const ALL_FRAME_TYPES: [FrameType; 7] = [
+const ALL_FRAME_TYPES: [FrameType; 9] = [
     FrameType::Hello,
     FrameType::Submit,
     FrameType::Response,
@@ -212,6 +212,8 @@ const ALL_FRAME_TYPES: [FrameType; 7] = [
     FrameType::Drained,
     FrameType::Closed,
     FrameType::Error,
+    FrameType::OpenSession,
+    FrameType::SessionClosed,
 ];
 
 fn random_string(rng: &mut Rng) -> String {
@@ -460,5 +462,138 @@ fn prop_binary_bodies_survive_truncation_and_bitflips() {
         let decoded = proto::read_frame(&mut r).expect("binary frame must decode");
         assert!(r.is_empty());
         assert_eq!(decoded, frame);
+    });
+}
+
+// ---------------------------------------------------------------------
+// v3 session multiplexing: the session-id header field and the
+// incremental slice decoder the event loop parses with. Same contract:
+// random and hostile bytes decode cleanly or error cleanly, and frames
+// interleaved across sessions come back in per-session order.
+
+fn random_frame(rng: &mut Rng, session: u32) -> Frame {
+    let ty = *rng.choose(&ALL_FRAME_TYPES);
+    Frame::new(ty, rng.next_u64(), random_json(rng, 2)).with_session(session)
+}
+
+fn encode_v(frame: &Frame, proto_v: u64) -> Vec<u8> {
+    let mut buf = Vec::new();
+    proto::write_frame_v(&mut buf, frame, proto_v).expect("writing to a Vec cannot fail");
+    buf
+}
+
+#[test]
+fn prop_v3_frames_round_trip_with_their_session_id() {
+    property("v3 decode ∘ encode == id (session kept)", 300, |rng: &mut Rng| {
+        let session = rng.next_u64() as u32;
+        let frame = random_frame(rng, session);
+        let buf = encode_v(&frame, 3);
+        let mut r = &buf[..];
+        let decoded = proto::read_frame_v(&mut r, 3).expect("own v3 encoding must decode");
+        assert!(r.is_empty(), "decoder consumed exactly one frame");
+        assert_eq!(decoded, frame);
+        assert_eq!(decoded.session, session);
+    });
+}
+
+#[test]
+fn prop_truncated_v3_frames_fail_cleanly() {
+    property("v3 strict prefixes fail cleanly", 300, |rng: &mut Rng| {
+        let frame = random_frame(rng, rng.next_u64() as u32);
+        let buf = encode_v(&frame, 3);
+        let cut = (rng.next_u64() as usize) % buf.len(); // strict prefix
+        match proto::read_frame_v(&mut &buf[..cut], 3) {
+            Err(DecodeError::Eof) => assert_eq!(cut, 0, "Eof only at a frame boundary"),
+            Err(DecodeError::Malformed(_)) => assert!(cut > 0),
+            Err(DecodeError::Io(e)) => panic!("in-memory read cannot io-fail: {e}"),
+            Ok(f) => panic!("a strict prefix decoded as {f:?}"),
+        }
+        // the incremental slice decoder sees the same prefix as "wait
+        // for more bytes" or the same clean error — never a frame, never
+        // a panic
+        match proto::frame_from_slice(&buf[..cut], 3) {
+            Ok(None) | Err(DecodeError::Malformed(_)) => {}
+            Ok(Some((f, _))) => panic!("a strict prefix decoded incrementally as {f:?}"),
+            Err(e) => panic!("unexpected incremental error: {e:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_session_field_corruption_cannot_break_framing() {
+    // the session id is routing data, not framing data: flipping its
+    // bytes changes which session is addressed and nothing else
+    property("session bit-flips keep the frame intact", 300, |rng: &mut Rng| {
+        let frame = random_frame(rng, rng.next_u64() as u32);
+        let mut buf = encode_v(&frame, 3);
+        // the v3 header is len:4 | type:1 | session:4 | id:8 — flip one
+        // bit inside the session field
+        let idx = 5 + (rng.range_u64(0, 3) as usize);
+        buf[idx] ^= 1u8 << (rng.range_u64(0, 7) as u32);
+        let decoded = proto::read_frame_v(&mut &buf[..], 3)
+            .expect("session corruption must not break framing");
+        assert_eq!(decoded.ty, frame.ty);
+        assert_eq!(decoded.id, frame.id);
+        assert_eq!(decoded.body, frame.body);
+        assert_ne!(decoded.session, frame.session, "exactly the session changed");
+    });
+}
+
+#[test]
+fn prop_frame_from_slice_agrees_with_read_frame_on_hostile_bytes() {
+    property("incremental == streaming on arbitrary bytes", 300, |rng: &mut Rng| {
+        let proto_v = rng.range_u64(1, 3);
+        let len = rng.range_u64(0, 96) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| rng.range_u64(0, 255) as u8).collect();
+        match proto::frame_from_slice(&bytes, proto_v) {
+            Ok(Some((frame, consumed))) => {
+                assert!(consumed <= bytes.len());
+                let streamed = proto::read_frame_v(&mut &bytes[..consumed], proto_v)
+                    .expect("streaming decoder agrees the bytes are a frame");
+                assert_eq!(streamed, frame);
+            }
+            Ok(None) => {
+                // incomplete: the streaming decoder must not find a
+                // whole frame either
+                assert!(proto::read_frame_v(&mut &bytes[..], proto_v).is_err());
+            }
+            Err(DecodeError::Malformed(_)) => {}
+            Err(e) => panic!("slice decode cannot io-fail: {e:?}"),
+        }
+    });
+}
+
+#[test]
+fn prop_interleaved_session_frames_keep_per_session_order() {
+    // the mux invariant the event loop leans on: K sessions' frames
+    // interleaved arbitrarily on one byte stream parse back preserving
+    // each session's own order
+    property("interleave ∘ parse == per-session id order", 100, |rng: &mut Rng| {
+        let sessions: Vec<u32> = (0..rng.range_u64(2, 5)).map(|s| s as u32 * 7 + 1).collect();
+        let mut remaining: Vec<(u32, u64)> =
+            sessions.iter().flat_map(|&s| (0..rng.range_u64(1, 6)).map(move |i| (s, i))).collect();
+        let mut wire = Vec::new();
+        let mut sent: std::collections::BTreeMap<u32, Vec<u64>> = Default::default();
+        // random interleaving across sessions, sequential ids within one
+        while !remaining.is_empty() {
+            let pick = (rng.next_u64() as usize) % remaining.len();
+            let (session, id) = remaining.remove(pick);
+            let frame = Frame::new(FrameType::Submit, id, random_json(rng, 1)).with_session(session);
+            proto::write_frame_v(&mut wire, &frame, 3).unwrap();
+            sent.entry(session).or_default().push(id);
+        }
+        // parse the whole stream incrementally, the way the event loop does
+        let mut got: std::collections::BTreeMap<u32, Vec<u64>> = Default::default();
+        let mut consumed = 0usize;
+        while consumed < wire.len() {
+            match proto::frame_from_slice(&wire[consumed..], 3).expect("own bytes parse") {
+                Some((frame, n)) => {
+                    got.entry(frame.session).or_default().push(frame.id);
+                    consumed += n;
+                }
+                None => panic!("stream ended mid-frame at {consumed}/{}", wire.len()),
+            }
+        }
+        assert_eq!(got, sent, "every session's frames, in that session's order");
     });
 }
