@@ -1,0 +1,217 @@
+//! Kernel throughput: the plane-decomposed limb kernels vs the scalar
+//! §3.1 oracle, and the parallel `execute_batch` fan-out vs serial
+//! execution — the first kernel-level baseline of the BENCH_*.json
+//! trajectory (see ROADMAP "Perf-trajectory harness").
+//!
+//! Three legs, all on pinned seeds so reruns measure the same work:
+//!
+//! 1. **Per-artifact tile cost** — each serve-path artifact executed
+//!    through `SoftBackend` (plane kernels + thread-local workspace)
+//!    against the pre-plane scalar path (whole-matrix i32→i64 widening +
+//!    `limb_gemm`, which re-decomposes both scalars per MAC). Outputs are
+//!    compared bit-for-bit before anything is timed.
+//! 2. **Bignum pre-carry** — the allocation-free workspace variant vs the
+//!    naive per-call-allocating oracle.
+//! 3. **Batch scaling** — `execute_batch` (scoped worker fan-out) vs the
+//!    same items executed one at a time, per batch size.
+//!
+//! Prints human-readable lines and writes machine-readable
+//! **`BENCH_kernels.json`** to the working directory (committed as
+//! `rust/BENCH_kernels.json`, the tracked baseline). Schema
+//! (`"schema": "gta.bench.kernels/1"`):
+//!
+//! ```json
+//! {
+//!   "schema": "gta.bench.kernels/1", // bump on layout changes
+//!   "seed": 2024,                    // operand-generation seed
+//!   "provisional": false,            // true only in the placeholder
+//!   "tiles": [
+//!     {"artifact": "mpra_gemm_i8_64", "n_limbs": 1,
+//!      "oracle_ns_per_tile": 0, "plane_ns_per_tile": 0, "speedup": 0},
+//!     ...
+//!   ],
+//!   "batch": [
+//!     {"batch": 1, "serial_ns_per_item": 0,
+//!      "parallel_ns_per_item": 0, "speedup": 0},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Gate: the plane path must be **≥ 10x** the scalar-oracle path on the
+//! 64×64 i8 tile (the serve path's dominant artifact); the batch legs
+//! are recorded but not gated (CI machines have unpredictable core
+//! counts).
+
+use gta::precision::limbs;
+use gta::runtime::{ExecBackend, HostTensor, SoftBackend};
+use gta::util::bench::bench_with_budget;
+use gta::util::json::Json;
+use gta::util::rng::Rng;
+use std::hint::black_box;
+use std::time::Duration;
+
+const SEED: u64 = 2024;
+const DIM: usize = 64;
+const BUDGET: Duration = Duration::from_millis(300);
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// One 64×64 operand tile with entries uniform in `[lo, hi]`.
+fn tile(rng: &mut Rng, lo: i64, hi: i64) -> Vec<i32> {
+    (0..DIM * DIM).map(|_| rng.range_i64(lo, hi) as i32).collect()
+}
+
+/// The pre-plane SoftBackend tile path, kept verbatim as the measured
+/// oracle: widen both operands, run the scalar limb GEMM (which
+/// re-decomposes per MAC), narrow the result.
+fn oracle_tile(a: &[i32], b: &[i32], n_limbs: u32) -> Vec<i32> {
+    let a64: Vec<i64> = a.iter().map(|&v| v as i64).collect();
+    let b64: Vec<i64> = b.iter().map(|&v| v as i64).collect();
+    limbs::limb_gemm(&a64, &b64, DIM, DIM, DIM, n_limbs, 32)
+        .iter()
+        .map(|&v| v as i32)
+        .collect()
+}
+
+fn main() {
+    let be = SoftBackend;
+    let mut rng = Rng::new(SEED);
+    println!(
+        "kernel throughput: plane kernels vs scalar oracle, {DIM}x{DIM} tiles, seed {SEED}\n"
+    );
+
+    // ---- leg 1: per-artifact tile cost --------------------------------
+    let mut tiles_json = Vec::new();
+    let mut i8_speedup = 0.0;
+    for &(artifact, n_limbs, lo, hi) in &[
+        ("mpra_gemm_i8_64", 1u32, -128i64, 127i64),
+        ("mpra_gemm_i16_64", 2, -32768, 32767),
+    ] {
+        let a = tile(&mut rng, lo, hi);
+        let b = tile(&mut rng, lo, hi);
+        let inputs = vec![HostTensor::I32(a.clone()), HostTensor::I32(b.clone())];
+        // bit-identity first: a fast wrong kernel is worthless
+        let want = oracle_tile(&a, &b, n_limbs);
+        let got = be.execute(artifact, &inputs).expect("soft backend executes its own tile");
+        assert_eq!(
+            got[0].as_i32().expect("i32 tile out"),
+            want.as_slice(),
+            "{artifact}: plane path diverged from the scalar oracle"
+        );
+
+        let oracle = bench_with_budget(&format!("{artifact} scalar oracle"), BUDGET, &mut || {
+            black_box(oracle_tile(black_box(&a), black_box(&b), n_limbs));
+        });
+        let plane = bench_with_budget(&format!("{artifact} plane kernel"), BUDGET, &mut || {
+            black_box(be.execute(artifact, black_box(&inputs)).unwrap());
+        });
+        let oracle_ns = oracle.median.as_nanos() as f64;
+        let plane_ns = plane.median.as_nanos() as f64;
+        let speedup = oracle_ns / plane_ns;
+        println!("  -> {artifact}: {speedup:.1}x over the scalar oracle\n");
+        if artifact == "mpra_gemm_i8_64" {
+            i8_speedup = speedup;
+        }
+        tiles_json.push(obj(vec![
+            ("artifact", Json::Str(artifact.to_string())),
+            ("n_limbs", Json::Num(n_limbs as f64)),
+            ("oracle_ns_per_tile", Json::Num(oracle_ns)),
+            ("plane_ns_per_tile", Json::Num(plane_ns)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- leg 2: bignum pre-carry --------------------------------------
+    {
+        let a: Vec<i32> = (0..DIM).map(|_| rng.range_i64(0, 255) as i32).collect();
+        let b: Vec<i32> = (0..DIM).map(|_| rng.range_i64(0, 255) as i32).collect();
+        let a8: Vec<u8> = a.iter().map(|&v| v as u8).collect();
+        let b8: Vec<u8> = b.iter().map(|&v| v as u8).collect();
+        let inputs = vec![HostTensor::I32(a), HostTensor::I32(b)];
+        let want = limbs::bignum_mul_precarry(&a8, &b8);
+        let got = be.execute("bignum_mul_64", &inputs).unwrap();
+        assert_eq!(
+            got[0].as_i32().unwrap().iter().map(|&v| v as i64).collect::<Vec<i64>>(),
+            want,
+            "bignum fast path diverged from the naive oracle"
+        );
+
+        let naive = bench_with_budget("bignum_mul_64 naive oracle", BUDGET, &mut || {
+            black_box(limbs::bignum_mul_precarry(black_box(&a8), black_box(&b8)));
+        });
+        let fast = bench_with_budget("bignum_mul_64 workspace", BUDGET, &mut || {
+            black_box(be.execute("bignum_mul_64", black_box(&inputs)).unwrap());
+        });
+        let naive_ns = naive.median.as_nanos() as f64;
+        let fast_ns = fast.median.as_nanos() as f64;
+        let speedup = naive_ns / fast_ns;
+        println!("  -> bignum_mul_64: {speedup:.1}x over the naive oracle\n");
+        tiles_json.push(obj(vec![
+            ("artifact", Json::Str("bignum_mul_64".to_string())),
+            ("n_limbs", Json::Num(64.0)),
+            ("oracle_ns_per_tile", Json::Num(naive_ns)),
+            ("plane_ns_per_tile", Json::Num(fast_ns)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- leg 3: batch scaling -----------------------------------------
+    let mut batch_json = Vec::new();
+    for &size in &[1usize, 2, 4, 8, 16] {
+        let batch: Vec<Vec<HostTensor>> = (0..size)
+            .map(|_| {
+                vec![
+                    HostTensor::I32(tile(&mut rng, -128, 127)),
+                    HostTensor::I32(tile(&mut rng, -128, 127)),
+                ]
+            })
+            .collect();
+        // parallel fan-out must be bit-identical to serial execution
+        let serial_out: Vec<_> =
+            batch.iter().map(|i| be.execute("mpra_gemm_i8_64", i).unwrap()).collect();
+        let parallel_out = be.execute_batch("mpra_gemm_i8_64", &batch);
+        for (s, p) in serial_out.iter().zip(&parallel_out) {
+            assert_eq!(s, p.as_ref().unwrap(), "batch={size}: parallel diverged from serial");
+        }
+
+        let serial = bench_with_budget(&format!("batch={size:<2} serial"), BUDGET, &mut || {
+            for inputs in &batch {
+                black_box(be.execute("mpra_gemm_i8_64", black_box(inputs)).unwrap());
+            }
+        });
+        let parallel = bench_with_budget(&format!("batch={size:<2} parallel"), BUDGET, &mut || {
+            black_box(be.execute_batch("mpra_gemm_i8_64", black_box(&batch)));
+        });
+        let serial_ns = serial.median.as_nanos() as f64 / size as f64;
+        let parallel_ns = parallel.median.as_nanos() as f64 / size as f64;
+        let speedup = serial_ns / parallel_ns;
+        println!("  -> batch {size}: {speedup:.2}x over serial\n");
+        batch_json.push(obj(vec![
+            ("batch", Json::Num(size as f64)),
+            ("serial_ns_per_item", Json::Num(serial_ns)),
+            ("parallel_ns_per_item", Json::Num(parallel_ns)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    // ---- report + gate ------------------------------------------------
+    let report = obj(vec![
+        ("schema", Json::Str("gta.bench.kernels/1".to_string())),
+        ("seed", Json::Num(SEED as f64)),
+        ("provisional", Json::Bool(false)),
+        ("tiles", Json::Arr(tiles_json)),
+        ("batch", Json::Arr(batch_json)),
+    ]);
+    std::fs::write("BENCH_kernels.json", report.render() + "\n")
+        .expect("writing BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
+
+    assert!(
+        i8_speedup >= 10.0,
+        "plane kernel must be >= 10x the scalar oracle on mpra_gemm_i8_64, got {i8_speedup:.1}x"
+    );
+    println!("kernel gate passed: mpra_gemm_i8_64 plane path {i8_speedup:.1}x >= 10x");
+}

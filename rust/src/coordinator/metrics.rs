@@ -38,6 +38,7 @@ struct Inner {
     batches: u64,
     batched_requests: u64,
     batch_hist: BTreeMap<u64, u64>,
+    batch_exec_us: u64,
     // simulated work (one record per handled request)
     sim_cycles: u64,
     sim_util_sum: f64,
@@ -82,6 +83,11 @@ pub struct Snapshot {
     pub batch_hist: BTreeMap<u64, u64>,
     /// Largest coalesced batch dispatched.
     pub max_batch: u64,
+    /// Cumulative wall time (µs) the executor thread spent inside backend
+    /// `execute_batch` calls — against `batched_requests` it gives the
+    /// served kernel cost per tile (the number the parallel soft-backend
+    /// fan-out drives down).
+    pub batch_exec_us: u64,
     /// Total simulated GTA cycles across handled requests.
     pub sim_cycles: u64,
     /// Mean simulated PE utilization across handled requests.
@@ -195,6 +201,12 @@ impl Metrics {
         *m.batch_hist.entry(size as u64).or_insert(0) += 1;
     }
 
+    /// Wall time of one backend `execute_batch` call, measured on the
+    /// executor thread around the whole (possibly parallel) fan-out.
+    pub fn record_batch_exec(&self, us: u64) {
+        self.inner.lock().unwrap().batch_exec_us += us;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let mut lat = m.lat_reservoir.clone();
@@ -222,6 +234,7 @@ impl Metrics {
             batched_requests: m.batched_requests,
             batch_hist: m.batch_hist.clone(),
             max_batch: m.batch_hist.keys().next_back().copied().unwrap_or(0),
+            batch_exec_us: m.batch_exec_us,
             sim_cycles: m.sim_cycles,
             mean_sim_utilization: if m.requests == 0 {
                 0.0
@@ -298,6 +311,7 @@ impl Snapshot {
             *self.batch_hist.entry(*sz).or_insert(0) += cnt;
         }
         self.max_batch = self.max_batch.max(o.max_batch);
+        self.batch_exec_us += o.batch_exec_us;
         self.sim_cycles += o.sim_cycles;
         self.coalesce_window_us = self.coalesce_window_us.max(o.coalesce_window_us);
         self.latency_count += o.latency_count;
@@ -310,7 +324,7 @@ impl Snapshot {
         let mut s = format!(
             "requests={} (pgemm={} vector={})  functional={} ({} errors)  cache {}/{} hit\n\
              latency: p50={}us p95={}us p99={}us mean={:.1}us ewma={:.1}us ({} recorded)\n\
-             serving: queue peak={}  batches={} (mean {:.2}, max {}, window {}us)  \
+             serving: queue peak={}  batches={} (mean {:.2}, max {}, window {}us, exec {}us)  \
              admission rejected={} requeued={}\n",
             self.requests,
             self.pgemm_ops,
@@ -330,6 +344,7 @@ impl Snapshot {
             self.mean_batch(),
             self.max_batch,
             self.coalesce_window_us,
+            self.batch_exec_us,
             self.admission_rejected,
             self.admission_requeued,
         );
@@ -517,6 +532,8 @@ mod tests {
         m.record_batch(1);
         m.record_batch(4);
         m.record_batch(4);
+        m.record_batch_exec(120);
+        m.record_batch_exec(80);
         m.record_functional_error();
         let s = m.snapshot();
         assert_eq!(s.queue_peak_depth, 9);
@@ -526,9 +543,11 @@ mod tests {
         assert_eq!(s.batched_requests, 9);
         assert_eq!(s.batch_hist[&4], 2);
         assert_eq!(s.max_batch, 4);
+        assert_eq!(s.batch_exec_us, 200, "execute_batch wall times sum");
         assert!((s.mean_batch() - 3.0).abs() < 1e-12);
         assert_eq!(s.functional_errors, 1);
         assert!(s.render().contains("batches=3"));
+        assert!(s.render().contains("exec 200us"), "{}", s.render());
     }
 
     #[test]
@@ -563,6 +582,8 @@ mod tests {
         b.record_functional_error();
         a.record_batch(4);
         b.record_batch(2);
+        a.record_batch_exec(300);
+        b.record_batch_exec(150);
         let tele = |shard: usize, routed: u64, snapshot: Snapshot| ShardTelemetry {
             shard,
             lanes: 16,
@@ -586,6 +607,7 @@ mod tests {
         assert_eq!(rs.aggregate.batches, 2);
         assert_eq!(rs.aggregate.batched_requests, 6);
         assert_eq!(rs.aggregate.max_batch, 4);
+        assert_eq!(rs.aggregate.batch_exec_us, 450, "exec wall time sums across shards");
         // weighted means: (10·0.8 + 5·0.2)/15 and (10·10 + 5·30)/15
         assert!((rs.aggregate.mean_sim_utilization - 0.6).abs() < 1e-9);
         assert!((rs.aggregate.mean_us - (10.0 * 10.0 + 5.0 * 30.0) / 15.0).abs() < 1e-9);

@@ -160,6 +160,19 @@ impl Executor {
     where
         F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
     {
+        Self::spawn_backend_with_metrics(make, None)
+    }
+
+    /// [`Executor::spawn_backend`] with a metrics sink: the executor
+    /// thread times every backend `execute_batch` call (wall time around
+    /// the whole — possibly parallel — fan-out) into `batch_exec_us`.
+    pub fn spawn_backend_with_metrics<F>(
+        make: F,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<Executor>
+    where
+        F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<ExecJob>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
@@ -183,7 +196,11 @@ impl Executor {
                         ExecJob::RunBatch { artifact, items } => {
                             let (inputs, replies): (Vec<Vec<HostTensor>>, Vec<Reply>) =
                                 items.into_iter().unzip();
+                            let t0 = Instant::now();
                             let results = backend.execute_batch(&artifact, &inputs);
+                            if let Some(m) = &metrics {
+                                m.record_batch_exec(t0.elapsed().as_micros() as u64);
+                            }
                             for (reply, res) in replies.into_iter().zip(results) {
                                 let _ = reply.send(res);
                             }

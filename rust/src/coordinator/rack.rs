@@ -69,14 +69,17 @@ pub struct Shard {
 }
 
 impl Shard {
+    /// `metrics` is created by the caller (not in here) so backend racks
+    /// can hand the same sink to the executor thread first — that is how
+    /// `batch_exec_us` lands in the shard's own snapshot.
     fn new(
         id: usize,
         gta: GtaConfig,
         explorer: Arc<Explorer>,
         executor: Option<Executor>,
         coalesce: CoalesceConfig,
+        metrics: Arc<Metrics>,
     ) -> Shard {
-        let metrics = Arc::new(Metrics::default());
         let dispatcher = executor
             .as_ref()
             .map(|e| Dispatcher::spawn(e.tx.clone(), coalesce, Arc::clone(&metrics)));
@@ -427,7 +430,14 @@ impl Rack {
             .into_iter()
             .enumerate()
             .map(|(i, gta)| {
-                Arc::new(Shard::new(i, gta, Arc::clone(&explorer), None, CoalesceConfig::default()))
+                Arc::new(Shard::new(
+                    i,
+                    gta,
+                    Arc::clone(&explorer),
+                    None,
+                    CoalesceConfig::default(),
+                    Arc::new(Metrics::default()),
+                ))
             })
             .collect();
         Rack { shards, explorer, policy: Arc::from(policy), next_id: AtomicU64::new(0) }
@@ -452,13 +462,18 @@ impl Rack {
         let mut shards = Vec::with_capacity(configs.len());
         for (i, gta) in configs.into_iter().enumerate() {
             let mk = Arc::clone(&make);
-            let executor = Executor::spawn_backend(move || mk(i))?;
+            // the shard's metrics exist before its executor so the
+            // executor thread can time execute_batch into the same sink
+            let metrics = Arc::new(Metrics::default());
+            let executor =
+                Executor::spawn_backend_with_metrics(move || mk(i), Some(Arc::clone(&metrics)))?;
             shards.push(Arc::new(Shard::new(
                 i,
                 gta,
                 Arc::clone(&explorer),
                 Some(executor),
                 coalesce,
+                metrics,
             )));
         }
         Ok(Rack { shards, explorer, policy: Arc::from(policy), next_id: AtomicU64::new(0) })

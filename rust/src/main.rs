@@ -69,6 +69,11 @@ USAGE:
                                     server); `--timeout-ms T` bounds connect
                                     and per-response waits (default
                                     10000/30000)
+  gta bench-check [--dir DIR]       validate every BENCH_*.json perf baseline
+                                    in DIR (default .): must parse, carry a
+                                    `gta.bench.<name>/<version>` schema tag
+                                    and a pinned `seed` (the CI sanity gate
+                                    for the perf-trajectory harness)
 ";
 
 fn main() -> Result<()> {
@@ -153,12 +158,66 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&flags)?,
         "serve" => cmd_serve(&flags)?,
         "client" => cmd_client(&flags)?,
+        "bench-check" => cmd_bench_check(&flags)?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprint!("{USAGE}");
             bail!("unknown command {other:?}");
         }
     }
+    Ok(())
+}
+
+/// Validate every committed `BENCH_*.json` perf baseline: parseable JSON
+/// carrying a `gta.bench.<name>/<version>` schema tag and a pinned seed —
+/// the contract the future cross-run comparator (see ROADMAP) relies on.
+fn cmd_bench_check(flags: &Flags) -> Result<()> {
+    let dir = flags.get("dir").unwrap_or(".");
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("bench-check: reading {dir:?}: {e}"))?
+        .filter_map(|entry| {
+            let name = entry.ok()?.file_name().to_string_lossy().into_owned();
+            (name.starts_with("BENCH_") && name.ends_with(".json")).then_some(name)
+        })
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        bail!("bench-check: no BENCH_*.json baselines found in {dir:?}");
+    }
+    for name in &names {
+        let path = std::path::Path::new(dir).join(name);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("bench-check: reading {name}: {e}"))?;
+        let json = gta::util::json::parse(&text)
+            .map_err(|e| anyhow!("bench-check: {name}: {e}"))?;
+        if json.as_obj().is_none() {
+            bail!("bench-check: {name}: top level must be an object");
+        }
+        let schema = json
+            .get("schema")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("bench-check: {name}: missing string field \"schema\""))?;
+        let well_formed = schema
+            .strip_prefix("gta.bench.")
+            .and_then(|rest| rest.split_once('/'))
+            .map(|(tag, ver)| !tag.is_empty() && ver.parse::<u64>().is_ok())
+            .unwrap_or(false);
+        if !well_formed {
+            bail!(
+                "bench-check: {name}: schema {schema:?} is not gta.bench.<name>/<version>"
+            );
+        }
+        let seed = json
+            .get("seed")
+            .and_then(|s| s.as_u64())
+            .ok_or_else(|| anyhow!("bench-check: {name}: missing integer field \"seed\""))?;
+        let provisional = json.get("provisional") == Some(&gta::util::json::Json::Bool(true));
+        println!(
+            "  {name}: schema {schema} seed {seed}{}",
+            if provisional { " (provisional placeholder)" } else { "" }
+        );
+    }
+    println!("bench-check OK: {} baseline file(s) valid", names.len());
     Ok(())
 }
 

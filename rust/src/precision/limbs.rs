@@ -1,8 +1,29 @@
-//! Limb algebra: the scalar model of the MPRA datapath.
+//! Limb algebra: the scalar model of the MPRA datapath, plus the
+//! plane-decomposed fast kernels the serve path runs on.
 //!
 //! Mirrors `python/compile/kernels/ref.py` exactly (little-endian 8-bit
 //! limbs, signed-MSB scheme) so the rust side can independently verify the
 //! numerics that come back from the PJRT-executed Pallas kernels.
+//!
+//! Two tiers live here:
+//!
+//! * **Scalar oracle** ([`limb_mul`], [`limb_gemm`],
+//!   [`bignum_mul_precarry`]) — the direct transcription of §3.1: every
+//!   scalar product re-decomposes both operands and shift-adds all `n²`
+//!   limb cross-products. Deliberately naive; this is the reference the
+//!   Pallas kernels AND the fast path below are checked against.
+//! * **Plane kernels** ([`Workspace`], [`plane_gemm`]) — each operand
+//!   matrix is decomposed ONCE into per-limb planes (plane `p` holds limb
+//!   `p` of every element, row-major), then a cache-blocked wrapping-i64
+//!   micro-kernel accumulates one partial GEMM per plane pair `(p, q)`,
+//!   pre-shifted by `8(p+q)`. That is how the paper's array actually
+//!   computes (operand planes stream through the MPRA; nothing is
+//!   re-decomposed per MAC), and it is *provably bit-identical* to the
+//!   oracle: all intermediate sums are two's-complement wrapping adds,
+//!   i.e. addition in ℤ/2⁶⁴ — associative and commutative — and the final
+//!   [`truncate`] is reduction mod `2^width`, which every skipped
+//!   (`shift ≥ width`) term and every dropped intermediate truncation is
+//!   congruent to. See `docs/kernels.md` for the full argument.
 
 /// Split a signed value into `n` little-endian limbs.
 ///
@@ -99,6 +120,199 @@ pub fn bignum_mul_precarry(a: &[u8], b: &[u8]) -> Vec<i64> {
     c
 }
 
+/// Reusable scratch for the plane kernels: limb planes of both operands
+/// plus the shared i64 accumulator. Buffers grow to the high-water mark
+/// of the shapes seen and are then reused verbatim — the steady-state hot
+/// path allocates nothing. Results are valid until the next call on the
+/// same workspace (each call starts by clearing/refilling the buffers it
+/// uses, so interleaving arbitrary other calls cannot change what a given
+/// input produces — see `prop_workspace_reuse_is_deterministic`).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Plane-major limbs of A: plane `p` occupies `[p·m·k, (p+1)·m·k)`,
+    /// row-major within the plane.
+    a_planes: Vec<i64>,
+    /// Plane-major limbs of B, same layout over `k·n`.
+    b_planes: Vec<i64>,
+    /// The Fig. 3 accumulator: one wrapping i64 per output element (also
+    /// doubles as the pre-carry buffer for [`Workspace::bignum_precarry`]).
+    acc: Vec<i64>,
+}
+
+/// Cache-block sizes for the plane-pair micro-kernel: a `KC`-deep slice
+/// of a B plane row-block is `NC·8 = 1 KiB` per row, so the accumulator
+/// row segment and the streamed B rows stay L1-resident across the `kk`
+/// loop. The serve-path 64×64 tiles fit a single block; blocking only
+/// engages for larger oracle shapes.
+const KC: usize = 128;
+const NC: usize = 128;
+
+/// One plane pair's contribution: `acc += (A_p << shift) · B_q`, all
+/// arithmetic wrapping in i64. `shift` is pre-applied to the A element
+/// (valid because `(a·2^s mod 2⁶⁴)·b ≡ a·b·2^s (mod 2⁶⁴)`), so the inner
+/// loop is a plain multiply-accumulate.
+fn plane_pair_accumulate(
+    acc: &mut [i64],
+    a_plane: &[i64],
+    b_plane: &[i64],
+    m: usize,
+    k: usize,
+    n: usize,
+    shift: u32,
+) {
+    for kk0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - kk0);
+        for j0 in (0..n).step_by(NC) {
+            let nc = NC.min(n - j0);
+            for i in 0..m {
+                let a_row = &a_plane[i * k + kk0..i * k + kk0 + kc];
+                let c_row = &mut acc[i * n + j0..i * n + j0 + nc];
+                for (dk, &aik) in a_row.iter().enumerate() {
+                    if aik == 0 {
+                        continue; // contributes exactly 0 to every lane
+                    }
+                    let a_shifted = aik.wrapping_shl(shift);
+                    let b_row = &b_plane[(kk0 + dk) * n + j0..(kk0 + dk) * n + j0 + nc];
+                    for (c, &b) in c_row.iter_mut().zip(b_row) {
+                        *c = c.wrapping_add(a_shifted.wrapping_mul(b));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Decompose `len` elements into `n_limbs` plane-major limbs (same limb
+/// values as [`decompose`]: unsigned bytes below, sign-extended top).
+fn fill_planes(dst: &mut Vec<i64>, len: usize, n_limbs: usize, at: impl Fn(usize) -> i64) {
+    dst.clear();
+    dst.resize(n_limbs * len, 0);
+    for idx in 0..len {
+        let x = at(idx);
+        for p in 0..n_limbs {
+            dst[p * len + idx] =
+                if p == n_limbs - 1 { x >> (8 * p as u32) } else { (x >> (8 * p as u32)) & 0xFF };
+        }
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Plane-decomposed GEMM, bit-identical to [`limb_gemm`] for every
+    /// input (property-tested in `tests/proptest_invariants.rs`). The
+    /// returned slice (`m·n` row-major, valid until the next call) lives
+    /// in the workspace accumulator.
+    pub fn plane_gemm(
+        &mut self,
+        a: &[i64],
+        b: &[i64],
+        m: usize,
+        k: usize,
+        n: usize,
+        n_limbs: u32,
+        width: u32,
+    ) -> &[i64] {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        self.run(m, k, n, n_limbs, width, |i| a[i], |i| b[i])
+    }
+
+    /// [`Workspace::plane_gemm`] straight from i32 tiles (the serve-path
+    /// artifact dtype) — limbs are extracted during plane fill, so no
+    /// widened copy of the operands is ever materialized.
+    pub fn plane_gemm_i32(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        n_limbs: u32,
+        width: u32,
+    ) -> &[i64] {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        self.run(m, k, n, n_limbs, width, |i| a[i] as i64, |i| b[i] as i64)
+    }
+
+    fn run(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        n_limbs: u32,
+        width: u32,
+        a_at: impl Fn(usize) -> i64,
+        b_at: impl Fn(usize) -> i64,
+    ) -> &[i64] {
+        let nl = n_limbs as usize;
+        fill_planes(&mut self.a_planes, m * k, nl, a_at);
+        fill_planes(&mut self.b_planes, k * n, nl, b_at);
+        self.acc.clear();
+        self.acc.resize(m * n, 0);
+        for p in 0..nl {
+            for q in 0..nl {
+                let shift = 8 * (p + q) as u32;
+                if shift >= width {
+                    continue; // vanishes mod 2^width, exactly as limb_mul skips it
+                }
+                plane_pair_accumulate(
+                    &mut self.acc,
+                    &self.a_planes[p * m * k..(p + 1) * m * k],
+                    &self.b_planes[q * k * n..(q + 1) * k * n],
+                    m,
+                    k,
+                    n,
+                    shift,
+                );
+            }
+        }
+        for v in &mut self.acc {
+            *v = truncate(*v, width);
+        }
+        &self.acc
+    }
+
+    /// Allocation-free [`bignum_mul_precarry`]: same pre-carry limb
+    /// products, accumulated into the reused workspace buffer with the
+    /// loop restructured to stream contiguous output windows. Returns
+    /// `a.len() + b.len() - 1` coefficients (empty if either input is).
+    pub fn bignum_precarry(&mut self, a: &[u8], b: &[u8]) -> &[i64] {
+        self.acc.clear();
+        if a.is_empty() || b.is_empty() {
+            return &self.acc;
+        }
+        self.acc.resize(a.len() + b.len() - 1, 0);
+        for (i, &ai) in a.iter().enumerate() {
+            if ai == 0 {
+                continue;
+            }
+            let ai = ai as i64;
+            for (c, &bj) in self.acc[i..i + b.len()].iter_mut().zip(b) {
+                *c += ai * bj as i64;
+            }
+        }
+        &self.acc
+    }
+}
+
+/// One-shot convenience over [`Workspace::plane_gemm`] (hot paths should
+/// hold a workspace instead and skip the per-call allocation).
+pub fn plane_gemm(
+    a: &[i64],
+    b: &[i64],
+    m: usize,
+    k: usize,
+    n: usize,
+    n_limbs: u32,
+    width: u32,
+) -> Vec<i64> {
+    Workspace::new().plane_gemm(a, b, m, k, n, n_limbs, width).to_vec()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +373,75 @@ mod tests {
         assert_eq!(truncate(0x1_0000_0001, 32), 1);
         assert_eq!(truncate(0xFFFF_FFFF, 32), -1);
         assert_eq!(truncate(-1, 16), -1);
+    }
+
+    #[test]
+    fn plane_gemm_matches_scalar_oracle_on_fixed_cases() {
+        // shapes straddling the KC/NC block boundaries, wraparound-heavy
+        // values, every serve-path limb count
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 4, 2), (5, 130, 7), (130, 3, 131)] {
+            for &(n_limbs, width) in &[(1u32, 8u32), (1, 32), (2, 32), (4, 32), (8, 64)] {
+                let a: Vec<i64> = (0..m * k)
+                    .map(|i| (i as i64).wrapping_mul(0x9E37_79B9_7F4A_7C15u64 as i64))
+                    .collect();
+                let b: Vec<i64> = (0..k * n)
+                    .map(|i| (i as i64 + 7).wrapping_mul(-0x61C8_8646_80B5_83EBi64))
+                    .collect();
+                let want = limb_gemm(&a, &b, m, k, n, n_limbs, width);
+                assert_eq!(
+                    plane_gemm(&a, &b, m, k, n, n_limbs, width),
+                    want,
+                    "m={m} k={k} n={n} n_limbs={n_limbs} width={width}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plane_gemm_i32_matches_i64_entry_point() {
+        let (m, k, n) = (6usize, 9usize, 5usize);
+        let a32: Vec<i32> = (0..m * k).map(|i| (i as i32).wrapping_mul(-0x3571_1559)).collect();
+        let b32: Vec<i32> = (0..k * n).map(|i| (i as i32 + 3).wrapping_mul(0x4D2B_79F1)).collect();
+        let a64: Vec<i64> = a32.iter().map(|&v| v as i64).collect();
+        let b64: Vec<i64> = b32.iter().map(|&v| v as i64).collect();
+        let mut ws = Workspace::new();
+        let want = ws.plane_gemm(&a64, &b64, m, k, n, 4, 32).to_vec();
+        assert_eq!(ws.plane_gemm_i32(&a32, &b32, m, k, n, 4, 32), want);
+    }
+
+    #[test]
+    fn plane_gemm_handles_degenerate_shapes() {
+        // zero limbs: every product vanishes, exactly like limb_mul(_, _, 0, _)
+        assert_eq!(plane_gemm(&[5, 6], &[7, 8], 1, 2, 1, 0, 32), vec![0]);
+        // empty dimensions
+        assert_eq!(plane_gemm(&[], &[], 0, 3, 0, 2, 32), Vec::<i64>::new());
+        assert_eq!(plane_gemm(&[], &[], 2, 0, 2, 2, 32), vec![0; 4]);
+    }
+
+    #[test]
+    fn workspace_bignum_precarry_matches_naive() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.bignum_precarry(&[1, 2], &[3, 4]), &[3, 10, 8]);
+        let a: Vec<u8> = (0..64).map(|i| (i * 37 + 11) as u8).collect();
+        let b: Vec<u8> = (0..64).map(|i| (i * 91 + 5) as u8).collect();
+        let want = bignum_mul_precarry(&a, &b);
+        assert_eq!(ws.bignum_precarry(&a, &b), want.as_slice());
+        // empty operands, after the buffer held a previous result
+        assert_eq!(ws.bignum_precarry(&[], &b), &[] as &[i64]);
+    }
+
+    #[test]
+    fn workspace_is_reusable_across_mixed_shapes() {
+        let mut ws = Workspace::new();
+        let a: Vec<i64> = (0..12).map(|i| i * 17 - 90).collect();
+        let b: Vec<i64> = (0..12).map(|i| 55 - i * 23).collect();
+        let want = limb_gemm(&a, &b, 3, 4, 3, 2, 32);
+        assert_eq!(ws.plane_gemm(&a, &b, 3, 4, 3, 2, 32), want.as_slice());
+        // shrink, grow, switch kernels — then the same call must
+        // reproduce the same bytes
+        ws.plane_gemm(&a[..4], &b[..4], 2, 2, 2, 8, 64);
+        ws.bignum_precarry(&[9; 64], &[250; 64]);
+        ws.plane_gemm_i32(&[1; 256], &[2; 256], 16, 16, 16, 1, 32);
+        assert_eq!(ws.plane_gemm(&a, &b, 3, 4, 3, 2, 32), want.as_slice());
     }
 }

@@ -14,6 +14,7 @@
 
 pub mod manifest;
 
+use crate::precision::limbs;
 use anyhow::Result;
 use manifest::DType;
 use std::path::PathBuf;
@@ -320,13 +321,35 @@ pub const SOFT_ARTIFACTS: &[&str] = &["bignum_mul_64", "mpra_gemm_i16_64", "mpra
 pub const FAIL_ARTIFACT: &str = "fail_inject";
 
 /// Software reference backend: executes the serve-path artifacts with the
-/// in-tree limb oracle ([`crate::precision::limbs`]) instead of PJRT, so
+/// in-tree limb kernels ([`crate::precision::limbs`]) instead of PJRT, so
 /// the full batched-serving path (admission queue, coalescing dispatch,
 /// verification) runs and is testable in every build. Numerics are
-/// bit-identical to the Pallas kernels by construction — the oracle is
-/// what `gta verify` checks those kernels against.
+/// bit-identical to the Pallas kernels by construction — the plane
+/// kernels are property-tested against the scalar oracle, which is what
+/// `gta verify` checks those kernels against.
+///
+/// Hot-path discipline (see `docs/kernels.md`): tiles execute straight
+/// from their i32 inputs through a thread-local [`limbs::Workspace`]
+/// (limb planes + accumulator reused across requests), and
+/// [`ExecBackend::execute_batch`] fans a coalesced batch out over a small
+/// scoped worker pool — each worker thread brings its own workspace, and
+/// every item runs under `catch_unwind`, so one poisoned invocation
+/// cannot take down its batch-mates.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SoftBackend;
+
+thread_local! {
+    /// Per-thread kernel scratch: limb planes + i64 accumulator, reused
+    /// across requests so the steady-state hot path allocates only the
+    /// output tensor.
+    static KERNEL_WORKSPACE: std::cell::RefCell<limbs::Workspace> =
+        std::cell::RefCell::new(limbs::Workspace::new());
+}
+
+/// Cap on batch fan-out workers: serve tiles are ~10⁵ multiply-adds, so a
+/// handful of threads already saturates the win and more just contend
+/// with other shards' executors.
+const MAX_BATCH_WORKERS: usize = 8;
 
 impl SoftBackend {
     fn two_i32<'a>(
@@ -353,19 +376,66 @@ impl SoftBackend {
     fn gemm64(name: &str, inputs: &[HostTensor], n_limbs: u32) -> Result<Vec<HostTensor>> {
         let dim = 64usize;
         let (a, b) = Self::two_i32(name, inputs, dim * dim)?;
-        let a64: Vec<i64> = a.iter().map(|&v| v as i64).collect();
-        let b64: Vec<i64> = b.iter().map(|&v| v as i64).collect();
-        let c = crate::precision::limbs::limb_gemm(&a64, &b64, dim, dim, dim, n_limbs, 32);
-        Ok(vec![HostTensor::I32(c.iter().map(|&v| v as i32).collect())])
+        // plane kernel straight off the i32 tiles: no widened operand
+        // copies, scratch reused across requests on this thread
+        let out = KERNEL_WORKSPACE.with(|ws| {
+            let mut ws = ws.borrow_mut();
+            let c = ws.plane_gemm_i32(a, b, dim, dim, dim, n_limbs, 32);
+            c.iter().map(|&v| v as i32).collect::<Vec<i32>>()
+        });
+        Ok(vec![HostTensor::I32(out)])
     }
 
     fn bignum64(name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let l = 64usize;
-        let (a, b) = Self::two_i32(name, inputs, l)?;
-        let a8: Vec<u8> = a.iter().map(|&v| v as u8).collect();
-        let b8: Vec<u8> = b.iter().map(|&v| v as u8).collect();
-        let c = crate::precision::limbs::bignum_mul_precarry(&a8, &b8);
-        Ok(vec![HostTensor::I32(c.iter().map(|&v| v as i32).collect())])
+        use anyhow::anyhow;
+        const L: usize = 64;
+        let (a, b) = Self::two_i32(name, inputs, L)?;
+        // bignum limbs are unsigned bytes on the wire: narrowing must be
+        // checked, not wrapping — a 256 or a -1 silently folded `as u8`
+        // would produce a plausible-looking wrong product
+        let mut a8 = [0u8; L];
+        let mut b8 = [0u8; L];
+        for (input_idx, (src, dst)) in [(a, &mut a8), (b, &mut b8)].into_iter().enumerate() {
+            for (i, &v) in src.iter().enumerate() {
+                if !(0..=255).contains(&v) {
+                    return Err(anyhow!(
+                        "{name} input {input_idx}: limb {i} = {v} outside 0..=255 \
+                         (bignum limbs are unsigned bytes)"
+                    ));
+                }
+                dst[i] = v as u8;
+            }
+        }
+        let out = KERNEL_WORKSPACE.with(|ws| {
+            let mut ws = ws.borrow_mut();
+            ws.bignum_precarry(&a8, &b8).iter().map(|&v| v as i32).collect::<Vec<i32>>()
+        });
+        Ok(vec![HostTensor::I32(out)])
+    }
+
+    /// Worker threads for one batch fan-out: cover the batch, never
+    /// oversubscribe the machine, respect [`MAX_BATCH_WORKERS`].
+    fn batch_workers(batch_len: usize) -> usize {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        batch_len.min(cores).min(MAX_BATCH_WORKERS)
+    }
+
+    /// [`ExecBackend::execute`] with panics converted to per-item errors,
+    /// so a poisoned invocation degrades to its own error response.
+    fn execute_caught(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        use anyhow::anyhow;
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.execute(name, inputs)))
+        {
+            Ok(r) => r,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                Err(anyhow!("{name}: panicked during execution: {msg}"))
+            }
+        }
     }
 }
 
@@ -379,6 +449,48 @@ impl ExecBackend for SoftBackend {
             n if n == FAIL_ARTIFACT => Err(anyhow!("{FAIL_ARTIFACT}: deliberate failure")),
             other => Err(anyhow!("soft backend: unknown artifact {other:?}")),
         }
+    }
+
+    /// Parallel fan-out over a small scoped worker pool: workers steal
+    /// item indices from a shared atomic cursor, execute with their own
+    /// thread-local workspace, and every item runs under `catch_unwind` —
+    /// identical per-item results to the serial default (each item is an
+    /// independent pure function of its inputs), with per-item failure
+    /// isolation preserved.
+    fn execute_batch(&self, name: &str, batch: &[Vec<HostTensor>]) -> Vec<Result<Vec<HostTensor>>> {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let workers = Self::batch_workers(batch.len());
+        if workers <= 1 {
+            return batch.iter().map(|inputs| self.execute_caught(name, inputs)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<Result<Vec<HostTensor>>>> =
+            (0..batch.len()).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next = &next;
+                    s.spawn(move || {
+                        let mut done = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= batch.len() {
+                                break;
+                            }
+                            done.push((i, self.execute_caught(name, &batch[i])));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            for h in handles {
+                // workers cannot panic: every item is under catch_unwind
+                for (i, res) in h.join().expect("batch worker exited cleanly") {
+                    slots[i] = Some(res);
+                }
+            }
+        });
+        slots.into_iter().map(|r| r.expect("work stealing covers every index")).collect()
     }
 
     fn names(&self) -> Vec<String> {
@@ -470,6 +582,80 @@ mod tests {
         // failure injection artifact always errors
         assert!(be.execute(FAIL_ARTIFACT, &inputs).is_err());
         assert_eq!(be.names(), SOFT_ARTIFACTS.to_vec());
+    }
+
+    #[test]
+    fn parallel_batch_is_bit_identical_to_serial_with_poison_isolated() {
+        let be = SoftBackend;
+        let tile = |seed: i32| -> Vec<HostTensor> {
+            let a: Vec<i32> = (0..64 * 64).map(|i| ((i as i32 + seed) % 256) - 128).collect();
+            let b: Vec<i32> = (0..64 * 64).map(|i| ((i as i32 * 31 + seed) % 256) - 128).collect();
+            vec![HostTensor::I32(a), HostTensor::I32(b)]
+        };
+        // a batch wide enough to engage every worker, with poison spread
+        // through it: wrong arity, wrong shape, wrong dtype
+        let mut batch: Vec<Vec<HostTensor>> = (0..17).map(|i| tile(i * 7)).collect();
+        batch[3] = vec![HostTensor::I32(vec![1, 2, 3])];
+        batch[9] = vec![HostTensor::I32(vec![0; 16]), HostTensor::I32(vec![0; 16])];
+        batch[14] = vec![HostTensor::F32(vec![0.0; 64 * 64]), HostTensor::I32(vec![0; 64 * 64])];
+        // serial ground truth, item by item through the public execute
+        let serial: Vec<_> =
+            batch.iter().map(|inputs| be.execute("mpra_gemm_i8_64", inputs)).collect();
+        let parallel = be.execute_batch("mpra_gemm_i8_64", &batch);
+        assert_eq!(parallel.len(), batch.len());
+        for (i, (p, s)) in parallel.iter().zip(&serial).enumerate() {
+            match (p, s) {
+                (Ok(pv), Ok(sv)) => assert_eq!(pv, sv, "item {i} diverged from serial"),
+                (Err(pe), Err(se)) => {
+                    assert_eq!(pe.to_string(), se.to_string(), "item {i} error text")
+                }
+                _ => panic!("item {i}: parallel {p:?} vs serial ok={}", s.is_ok()),
+            }
+        }
+        assert!(parallel[3].is_err() && parallel[9].is_err() && parallel[14].is_err());
+        assert!(parallel[2].is_ok() && parallel[4].is_ok(), "poison stays per-item");
+        // repeated runs are deterministic despite work stealing
+        let again = be.execute_batch("mpra_gemm_i8_64", &batch);
+        for (i, (x, y)) in parallel.iter().zip(&again).enumerate() {
+            assert_eq!(x.is_ok(), y.is_ok(), "item {i}");
+            if let (Ok(xv), Ok(yv)) = (x, y) {
+                assert_eq!(xv, yv, "item {i} not reproducible");
+            }
+        }
+    }
+
+    #[test]
+    fn bignum_rejects_out_of_range_limbs_naming_the_index() {
+        let be = SoftBackend;
+        let good: Vec<i32> = (0..64).map(|i| (i * 3) % 256).collect();
+        let mut high = good.clone();
+        high[13] = 256;
+        let err = be
+            .execute("bignum_mul_64", &[HostTensor::I32(high), HostTensor::I32(good.clone())])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("input 0") && err.contains("limb 13") && err.contains("256"), "{err}");
+        let mut neg = good.clone();
+        neg[60] = -1;
+        let err = be
+            .execute("bignum_mul_64", &[HostTensor::I32(good.clone()), HostTensor::I32(neg)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("input 1") && err.contains("limb 60"), "{err}");
+        // boundary values 0 and 255 stay accepted and match the oracle
+        let mut edge = good.clone();
+        edge[0] = 255;
+        edge[1] = 0;
+        let out = be
+            .execute("bignum_mul_64", &[HostTensor::I32(edge.clone()), HostTensor::I32(good)])
+            .unwrap();
+        let e8: Vec<u8> = edge.iter().map(|&v| v as u8).collect();
+        let g8: Vec<u8> = (0..64u32).map(|i| ((i * 3) % 256) as u8).collect();
+        let want = crate::precision::limbs::bignum_mul_precarry(&e8, &g8);
+        assert_eq!(
+            out[0].as_i32().unwrap().iter().map(|&v| v as i64).collect::<Vec<i64>>(),
+            want
+        );
     }
 
     #[test]

@@ -52,6 +52,103 @@ fn prop_accumulator_combine_matches_product() {
 }
 
 #[test]
+fn prop_plane_gemm_bit_identical_to_scalar_oracle() {
+    // the tentpole invariant: the plane-decomposed cache-blocked kernel
+    // is bit-identical to the naive §3.1 oracle for EVERY (n_limbs,
+    // width) the serve path can see, on wraparound-heavy operands (full
+    // i64 range — far outside what n_limbs can represent, so every
+    // wrapping edge in the reassociation argument is exercised)
+    property("plane_gemm == limb_gemm", 120, |rng: &mut Rng| {
+        let n_limbs = *rng.choose(&[1u32, 2, 4, 8]);
+        let width = *rng.choose(&[8u32, 16, 32, 64]);
+        let m = rng.range_u64(1, 20) as usize;
+        let k = rng.range_u64(1, 20) as usize;
+        let n = rng.range_u64(1, 20) as usize;
+        let a: Vec<i64> = (0..m * k).map(|_| rng.next_u64() as i64).collect();
+        let b: Vec<i64> = (0..k * n).map(|_| rng.next_u64() as i64).collect();
+        let want = limbs::limb_gemm(&a, &b, m, k, n, n_limbs, width);
+        let got = limbs::plane_gemm(&a, &b, m, k, n, n_limbs, width);
+        assert_eq!(got, want, "m={m} k={k} n={n} n_limbs={n_limbs} width={width}");
+    });
+}
+
+#[test]
+fn prop_workspace_bignum_matches_naive_precarry() {
+    property("workspace bignum == naive precarry", 150, |rng: &mut Rng| {
+        let mut ws = limbs::Workspace::new();
+        let la = rng.range_u64(0, 80) as usize;
+        let lb = rng.range_u64(0, 80) as usize;
+        let a: Vec<u8> = (0..la).map(|_| rng.range_u64(0, 255) as u8).collect();
+        let b: Vec<u8> = (0..lb).map(|_| rng.range_u64(0, 255) as u8).collect();
+        let want = limbs::bignum_mul_precarry(&a, &b);
+        assert_eq!(ws.bignum_precarry(&a, &b), want.as_slice(), "la={la} lb={lb}");
+        // and again on the warmed buffer (reuse must not leak state)
+        assert_eq!(ws.bignum_precarry(&a, &b), want.as_slice(), "warm la={la} lb={lb}");
+    });
+}
+
+#[test]
+fn prop_workspace_reuse_is_deterministic() {
+    // same inputs through a workspace that has digested an arbitrary
+    // interleaving of other shapes/kernels -> identical bytes to a fresh
+    // workspace (buffers are scratch, never carried state)
+    property("workspace reuse == fresh workspace", 60, |rng: &mut Rng| {
+        let n_limbs = *rng.choose(&[1u32, 2, 4, 8]);
+        let width = *rng.choose(&[16u32, 32, 64]);
+        let m = rng.range_u64(1, 12) as usize;
+        let k = rng.range_u64(1, 12) as usize;
+        let n = rng.range_u64(1, 12) as usize;
+        let a: Vec<i64> = (0..m * k).map(|_| rng.next_u64() as i64).collect();
+        let b: Vec<i64> = (0..k * n).map(|_| rng.next_u64() as i64).collect();
+        let want = limbs::Workspace::new().plane_gemm(&a, &b, m, k, n, n_limbs, width).to_vec();
+
+        let mut ws = limbs::Workspace::new();
+        for _ in 0..rng.range_u64(1, 5) {
+            match rng.range_u64(0, 2) {
+                0 => {
+                    let d = rng.range_u64(1, 30) as usize;
+                    let xa: Vec<i64> = (0..d * d).map(|_| rng.next_u64() as i64).collect();
+                    let xb: Vec<i64> = (0..d * d).map(|_| rng.next_u64() as i64).collect();
+                    ws.plane_gemm(&xa, &xb, d, d, d, *rng.choose(&[1u32, 8]), 64);
+                }
+                1 => {
+                    let d = rng.range_u64(1, 64) as usize;
+                    let xa: Vec<u8> = (0..d).map(|_| rng.range_u64(0, 255) as u8).collect();
+                    ws.bignum_precarry(&xa, &xa.clone());
+                }
+                _ => {
+                    let d = rng.range_u64(1, 16) as usize;
+                    let xa: Vec<i32> = (0..d * d).map(|_| rng.next_u64() as i32).collect();
+                    ws.plane_gemm_i32(&xa, &xa.clone(), d, d, d, 4, 32);
+                }
+            }
+        }
+        assert_eq!(
+            ws.plane_gemm(&a, &b, m, k, n, n_limbs, width),
+            want.as_slice(),
+            "m={m} k={k} n={n} n_limbs={n_limbs} width={width}"
+        );
+    });
+}
+
+#[test]
+fn prop_plane_gemm_i32_entry_matches_i64_entry() {
+    property("plane_gemm_i32 == plane_gemm on widened tiles", 80, |rng: &mut Rng| {
+        let n_limbs = *rng.choose(&[1u32, 2, 4]);
+        let m = rng.range_u64(1, 16) as usize;
+        let k = rng.range_u64(1, 16) as usize;
+        let n = rng.range_u64(1, 16) as usize;
+        let a32: Vec<i32> = (0..m * k).map(|_| rng.next_u64() as i32).collect();
+        let b32: Vec<i32> = (0..k * n).map(|_| rng.next_u64() as i32).collect();
+        let a64: Vec<i64> = a32.iter().map(|&v| v as i64).collect();
+        let b64: Vec<i64> = b32.iter().map(|&v| v as i64).collect();
+        let mut ws = limbs::Workspace::new();
+        let want = ws.plane_gemm(&a64, &b64, m, k, n, n_limbs, 32).to_vec();
+        assert_eq!(ws.plane_gemm_i32(&a32, &b32, m, k, n, n_limbs, 32), want.as_slice());
+    });
+}
+
+#[test]
 fn prop_bignum_carry_equals_bigint_mult() {
     property("BNM pre-carry + carries == exact product", 100, |rng: &mut Rng| {
         let l = rng.range_u64(1, 24) as usize;

@@ -153,6 +153,75 @@ fn coalesced_batches_are_bit_identical_to_sequential_execution() {
 }
 
 #[test]
+fn batch_exec_wall_time_lands_in_the_snapshot() {
+    // every functional exec goes through ExecJob::RunBatch, so the
+    // executor-side wall clock around the (parallel) fan-out must show
+    // up in the shard snapshot — and from there in RackSnapshot
+    let coord = soft_coordinator(10, 8);
+    let requests: Vec<Request> =
+        (0..16).map(|i| gemm_tile(i, "mpra_gemm_i8_64", i as i32 * 3 + 1)).collect();
+    let responses = coord.serve(requests, 4);
+    assert!(responses.iter().all(|r| r.is_ok()));
+    let snap = coord.metrics.snapshot();
+    assert!(snap.batches > 0);
+    assert!(
+        snap.batch_exec_us > 0,
+        "16 gemm tiles cannot execute in zero microseconds: {snap:?}"
+    );
+    let rack_snap = coord.rack().snapshot();
+    assert_eq!(rack_snap.aggregate.batch_exec_us, snap.batch_exec_us);
+    assert!(rack_snap.aggregate.render().contains("exec "), "{}", rack_snap.aggregate.render());
+}
+
+#[test]
+fn poisoned_batch_mate_leaves_coalesced_siblings_intact() {
+    // batches group by (artifact, input signature), so a malformed shape
+    // never rides along — to poison a SHARED batch the request must look
+    // healthy on the outside: a bignum tile with one limb out of 0..=255
+    // has the exact signature of its siblings and only fails inside the
+    // backend's checked narrowing. The parallel fan-out must fail it
+    // alone, bit-identically to direct execution for everyone else.
+    let coord = soft_coordinator(25, 16);
+    let bignum = |id: u64, poison: bool| {
+        let mut a: Vec<i32> = (0..64).map(|i| ((i + id as i32) * 5) % 256).collect();
+        let b: Vec<i32> = (0..64).map(|i| (i * 11 + 7) % 256).collect();
+        if poison {
+            a[17] = 300; // outside 0..=255
+        }
+        Request {
+            id,
+            op: TensorOp::gemm(64, 64, 1, Precision::Int8),
+            exec: ExecKind::Functional {
+                artifact: "bignum_mul_64".to_string(),
+                inputs: vec![HostTensor::I32(a), HostTensor::I32(b)],
+            },
+        }
+    };
+    let requests: Vec<Request> = (0..12).map(|i| bignum(i, i == 5)).collect();
+    let oracle: Vec<Option<Vec<HostTensor>>> =
+        requests.iter().map(|r| if r.id == 5 { None } else { Some(direct(r)) }).collect();
+    let responses = coord.serve(requests, 6);
+    assert_eq!(responses.len(), 12);
+    for r in &responses {
+        if r.id == 5 {
+            let err = r.error.as_ref().expect("out-of-range limb surfaces as its own error");
+            assert!(err.contains("limb 17") && err.contains("300"), "{err}");
+        } else {
+            assert!(r.is_ok(), "request {}: {:?}", r.id, r.error);
+            assert_eq!(
+                r.outputs.as_ref().unwrap(),
+                oracle[r.id as usize].as_ref().unwrap(),
+                "batch-mate {} must be bit-identical to direct execution",
+                r.id
+            );
+        }
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.functional_errors, 1);
+    assert!(snap.max_batch > 1, "siblings did coalesce: hist {:?}", snap.batch_hist);
+}
+
+#[test]
 fn backpressure_keeps_queue_bounded_and_serves_everything() {
     let coord = soft_coordinator(1, 8);
     let cap = 4usize;
