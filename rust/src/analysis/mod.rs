@@ -1,0 +1,863 @@
+//! `gta analyze` — a dependency-free invariant linter that encodes this
+//! repo's bug history as machine-checked rules.
+//!
+//! Three of the first seven PRs fixed the same two bug classes: silent
+//! `as`-narrowing truncation in decoders (PR 6's `get_u32`/`get_usize`
+//! hardening, PR 8's `bignum64` `as u8` fix) and panics that lose admitted
+//! work (PR 2's catch_unwind serving fix). This module turns those lessons
+//! into rules that run on every CI push, so the classes cannot silently
+//! come back.
+//!
+//! The scanner is deliberately lexer-level — no `syn`, no dependencies.
+//! [`lex`] walks the source once with full string/char/comment awareness
+//! (raw strings, nested block comments, `\<newline>` string continuations,
+//! lifetimes vs. char literals) and blanks non-code text, so the rules can
+//! run cheap substring scans over *code only* without false positives from
+//! doc comments or string payloads. Trailing `#[cfg(test)]` items are
+//! masked out by brace tracking ([`test_mask`]).
+//!
+//! Rules (see `docs/analysis.md` for the table with originating PRs):
+//!
+//! - **R1** no silent narrowing `as` casts in decoder/wire/limb modules
+//! - **R2** no `unwrap()`/`expect()`/`panic!`/literal index in the serving
+//!   hot path outside `#[cfg(test)]`
+//! - **R3** `lock().unwrap()` must use a poison-mapping idiom or carry a
+//!   `// lint: poison-safe <reason>`
+//! - **R4** every `Ordering::Relaxed` needs a `// lint: relaxed-ok <reason>`
+//! - **R5** no `process::exit`/`todo!`/`unimplemented!` outside `main.rs`
+//! - **R6** public decode/parse fns must return `Result`/`Option`
+//! - **R7** capacity reservations in frame codecs need a bounded-size
+//!   justification (`Vec::with_capacity(attacker_controlled)` guard)
+//! - **R8** bench JSON writers must stamp a `gta.bench.<name>/<n>` schema tag
+//! - **R0** (engine-level) a suppression directive without a reason
+//!
+//! Suppression: `// lint: allow(R1) <reason>`, `// lint: poison-safe
+//! <reason>` (= allow(R3)), `// lint: relaxed-ok <reason>` (= allow(R4)),
+//! on the finding's line or the line above. The reason is mandatory.
+//! Pre-existing findings live in `analysis/BASELINE.json` as per-(rule,
+//! file) ceilings: counts at or under the ceiling pass (tracked for
+//! burn-down), anything new fails.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Schema tag stamped on the JSON report (`--format json`).
+pub const REPORT_SCHEMA: &str = "gta.analysis.report/1";
+/// Schema tag a baseline file must carry.
+pub const BASELINE_SCHEMA: &str = "gta.analysis.baseline/1";
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path normalized to start at the `src/` or `benches/` component, so
+    /// `--dir rust/src`, `--dir src` and `--dir .` agree on keys.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+/// A grandfathered (rule, file) group: pre-existing findings at or under
+/// the committed ceiling, tracked for burn-down rather than failing.
+#[derive(Debug, Clone)]
+pub struct Grandfathered {
+    pub rule: String,
+    pub file: String,
+    pub count: usize,
+    pub max: usize,
+    pub note: String,
+}
+
+/// Per-(rule, file) ceiling from `analysis/BASELINE.json`.
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub max: usize,
+    pub note: String,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+/// The outcome of an `analyze` run: what fails, what is grandfathered.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub dir: String,
+    pub files_scanned: usize,
+    pub failing: Vec<Finding>,
+    pub grandfathered: Vec<Grandfathered>,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.failing.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: blank strings/chars/comments out of code, keep comment text.
+// ---------------------------------------------------------------------------
+
+/// One source line after lexing: `code` has every string/char/comment
+/// character replaced by a space (structure like braces and casts intact),
+/// `comment` holds the text of any comments on the line.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+#[derive(PartialEq)]
+enum LexState {
+    Code,
+    LineComment,
+    BlockComment,
+    Str,
+    RawStr,
+}
+
+fn is_word(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Split `src` into [`Line`]s with string/char/comment interiors blanked.
+/// Handles nested block comments, raw strings (`r"`, `r#"`, `br#"`), byte
+/// strings, `\<newline>` string continuations, and the lifetime-vs-char
+/// (`'a` vs `'a'`) ambiguity by lookahead.
+pub fn lex(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut state = LexState::Code;
+    let mut depth = 0usize; // block comment nesting
+    let mut hashes = 0usize; // raw string fence
+    let mut escaped = false; // pending escape inside "..."
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            if state == LexState::LineComment {
+                state = LexState::Code;
+            }
+            escaped = false; // \<newline> string continuation
+            i += 1;
+            continue;
+        }
+        match state {
+            LexState::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    state = LexState::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = LexState::BlockComment;
+                    depth = 1;
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = LexState::Str;
+                    escaped = false;
+                    cur.code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                let word_before = i > 0 && is_word(chars[i - 1]);
+                if c == 'r' && !word_before {
+                    // r"..." / r#"..."#
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while chars.get(j) == Some(&'#') {
+                        h += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        state = LexState::RawStr;
+                        hashes = h;
+                        for _ in i..=j {
+                            cur.code.push(' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == 'b' && !word_before {
+                    // b"..." and br#"..."# byte strings (b'.' is a char)
+                    if chars.get(i + 1) == Some(&'"') {
+                        state = LexState::Str;
+                        escaped = false;
+                        cur.code.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    if chars.get(i + 1) == Some(&'r') {
+                        let mut j = i + 2;
+                        let mut h = 0usize;
+                        while chars.get(j) == Some(&'#') {
+                            h += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') {
+                            state = LexState::RawStr;
+                            hashes = h;
+                            for _ in i..=j {
+                                cur.code.push(' ');
+                            }
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: '\..' or 'x' is a literal
+                    if chars.get(i + 1) == Some(&'\\') {
+                        let mut j = i + 2;
+                        if j < n {
+                            j += 1; // the escaped char itself
+                        }
+                        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        let end = j.min(n.saturating_sub(1));
+                        for _ in i..=end {
+                            cur.code.push(' ');
+                        }
+                        i = j + 1;
+                        continue;
+                    }
+                    if chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push_str("   ");
+                        i += 3;
+                        continue;
+                    }
+                    cur.code.push(c); // a lifetime: keep, harmless in code
+                    i += 1;
+                    continue;
+                }
+                cur.code.push(c);
+                i += 1;
+            }
+            LexState::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            LexState::BlockComment => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        state = LexState::Code;
+                    }
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if escaped {
+                    escaped = false;
+                } else if c == '\\' {
+                    escaped = true;
+                } else if c == '"' {
+                    state = LexState::Code;
+                    cur.code.push(' ');
+                    i += 1;
+                    continue;
+                }
+                i += 1;
+            }
+            LexState::RawStr => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut h = 0usize;
+                    while h < hashes && chars.get(j) == Some(&'#') {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        state = LexState::Code;
+                        i = j;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Per-line mask: `true` for lines inside a trailing `#[cfg(test)]`-gated
+/// item (the attribute line through the close of its brace block).
+pub fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut k = 0usize;
+    while k < lines.len() {
+        if lines[k].code.trim_start().starts_with("#[cfg(test)]") {
+            let mut depth = 0i64;
+            let mut opened = false;
+            let mut j = k;
+            while j < lines.len() {
+                mask[j] = true;
+                for ch in lines[j].code.chars() {
+                    match ch {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                j += 1;
+            }
+            k = j + 1;
+            continue;
+        }
+        k += 1;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Suppression directives.
+// ---------------------------------------------------------------------------
+
+/// Parsed from line comments: `lint: allow(R1,R2) reason`,
+/// `lint: poison-safe reason`, `lint: relaxed-ok reason`. Returns
+/// (line -> allowed rule ids, malformed-directive R0 findings). An allow
+/// covers the directive's own line and the line below it.
+fn suppressions(lines: &[Line], file: &str) -> (BTreeMap<usize, Vec<String>>, Vec<Finding>) {
+    let mut allow: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    for (idx0, line) in lines.iter().enumerate() {
+        let ln = idx0 + 1;
+        let Some(at) = line.comment.find("lint:") else { continue };
+        let rest = line.comment[at + "lint:".len()..].trim_start();
+        let (rules, reason): (Vec<String>, &str) = if let Some(r) = rest.strip_prefix("allow(") {
+            match r.split_once(')') {
+                Some((ids, reason)) => (
+                    ids.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+                    reason,
+                ),
+                None => (Vec::new(), ""),
+            }
+        } else if let Some(reason) = rest.strip_prefix("poison-safe") {
+            (vec!["R3".to_string()], reason)
+        } else if let Some(reason) = rest.strip_prefix("relaxed-ok") {
+            (vec!["R4".to_string()], reason)
+        } else {
+            bad.push(Finding {
+                rule: "R0",
+                file: file.to_string(),
+                line: ln,
+                message: "unrecognized lint: directive (want allow(Rn)/poison-safe/relaxed-ok)"
+                    .to_string(),
+            });
+            continue;
+        };
+        if rules.is_empty() || reason.trim().is_empty() {
+            bad.push(Finding {
+                rule: "R0",
+                file: file.to_string(),
+                line: ln,
+                message: "suppression directive without a reason (the reason is mandatory)"
+                    .to_string(),
+            });
+            continue;
+        }
+        for target in [ln, ln + 1] {
+            allow.entry(target).or_default().extend(rules.iter().cloned());
+        }
+    }
+    (allow, bad)
+}
+
+// ---------------------------------------------------------------------------
+// Rule scopes + detectors.
+// ---------------------------------------------------------------------------
+
+/// Normalize a path so baseline keys are stable however `--dir` points at
+/// the tree: keep from the last `src`/`benches` component onward.
+pub fn norm_path(path: &str) -> String {
+    let parts: Vec<&str> = path.split(['/', '\\']).filter(|p| !p.is_empty() && *p != ".").collect();
+    for anchor in ["src", "benches"] {
+        if let Some(k) = parts.iter().rposition(|p| *p == anchor) {
+            return parts[k..].join("/");
+        }
+    }
+    parts.last().copied().unwrap_or(path).to_string()
+}
+
+/// R1: decoder/wire/limb modules where a silently narrowing `as` cast has
+/// historically produced plausible-looking wrong answers.
+fn in_scope_r1(p: &str) -> bool {
+    p.starts_with("src/net/")
+        || p.starts_with("src/precision/")
+        || p == "src/util/json.rs"
+        || p == "src/sim/trace.rs"
+        || p == "src/coordinator/lane_scheduler.rs"
+}
+
+/// R2: the serving hot path, where a panic loses admitted work.
+fn in_scope_r2(p: &str) -> bool {
+    p.starts_with("src/net/")
+        || p.starts_with("src/runtime/")
+        || p == "src/coordinator/session.rs"
+        || p == "src/serve.rs"
+}
+
+const NARROW: [&str; 8] = ["u8", "u16", "u32", "i8", "i16", "i32", "usize", "isize"];
+const R2_TOKENS: [&str; 4] = [".unwrap()", ".expect(", "panic!(", "unreachable!("];
+
+/// Scan `code` for `as <narrow-int>` casts; returns the narrow type names
+/// in order of appearance (a line can hold several casts).
+fn narrowing_casts(code: &str) -> Vec<&'static str> {
+    let b: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < b.len() {
+        let is_as = b[i] == 'a'
+            && b[i + 1] == 's'
+            && (i == 0 || !is_word(b[i - 1]))
+            && b.get(i + 2).is_some_and(|c| c.is_whitespace());
+        if !is_as {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while b.get(j).is_some_and(|c| c.is_whitespace()) {
+            j += 1;
+        }
+        let start = j;
+        while b.get(j).is_some_and(|&c| is_word(c)) {
+            j += 1;
+        }
+        let ident: String = b[start..j].iter().collect();
+        if let Some(t) = NARROW.iter().find(|t| **t == ident) {
+            out.push(*t);
+        }
+        i = j.max(i + 1);
+    }
+    out
+}
+
+/// `x[0]`-style literal slice indexing: word/`)`/`]` then `[digits]`.
+fn has_literal_index(code: &str) -> bool {
+    let b: Vec<char> = code.chars().collect();
+    for i in 1..b.len() {
+        if b[i] != '[' {
+            continue;
+        }
+        let prev = b[i - 1];
+        if !(is_word(prev) || prev == ')' || prev == ']') {
+            continue;
+        }
+        let mut j = i + 1;
+        let start = j;
+        while b.get(j).is_some_and(|c| c.is_ascii_digit()) {
+            j += 1;
+        }
+        if j > start && b.get(j) == Some(&']') {
+            return true;
+        }
+    }
+    false
+}
+
+/// R6: find `pub fn decode_*` / `pub fn parse*` headers; returns
+/// (line index, fn name) pairs for signature accumulation.
+fn decode_fn_headers(lines: &[Line]) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        for pat in ["pub fn ", "pub(crate) fn "] {
+            if let Some(at) = code.find(pat) {
+                let name: String = code[at + pat.len()..]
+                    .chars()
+                    .take_while(|&c| is_word(c))
+                    .collect();
+                if name.starts_with("decode_") || name.starts_with("parse") {
+                    out.push((idx, name));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The scanner.
+// ---------------------------------------------------------------------------
+
+/// Run every rule over one source text. `label` is the path used for rule
+/// scoping and finding locations — tests pass hot-path labels with fixture
+/// bodies to exercise rules without touching the real tree.
+pub fn scan_source(label: &str, src: &str) -> Vec<Finding> {
+    let p = norm_path(label);
+    let lines = lex(src);
+    let mask = test_mask(&lines);
+    let (allow, mut out) = suppressions(&lines, &p);
+    let allowed = |ln: usize, rule: &str| {
+        allow.get(&ln).is_some_and(|rules| rules.iter().any(|r| r.as_str() == rule))
+    };
+    let emit = |out: &mut Vec<Finding>, rule: &'static str, ln: usize, msg: String| {
+        if !allowed(ln, rule) {
+            out.push(Finding { rule, file: p.clone(), line: ln, message: msg });
+        }
+    };
+
+    // R8 (file-level): a bench that writes a BENCH_*.json baseline must
+    // stamp the machine-readable schema tag bench-check validates.
+    if p.starts_with("benches/") && src.contains("BENCH_") && !src.contains("gta.bench.") {
+        emit(
+            &mut out,
+            "R8",
+            1,
+            "bench writes BENCH_*.json without a gta.bench.<name>/<n> schema tag".to_string(),
+        );
+    }
+
+    // R6: decode/parse signatures must admit failure.
+    if p.starts_with("src/net/") || p.starts_with("src/precision/") || p == "src/util/json.rs" {
+        for (idx, name) in decode_fn_headers(&lines) {
+            if mask[idx] {
+                continue;
+            }
+            let mut sig = String::new();
+            let mut j = idx;
+            loop {
+                sig.push_str(&lines[j].code);
+                sig.push(' ');
+                if lines[j].code.contains('{') || lines[j].code.contains(';') || j + 1 >= lines.len()
+                {
+                    break;
+                }
+                j += 1;
+            }
+            let head = sig.split('{').next().unwrap_or("");
+            if !head.contains("Result") && !head.contains("Option") {
+                emit(
+                    &mut out,
+                    "R6",
+                    idx + 1,
+                    format!("pub decode/parse fn `{name}` does not return Result/Option"),
+                );
+            }
+        }
+    }
+
+    for (idx0, line) in lines.iter().enumerate() {
+        if mask[idx0] {
+            continue;
+        }
+        let ln = idx0 + 1;
+        let code = &line.code;
+        if in_scope_r1(&p) {
+            for t in narrowing_casts(code) {
+                emit(
+                    &mut out,
+                    "R1",
+                    ln,
+                    format!(
+                        "narrowing `as {t}` in a decoder/wire/limb module — use the checked \
+                         get_u32/get_usize/try_into idiom (PR 6, PR 8)"
+                    ),
+                );
+            }
+        }
+        if in_scope_r2(&p) && !code.contains(".lock()") {
+            for tok in R2_TOKENS {
+                if code.contains(tok) {
+                    emit(
+                        &mut out,
+                        "R2",
+                        ln,
+                        format!("`{tok}` in the serving hot path loses admitted work (PR 2)"),
+                    );
+                }
+            }
+            if has_literal_index(code) {
+                emit(
+                    &mut out,
+                    "R2",
+                    ln,
+                    "unchecked literal slice index in the serving hot path".to_string(),
+                );
+            }
+        }
+        if p.starts_with("src/") {
+            if code.contains(".lock().unwrap()") {
+                emit(
+                    &mut out,
+                    "R3",
+                    ln,
+                    "lock().unwrap() without poison mapping — use the lock_writer pattern, \
+                     unwrap_or_else(|e| e.into_inner()), or justify with `// lint: poison-safe`"
+                        .to_string(),
+                );
+            }
+            if code.contains("Ordering::Relaxed") {
+                emit(
+                    &mut out,
+                    "R4",
+                    ln,
+                    "Ordering::Relaxed without a `// lint: relaxed-ok <why>` justification"
+                        .to_string(),
+                );
+            }
+            if p != "src/main.rs" {
+                for tok in ["process::exit", "todo!(", "unimplemented!("] {
+                    if code.contains(tok) {
+                        emit(&mut out, "R5", ln, format!("`{tok}` outside main.rs"));
+                    }
+                }
+            }
+        }
+        if p.starts_with("src/net/") && (code.contains("with_capacity(") || code.contains(".reserve("))
+        {
+            emit(
+                &mut out,
+                "R7",
+                ln,
+                "capacity reservation in a frame codec path — justify that the size is \
+                 bounded before allocating (hostile length words must be cap-checked first)"
+                    .to_string(),
+            );
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+/// Recursively scan every `.rs` file under `dir`, skipping `target/`,
+/// `tests/`, `fixtures/` and hidden directories. Returns
+/// (files scanned, findings).
+pub fn scan_dir(dir: &Path) -> std::io::Result<(usize, Vec<Finding>)> {
+    let mut files = Vec::new();
+    collect_rs_files(dir, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        findings.extend(scan_source(&f.to_string_lossy(), &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok((files.len(), findings))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name.starts_with('.') || matches!(name.as_str(), "target" | "tests" | "fixtures") {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: committed per-(rule, file) ceilings for grandfathered findings.
+// ---------------------------------------------------------------------------
+
+/// Parse `analysis/BASELINE.json`. Errors are strings so the CLI can wrap
+/// them with the path.
+pub fn parse_baseline(text: &str) -> Result<Baseline, String> {
+    let j = json::parse(text).map_err(|e| format!("{e}"))?;
+    let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != BASELINE_SCHEMA {
+        return Err(format!("schema {schema:?} is not {BASELINE_SCHEMA}"));
+    }
+    let mut entries = Vec::new();
+    for e in j.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+        let rule = e
+            .get("rule")
+            .and_then(Json::as_str)
+            .ok_or("baseline entry missing \"rule\"")?
+            .to_string();
+        let file = e
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or("baseline entry missing \"file\"")?
+            .to_string();
+        let max = e.get("max").and_then(Json::as_u64).ok_or("baseline entry missing \"max\"")?
+            as usize;
+        let note = e.get("note").and_then(Json::as_str).unwrap_or("").to_string();
+        entries.push(BaselineEntry { rule, file, max, note });
+    }
+    Ok(Baseline { entries })
+}
+
+/// Render a baseline (e.g. for `--write-baseline`).
+pub fn render_baseline(b: &Baseline) -> String {
+    let entries: Vec<Json> = b
+        .entries
+        .iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("rule".to_string(), Json::Str(e.rule.clone()));
+            m.insert("file".to_string(), Json::Str(e.file.clone()));
+            m.insert("max".to_string(), Json::Num(e.max as f64));
+            m.insert("note".to_string(), Json::Str(e.note.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(BASELINE_SCHEMA.to_string()));
+    top.insert("entries".to_string(), Json::Arr(entries));
+    Json::Obj(top).render()
+}
+
+/// Build a fresh baseline that exactly covers `findings` (burn-down seed).
+pub fn baseline_from_findings(findings: &[Finding], note: &str) -> Baseline {
+    let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for f in findings {
+        *counts.entry((f.rule.to_string(), f.file.clone())).or_default() += 1;
+    }
+    Baseline {
+        entries: counts
+            .into_iter()
+            .map(|((rule, file), max)| BaselineEntry { rule, file, max, note: note.to_string() })
+            .collect(),
+    }
+}
+
+/// Split findings into (failing, grandfathered) under the baseline's
+/// per-(rule, file) ceilings: a group at or under its ceiling is tracked,
+/// a group over it fails wholesale (the new finding is in there somewhere,
+/// and the fix is to not add it).
+pub fn apply_baseline(findings: Vec<Finding>, baseline: &Baseline) -> (Vec<Finding>, Vec<Grandfathered>) {
+    let mut groups: BTreeMap<(String, String), Vec<Finding>> = BTreeMap::new();
+    for f in findings {
+        groups.entry((f.rule.to_string(), f.file.clone())).or_default().push(f);
+    }
+    let mut failing = Vec::new();
+    let mut grandfathered = Vec::new();
+    for ((rule, file), group) in groups {
+        let entry = baseline.entries.iter().find(|e| e.rule == rule && e.file == file);
+        match entry {
+            Some(e) if group.len() <= e.max => grandfathered.push(Grandfathered {
+                rule,
+                file,
+                count: group.len(),
+                max: e.max,
+                note: e.note.clone(),
+            }),
+            _ => failing.extend(group),
+        }
+    }
+    failing.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    (failing, grandfathered)
+}
+
+/// Default baseline location for a scan root: `<dir>/analysis/BASELINE.json`
+/// (scanning a crate root), else `<dir>/../analysis/BASELINE.json`
+/// (scanning `rust/src` directly).
+pub fn resolve_baseline_path(dir: &Path) -> Option<PathBuf> {
+    let in_dir = dir.join("analysis").join("BASELINE.json");
+    if in_dir.is_file() {
+        return Some(in_dir);
+    }
+    let sibling = dir.join("..").join("analysis").join("BASELINE.json");
+    if sibling.is_file() {
+        return Some(sibling);
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Output.
+// ---------------------------------------------------------------------------
+
+/// Machine-readable report (`--format json`), schema [`REPORT_SCHEMA`] —
+/// validated by `gta bench-check --analysis` in CI.
+pub fn report_json(r: &Report) -> Json {
+    let findings: Vec<Json> = r
+        .failing
+        .iter()
+        .map(|f| {
+            let mut m = BTreeMap::new();
+            m.insert("rule".to_string(), Json::Str(f.rule.to_string()));
+            m.insert("file".to_string(), Json::Str(f.file.clone()));
+            m.insert("line".to_string(), Json::Num(f.line as f64));
+            m.insert("message".to_string(), Json::Str(f.message.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let grandfathered: Vec<Json> = r
+        .grandfathered
+        .iter()
+        .map(|g| {
+            let mut m = BTreeMap::new();
+            m.insert("rule".to_string(), Json::Str(g.rule.clone()));
+            m.insert("file".to_string(), Json::Str(g.file.clone()));
+            m.insert("count".to_string(), Json::Num(g.count as f64));
+            m.insert("max".to_string(), Json::Num(g.max as f64));
+            m.insert("note".to_string(), Json::Str(g.note.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(REPORT_SCHEMA.to_string()));
+    top.insert("dir".to_string(), Json::Str(r.dir.clone()));
+    top.insert("files_scanned".to_string(), Json::Num(r.files_scanned as f64));
+    top.insert("ok".to_string(), Json::Bool(r.ok()));
+    top.insert("findings".to_string(), Json::Arr(findings));
+    top.insert("grandfathered".to_string(), Json::Arr(grandfathered));
+    Json::Obj(top)
+}
+
+/// Human-readable report (`--format text`, the default).
+pub fn render_text(r: &Report) -> String {
+    let mut s = format!("gta analyze: scanned {} file(s) under {}\n", r.files_scanned, r.dir);
+    for f in &r.failing {
+        s.push_str(&format!("  FAIL {} {}:{} — {}\n", f.rule, f.file, f.line, f.message));
+    }
+    for g in &r.grandfathered {
+        let slack = if g.count < g.max {
+            format!(" (can tighten max to {})", g.count)
+        } else {
+            String::new()
+        };
+        s.push_str(&format!(
+            "  baselined {} {}: {}/{} finding(s){} — {}\n",
+            g.rule, g.file, g.count, g.max, slack, g.note
+        ));
+    }
+    if r.ok() {
+        s.push_str(&format!(
+            "analysis OK: 0 new finding(s), {} grandfathered group(s)\n",
+            r.grandfathered.len()
+        ));
+    } else {
+        s.push_str(&format!(
+            "analysis FAILED: {} finding(s) not covered by suppressions or the baseline\n",
+            r.failing.len()
+        ));
+    }
+    s
+}

@@ -40,6 +40,7 @@ pub struct LaneAllocator {
 impl LaneAllocator {
     pub fn new(config: GtaConfig) -> Self {
         LaneAllocator {
+            // lint: allow(R1) u32 -> usize is a lossless widening on every supported target
             owner: vec![None; config.lanes as usize],
             config,
             next_id: 0,
@@ -48,7 +49,8 @@ impl LaneAllocator {
     }
 
     pub fn free_lanes(&self) -> u32 {
-        self.owner.iter().filter(|o| o.is_none()).count() as u32
+        // owner.len() == config.lanes, which is a u32 by construction
+        u32::try_from(self.owner.iter().filter(|o| o.is_none()).count()).unwrap_or(u32::MAX)
     }
 
     /// Occupancy snapshot for rack-level accounting.
@@ -67,7 +69,8 @@ impl LaneAllocator {
 
     /// The all-ones "parked" mask for free lanes.
     fn parked_mask(&self) -> u32 {
-        (self.max_partitions() - 1) as u32
+        // max_partitions() <= 1 << 32, so the all-ones word fits a u32
+        u32::try_from(self.max_partitions() - 1).unwrap_or(u32::MAX)
     }
 
     /// Next partition id not currently live. Ids recycle: a counter that
@@ -103,16 +106,22 @@ impl LaneAllocator {
         // mask search after marking lanes, so an exhausted mask space
         // panicked mid-mutation and leaked the marked lanes.)
         let used: Vec<u32> = self.live.values().map(|p| p.mask).collect();
-        let mask = (0..max_parts).map(|m| m as u32).find(|m| !used.contains(m))?;
+        let mask = (0..max_parts)
+            .map(|m| u32::try_from(m).unwrap_or(u32::MAX))
+            .find(|m| !used.contains(m))?;
         let id = self.fresh_id()?;
         // first-fit contiguous scan
         let lanes = self.owner.len();
+        // lint: allow(R1) u32 -> usize is a lossless widening on every supported target
+        let want = n as usize;
         let mut start = 0usize;
-        while start + (n as usize) <= lanes {
-            if self.owner[start..start + n as usize].iter().all(Option::is_none) {
-                let lane_ids: Vec<u32> = (start as u32..start as u32 + n).collect();
-                for &l in &lane_ids {
-                    self.owner[l as usize] = Some(id);
+        while start + want <= lanes {
+            if self.owner[start..start + want].iter().all(Option::is_none) {
+                // start indexes a u32-sized lane table, so it fits a u32
+                let base = u32::try_from(start).unwrap_or(u32::MAX);
+                let lane_ids: Vec<u32> = (base..base + n).collect();
+                for slot in &mut self.owner[start..start + want] {
+                    *slot = Some(id);
                 }
                 let part = Partition { id, lanes: lane_ids, mask };
                 self.live.insert(id, part.clone());
@@ -145,7 +154,9 @@ impl LaneAllocator {
         self.owner
             .iter()
             .map(|o| match o {
-                Some(id) => self.live[id].mask,
+                // a stale owner entry (a bug) degrades to the parked
+                // mask instead of panicking the serving path
+                Some(id) => self.live.get(id).map_or(parked, |p| p.mask),
                 None => parked,
             })
             .collect()
@@ -154,7 +165,8 @@ impl LaneAllocator {
     /// Build a SysCSR for one live partition (sub-array launch).
     pub fn syscsr_for(&self, id: PartitionId, mode: crate::arch::Dataflow) -> Option<SysCsr> {
         let part = self.live.get(&id)?;
-        let n = part.lanes.len() as u32;
+        // a partition's lane list is bounded by config.lanes, a u32
+        let n = u32::try_from(part.lanes.len()).unwrap_or(u32::MAX);
         // widest arrangement that factors the partition
         let rows = (1..=n).rev().find(|d| n % d == 0 && *d * *d <= n).unwrap_or(1);
         Some(SysCsr {

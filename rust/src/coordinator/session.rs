@@ -90,7 +90,9 @@ impl SessionWork {
     fn wait_idle(&self) {
         let mut p = self.pending.lock().unwrap();
         while *p > 0 {
-            p = self.idle.wait(p).unwrap();
+            // a poisoned wait still hands the guard back: recover it so a
+            // panicked worker degrades to its own error, not a cascade
+            p = self.idle.wait(p).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -141,7 +143,9 @@ impl WorkerPool {
                                 if inner.closed.load(Ordering::Relaxed) {
                                     break None;
                                 }
-                                q = inner.ready.wait(q).unwrap();
+                                // recover a poisoned wait: the queue of
+                                // dispatch tokens stays structurally valid
+                                q = inner.ready.wait(q).unwrap_or_else(|e| e.into_inner());
                             }
                         };
                         match work {
@@ -149,6 +153,7 @@ impl WorkerPool {
                             None => return,
                         }
                     })
+                    // lint: allow(R2) pool construction is pre-serving: a failed spawn is startup failure, not admitted-work loss
                     .expect("spawning pool worker thread")
             })
             .collect();
@@ -330,6 +335,7 @@ impl RackSession {
                                     }
                                 }
                             })
+                            // lint: allow(R2) session construction is pre-serving: a failed spawn is startup failure, not admitted-work loss
                             .expect("spawning session worker thread")
                     })
                     .collect();

@@ -54,7 +54,13 @@
 //!   (`gta serve --listen` / `gta client --connect`, see
 //!   `docs/transport.md`)
 //! * [`report`] — regenerates every table and figure of the paper
+//! * [`analysis`] — `gta analyze`, the dependency-free invariant linter
+//!   that encodes the repo's bug history (narrowing casts in decoders,
+//!   panics in the serving hot path, unpoisoned locks, …) as
+//!   machine-checked rules with a suppression/baseline workflow
+//!   (see `docs/analysis.md`)
 
+pub mod analysis;
 pub mod arch;
 pub mod coordinator;
 pub mod net;

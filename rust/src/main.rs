@@ -69,11 +69,30 @@ USAGE:
                                     server); `--timeout-ms T` bounds connect
                                     and per-response waits (default
                                     10000/30000)
-  gta bench-check [--dir DIR]       validate every BENCH_*.json perf baseline
+  gta bench-check [--dir DIR] [--analysis FILE]
+                                    validate every BENCH_*.json perf baseline
                                     in DIR (default .): must parse, carry a
                                     `gta.bench.<name>/<version>` schema tag
                                     and a pinned `seed` (the CI sanity gate
-                                    for the perf-trajectory harness)
+                                    for the perf-trajectory harness);
+                                    `--analysis FILE` additionally validates
+                                    a `gta analyze --format json` report
+                                    (schema gta.analysis.report/1, ok=true)
+  gta analyze [--dir DIR] [--format text|json] [--baseline FILE]
+              [--write-baseline]
+                                    run the invariant linter over every .rs
+                                    file under DIR (default .): ~8 rules
+                                    encoding this repo's bug history (silent
+                                    narrowing casts in decoders, panics in
+                                    the serving hot path, unpoisoned locks,
+                                    unjustified Relaxed atomics, ...; see
+                                    docs/analysis.md). Pre-existing findings
+                                    are grandfathered by analysis/
+                                    BASELINE.json (auto-resolved next to
+                                    DIR); anything new exits nonzero.
+                                    `--write-baseline` regenerates the
+                                    baseline from the current tree for
+                                    burn-down bookkeeping
 ";
 
 fn main() -> Result<()> {
@@ -159,6 +178,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&flags)?,
         "client" => cmd_client(&flags)?,
         "bench-check" => cmd_bench_check(&flags)?,
+        "analyze" => cmd_analyze(&flags)?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprint!("{USAGE}");
@@ -218,6 +238,106 @@ fn cmd_bench_check(flags: &Flags) -> Result<()> {
         );
     }
     println!("bench-check OK: {} baseline file(s) valid", names.len());
+    if let Some(report) = flags.get("analysis") {
+        check_analysis_report(report)?;
+    }
+    Ok(())
+}
+
+/// Validate a `gta analyze --format json` report: the schema tag, the
+/// verdict, and the findings/grandfathered arrays CI consumers rely on.
+fn check_analysis_report(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("bench-check: reading analysis report {path}: {e}"))?;
+    let json = gta::util::json::parse(&text)
+        .map_err(|e| anyhow!("bench-check: analysis report {path}: {e}"))?;
+    let schema = json.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+    if schema != gta::analysis::REPORT_SCHEMA {
+        bail!(
+            "bench-check: analysis report {path}: schema {schema:?} is not {}",
+            gta::analysis::REPORT_SCHEMA
+        );
+    }
+    for field in ["findings", "grandfathered"] {
+        if json.get(field).and_then(|f| f.as_arr()).is_none() {
+            bail!("bench-check: analysis report {path}: missing array field {field:?}");
+        }
+    }
+    match json.get("ok") {
+        Some(&gta::util::json::Json::Bool(true)) => {}
+        Some(&gta::util::json::Json::Bool(false)) => {
+            bail!("bench-check: analysis report {path}: analyze run recorded failures (ok=false)")
+        }
+        _ => bail!("bench-check: analysis report {path}: missing boolean field \"ok\""),
+    }
+    println!(
+        "  analysis report {path}: schema {schema} ok ({} grandfathered group(s))",
+        json.get("grandfathered").and_then(|g| g.as_arr()).map(|a| a.len()).unwrap_or(0)
+    );
+    Ok(())
+}
+
+/// `gta analyze`: run the invariant linter (see `gta::analysis` and
+/// docs/analysis.md) over a source tree and gate on new findings.
+fn cmd_analyze(flags: &Flags) -> Result<()> {
+    use gta::analysis;
+    let dir = std::path::PathBuf::from(flags.get("dir").unwrap_or("."));
+    if !dir.is_dir() {
+        bail!("analyze: {dir:?} is not a directory");
+    }
+    let (files_scanned, findings) =
+        analysis::scan_dir(&dir).map_err(|e| anyhow!("analyze: scanning {dir:?}: {e}"))?;
+    let baseline_path = match flags.get("baseline") {
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None => analysis::resolve_baseline_path(&dir),
+    };
+    if flags.get("write-baseline").is_some() {
+        let out = baseline_path
+            .clone()
+            .unwrap_or_else(|| dir.join("analysis").join("BASELINE.json"));
+        if let Some(parent) = out.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let b = analysis::baseline_from_findings(
+            &findings,
+            "grandfathered pre-analysis finding: burn down, do not add to",
+        );
+        std::fs::write(&out, analysis::render_baseline(&b))
+            .map_err(|e| anyhow!("analyze: writing {out:?}: {e}"))?;
+        println!(
+            "analyze: wrote baseline {out:?} covering {} (rule, file) group(s)",
+            b.entries.len()
+        );
+        return Ok(());
+    }
+    let baseline = match &baseline_path {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| anyhow!("analyze: reading baseline {p:?}: {e}"))?;
+            analysis::parse_baseline(&text)
+                .map_err(|e| anyhow!("analyze: baseline {p:?}: {e}"))?
+        }
+        None => analysis::Baseline::default(),
+    };
+    let (failing, grandfathered) = analysis::apply_baseline(findings, &baseline);
+    let report = analysis::Report {
+        dir: dir.display().to_string(),
+        files_scanned,
+        failing,
+        grandfathered,
+    };
+    match flags.get("format").unwrap_or("text") {
+        "json" => println!("{}", analysis::report_json(&report).render()),
+        "text" => print!("{}", analysis::render_text(&report)),
+        other => bail!("analyze: unknown --format {other:?} (text|json)"),
+    }
+    if !report.ok() {
+        bail!(
+            "analyze: {} new finding(s) — fix them, suppress with a reasoned \
+             `// lint: allow(..)`, or (cold paths only) extend the baseline",
+            report.failing.len()
+        );
+    }
     Ok(())
 }
 

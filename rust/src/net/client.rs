@@ -220,7 +220,8 @@ impl GtaClient {
                 .body
                 .get("shards")
                 .and_then(crate::util::json::Json::as_u64)
-                .unwrap_or(1) as usize,
+                .and_then(|s| usize::try_from(s).ok())
+                .unwrap_or(1),
             policy: hello
                 .body
                 .get("policy")
@@ -412,7 +413,9 @@ impl GtaClient {
         };
         write_frame_v(&mut self.writer, &frame.with_session(session), self.server.proto)?;
         self.writer.flush()?;
-        self.sessions.get_mut(&session).expect("checked above").submitted += 1;
+        if let Some(s) = self.sessions.get_mut(&session) {
+            s.submitted += 1;
+        }
         Ok(req.id)
     }
 

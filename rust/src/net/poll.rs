@@ -82,7 +82,9 @@ mod sys {
             }
             return Err(err);
         }
-        Ok(n as usize)
+        usize::try_from(n).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "poll() returned a negative count")
+        })
     }
 }
 

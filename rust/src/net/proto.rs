@@ -282,7 +282,17 @@ pub fn write_frame_v<W: Write>(w: &mut W, frame: &Frame, proto: u64) -> std::io:
         };
         json_body.as_bytes()
     };
-    let len = (header_after_len(proto) + body.len()) as u32;
+    if body.len() > MAX_BODY_BYTES {
+        // the read side rejects such a frame anyway; failing here keeps
+        // the length prefix from silently wrapping on a >4GiB body
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap", body.len()),
+        ));
+    }
+    let len = u32::try_from(header_after_len(proto) + body.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame length overflows u32")
+    })?;
     w.write_all(&len.to_be_bytes())?;
     w.write_all(&[frame.ty.code()])?;
     if proto >= 3 {
@@ -306,7 +316,9 @@ pub fn read_frame<R: Read>(r: &mut R) -> std::result::Result<Frame, DecodeError>
 pub fn read_frame_v<R: Read>(r: &mut R, proto: u64) -> std::result::Result<Frame, DecodeError> {
     let mut len_buf = [0u8; 4];
     read_exact_or_eof(r, &mut len_buf)?;
-    let len = u32::from_be_bytes(len_buf) as usize;
+    let len = usize::try_from(u32::from_be_bytes(len_buf)).map_err(|_| {
+        DecodeError::Malformed("frame length exceeds this platform's address space".to_string())
+    })?;
     let header = header_after_len(proto);
     if len < header {
         return Err(DecodeError::Malformed(format!(
@@ -330,15 +342,21 @@ pub fn read_frame_v<R: Read>(r: &mut R, proto: u64) -> std::result::Result<Frame
 /// ([`frame_from_slice`]); `payload.len()` has already been validated
 /// against the header size and [`MAX_BODY_BYTES`].
 fn parse_frame_payload(payload: &[u8], proto: u64) -> std::result::Result<Frame, DecodeError> {
-    let ty = FrameType::from_code(payload[0])
-        .ok_or_else(|| DecodeError::Malformed(format!("unknown frame type {}", payload[0])))?;
+    let short = || DecodeError::Malformed("frame payload shorter than its header".to_string());
+    let &ty_code = payload.first().ok_or_else(short)?;
+    let ty = FrameType::from_code(ty_code)
+        .ok_or_else(|| DecodeError::Malformed(format!("unknown frame type {ty_code}")))?;
     let (session, id_at) = if proto >= 3 {
-        (u32::from_be_bytes(payload[1..5].try_into().expect("4-byte slice")), 5)
+        let raw: [u8; 4] =
+            payload.get(1..5).and_then(|s| s.try_into().ok()).ok_or_else(short)?;
+        (u32::from_be_bytes(raw), 5)
     } else {
         (0, 1)
     };
-    let id = u64::from_be_bytes(payload[id_at..id_at + 8].try_into().expect("8-byte slice"));
-    let body_bytes = &payload[id_at + 8..];
+    let raw: [u8; 8] =
+        payload.get(id_at..id_at + 8).and_then(|s| s.try_into().ok()).ok_or_else(short)?;
+    let id = u64::from_be_bytes(raw);
+    let body_bytes = payload.get(id_at + 8..).unwrap_or(&[]);
     if ty.is_binary() {
         // v2 tensor frames: the payload stays raw; the message-level
         // decoders (decode_request_bin / decode_response_bin) validate
@@ -370,7 +388,11 @@ pub fn frame_from_slice(
     if buf.len() < 4 {
         return Ok(None);
     }
-    let len = u32::from_be_bytes(buf[..4].try_into().expect("4-byte slice")) as usize;
+    let mut len_buf = [0u8; 4];
+    len_buf.copy_from_slice(&buf[..4]);
+    let len = usize::try_from(u32::from_be_bytes(len_buf)).map_err(|_| {
+        DecodeError::Malformed("frame length exceeds this platform's address space".to_string())
+    })?;
     let header = header_after_len(proto);
     if len < header {
         return Err(DecodeError::Malformed(format!(
@@ -910,11 +932,19 @@ impl<'a> Cur<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().expect("4-byte slice")))
+        let raw: [u8; 4] = self
+            .bytes(4)?
+            .try_into()
+            .map_err(|_| anyhow!("binary body truncated inside a u32"))?;
+        Ok(u32::from_le_bytes(raw))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().expect("8-byte slice")))
+        let raw: [u8; 8] = self
+            .bytes(8)?
+            .try_into()
+            .map_err(|_| anyhow!("binary body truncated inside a u64"))?;
+        Ok(u64::from_le_bytes(raw))
     }
 
     /// Trailing bytes after a complete message are malformed — framing
@@ -934,6 +964,7 @@ fn encode_tensor_bin(t: &HostTensor, out: &mut Vec<u8>) {
         HostTensor::I32(v) => {
             out.push(DT_I32);
             put_u64(out, v.len() as u64);
+            // lint: allow(R7) encode side: sized by our own in-memory tensor, not wire bytes
             out.reserve(v.len() * 4);
             for &x in v {
                 out.extend_from_slice(&x.to_le_bytes());
@@ -942,6 +973,7 @@ fn encode_tensor_bin(t: &HostTensor, out: &mut Vec<u8>) {
         HostTensor::I64(v) => {
             out.push(DT_I64);
             put_u64(out, v.len() as u64);
+            // lint: allow(R7) encode side: sized by our own in-memory tensor, not wire bytes
             out.reserve(v.len() * 8);
             for &x in v {
                 out.extend_from_slice(&x.to_le_bytes());
@@ -950,6 +982,7 @@ fn encode_tensor_bin(t: &HostTensor, out: &mut Vec<u8>) {
         HostTensor::F32(v) => {
             out.push(DT_F32);
             put_u64(out, v.len() as u64);
+            // lint: allow(R7) encode side: sized by our own in-memory tensor, not wire bytes
             out.reserve(v.len() * 4);
             for &x in v {
                 out.extend_from_slice(&x.to_le_bytes());
@@ -987,14 +1020,17 @@ fn decode_tensor_bin(c: &mut Cur<'_>) -> Result<HostTensor> {
     let raw = c.bytes(nbytes)?;
     Ok(match dtype {
         DT_I32 => HostTensor::I32(
+            // lint: allow(R2) chunks_exact(4) yields exactly-4-byte windows
             raw.chunks_exact(4).map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
         ),
         DT_I64 => HostTensor::I64(
             raw.chunks_exact(8)
+                // lint: allow(R2) chunks_exact(8) yields exactly-8-byte windows
                 .map(|b| i64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
                 .collect(),
         ),
         _ => HostTensor::F32(
+            // lint: allow(R2) chunks_exact(4) yields exactly-4-byte windows
             raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
         ),
     })
@@ -1007,6 +1043,7 @@ pub fn encode_request_bin(req: &Request) -> Vec<u8> {
         ExecKind::Functional { inputs, .. } => inputs.iter().map(tensor_bin_len).sum(),
         ExecKind::Simulate => 0,
     };
+    // lint: allow(R7) encode side: sized from our own request, not wire bytes
     let mut out = Vec::with_capacity(64 + tensor_bytes);
     match &req.op {
         TensorOp::PGemm(g) => {
@@ -1027,8 +1064,10 @@ pub fn encode_request_bin(req: &Request) -> Vec<u8> {
         ExecKind::Simulate => out.push(EXEC_SIMULATE),
         ExecKind::Functional { artifact, inputs } => {
             out.push(EXEC_FUNCTIONAL);
+            // lint: allow(R1) a >4 GiB name cannot leave the process: write_frame_v caps bodies
             put_u32(&mut out, artifact.len() as u32);
             out.extend_from_slice(artifact.as_bytes());
+            // lint: allow(R1) input count is bounded by the same body cap
             put_u32(&mut out, inputs.len() as u32);
             for t in inputs {
                 encode_tensor_bin(t, &mut out);
@@ -1066,7 +1105,8 @@ pub fn decode_request_bin(id: u64, bytes: &[u8]) -> Result<Request> {
     let exec = match c.u8()? {
         EXEC_SIMULATE => ExecKind::Simulate,
         EXEC_FUNCTIONAL => {
-            let alen = c.u32()? as usize;
+            let alen = usize::try_from(c.u32()?)
+                .map_err(|_| anyhow!("artifact name length exceeds this platform"))?;
             let artifact = std::str::from_utf8(c.bytes(alen)?)
                 .map_err(|e| anyhow!("artifact name is not UTF-8: {e}"))?
                 .to_string();
@@ -1094,13 +1134,16 @@ pub fn encode_response_bin(resp: &Response) -> Vec<u8> {
         Some(outs) => outs.iter().map(tensor_bin_len).sum(),
         None => 0,
     };
+    // lint: allow(R7) encode side: sized from our own response, not wire bytes
     let mut out = Vec::with_capacity(4 + meta.len() + 5 + tensor_bytes);
+    // lint: allow(R1) metadata JSON is small and ours; write_frame_v caps bodies anyway
     put_u32(&mut out, meta.len() as u32);
     out.extend_from_slice(meta.as_bytes());
     match &resp.outputs {
         None => out.push(0),
         Some(outs) => {
             out.push(1);
+            // lint: allow(R1) output count is bounded by the same body cap
             put_u32(&mut out, outs.len() as u32);
             for t in outs {
                 encode_tensor_bin(t, &mut out);
@@ -1113,7 +1156,8 @@ pub fn encode_response_bin(resp: &Response) -> Vec<u8> {
 /// Decode a v2 `ResponseBin` body (metadata JSON + binary outputs).
 pub fn decode_response_bin(bytes: &[u8]) -> Result<Response> {
     let mut c = Cur::new(bytes);
-    let meta_len = c.u32()? as usize;
+    let meta_len = usize::try_from(c.u32()?)
+        .map_err(|_| anyhow!("response metadata length exceeds this platform"))?;
     let meta_text = std::str::from_utf8(c.bytes(meta_len)?)
         .map_err(|e| anyhow!("response metadata is not UTF-8: {e}"))?;
     let meta = crate::util::json::parse(meta_text)

@@ -619,7 +619,13 @@ impl Conn {
             return;
         }
         let mut bytes = Vec::new();
-        write_frame_v(&mut bytes, frame, self.wire_proto()).expect("encoding to a Vec cannot fail");
+        if write_frame_v(&mut bytes, frame, self.wire_proto()).is_err() {
+            // only an over-cap body can fail a Vec write: the peer would
+            // reject the frame anyway, so kill the write side rather than
+            // ship a wrapped length prefix
+            self.dead_write = true;
+            return;
+        }
         self.wq_bytes += bytes.len();
         self.wq.push_back(bytes);
     }
@@ -657,8 +663,9 @@ impl Conn {
             self.bytes_out += n as u64;
             stats.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
             if self.wq_off == len {
-                let done = self.wq.pop_front().expect("front frame exists");
-                self.wq_bytes -= done.len();
+                if let Some(done) = self.wq.pop_front() {
+                    self.wq_bytes -= done.len();
+                }
                 self.wq_off = 0;
             }
         }
@@ -713,12 +720,14 @@ impl EvLoop {
         while !self.stop.load(Ordering::Relaxed) {
             // ---- build the poll set (rebuilt per iteration: simple,
             // and O(conns) is what this loop is everywhere else too)
+            // lint: allow(R7) sized by our own connection table, not wire bytes
             let mut fds = Vec::with_capacity(self.conns.len() + 2);
             fds.push(PollFd::new(raw_fd(&self.listener), POLL_IN));
             let waker_slot = self.waker.fd().map(|fd| {
                 fds.push(PollFd::new(fd, POLL_IN));
                 fds.len() - 1
             });
+            // lint: allow(R7) sized by our own connection table, not wire bytes
             let mut slots: Vec<(usize, u64)> = Vec::with_capacity(self.conns.len());
             for (id, c) in &self.conns {
                 let mut ev = 0i16;
@@ -740,8 +749,8 @@ impl EvLoop {
                 break;
             }
 
-            // ---- accept
-            if fds[0].readable() {
+            // ---- accept (slot 0 is always the listener, pushed above)
+            if fds.first().is_some_and(|f| f.readable()) {
                 self.accept_ready();
             }
 
@@ -753,7 +762,13 @@ impl EvLoop {
             }
 
             // ---- completions -> response frames
-            let mut dirty: Vec<(u64, u32)> = self.dirty.lock().unwrap().drain(..).collect();
+            // a panicked notifier cannot corrupt a Vec of ids: recover it
+            let mut dirty: Vec<(u64, u32)> = self
+                .dirty
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .drain(..)
+                .collect();
             dirty.sort_unstable();
             dirty.dedup();
             for (cid, sid) in dirty {
@@ -1052,7 +1067,7 @@ impl EvLoop {
         let waker = Arc::clone(&self.waker);
         let cid = conn.id;
         session.set_notify(Some(Arc::new(move || {
-            dirty.lock().unwrap().push((cid, sid));
+            dirty.lock().unwrap_or_else(|e| e.into_inner()).push((cid, sid));
             waker.wake();
         })));
         conn.sessions.insert(sid, Slot { session, state: SlotState::Open, drain_returned: 0 });
@@ -1118,17 +1133,18 @@ impl EvLoop {
             }
             straggled += 1;
         }
-        let state = std::mem::replace(
-            &mut conn.sessions.get_mut(&sid).expect("slot exists").state,
-            SlotState::Open,
-        );
+        let Some(slot) = conn.sessions.get_mut(&sid) else { return };
+        let state = std::mem::replace(&mut slot.state, SlotState::Open);
         match state {
-            SlotState::Open => unreachable!("filtered above"),
+            // filtered above: an Open slot already returned early
+            SlotState::Open => {}
             SlotState::Draining => {
-                let slot = conn.sessions.get_mut(&sid).expect("slot exists");
-                slot.drain_returned += straggled;
-                let returned = slot.drain_returned;
-                slot.drain_returned = 0;
+                let mut returned = straggled;
+                if let Some(slot) = conn.sessions.get_mut(&sid) {
+                    slot.drain_returned += straggled;
+                    returned = slot.drain_returned;
+                    slot.drain_returned = 0;
+                }
                 if forward {
                     conn.push_frame(
                         &Frame::new(FrameType::Drained, 0, drained_body(returned))

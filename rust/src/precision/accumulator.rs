@@ -25,6 +25,7 @@ pub fn combine(grid: &[Vec<i64>]) -> i64 {
     for (i, row) in grid.iter().enumerate() {
         assert_eq!(row.len(), n, "partial-product grid must be square");
         for (j, &p) in row.iter().enumerate() {
+            // lint: allow(R1) shift exponent bounded by 8 * (2 * n_limbs) — far below u32::MAX
             acc = acc.wrapping_add(p.wrapping_shl(8 * (i + j) as u32));
         }
     }
@@ -38,10 +39,12 @@ pub fn carry_propagate(pre: &[i64]) -> Vec<u8> {
     let mut carry: i64 = 0;
     for &v in pre {
         let s = v + carry;
+        // lint: allow(R1) masked to one byte before the cast — lossless by construction
         out.push((s & 0xFF) as u8);
         carry = s >> 8;
     }
     while carry != 0 {
+        // lint: allow(R1) masked to one byte before the cast — lossless by construction
         out.push((carry & 0xFF) as u8);
         carry >>= 8;
     }
@@ -56,13 +59,17 @@ pub fn limbs_to_decimal(limbs: &[u8]) -> String {
     let mut digits: Vec<u8> = vec![0]; // little-endian decimal digits
     for &l in limbs.iter().rev() {
         // digits = digits*256 + l
+        // lint: allow(R1) u8 -> u32 is a lossless widening
         let mut carry = l as u32;
         for d in digits.iter_mut() {
+            // lint: allow(R1) u8 -> u32 is a lossless widening
             let v = (*d as u32) * 256 + carry;
+            // lint: allow(R1) v % 10 fits a u8 by construction
             *d = (v % 10) as u8;
             carry = v / 10;
         }
         while carry > 0 {
+            // lint: allow(R1) carry % 10 fits a u8 by construction
             digits.push((carry % 10) as u8);
             carry /= 10;
         }

@@ -47,6 +47,7 @@ pub fn recompose(limbs: &[i64]) -> i64 {
     limbs
         .iter()
         .enumerate()
+        // lint: allow(R1) shift exponent bounded by 8 * n_limbs — far below u32::MAX
         .map(|(i, &l)| l.wrapping_shl(8 * i as u32))
         .fold(0i64, i64::wrapping_add)
 }
@@ -59,6 +60,7 @@ pub fn limb_mul(x: i64, y: i64, n: u32, width: u32) -> i64 {
     let mut acc = 0i64;
     for (i, &xi) in xs.iter().enumerate() {
         for (j, &yj) in ys.iter().enumerate() {
+            // lint: allow(R1) shift exponent bounded by 8 * (2 * n_limbs) — far below u32::MAX
             let shift = 8 * (i + j) as u32;
             if shift >= width {
                 continue; // vanishes mod 2^width
@@ -191,6 +193,7 @@ fn fill_planes(dst: &mut Vec<i64>, len: usize, n_limbs: usize, at: impl Fn(usize
         let x = at(idx);
         for p in 0..n_limbs {
             dst[p * len + idx] =
+                // lint: allow(R1) shift exponent bounded by 8 * n_limbs — far below u32::MAX
                 if p == n_limbs - 1 { x >> (8 * p as u32) } else { (x >> (8 * p as u32)) & 0xFF };
         }
     }
@@ -248,6 +251,7 @@ impl Workspace {
         a_at: impl Fn(usize) -> i64,
         b_at: impl Fn(usize) -> i64,
     ) -> &[i64] {
+        // lint: allow(R1) u32 -> usize is a lossless widening on every supported target
         let nl = n_limbs as usize;
         fill_planes(&mut self.a_planes, m * k, nl, a_at);
         fill_planes(&mut self.b_planes, k * n, nl, b_at);
@@ -255,6 +259,7 @@ impl Workspace {
         self.acc.resize(m * n, 0);
         for p in 0..nl {
             for q in 0..nl {
+                // lint: allow(R1) shift exponent bounded by 8 * (2 * n_limbs) — far below u32::MAX
                 let shift = 8 * (p + q) as u32;
                 if shift >= width {
                     continue; // vanishes mod 2^width, exactly as limb_mul skips it

@@ -223,6 +223,7 @@ mod engine {
             let result = art
                 .exe
                 .execute::<xla::Literal>(&literals)
+                // lint: allow(R2) PJRT returns one replica on one device for this single-device executable
                 .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
                 .to_literal_sync()
                 .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
@@ -358,11 +359,11 @@ impl SoftBackend {
         len: usize,
     ) -> Result<(&'a [i32], &'a [i32])> {
         use anyhow::anyhow;
-        if inputs.len() != 2 {
+        let [first, second] = inputs else {
             return Err(anyhow!("{name}: expected 2 inputs, got {}", inputs.len()));
-        }
-        let a = inputs[0].as_i32().ok_or_else(|| anyhow!("{name} input 0: want s32"))?;
-        let b = inputs[1].as_i32().ok_or_else(|| anyhow!("{name} input 1: want s32"))?;
+        };
+        let a = first.as_i32().ok_or_else(|| anyhow!("{name} input 0: want s32"))?;
+        let b = second.as_i32().ok_or_else(|| anyhow!("{name} input 1: want s32"))?;
         if a.len() != len || b.len() != len {
             return Err(anyhow!(
                 "{name}: inputs {}x{} != expected {len} elements each",
@@ -473,6 +474,7 @@ impl ExecBackend for SoftBackend {
                     s.spawn(move || {
                         let mut done = Vec::new();
                         loop {
+                            // lint: relaxed-ok independent work-stealing cursor; no memory ordered against it
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             if i >= batch.len() {
                                 break;
@@ -484,12 +486,13 @@ impl ExecBackend for SoftBackend {
                 })
                 .collect();
             for h in handles {
-                // workers cannot panic: every item is under catch_unwind
+                // lint: allow(R2) workers cannot panic: every item runs under catch_unwind
                 for (i, res) in h.join().expect("batch worker exited cleanly") {
                     slots[i] = Some(res);
                 }
             }
         });
+        // lint: allow(R2) the atomic cursor hands out every index in 0..len exactly once
         slots.into_iter().map(|r| r.expect("work stealing covers every index")).collect()
     }
 

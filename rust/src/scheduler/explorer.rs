@@ -109,6 +109,7 @@ where
             let cursor = &cursor;
             let f = &f;
             scope.spawn(move || loop {
+                // lint: relaxed-ok independent work-stealing cursor; no memory ordered against it
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;

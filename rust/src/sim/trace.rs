@@ -109,12 +109,12 @@ pub fn run_ws(a: &[i64], b: &[i64], m: usize, k: usize, n: usize, r: usize, c: u
     assert!(k <= r && n <= c, "single-tile oracle: weights must fit");
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
-    let fill = k as u64; // weight preload, one row per cycle
+    let fill = k; // weight preload, one row per cycle
     // psum[i][j] pipeline registers between rows; a values skewed so that
     // row kk sees a[i][kk] exactly when the psum for output row i arrives
     let mut psum = vec![0i64; r * c];
     let mut output = vec![0i64; m * n];
-    let mut occupancy = vec![0u32; fill as usize];
+    let mut occupancy = vec![0u32; fill];
     // stream cycles: output row i's contribution enters row 0 at t=i,
     // reaches row kk at t=i+kk, exits the bottom (row k-1) at t=i+k-1;
     // the column skew adds j cycles before the value is architecturally
@@ -145,7 +145,7 @@ pub fn run_ws(a: &[i64], b: &[i64], m: usize, k: usize, n: usize, r: usize, c: u
     }
     let drain = (n as u64).max(1) - 1 + 1; // column skew on the way out
     TraceRun {
-        cycles: fill + stream as u64 + drain,
+        cycles: fill as u64 + stream as u64 + drain,
         output,
         occupancy,
     }

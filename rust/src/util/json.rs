@@ -110,6 +110,7 @@ fn render_str(s: &str, out: &mut String) {
             '\r' => out.push_str("\\r"),
             '\u{8}' => out.push_str("\\b"),
             '\u{c}' => out.push_str("\\f"),
+            // lint: allow(R1) char -> u32 is a lossless widening (escape path for control chars)
             c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
             c => out.push(c),
         }

@@ -1,0 +1,377 @@
+//! Self-tests for `gta analyze`: every rule gets a firing fixture and a
+//! clean fixture, the suppression grammar is exercised end to end, the
+//! baseline round-trips, and a meta-test asserts the committed tree itself
+//! scans clean under the committed baseline (the same check CI runs).
+//!
+//! Fixtures live in `tests/fixtures/analysis/` — the directory walker
+//! skips `tests/` and `fixtures/`, so they are only ever scanned when a
+//! test feeds them to [`scan_source`] with a hot-path label.
+
+use gta::analysis::{
+    apply_baseline, baseline_from_findings, lex, norm_path, parse_baseline, render_baseline,
+    report_json, resolve_baseline_path, scan_dir, scan_source, Baseline, BaselineEntry, Finding,
+    Report, BASELINE_SCHEMA, REPORT_SCHEMA,
+};
+use std::path::Path;
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Lexer.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lexer_blanks_strings_and_comments() {
+    let lines = lex("let s = \"x as u32\"; // but as u32 in a comment\n");
+    assert_eq!(lines.len(), 1, "trailing newline does not open a phantom line");
+    assert!(!lines[0].code.contains("as u32"), "string/comment text must leave code");
+    assert!(lines[0].code.contains("let s ="));
+    assert!(lines[0].comment.contains("but as u32 in a comment"));
+}
+
+#[test]
+fn lexer_handles_raw_strings_and_block_comments() {
+    let src = "let r = r#\"x.unwrap()\"#; /* outer /* nested .expect( */ still comment */ let y = 1;\n";
+    let lines = lex(src);
+    assert!(!lines[0].code.contains(".unwrap()"));
+    assert!(!lines[0].code.contains(".expect("));
+    assert!(lines[0].code.contains("let y = 1;"));
+}
+
+#[test]
+fn lexer_string_continuation_keeps_line_numbers() {
+    // a `\<newline>` continuation inside a string still splits lines, so
+    // findings after it land on the right line number
+    let src = "let s = \"a\\\n   b\";\nlet n = x as u32;\n";
+    let f = scan_source("src/net/proto.rs", src);
+    assert_eq!(rules_of(&f), ["R1"]);
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn lexer_distinguishes_lifetimes_from_char_literals() {
+    let lines = lex("fn f<'a>(x: &'a str) -> char { 'y' }\n");
+    assert!(lines[0].code.contains("<'a>"), "lifetime stays in code");
+    assert!(!lines[0].code.contains("'y'"), "char literal interior blanked");
+}
+
+// ---------------------------------------------------------------------------
+// Rules: one firing + one clean fixture each.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn r1_narrowing_cast_fires_and_checked_idiom_passes() {
+    let bad = scan_source("src/net/proto.rs", include_str!("fixtures/analysis/r1_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R1"]);
+    assert_eq!(bad[0].line, 2);
+    let good = scan_source("src/net/proto.rs", include_str!("fixtures/analysis/r1_good.rs"));
+    assert!(good.is_empty(), "try_from is the sanctioned idiom: {good:?}");
+}
+
+#[test]
+fn r1_only_fires_in_decoder_scope() {
+    // the same cast in a module outside the R1 scope is allowed
+    let f = scan_source("src/scheduler/explorer.rs", include_str!("fixtures/analysis/r1_bad.rs"));
+    assert!(f.is_empty(), "R1 is scoped to decoder/wire/limb modules: {f:?}");
+}
+
+#[test]
+fn r2_unwrap_and_literal_index_fire_in_hot_path() {
+    let bad = scan_source("src/net/server.rs", include_str!("fixtures/analysis/r2_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R2", "R2"], "one for .unwrap(), one for frames[0]");
+    let good = scan_source("src/net/server.rs", include_str!("fixtures/analysis/r2_good.rs"));
+    assert!(good.is_empty(), "{good:?}");
+}
+
+#[test]
+fn r3_bare_lock_unwrap_fires_and_poison_recovery_passes() {
+    let bad = scan_source("src/coordinator/metrics.rs", include_str!("fixtures/analysis/r3_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R3"]);
+    let good =
+        scan_source("src/coordinator/metrics.rs", include_str!("fixtures/analysis/r3_good.rs"));
+    assert!(good.is_empty(), "into_inner() recovery is the sanctioned idiom: {good:?}");
+}
+
+#[test]
+fn r4_relaxed_ordering_needs_justification() {
+    let bad = scan_source("src/scheduler/cache.rs", include_str!("fixtures/analysis/r4_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R4"]);
+    let good = scan_source("src/scheduler/cache.rs", include_str!("fixtures/analysis/r4_good.rs"));
+    assert!(good.is_empty(), "relaxed-ok with a reason suppresses R4: {good:?}");
+}
+
+#[test]
+fn r5_todo_fires_outside_main() {
+    let bad = scan_source("src/util/pending.rs", include_str!("fixtures/analysis/r5_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R5"]);
+    let good = scan_source("src/util/pending.rs", include_str!("fixtures/analysis/r5_good.rs"));
+    assert!(good.is_empty(), "{good:?}");
+    // the same source under main.rs is out of scope
+    let in_main = scan_source("src/main.rs", include_str!("fixtures/analysis/r5_bad.rs"));
+    assert!(in_main.is_empty(), "{in_main:?}");
+}
+
+#[test]
+fn r6_infallible_decode_signature_fires() {
+    let bad = scan_source("src/net/codec.rs", include_str!("fixtures/analysis/r6_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R6"]);
+    assert!(bad[0].message.contains("decode_frame"));
+    let good = scan_source("src/net/codec.rs", include_str!("fixtures/analysis/r6_good.rs"));
+    assert!(good.is_empty(), "Result-returning decode passes: {good:?}");
+}
+
+#[test]
+fn r7_capacity_reservation_needs_bound_justification() {
+    let bad = scan_source("src/net/codec.rs", include_str!("fixtures/analysis/r7_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R7"]);
+    let good = scan_source("src/net/codec.rs", include_str!("fixtures/analysis/r7_good.rs"));
+    assert!(good.is_empty(), "cap-checked reservation with allow(R7) passes: {good:?}");
+}
+
+#[test]
+fn r8_bench_baseline_writer_must_stamp_schema() {
+    let bad = scan_source("benches/fixture_bench.rs", include_str!("fixtures/analysis/r8_bad.rs"));
+    assert_eq!(rules_of(&bad), ["R8"]);
+    let good = scan_source("benches/fixture_bench.rs", include_str!("fixtures/analysis/r8_good.rs"));
+    assert!(good.is_empty(), "{good:?}");
+    // R8 is bench-only: the same text under src/ is out of scope
+    let in_src = scan_source("src/sim/mod.rs", include_str!("fixtures/analysis/r8_bad.rs"));
+    assert!(in_src.is_empty(), "{in_src:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Suppressions and the test mask.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn suppression_with_reason_covers_next_line() {
+    let f = scan_source("src/net/proto.rs", include_str!("fixtures/analysis/suppress_ok.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn suppression_without_reason_is_r0_and_does_not_suppress() {
+    let f =
+        scan_source("src/net/proto.rs", include_str!("fixtures/analysis/suppress_no_reason.rs"));
+    assert_eq!(rules_of(&f), ["R0", "R1"], "reasonless allow is rejected AND ineffective");
+}
+
+#[test]
+fn unknown_directive_is_r0() {
+    let f = scan_source("src/util/x.rs", include_str!("fixtures/analysis/suppress_unknown.rs"));
+    assert_eq!(rules_of(&f), ["R0"]);
+}
+
+#[test]
+fn suppression_does_not_reach_two_lines_down() {
+    let f = scan_source("src/net/proto.rs", include_str!("fixtures/analysis/suppress_too_far.rs"));
+    assert_eq!(rules_of(&f), ["R1"], "an allow covers its own line and the next only");
+    assert_eq!(f[0].line, 4);
+}
+
+#[test]
+fn cfg_test_blocks_are_masked() {
+    let f = scan_source("src/net/masked.rs", include_str!("fixtures/analysis/masked_tests.rs"));
+    assert!(f.is_empty(), "unwrap() inside #[cfg(test)] mod tests is fine: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Paths, baseline, report.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn norm_path_is_invariant_to_scan_root() {
+    for label in
+        ["src/net/proto.rs", "./src/net/proto.rs", "rust/src/net/proto.rs", "/a/b/src/net/proto.rs"]
+    {
+        assert_eq!(norm_path(label), "src/net/proto.rs");
+    }
+    assert_eq!(norm_path("benches/kernel_throughput.rs"), "benches/kernel_throughput.rs");
+}
+
+#[test]
+fn baseline_round_trips_through_render_and_parse() {
+    let b = Baseline {
+        entries: vec![BaselineEntry {
+            rule: "R3".to_string(),
+            file: "src/coordinator/session.rs".to_string(),
+            max: 16,
+            note: "burn down".to_string(),
+        }],
+    };
+    let parsed = parse_baseline(&render_baseline(&b)).expect("rendered baseline must parse");
+    assert_eq!(parsed.entries.len(), 1);
+    assert_eq!(parsed.entries[0].rule, "R3");
+    assert_eq!(parsed.entries[0].file, "src/coordinator/session.rs");
+    assert_eq!(parsed.entries[0].max, 16);
+    assert_eq!(parsed.entries[0].note, "burn down");
+}
+
+#[test]
+fn baseline_rejects_wrong_schema() {
+    assert!(parse_baseline("{\"schema\":\"nope/1\",\"entries\":[]}").is_err());
+    assert!(parse_baseline(&format!("{{\"schema\":\"{BASELINE_SCHEMA}\",\"entries\":[]}}")).is_ok());
+}
+
+#[test]
+fn apply_baseline_grandfathers_at_ceiling_and_fails_above() {
+    let mk = |n: usize| -> Vec<Finding> {
+        (0..n)
+            .map(|i| Finding {
+                rule: "R3",
+                file: "src/coordinator/session.rs".to_string(),
+                line: i + 1,
+                message: "m".to_string(),
+            })
+            .collect()
+    };
+    let b = Baseline {
+        entries: vec![BaselineEntry {
+            rule: "R3".to_string(),
+            file: "src/coordinator/session.rs".to_string(),
+            max: 2,
+            note: "n".to_string(),
+        }],
+    };
+    let (failing, grand) = apply_baseline(mk(2), &b);
+    assert!(failing.is_empty(), "at the ceiling is grandfathered");
+    assert_eq!(grand.len(), 1);
+    assert_eq!((grand[0].count, grand[0].max), (2, 2));
+
+    let (failing, grand) = apply_baseline(mk(3), &b);
+    assert_eq!(failing.len(), 3, "over the ceiling fails the whole group");
+    assert!(grand.is_empty());
+
+    // a group with no entry at all fails outright
+    let (failing, _) = apply_baseline(
+        vec![Finding { rule: "R1", file: "src/net/proto.rs".to_string(), line: 1, message: "m".to_string() }],
+        &b,
+    );
+    assert_eq!(failing.len(), 1);
+}
+
+#[test]
+fn baseline_from_findings_exactly_covers_them() {
+    let findings = vec![
+        Finding { rule: "R4", file: "src/a.rs".to_string(), line: 1, message: "m".to_string() },
+        Finding { rule: "R4", file: "src/a.rs".to_string(), line: 9, message: "m".to_string() },
+    ];
+    let b = baseline_from_findings(&findings, "seed");
+    assert_eq!(b.entries.len(), 1);
+    assert_eq!(b.entries[0].max, 2);
+    let (failing, grand) = apply_baseline(findings, &b);
+    assert!(failing.is_empty());
+    assert_eq!(grand.len(), 1);
+}
+
+#[test]
+fn report_json_carries_the_contract_fields() {
+    let r = Report {
+        dir: "src".to_string(),
+        files_scanned: 3,
+        failing: vec![Finding {
+            rule: "R1",
+            file: "src/net/proto.rs".to_string(),
+            line: 7,
+            message: "m".to_string(),
+        }],
+        grandfathered: vec![],
+    };
+    let j = gta::util::json::parse(&report_json(&r).render()).expect("report renders valid JSON");
+    assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(REPORT_SCHEMA));
+    assert_eq!(j.get("ok"), Some(&gta::util::json::Json::Bool(false)));
+    assert_eq!(j.get("files_scanned").and_then(|n| n.as_u64()), Some(3));
+    let findings = j.get("findings").and_then(|f| f.as_arr()).expect("findings array");
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].get("rule").and_then(|s| s.as_str()), Some("R1"));
+    assert_eq!(findings[0].get("line").and_then(|n| n.as_u64()), Some(7));
+    assert!(j.get("grandfathered").and_then(|g| g.as_arr()).is_some());
+}
+
+// ---------------------------------------------------------------------------
+// The committed tree itself.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_tree_scans_clean_under_committed_baseline() {
+    // integration tests run with cwd = crate root (rust/)
+    let (files, findings) = scan_dir(Path::new(".")).expect("scan the crate");
+    assert!(files > 20, "walker found the tree ({files} files)");
+    let path = resolve_baseline_path(Path::new(".")).expect("analysis/BASELINE.json is committed");
+    let text = std::fs::read_to_string(path).expect("read baseline");
+    let baseline = parse_baseline(&text).expect("committed baseline parses");
+    let (failing, grandfathered) = apply_baseline(findings, &baseline);
+    assert!(
+        failing.is_empty(),
+        "the committed tree must scan clean — fix, suppress with a reason, or \
+         (cold paths only) extend the baseline:\n{failing:#?}"
+    );
+    assert!(!grandfathered.is_empty(), "burn-down groups are still tracked");
+}
+
+#[test]
+fn seeding_a_narrowing_cast_into_proto_is_caught() {
+    let clean = include_str!("../src/net/proto.rs");
+    assert!(
+        scan_source("src/net/proto.rs", clean).is_empty(),
+        "proto.rs carries no baselined findings — any regression is a new finding"
+    );
+    let seeded = format!("{clean}\npub fn sneak(x: u64) -> u32 {{ x as u32 }}\n");
+    let f = scan_source("src/net/proto.rs", &seeded);
+    assert_eq!(rules_of(&f), ["R1"], "the seeded decoder cast must be flagged");
+}
+
+// ---------------------------------------------------------------------------
+// CLI surface.
+// ---------------------------------------------------------------------------
+
+fn gta_bin() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_gta"))
+}
+
+#[test]
+fn cli_analyze_passes_on_the_committed_tree() {
+    let out = gta_bin().args(["analyze", "--dir", "."]).output().expect("run gta analyze");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "gta analyze must pass on the committed tree:\n{stdout}");
+    assert!(stdout.contains("analysis OK"), "{stdout}");
+}
+
+#[test]
+fn cli_analyze_fails_on_a_seeded_violation() {
+    let dir = std::env::temp_dir().join(format!("gta_analyze_seed_{}", std::process::id()));
+    let net = dir.join("src").join("net");
+    std::fs::create_dir_all(&net).expect("mk temp tree");
+    std::fs::write(net.join("bad.rs"), "pub fn f(x: u64) -> u32 {\n    x as u32\n}\n")
+        .expect("write bad file");
+    let out =
+        gta_bin().args(["analyze", "--dir", dir.to_str().expect("utf8 temp path")]).output().expect("run");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    std::fs::remove_dir_all(&dir).ok();
+    assert!(!out.status.success(), "a seeded R1 violation must fail analyze:\n{stdout}");
+    assert!(stdout.contains("FAIL R1"), "{stdout}");
+    assert!(stderr.contains("new finding"), "{stderr}");
+}
+
+#[test]
+fn cli_analyze_json_report_satisfies_bench_check() {
+    let out = gta_bin()
+        .args(["analyze", "--dir", ".", "--format", "json"])
+        .output()
+        .expect("run gta analyze --format json");
+    assert!(out.status.success());
+    let report = std::env::temp_dir().join(format!("gta_analysis_{}.json", std::process::id()));
+    std::fs::write(&report, &out.stdout).expect("write report");
+    let check = gta_bin()
+        .args(["bench-check", "--dir", ".", "--analysis", report.to_str().expect("utf8 temp path")])
+        .output()
+        .expect("run gta bench-check");
+    let stdout = String::from_utf8_lossy(&check.stdout);
+    let stderr = String::from_utf8_lossy(&check.stderr);
+    std::fs::remove_file(&report).ok();
+    assert!(check.status.success(), "bench-check must accept the report:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("analysis report"), "{stdout}");
+}

@@ -1,0 +1,4 @@
+pub fn first_frame(frames: &[u8]) -> u8 {
+    let head = frames.first().copied().unwrap();
+    head + frames[0]
+}

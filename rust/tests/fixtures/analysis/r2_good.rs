@@ -1,0 +1,3 @@
+pub fn first_frame(frames: &[u8]) -> Result<u8, String> {
+    frames.first().copied().ok_or_else(|| "empty frame list".to_string())
+}

@@ -1,0 +1,3 @@
+pub fn bump(counter: &std::sync::Mutex<u64>) {
+    *counter.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+}

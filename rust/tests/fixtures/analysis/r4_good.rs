@@ -1,0 +1,6 @@
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) {
+    // lint: relaxed-ok monotonic stat counter; nothing orders against it
+    c.fetch_add(1, Ordering::Relaxed);
+}

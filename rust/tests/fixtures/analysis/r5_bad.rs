@@ -1,0 +1,3 @@
+pub fn not_done() {
+    todo!("finish the slide unit model")
+}

@@ -1,0 +1,3 @@
+pub fn not_done() -> Result<(), String> {
+    Err("slide unit model not implemented yet".to_string())
+}

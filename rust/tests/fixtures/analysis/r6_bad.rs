@@ -1,0 +1,5 @@
+pub struct Frame;
+
+pub fn decode_frame(_bytes: &[u8]) -> Frame {
+    Frame
+}

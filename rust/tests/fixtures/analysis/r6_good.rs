@@ -1,0 +1,8 @@
+pub struct Frame;
+
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame, String> {
+    if bytes.is_empty() {
+        return Err("empty frame".to_string());
+    }
+    Ok(Frame)
+}

@@ -1,0 +1,3 @@
+pub fn body_buffer(wire_len: usize) -> Vec<u8> {
+    Vec::with_capacity(wire_len)
+}

@@ -1,0 +1,7 @@
+pub fn body_buffer(wire_len: usize) -> Option<Vec<u8>> {
+    if wire_len > 16 << 20 {
+        return None;
+    }
+    // lint: allow(R7) capped at MAX_BODY_BYTES just above
+    Some(Vec::with_capacity(wire_len))
+}

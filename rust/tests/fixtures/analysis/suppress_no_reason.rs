@@ -1,0 +1,4 @@
+pub fn lane_word(lanes: u64) -> u32 {
+    // lint: allow(R1)
+    lanes as u32
+}

@@ -1,0 +1,4 @@
+pub fn lane_word(lanes: u64) -> u32 {
+    // lint: allow(R1) lanes is bounded by config validation at construction
+    lanes as u32
+}

@@ -1,0 +1,5 @@
+pub fn lane_word(lanes: u64) -> u32 {
+    // lint: allow(R1) covers only the next line, not two below
+    let _pad = 0;
+    lanes as u32
+}

@@ -1,0 +1,2 @@
+// lint: allowedlist nonsense
+pub fn nothing() {}
