@@ -1,0 +1,136 @@
+//! Observability overhead: what the span-tracing layer costs the
+//! serving hot path when it is OFF (the always-paid price) and when it
+//! is ON — the gate the obs subsystem ships under (see
+//! `docs/observability.md`).
+//!
+//! Three legs, pinned seed, deterministic shapes:
+//!
+//! 1. **Disabled emit** — `obs::emit` with tracing off is one atomic
+//!    load + branch; measured per call.
+//! 2. **Enabled emit** — the full seqlock ring push, measured per call.
+//! 3. **Serve baseline** — the seeded mixed stream through the
+//!    soft-backend rack (tracing off), giving the per-request latency
+//!    the emit cost is compared against.
+//!
+//! Prints human-readable lines and writes machine-readable
+//! **`BENCH_obs.json`** (committed as `rust/BENCH_obs.json`). Schema
+//! (`"schema": "gta.bench.obs/1"`):
+//!
+//! ```json
+//! {
+//!   "schema": "gta.bench.obs/1",
+//!   "seed": 2024,
+//!   "provisional": false,
+//!   "emit_disabled_ns": 0,
+//!   "emit_enabled_ns": 0,
+//!   "hist_record_ns": 0,
+//!   "serve_ns_per_request": 0,
+//!   "emits_per_request": 8,
+//!   "disabled_overhead_pct": 0
+//! }
+//! ```
+//!
+//! Gate: the disabled-tracing cost — `emit_disabled_ns` ×
+//! `emits_per_request`, the whole price a non-tracing run pays — must
+//! stay under **1%** of the measured per-request serve latency.
+
+use gta::obs::{self, Histogram, SpanEvent, Stage};
+use gta::util::bench::bench_with_budget;
+use gta::util::json::Json;
+use std::hint::black_box;
+use std::time::Duration;
+
+const SEED: u64 = 2024;
+const BUDGET: Duration = Duration::from_millis(300);
+/// Inner repetitions per timed closure call (amortizes timer overhead).
+const INNER: u64 = 1024;
+/// Span emissions per verified request on the traced serve path:
+/// admit + route + schedule + coalesce + execute + respond, plus the
+/// sweep and net spans a worst-case request adds.
+const EMITS_PER_REQUEST: f64 = 8.0;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn main() {
+    println!("obs overhead: span emit vs the serve hot path, seed {SEED}\n");
+    let ev = SpanEvent {
+        trace_id: 7,
+        stage: Stage::Execute,
+        shard: 0,
+        start_us: 1,
+        dur_us: 2,
+        extra: 3,
+    };
+
+    // ---- leg 1: emit with tracing OFF (one load + branch) -------------
+    obs::reset();
+    obs::set_enabled(false);
+    let disabled = bench_with_budget("emit (tracing off)", BUDGET, &mut || {
+        for _ in 0..INNER {
+            obs::emit(black_box(&ev));
+        }
+    });
+
+    // ---- leg 2: emit with tracing ON (seqlock ring push) --------------
+    obs::set_enabled(true);
+    let enabled = bench_with_budget("emit (tracing on)", BUDGET, &mut || {
+        for _ in 0..INNER {
+            obs::emit(black_box(&ev));
+        }
+    });
+    obs::set_enabled(false);
+    obs::reset();
+
+    // informational: the always-on per-stage histogram record
+    let mut h = Histogram::new();
+    let hist = bench_with_budget("histogram record", BUDGET, &mut || {
+        for i in 0..INNER {
+            h.record(black_box(i));
+        }
+    });
+    black_box(h.count());
+
+    let disabled_ns = disabled.median.as_nanos() as f64 / INNER as f64;
+    let enabled_ns = enabled.median.as_nanos() as f64 / INNER as f64;
+    let hist_ns = hist.median.as_nanos() as f64 / INNER as f64;
+    println!(
+        "  -> emit: {disabled_ns:.2} ns/call off, {enabled_ns:.2} ns/call on; \
+         histogram record {hist_ns:.2} ns/call\n"
+    );
+
+    // ---- leg 3: the serve path itself (tracing off) -------------------
+    let summary = gta::serve::run_mixed_stream_soft_rack(256, 4, 2, &[], "least")
+        .expect("soft-backend rack serve");
+    let ns_per_request = summary.wall_seconds * 1e9 / summary.requests.max(1) as f64;
+    let overhead_pct = disabled_ns * EMITS_PER_REQUEST / ns_per_request * 100.0;
+    println!(
+        "  -> serve: {:.0} ns/request over {} request(s); disabled tracing adds \
+         {EMITS_PER_REQUEST} x {disabled_ns:.2} ns = {overhead_pct:.4}%\n",
+        ns_per_request, summary.requests
+    );
+
+    // ---- report + gate ------------------------------------------------
+    let report = obj(vec![
+        ("schema", Json::Str("gta.bench.obs/1".to_string())),
+        ("seed", Json::Num(SEED as f64)),
+        ("provisional", Json::Bool(false)),
+        ("emit_disabled_ns", Json::Num(disabled_ns)),
+        ("emit_enabled_ns", Json::Num(enabled_ns)),
+        ("hist_record_ns", Json::Num(hist_ns)),
+        ("serve_ns_per_request", Json::Num(ns_per_request)),
+        ("emits_per_request", Json::Num(EMITS_PER_REQUEST)),
+        ("disabled_overhead_pct", Json::Num(overhead_pct)),
+    ]);
+    std::fs::write("BENCH_obs.json", report.render() + "\n").expect("writing BENCH_obs.json");
+    println!("wrote BENCH_obs.json");
+
+    assert!(
+        overhead_pct < 1.0,
+        "disabled span tracing must cost < 1% of a request \
+         ({EMITS_PER_REQUEST} emits x {disabled_ns:.2} ns vs {ns_per_request:.0} ns/request \
+         = {overhead_pct:.4}%)"
+    );
+    println!("obs gate passed: disabled tracing costs {overhead_pct:.4}% < 1% of a request");
+}

@@ -7,9 +7,16 @@
 //! Latencies are kept in a fixed-size reservoir (Vitter's Algorithm R)
 //! instead of an unbounded vector, so a long-lived server records
 //! millions of requests in O(1) memory while p50/p95/p99 stay within
-//! sampling error; the mean is exact (running sum / count).
+//! sampling error; the mean is exact (running sum / count). Alongside
+//! the reservoir, every latency also lands in a log-bucket
+//! [`Histogram`] and per-stage timings in a [`StageHists`]
+//! (`record_stage`) — unlike reservoirs, those merge **exactly** across
+//! shards, so [`Snapshot::absorb`] derives aggregate p50/p95/p99 from
+//! the merged buckets instead of the old lossy worst-shard maximum
+//! (see `docs/observability.md`).
 
 use super::lane_scheduler::LaneUsage;
+use crate::obs::{Histogram, Stage, StageHists};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -50,6 +57,11 @@ struct Inner {
     lat_sum_us: u64,
     lat_reservoir: Vec<u64>,
     lat_rng: Option<Rng>,
+    // exact-merging log-bucket histograms: whole-request latency plus
+    // per-pipeline-stage timings (always on — they live under the same
+    // mutex the counters already take)
+    lat_hist: Histogram,
+    stage_hist: StageHists,
 }
 
 /// Thread-safe metrics sink.
@@ -106,11 +118,20 @@ pub struct Snapshot {
     pub p95_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
+    /// Log-bucket histogram of every recorded request latency. Merges
+    /// exactly in [`Snapshot::absorb`], which is where the aggregate
+    /// p50/p95/p99 above come from once more than one shard
+    /// contributes.
+    pub lat_hist: Histogram,
+    /// Per-pipeline-stage latency histograms (admit, route, schedule,
+    /// coalesce, execute, respond, …) — the `ServeSummary` breakdown
+    /// table and the `Stats` wire frame read these.
+    pub stage_hist: StageHists,
 }
 
 impl Metrics {
     pub fn record_request(&self, is_pgemm: bool, latency: Duration) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         m.requests += 1;
         if is_pgemm {
             m.pgemm_ops += 1;
@@ -120,11 +141,14 @@ impl Metrics {
         let us = latency.as_micros() as u64;
         m.lat_count += 1;
         m.lat_sum_us += us;
+        m.lat_hist.record(us);
         let ewma = if m.lat_count == 1 {
             us as f64
         } else {
+            // lint: relaxed-ok ewma cell is self-contained; updates happen under the inner mutex
             0.75 * f64::from_bits(self.lat_ewma_bits.load(Ordering::Relaxed)) + 0.25 * us as f64
         };
+        // lint: relaxed-ok ewma cell is self-contained; updates happen under the inner mutex
         self.lat_ewma_bits.store(ewma.to_bits(), Ordering::Relaxed);
         if m.lat_reservoir.len() < LATENCY_RESERVOIR_CAP {
             m.lat_reservoir.push(us);
@@ -140,7 +164,7 @@ impl Metrics {
     }
 
     pub fn record_functional(&self, artifact: &str) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         m.functional_execs += 1;
         *m.per_artifact.entry(artifact.to_string()).or_insert(0) += 1;
     }
@@ -148,11 +172,11 @@ impl Metrics {
     /// A functional execution that came back as an error (the request
     /// still gets a response — this is the drop-free failure path).
     pub fn record_functional_error(&self) {
-        self.inner.lock().unwrap().functional_errors += 1;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).functional_errors += 1;
     }
 
     pub fn record_cache(&self, hit: bool) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if hit {
             m.schedule_cache_hits += 1;
         } else {
@@ -162,40 +186,48 @@ impl Metrics {
 
     /// Admission-queue depth observed after an admit (peak is kept).
     pub fn record_queue_depth(&self, depth: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         m.queue_peak_depth = m.queue_peak_depth.max(depth as u64);
     }
 
     pub fn record_admission_rejected(&self) {
-        self.inner.lock().unwrap().admission_rejected += 1;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).admission_rejected += 1;
     }
 
     pub fn record_admission_requeued(&self) {
-        self.inner.lock().unwrap().admission_requeued += 1;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).admission_requeued += 1;
     }
 
     /// Simulated cycles/utilization of one handled request (called once
     /// per request, so the utilization mean weights by request count).
     pub fn record_sim(&self, cycles: u64, utilization: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         m.sim_cycles += cycles;
         m.sim_util_sum += utilization;
+    }
+
+    /// Time one request spent in one pipeline stage (µs). Always on —
+    /// this is the per-stage breakdown `ServeSummary` and the `Stats`
+    /// wire frame report, independent of span tracing being enabled.
+    pub fn record_stage(&self, stage: Stage, us: u64) {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).stage_hist.record(stage, us);
     }
 
     /// Smoothed request latency in µs (0.0 before the first request).
     /// Lock-free — safe to call once per shard per routed request.
     pub fn latency_ewma_us(&self) -> f64 {
+        // lint: relaxed-ok ewma cell is self-contained; a stale read only ages the load signal
         f64::from_bits(self.lat_ewma_bits.load(Ordering::Relaxed))
     }
 
     /// The coalescing window currently in effect (static or adaptive).
     pub fn record_window(&self, us: u64) {
-        self.inner.lock().unwrap().coalesce_window_us = us;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).coalesce_window_us = us;
     }
 
     /// One coalesced dispatch of `size` same-(artifact, shape) requests.
     pub fn record_batch(&self, size: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         m.batches += 1;
         m.batched_requests += size as u64;
         *m.batch_hist.entry(size as u64).or_insert(0) += 1;
@@ -204,11 +236,11 @@ impl Metrics {
     /// Wall time of one backend `execute_batch` call, measured on the
     /// executor thread around the whole (possibly parallel) fan-out.
     pub fn record_batch_exec(&self, us: u64) {
-        self.inner.lock().unwrap().batch_exec_us += us;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).batch_exec_us += us;
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let mut lat = m.lat_reservoir.clone();
         lat.sort_unstable();
         let pct = |p: f64| -> u64 {
@@ -242,8 +274,11 @@ impl Metrics {
                 m.sim_util_sum / m.requests as f64
             },
             coalesce_window_us: m.coalesce_window_us,
+            // lint: relaxed-ok ewma cell is self-contained; see latency_ewma_us
             latency_ewma_us: f64::from_bits(self.lat_ewma_bits.load(Ordering::Relaxed)),
             latency_count: m.lat_count,
+            lat_hist: m.lat_hist.clone(),
+            stage_hist: m.stage_hist.clone(),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -269,10 +304,12 @@ impl Snapshot {
     /// Fold another shard's snapshot into this one for a rack-level
     /// aggregate: counters, histograms and sim cycles sum; means are
     /// re-weighted by their sample counts; `queue_peak_depth`,
-    /// `max_batch`, the coalescing window, the latency percentiles and
-    /// the latency EWMA take the per-shard maximum (percentile
-    /// reservoirs cannot be merged exactly from snapshots, so the
-    /// aggregate tail is the conservative worst-shard tail).
+    /// `max_batch`, the coalescing window and the latency EWMA take the
+    /// per-shard maximum. The latency percentiles are derived from the
+    /// **exactly merged** log-bucket histograms — correct to bucket
+    /// resolution however many shards contribute — falling back to the
+    /// old conservative worst-shard maximum only when a contributing
+    /// snapshot carries no histogram (a pre-histogram wire peer).
     pub fn absorb(&mut self, o: &Snapshot) {
         // weighted means first, while `self` still holds its own counts
         let lat_n = self.latency_count + o.latency_count;
@@ -315,9 +352,21 @@ impl Snapshot {
         self.sim_cycles += o.sim_cycles;
         self.coalesce_window_us = self.coalesce_window_us.max(o.coalesce_window_us);
         self.latency_count += o.latency_count;
-        self.p50_us = self.p50_us.max(o.p50_us);
-        self.p95_us = self.p95_us.max(o.p95_us);
-        self.p99_us = self.p99_us.max(o.p99_us);
+        self.lat_hist.merge(&o.lat_hist);
+        self.stage_hist.merge(&o.stage_hist);
+        if self.lat_hist.count() == self.latency_count && self.latency_count > 0 {
+            // every recorded latency is in the merged histogram: the
+            // aggregate percentiles are exact to bucket resolution
+            self.p50_us = self.lat_hist.value_at_quantile(0.50);
+            self.p95_us = self.lat_hist.value_at_quantile(0.95);
+            self.p99_us = self.lat_hist.value_at_quantile(0.99);
+        } else {
+            // a contributor lacked histogram data (old-version wire
+            // peer): keep the legacy conservative worst-shard tail
+            self.p50_us = self.p50_us.max(o.p50_us);
+            self.p95_us = self.p95_us.max(o.p95_us);
+            self.p99_us = self.p99_us.max(o.p99_us);
+        }
     }
 
     pub fn render(&self) -> String {
@@ -619,6 +668,75 @@ mod tests {
         assert!(rendered.contains("shard 0"), "{rendered}");
         assert!(rendered.contains("rack aggregate"), "{rendered}");
         assert!(!rendered.contains("net:"), "no net gauges unless attached: {rendered}");
+    }
+
+    #[test]
+    fn absorb_derives_aggregate_percentiles_from_merged_histograms() {
+        use crate::obs::hist::bucket_of;
+        // two shards with very different latency distributions: the old
+        // `.max()` merge would report shard B's tail as the aggregate
+        // p50; the histogram merge must land in the same bucket as the
+        // sorted-oracle over ALL samples
+        let a = Metrics::default();
+        let b = Metrics::default();
+        let mut all = Vec::new();
+        let mut rng = Rng::new(42);
+        for _ in 0..2_000u64 {
+            let v = rng.range_u64(10, 100); // fast shard
+            a.record_request(false, Duration::from_micros(v));
+            all.push(v);
+        }
+        for _ in 0..500u64 {
+            let v = rng.range_u64(5_000, 50_000); // slow shard
+            b.record_request(false, Duration::from_micros(v));
+            all.push(v);
+        }
+        let mut agg = a.snapshot();
+        agg.absorb(&b.snapshot());
+        all.sort_unstable();
+        for (q, got) in [(0.50, agg.p50_us), (0.95, agg.p95_us), (0.99, agg.p99_us)] {
+            let rank = ((q * all.len() as f64).ceil() as usize).clamp(1, all.len());
+            let exact = all[rank - 1];
+            assert_eq!(
+                bucket_of(got),
+                bucket_of(exact),
+                "q={q}: merged {got} vs oracle {exact} must share a bucket"
+            );
+        }
+        // the old behavior would have been max(a.p50, b.p50) ≈ b's p50
+        // (thousands of µs); the merged p50 must sit in the fast band
+        assert!(agg.p50_us < 1_000, "aggregate p50 {} polluted by worst-shard merge", agg.p50_us);
+        assert_eq!(agg.lat_hist.count(), agg.latency_count);
+    }
+
+    #[test]
+    fn absorb_falls_back_to_max_for_histogramless_peers() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_request(false, Duration::from_micros(i));
+        }
+        let mut agg = m.snapshot();
+        // a pre-histogram wire peer: counts but an empty lat_hist
+        let mut old = Snapshot { latency_count: 10, p50_us: 7_777, p95_us: 8_888, p99_us: 9_999, ..Snapshot::default() };
+        old.mean_us = 8_000.0;
+        agg.absorb(&old);
+        assert_eq!(agg.p99_us, 9_999, "legacy max fallback when hist is incomplete");
+        assert_eq!(agg.latency_count, 110);
+    }
+
+    #[test]
+    fn stage_histograms_record_and_aggregate() {
+        use crate::obs::Stage;
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.record_stage(Stage::Admit, 10);
+        a.record_stage(Stage::Execute, 400);
+        b.record_stage(Stage::Admit, 12);
+        let mut agg = a.snapshot();
+        agg.absorb(&b.snapshot());
+        assert_eq!(agg.stage_hist.get(Stage::Admit).count(), 2);
+        assert_eq!(agg.stage_hist.get(Stage::Execute).count(), 1);
+        assert_eq!(agg.stage_hist.get(Stage::Route).count(), 0);
     }
 
     #[test]

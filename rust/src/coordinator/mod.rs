@@ -54,6 +54,7 @@ pub use metrics::NetGauges;
 pub use session::{NotifyFn, RackSession, SessionStats, SubmitError, Ticket, WorkerPool};
 
 use crate::arch::GtaConfig;
+use crate::obs;
 use crate::ops::{PGemm, TensorOp};
 use crate::runtime::manifest::DType;
 use crate::runtime::{Engine, ExecBackend, HostTensor};
@@ -129,10 +130,12 @@ enum ExecJob {
         reply: Reply,
     },
     /// A coalesced batch of same-artifact invocations; results are
-    /// scattered back to the per-invocation reply channels.
+    /// scattered back to the per-invocation reply channels. Each item
+    /// carries its request's trace id so the executor can attribute an
+    /// `Execute` span per batch member.
     RunBatch {
         artifact: String,
-        items: Vec<(Vec<HostTensor>, Reply)>,
+        items: Vec<(Vec<HostTensor>, Reply, u64)>,
     },
     Names {
         reply: mpsc::Sender<Vec<String>>,
@@ -194,12 +197,36 @@ impl Executor {
                             let _ = reply.send(backend.execute(&artifact, &inputs));
                         }
                         ExecJob::RunBatch { artifact, items } => {
-                            let (inputs, replies): (Vec<Vec<HostTensor>>, Vec<Reply>) =
-                                items.into_iter().unzip();
+                            let mut inputs = Vec::with_capacity(items.len());
+                            let mut replies = Vec::with_capacity(items.len());
+                            let mut traces = Vec::with_capacity(items.len());
+                            for (i, r, t) in items {
+                                inputs.push(i);
+                                replies.push(r);
+                                traces.push(t);
+                            }
+                            let exec_start = obs::now_us();
                             let t0 = Instant::now();
                             let results = backend.execute_batch(&artifact, &inputs);
+                            let wall_us = t0.elapsed().as_micros() as u64;
                             if let Some(m) = &metrics {
-                                m.record_batch_exec(t0.elapsed().as_micros() as u64);
+                                m.record_batch_exec(wall_us);
+                            }
+                            // each batch member's Execute span/stage is
+                            // the batch wall window it rode in
+                            let size = traces.len() as u64;
+                            for &trace in &traces {
+                                if let Some(m) = &metrics {
+                                    m.record_stage(obs::Stage::Execute, wall_us);
+                                }
+                                obs::emit(&obs::SpanEvent {
+                                    trace_id: trace,
+                                    stage: obs::Stage::Execute,
+                                    shard: obs::NO_SHARD,
+                                    start_us: exec_start,
+                                    dur_us: wall_us,
+                                    extra: size,
+                                });
                             }
                             for (reply, res) in replies.into_iter().zip(results) {
                                 let _ = reply.send(res);
@@ -375,6 +402,11 @@ struct DispatchJob {
     artifact: String,
     inputs: Vec<HostTensor>,
     reply: Reply,
+    /// The request's trace id — rides through to the executor so the
+    /// `Coalesce`/`Execute` spans attribute to the right request.
+    trace: u64,
+    /// `obs::now_us()` at submit: the start of the coalescing wait.
+    t_enq_us: u64,
 }
 
 /// Batches group by artifact plus input signature: artifacts are
@@ -398,13 +430,28 @@ fn flush_group(
     if jobs.is_empty() {
         return;
     }
+    let size = jobs.len() as u64;
     metrics.record_batch(jobs.len());
-    let items: Vec<(Vec<HostTensor>, Reply)> =
-        jobs.into_iter().map(|j| (j.inputs, j.reply)).collect();
+    // each member's Coalesce span/stage: enqueue → this flush
+    let now = obs::now_us();
+    for j in &jobs {
+        let wait = now.saturating_sub(j.t_enq_us);
+        metrics.record_stage(obs::Stage::Coalesce, wait);
+        obs::emit(&obs::SpanEvent {
+            trace_id: j.trace,
+            stage: obs::Stage::Coalesce,
+            shard: obs::NO_SHARD,
+            start_us: j.t_enq_us,
+            dur_us: wait,
+            extra: size,
+        });
+    }
+    let items: Vec<(Vec<HostTensor>, Reply, u64)> =
+        jobs.into_iter().map(|j| (j.inputs, j.reply, j.trace)).collect();
     if let Err(mpsc::SendError(ExecJob::RunBatch { items, .. })) =
         exec_tx.send(ExecJob::RunBatch { artifact, items })
     {
-        for (_, reply) in items {
+        for (_, reply, _) in items {
             let _ = reply.send(Err(anyhow!("executor shut down before dispatch")));
         }
     }
@@ -496,13 +543,14 @@ impl Dispatcher {
     }
 
     /// Submit one functional invocation and wait for its (possibly
-    /// batched) execution result.
-    fn submit(&self, artifact: String, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+    /// batched) execution result. `trace` is the owning request's trace
+    /// id (its ticket id) for span attribution.
+    fn submit(&self, artifact: String, inputs: Vec<HostTensor>, trace: u64) -> Result<Vec<HostTensor>> {
         let (reply, rx) = mpsc::channel();
         {
-            let guard = self.tx.lock().unwrap();
+            let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
             let tx = guard.as_ref().ok_or_else(|| anyhow!("dispatcher shut down"))?;
-            tx.send(DispatchJob { artifact, inputs, reply })
+            tx.send(DispatchJob { artifact, inputs, reply, trace, t_enq_us: obs::now_us() })
                 .map_err(|_| anyhow!("dispatcher gone"))?;
         }
         rx.recv().map_err(|_| anyhow!("dispatcher dropped reply"))?
@@ -511,7 +559,7 @@ impl Dispatcher {
 
 impl Drop for Dispatcher {
     fn drop(&mut self) {
-        drop(self.tx.lock().unwrap().take());
+        drop(self.tx.lock().unwrap_or_else(|e| e.into_inner()).take());
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -588,7 +636,7 @@ impl<T> AdmissionQueue<T> {
     /// Admit `item`, applying `policy` when at capacity. On failure the
     /// item is handed back so the caller can synthesize a response for it.
     pub fn admit(&self, item: T, policy: AdmissionPolicy) -> std::result::Result<(), (T, AdmitError)> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if s.closed {
                 return Err((item, AdmitError::Closed));
@@ -600,7 +648,9 @@ impl<T> AdmissionQueue<T> {
             }
             match policy {
                 AdmissionPolicy::Reject { .. } => return Err((item, AdmitError::Busy)),
-                AdmissionPolicy::Block => s = self.not_full.wait(s).unwrap(),
+                AdmissionPolicy::Block => {
+                    s = self.not_full.wait(s).unwrap_or_else(|e| e.into_inner())
+                }
             }
         }
     }
@@ -608,7 +658,7 @@ impl<T> AdmissionQueue<T> {
     /// Next item; blocks while the queue is open and empty. `None` once
     /// closed and drained.
     pub fn pop(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if let Some(item) = s.items.pop_front() {
                 self.not_full.notify_one();
@@ -617,20 +667,20 @@ impl<T> AdmissionQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.not_empty.wait(s).unwrap();
+            s = self.not_empty.wait(s).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Close the queue: pending items still drain, new admissions fail.
     pub fn close(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         s.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).items.len()
     }
 
     pub fn capacity(&self) -> usize {
@@ -735,7 +785,11 @@ impl Coordinator {
         Ok(Self::from_rack(Rack::with_backend(
             vec![gta],
             move |_shard| {
-                (make.lock().unwrap().take().expect("single-shard factory runs once"))()
+                (make
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .take()
+                    .expect("single-shard factory runs once"))()
             },
             coalesce,
             Box::new(RoundRobin::default()),

@@ -27,6 +27,7 @@ use super::{
     ServeOptions, DEFAULT_SCHEDULE_CAPACITY,
 };
 use crate::arch::GtaConfig;
+use crate::obs::{self, Stage};
 use crate::ops::{PGemm, TensorOp};
 use crate::runtime::ExecBackend;
 use crate::scheduler::{explorer, Candidate, Explorer};
@@ -108,11 +109,13 @@ impl Shard {
 
     /// Requests the routing policy has placed on this shard so far.
     pub fn routed(&self) -> u64 {
+        // lint: relaxed-ok monotonic load gauge; a stale read only skews one routing choice
         self.routed.load(Ordering::Relaxed)
     }
 
     /// Requests currently admitted but unanswered.
     pub fn in_flight(&self) -> u64 {
+        // lint: relaxed-ok load gauge read per routing decision; staleness is tolerated by design
         self.in_flight.load(Ordering::Relaxed)
     }
 
@@ -120,6 +123,7 @@ impl Shard {
     /// this shard, not yet picked up by a worker (live queue pressure;
     /// subset of `in_flight`).
     pub fn queued(&self) -> u64 {
+        // lint: relaxed-ok load gauge read per routing decision; staleness is tolerated by design
         self.queued.load(Ordering::Relaxed)
     }
 
@@ -147,22 +151,39 @@ impl Shard {
 
     /// Handle one request on this shard. Never panics on functional
     /// failure: the error travels in [`Response::error`] instead.
+    ///
+    /// Observability: the whole call runs under `obs::with_trace(req.id)`
+    /// so nested code (the explorer's sweep) attributes its spans to this
+    /// request; the schedule/simulate phase emits a `Schedule` span
+    /// (`extra` = 1 on a cache hit), functional work gets `Coalesce` +
+    /// `Execute` spans from the dispatcher/executor, and response
+    /// assembly a `Respond` span. Per-stage timings also land in the
+    /// always-on metrics histograms.
     pub fn handle(&self, req: Request) -> Response {
         let t0 = Instant::now();
+        let trace = obs::TraceCtx::new(req.id);
+        let _tg = obs::with_trace(req.id);
+        let sched_start = obs::now_us();
+        let mut cache_hit = 0u64;
         let (schedule, sim) = match &req.op {
             TensorOp::PGemm(g) => {
-                let cand = self.schedule(g);
+                let (cand, computed) = self.explorer.schedule(g, &self.gta);
+                self.metrics.record_cache(!computed);
+                cache_hit = u64::from(!computed);
                 (Some(cand), cand.report)
             }
             TensorOp::Vector(_) => (None, self.sim.run(&req.op)),
         };
         self.metrics.record_sim(sim.cycles, sim.utilization);
+        self.metrics
+            .record_stage(Stage::Schedule, obs::now_us().saturating_sub(sched_start));
+        trace.emit_since(Stage::Schedule, self.id as u16, sched_start, cache_hit);
         let (outputs, error) = match &req.exec {
             ExecKind::Simulate => (None, None),
             ExecKind::Functional { artifact, inputs } => match &self.dispatcher {
                 Some(d) => {
                     self.metrics.record_functional(artifact);
-                    match d.submit(artifact.clone(), inputs.clone()) {
+                    match d.submit(artifact.clone(), inputs.clone(), req.id) {
                         Ok(outs) => (Some(outs), None),
                         Err(e) => {
                             self.metrics.record_functional_error();
@@ -175,10 +196,15 @@ impl Shard {
                 }
             },
         };
+        let respond_start = obs::now_us();
         let latency = t0.elapsed();
         self.metrics
             .record_request(matches!(req.op, TensorOp::PGemm(_)), latency);
-        Response { id: req.id, shard: self.id, schedule, sim, outputs, error, latency }
+        let resp = Response { id: req.id, shard: self.id, schedule, sim, outputs, error, latency };
+        self.metrics
+            .record_stage(Stage::Respond, obs::now_us().saturating_sub(respond_start));
+        trace.emit_since(Stage::Respond, self.id as u16, respond_start, 0);
+        resp
     }
 
     /// [`Shard::handle`] hardened for worker threads: a panic anywhere in
@@ -202,16 +228,16 @@ impl Shard {
 
     /// Allocate `n` contiguous lanes on this shard's array.
     pub fn allocate_lanes(&self, n: u32) -> Option<Partition> {
-        self.allocator.lock().unwrap().allocate(n)
+        self.allocator.lock().unwrap_or_else(|e| e.into_inner()).allocate(n)
     }
 
     /// Release a partition previously granted by this shard.
     pub fn release_lanes(&self, id: PartitionId) -> bool {
-        self.allocator.lock().unwrap().release(id)
+        self.allocator.lock().unwrap_or_else(|e| e.into_inner()).release(id)
     }
 
     pub fn lane_usage(&self) -> LaneUsage {
-        self.allocator.lock().unwrap().usage()
+        self.allocator.lock().unwrap_or_else(|e| e.into_inner()).usage()
     }
 
     /// Load/identity view for routing policies. Deliberately cheap —
@@ -285,6 +311,7 @@ impl RoutePolicy for RoundRobin {
     }
 
     fn route(&self, _req: &Request, shards: &[ShardStatus]) -> usize {
+        // lint: relaxed-ok pure rotation counter; no data is published through it
         self.next.fetch_add(1, Ordering::Relaxed) % shards.len().max(1)
     }
 }
@@ -500,6 +527,7 @@ impl Rack {
     }
 
     pub fn fresh_id(&self) -> u64 {
+        // lint: relaxed-ok unique-id counter; only uniqueness matters, not ordering
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
@@ -528,9 +556,12 @@ impl Rack {
     fn handle_on(&self, req: Request, run: impl Fn(&Shard, Request) -> Response) -> Response {
         let sidx = self.route(&req);
         let shard = &self.shards[sidx];
+        // lint: relaxed-ok load gauges: routing tolerates stale reads, so updates need no ordering
         shard.routed.fetch_add(1, Ordering::Relaxed);
+        // lint: relaxed-ok load gauges: routing tolerates stale reads, so updates need no ordering
         shard.in_flight.fetch_add(1, Ordering::Relaxed);
         let resp = run(shard, req);
+        // lint: relaxed-ok load gauges: routing tolerates stale reads, so updates need no ordering
         shard.in_flight.fetch_sub(1, Ordering::Relaxed);
         resp
     }

@@ -34,6 +34,7 @@
 use super::metrics::RackSnapshot;
 use super::rack::{order_responses, route_on, RoutePolicy, Shard};
 use super::{AdmissionPolicy, AdmissionQueue, AdmitError, Request, Response, ServeOptions};
+use crate::obs::{self, Stage};
 use crate::serve::ServeSummary;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -67,19 +68,21 @@ impl SessionWork {
     fn run_one(&self) {
         if let Some((sidx, req)) = self.queue.pop() {
             let shard = &self.shards[sidx];
+            // lint: relaxed-ok load gauge; routing tolerates stale reads
             shard.queued.fetch_sub(1, Ordering::Relaxed);
             let resp = shard.handle_caught(req);
+            // lint: relaxed-ok load gauge; routing tolerates stale reads
             shard.in_flight.fetch_sub(1, Ordering::Relaxed);
             let _ = self.tx.send(resp);
         }
         {
-            let mut p = self.pending.lock().unwrap();
+            let mut p = self.pending.lock().unwrap_or_else(|e| e.into_inner());
             *p = p.saturating_sub(1);
             if *p == 0 {
                 self.idle.notify_all();
             }
         }
-        let cb = self.notify.lock().unwrap().clone();
+        let cb = self.notify.lock().unwrap_or_else(|e| e.into_inner()).clone();
         if let Some(cb) = cb {
             cb();
         }
@@ -88,7 +91,7 @@ impl SessionWork {
     /// Block until every dispatched token has been serviced (the
     /// pool-mode replacement for joining dedicated worker threads).
     fn wait_idle(&self) {
-        let mut p = self.pending.lock().unwrap();
+        let mut p = self.pending.lock().unwrap_or_else(|e| e.into_inner());
         while *p > 0 {
             // a poisoned wait still hands the guard back: recover it so a
             // panicked worker degrades to its own error, not a cascade
@@ -135,11 +138,12 @@ impl WorkerPool {
                     .name(format!("gta-pool-worker-{w}"))
                     .spawn(move || loop {
                         let work = {
-                            let mut q = inner.tokens.lock().unwrap();
+                            let mut q = inner.tokens.lock().unwrap_or_else(|e| e.into_inner());
                             loop {
                                 if let Some(w) = q.pop_front() {
                                     break Some(w);
                                 }
+                                // lint: relaxed-ok shutdown flag re-checked under the tokens mutex
                                 if inner.closed.load(Ordering::Relaxed) {
                                     break None;
                                 }
@@ -162,18 +166,19 @@ impl WorkerPool {
 
     /// Worker threads in the pool.
     pub fn workers(&self) -> usize {
-        self.handles.lock().unwrap().len()
+        self.handles.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Enqueue one dispatch token. After [`shutdown`](Self::shutdown)
     /// the token is serviced inline on the calling thread instead —
     /// liveness over parallelism on the rare post-shutdown submit.
     fn dispatch(&self, work: Arc<SessionWork>) {
+        // lint: relaxed-ok a racing shutdown still services the token (inline or by a live worker)
         if self.inner.closed.load(Ordering::Relaxed) {
             work.run_one();
             return;
         }
-        self.inner.tokens.lock().unwrap().push_back(work);
+        self.inner.tokens.lock().unwrap_or_else(|e| e.into_inner()).push_back(work);
         self.inner.ready.notify_one();
     }
 
@@ -183,7 +188,8 @@ impl WorkerPool {
     pub fn shutdown(&self) {
         self.inner.closed.store(true, Ordering::SeqCst);
         self.inner.ready.notify_all();
-        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> =
+            self.handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -323,13 +329,18 @@ impl RackSession {
                             .spawn(move || {
                                 while let Some((sidx, req)) = queue.pop() {
                                     let shard = &shards[sidx];
+                                    // lint: relaxed-ok load gauge; routing tolerates stale reads
                                     shard.queued.fetch_sub(1, Ordering::Relaxed);
                                     let resp = shard.handle_caught(req);
+                                    // lint: relaxed-ok load gauge; routing tolerates stale reads
                                     shard.in_flight.fetch_sub(1, Ordering::Relaxed);
                                     if tx.send(resp).is_err() {
                                         break;
                                     }
-                                    let cb = notify.lock().unwrap().clone();
+                                    let cb = notify
+                                        .lock()
+                                        .unwrap_or_else(|e| e.into_inner())
+                                        .clone();
                                     if let Some(cb) = cb {
                                         cb();
                                     }
@@ -385,23 +396,38 @@ impl RackSession {
         if self.is_closed() {
             return Err(SubmitError { id, shard: None, error: AdmitError::Closed });
         }
+        // span bookkeeping: the Admit span covers this whole call
+        // (routing + queue admission incl. requeue retries); the Route
+        // span is the nested policy decision alone. trace id = ticket id.
+        let trace = obs::TraceCtx::new(id);
+        let admit_start = obs::now_us();
         let is_functional = matches!(req.exec, super::ExecKind::Functional { .. });
         let sidx = route_on(self.policy.as_ref(), &self.shards, &req);
         let shard = Arc::clone(&self.shards[sidx]);
+        shard
+            .metrics
+            .record_stage(Stage::Route, obs::now_us().saturating_sub(admit_start));
+        trace.emit_since(Stage::Route, sidx as u16, admit_start, sidx as u64);
+        // lint: relaxed-ok load gauges: routing tolerates stale reads, so updates need no ordering
         shard.routed.fetch_add(1, Ordering::Relaxed);
+        // lint: relaxed-ok load gauges: routing tolerates stale reads, so updates need no ordering
         shard.in_flight.fetch_add(1, Ordering::Relaxed);
+        // lint: relaxed-ok load gauges: routing tolerates stale reads, so updates need no ordering
         shard.queued.fetch_add(1, Ordering::Relaxed);
         // Count the submission BEFORE admitting (and roll back on
         // rejection): once the item is in the queue a concurrent
         // consumer thread — the network server's egress pump — may count
         // the completion immediately, and `completed > submitted` would
         // underflow `outstanding`.
+        // lint: relaxed-ok lifecycle counter; outstanding() is documented as a non-atomic snapshot
         self.submitted.fetch_add(1, Ordering::Relaxed);
         if is_functional {
+            // lint: relaxed-ok lifecycle counter; see submitted above
             self.functional.fetch_add(1, Ordering::Relaxed);
         }
         // the Reject policy's tunable requeue loop: retry a Busy up to
         // `retries` times before surfacing it
+        let mut requeues = 0u64;
         let mut attempt = self.queue.admit((sidx, req), self.opts.policy);
         if let AdmissionPolicy::Reject { retries, backoff_us } = self.opts.policy {
             let mut tries = 0u32;
@@ -409,6 +435,7 @@ impl RackSession {
                 match attempt {
                     Err((item, AdmitError::Busy)) if tries < retries => {
                         tries += 1;
+                        requeues += 1;
                         shard.metrics.record_admission_requeued();
                         if backoff_us > 0 {
                             std::thread::sleep(Duration::from_micros(backoff_us));
@@ -424,23 +451,32 @@ impl RackSession {
         }
         match attempt {
             Ok(()) => {
+                shard
+                    .metrics
+                    .record_stage(Stage::Admit, obs::now_us().saturating_sub(admit_start));
+                trace.emit_since(Stage::Admit, sidx as u16, admit_start, requeues);
                 shard.metrics.record_queue_depth(self.queue.depth());
                 if let Some((pool, work)) = &self.pool {
-                    *work.pending.lock().unwrap() += 1;
+                    *work.pending.lock().unwrap_or_else(|e| e.into_inner()) += 1;
                     pool.dispatch(Arc::clone(work));
                 }
                 Ok(Ticket { id, shard: sidx })
             }
             Err((_, error)) => {
+                // lint: relaxed-ok lifecycle counter; see submitted above
                 self.submitted.fetch_sub(1, Ordering::Relaxed);
                 if is_functional {
+                    // lint: relaxed-ok lifecycle counter; see submitted above
                     self.functional.fetch_sub(1, Ordering::Relaxed);
                 }
                 if error == AdmitError::Busy {
                     shard.metrics.record_admission_rejected();
+                    // lint: relaxed-ok lifecycle counter; see submitted above
                     self.rejected.fetch_add(1, Ordering::Relaxed);
                 }
+                // lint: relaxed-ok load gauges: routing tolerates stale reads
                 shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                // lint: relaxed-ok load gauges: routing tolerates stale reads
                 shard.queued.fetch_sub(1, Ordering::Relaxed);
                 Err(SubmitError { id, shard: Some(sidx), error })
             }
@@ -455,7 +491,7 @@ impl RackSession {
         if self.outstanding() == 0 {
             return None;
         }
-        match self.rx.lock().unwrap().recv() {
+        match self.rx.lock().unwrap_or_else(|e| e.into_inner()).recv() {
             Ok(resp) => Some(self.count(resp)),
             Err(_) => None,
         }
@@ -463,7 +499,7 @@ impl RackSession {
 
     /// Next completed response if one is ready right now.
     pub fn try_recv(&self) -> Option<Response> {
-        match self.rx.lock().unwrap().try_recv() {
+        match self.rx.lock().unwrap_or_else(|e| e.into_inner()).try_recv() {
             Ok(resp) => Some(self.count(resp)),
             Err(_) => None,
         }
@@ -477,7 +513,7 @@ impl RackSession {
     /// egress pump's accessor: `net::server`'s writer thread calls it in
     /// a loop while the reader thread keeps submitting.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
-        match self.rx.lock().unwrap().recv_timeout(timeout) {
+        match self.rx.lock().unwrap_or_else(|e| e.into_inner()).recv_timeout(timeout) {
             Ok(resp) => Some(self.count(resp)),
             Err(_) => None,
         }
@@ -494,14 +530,17 @@ impl RackSession {
     /// (Saturating: with a concurrent submitter and consumer the two
     /// loads are not one atomic snapshot.)
     pub fn outstanding(&self) -> u64 {
-        self.submitted
-            .load(Ordering::Relaxed)
-            .saturating_sub(self.completed.load(Ordering::Relaxed))
+        // lint: relaxed-ok monotone counters; the doc notes the pair is not one atomic snapshot
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        // lint: relaxed-ok monotone counters; the doc notes the pair is not one atomic snapshot
+        let completed = self.completed.load(Ordering::Relaxed);
+        submitted.saturating_sub(completed)
     }
 
     /// Whether [`drain`](Self::drain)/[`close`](Self::close) has begun:
     /// all subsequent submissions fail with [`AdmitError::Closed`].
     pub fn is_closed(&self) -> bool {
+        // lint: relaxed-ok flag read; seal() publishes with SeqCst and stale reads only delay rejection
         self.closed.load(Ordering::Relaxed)
     }
 
@@ -522,7 +561,7 @@ impl RackSession {
     /// thread ever parks in [`recv_timeout`](Self::recv_timeout). The
     /// callback runs on worker threads: keep it cheap, never block.
     pub fn set_notify(&self, f: Option<NotifyFn>) {
-        *self.notify.lock().unwrap() = f;
+        *self.notify.lock().unwrap_or_else(|e| e.into_inner()) = f;
     }
 
     /// Non-blocking first half of [`drain`](Self::drain): stop
@@ -544,11 +583,14 @@ impl RackSession {
 
     /// Live session counters (queue depth, submitted/completed/rejected).
     pub fn stats(&self) -> SessionStats {
+        // lint: relaxed-ok monotone counters; stats() is an advisory snapshot
         let submitted = self.submitted.load(Ordering::Relaxed);
+        // lint: relaxed-ok monotone counters; stats() is an advisory snapshot
         let completed = self.completed.load(Ordering::Relaxed);
         SessionStats {
             submitted,
             completed,
+            // lint: relaxed-ok monotone counters; stats() is an advisory snapshot
             rejected: self.rejected.load(Ordering::Relaxed),
             outstanding: submitted.saturating_sub(completed),
             queue_depth: self.queue.depth(),
@@ -557,9 +599,12 @@ impl RackSession {
 
     /// Fold one consumed response into the lifecycle counters.
     fn count(&self, resp: Response) -> Response {
+        // lint: relaxed-ok monotone counter; only summed at close, no ordering needed
         self.completed.fetch_add(1, Ordering::Relaxed);
+        // lint: relaxed-ok monotone counter; only summed at close, no ordering needed
         self.total_sim_cycles.fetch_add(resp.sim.cycles, Ordering::Relaxed);
         if resp.error.is_some() {
+            // lint: relaxed-ok monotone counter; only summed at close, no ordering needed
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
         resp
@@ -579,14 +624,19 @@ impl RackSession {
             // pool mode: wait for the last dispatched token, not threads
             work.wait_idle();
         }
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = self
+            .workers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
         for h in handles {
             let _ = h.join();
         }
         // workers are done: everything they completed is in the channel
         let mut out = Vec::new();
         {
-            let rx = self.rx.lock().unwrap();
+            let rx = self.rx.lock().unwrap_or_else(|e| e.into_inner());
             while let Ok(resp) = rx.try_recv() {
                 out.push(self.count(resp));
             }
@@ -608,12 +658,15 @@ impl RackSession {
         let wall = self.opened.elapsed().as_secs_f64();
         let shards = RackSnapshot::from_shards(self.shards.iter().map(|s| s.telemetry()).collect());
         let snap = shards.aggregate.clone();
+        // lint: relaxed-ok monotone counters read after drain(): workers have joined
         let completed = self.completed.load(Ordering::Relaxed);
         ServeSummary {
             requests: completed,
+            // lint: relaxed-ok monotone counters read after drain(): workers have joined
             functional: self.functional.load(Ordering::Relaxed),
             verified_ok: 0,
             verified_failed: 0,
+            // lint: relaxed-ok monotone counters read after drain(): workers have joined
             errors: self.errors.load(Ordering::Relaxed),
             prescheduled: 0,
             coalesced_batches: snap.batches,
@@ -622,6 +675,7 @@ impl RackSession {
             shards: Some(shards),
             wall_seconds: wall,
             throughput_rps: completed as f64 / wall.max(1e-9),
+            // lint: relaxed-ok monotone counters read after drain(): workers have joined
             total_sim_cycles: self.total_sim_cycles.load(Ordering::Relaxed),
             metrics: snap,
         }
@@ -630,7 +684,7 @@ impl RackSession {
 
 impl Drop for RackSession {
     fn drop(&mut self) {
-        if !self.is_closed() || !self.workers.lock().unwrap().is_empty() {
+        if !self.is_closed() || !self.workers.lock().unwrap_or_else(|e| e.into_inner()).is_empty() {
             let _ = self.drain();
         }
     }

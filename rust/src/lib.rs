@@ -59,11 +59,18 @@
 //!   panics in the serving hot path, unpoisoned locks, …) as
 //!   machine-checked rules with a suppression/baseline workflow
 //!   (see `docs/analysis.md`)
+//! * [`obs`] — end-to-end request tracing and exact latency histograms:
+//!   per-stage `SpanEvent`s in lock-light bounded rings (gated by one
+//!   atomic flag), log-bucket histograms that merge exactly across
+//!   shards, Chrome `trace_event` export (`gta trace`) and the live
+//!   `Stats` wire frame (`gta stats --connect`, see
+//!   `docs/observability.md`)
 
 pub mod analysis;
 pub mod arch;
 pub mod coordinator;
 pub mod net;
+pub mod obs;
 pub mod util;
 pub mod lowering;
 pub mod ops;

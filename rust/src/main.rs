@@ -69,6 +69,25 @@ USAGE:
                                     server); `--timeout-ms T` bounds connect
                                     and per-response waits (default
                                     10000/30000)
+  gta trace --requests N [--workers W] [--shards N] [--policy P]
+            [--out FILE] [--machine-out FILE]
+                                    run the seeded mixed stream through the
+                                    soft-backend rack with span tracing ON and
+                                    export every request's
+                                    admit/route/schedule/coalesce/execute/
+                                    respond spans as Chrome trace_event JSON
+                                    (--out, default trace.json — open in
+                                    chrome://tracing or Perfetto);
+                                    `--machine-out FILE` also writes the
+                                    gta.obs.trace/1 machine schema
+                                    (see docs/observability.md)
+  gta stats --connect ADDR [--proto V] [--timeout-ms T]
+                                    fetch live telemetry from a running
+                                    `gta serve --listen` server (protocol v3):
+                                    per-shard counters, exact per-stage
+                                    latency percentiles, connection gauges —
+                                    no drain, no close, the server keeps
+                                    serving
   gta bench-check [--dir DIR] [--analysis FILE]
                                     validate every BENCH_*.json perf baseline
                                     in DIR (default .): must parse, carry a
@@ -177,6 +196,8 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&flags)?,
         "serve" => cmd_serve(&flags)?,
         "client" => cmd_client(&flags)?,
+        "trace" => cmd_trace(&flags)?,
+        "stats" => cmd_stats(&flags)?,
         "bench-check" => cmd_bench_check(&flags)?,
         "analyze" => cmd_analyze(&flags)?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
@@ -551,6 +572,91 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         (other, _) => bail!("unknown backend {other:?} (pjrt|soft)"),
     };
     print!("{}", summary.render());
+    Ok(())
+}
+
+/// `gta trace`: the seeded mixed-stream rack run with span tracing on,
+/// exported as Chrome `trace_event` JSON (+ the machine schema).
+fn cmd_trace(flags: &Flags) -> Result<()> {
+    let n = flags.get_u64("requests", 64);
+    let workers = flags.get_u64("workers", 4) as usize;
+    let shards = flags.get_u64("shards", 2) as usize;
+    let policy = flags.get("policy").unwrap_or("least");
+    let lanes: Vec<u32> = flags
+        .get("shard-lanes")
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_default();
+    let out = flags.get("out").unwrap_or("trace.json");
+    gta::obs::reset();
+    gta::obs::set_enabled(true);
+    let summary = gta::serve::run_mixed_stream_soft_rack(n, workers, shards, &lanes, policy)?;
+    gta::obs::set_enabled(false);
+    let (events, dropped) = gta::obs::drain();
+    std::fs::write(out, gta::obs::chrome::chrome_trace_json(&events).render())
+        .map_err(|e| anyhow!("trace: writing {out}: {e}"))?;
+    if let Some(mpath) = flags.get("machine-out") {
+        std::fs::write(mpath, gta::obs::chrome::machine_trace_json(&events, dropped).render())
+            .map_err(|e| anyhow!("trace: writing {mpath}: {e}"))?;
+        println!("gta trace: machine schema (gta.obs.trace/1) -> {mpath}");
+    }
+    let traced = gta::obs::chrome::by_trace(&events).len();
+    println!(
+        "gta trace: {} span event(s) across {} request trace(s) \
+         ({} overwritten in the rings) -> {out}",
+        events.len(),
+        traced,
+        dropped
+    );
+    print!("{}", summary.render());
+    Ok(())
+}
+
+/// `gta stats`: live `Stats` round trip against a serving rack.
+fn cmd_stats(flags: &Flags) -> Result<()> {
+    let addr = flags.get("connect").ok_or_else(|| anyhow!("--connect ADDR required"))?;
+    let mut opts = gta::net::ClientOptions {
+        max_proto: flags.get_u64("proto", gta::net::PROTO_VERSION),
+        ..gta::net::ClientOptions::default()
+    };
+    if let Some(ms) = flags.get("timeout-ms").and_then(|v| v.parse::<u64>().ok()) {
+        if ms == 0 {
+            bail!("--timeout-ms must be positive (omit the flag for the defaults)");
+        }
+        let t = std::time::Duration::from_millis(ms);
+        opts.connect_timeout = t;
+        opts.read_timeout = Some(t);
+    }
+    let mut client = gta::net::GtaClient::connect_with(addr, opts)?;
+    let snap = client.stats()?;
+    drop(client);
+    let agg = &snap.aggregate;
+    println!("live stats from {addr} ({} shard(s)):", snap.shards.len());
+    println!(
+        "  requests={} functional={} cache hit/miss={}/{} batches={} (max {})",
+        agg.requests,
+        agg.functional_execs,
+        agg.schedule_cache_hits,
+        agg.schedule_cache_misses,
+        agg.batches,
+        agg.max_batch
+    );
+    println!(
+        "  latency: p50={}us p95={}us p99={}us mean={:.1}us over {} sample(s)",
+        agg.p50_us, agg.p95_us, agg.p99_us, agg.mean_us, agg.latency_count
+    );
+    print!("{}", gta::serve::render_stage_table(&agg.stage_hist));
+    for t in &snap.shards {
+        println!(
+            "  shard {}: routed={} queued={} lanes {}/{} free",
+            t.shard, t.routed, t.queued, t.lane_usage.free, t.lane_usage.total
+        );
+    }
+    if let Some(net) = &snap.net {
+        println!(
+            "  net: {} conn(s), {} session(s), {} B in, {} B out",
+            net.active_connections, net.active_sessions, net.bytes_in, net.bytes_out
+        );
+    }
     Ok(())
 }
 

@@ -41,6 +41,7 @@ use super::proto::{
     busy_shard, client_hello_v, error_message, negotiate, read_frame, read_frame_v, write_frame,
     write_frame_v, DecodeError, Frame, FrameType, MIN_PROTO_VERSION, PROTO_VERSION,
 };
+use crate::coordinator::metrics::RackSnapshot;
 use crate::coordinator::{order_responses, unserved_response, Request, Response};
 use crate::serve::ServeSummary;
 use anyhow::{anyhow, bail, Result};
@@ -100,6 +101,7 @@ enum Event {
     SessionOpened,
     SessionClosed(Box<ServeSummary>),
     Closed(Box<ServeSummary>),
+    Stats(Box<RackSnapshot>),
     Fatal(String),
     Disconnected,
 }
@@ -273,6 +275,10 @@ impl GtaClient {
                                 Ok(s) => Event::Closed(Box::new(s)),
                                 Err(e) => Event::Fatal(format!("undecodable summary: {e:#}")),
                             },
+                            FrameType::Stats => match super::proto::decode_stats(&f.body) {
+                                Ok(s) => Event::Stats(Box::new(s)),
+                                Err(e) => Event::Fatal(format!("undecodable stats: {e:#}")),
+                            },
                             other => {
                                 Event::Fatal(format!("unexpected {other:?} frame from server"))
                             }
@@ -440,7 +446,11 @@ impl GtaClient {
                 completed(self);
                 Ok(Some(unserved_response(id, 0, message)))
             }
-            Event::Drained | Event::Closed(_) | Event::SessionOpened | Event::SessionClosed(_) => {
+            Event::Drained
+            | Event::Closed(_)
+            | Event::SessionOpened
+            | Event::SessionClosed(_)
+            | Event::Stats(_) => {
                 bail!("unexpected lifecycle frame while receiving responses")
             }
             Event::Fatal(m) => bail!("protocol error: {m}"),
@@ -496,6 +506,45 @@ impl GtaClient {
                 Err(mpsc::TryRecvError::Disconnected) => bail!("server disconnected"),
             }
         }
+    }
+
+    /// Live rack telemetry without disturbing anything: per-shard
+    /// counters, exact per-stage latency histograms, and (on the
+    /// event-loop server) connection gauges. Needs protocol v3; the
+    /// server answers from its current state — no drain, no close.
+    /// Completions racing the reply are kept for the next
+    /// [`recv`](Self::recv).
+    pub fn stats(&mut self) -> Result<RackSnapshot> {
+        if self.closed {
+            bail!("client already closed");
+        }
+        if self.server.proto < 3 {
+            bail!(
+                "live stats need protocol v3 (this connection negotiated v{})",
+                self.server.proto
+            );
+        }
+        write_frame_v(
+            &mut self.writer,
+            &Frame::new(FrameType::Stats, 0, crate::util::json::Json::Null),
+            self.server.proto,
+        )?;
+        self.writer.flush()?;
+        let mut deferred = Vec::new();
+        let snap = loop {
+            match self.next_event_for(0)? {
+                Event::Stats(snap) => break *snap,
+                // a completion racing the stats reply: keep it, in
+                // order, for the next recv on the default session
+                event => deferred.push(event),
+            }
+        };
+        if let Some(t) = self.sessions.get_mut(&0) {
+            for ev in deferred.into_iter().rev() {
+                t.stashed.push_front(ev);
+            }
+        }
+        Ok(snap)
     }
 
     /// Ask the server to drain the default session: every admitted

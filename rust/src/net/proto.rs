@@ -39,6 +39,7 @@
 use crate::coordinator::metrics::{NetGauges, RackSnapshot, ShardTelemetry, Snapshot};
 use crate::coordinator::lane_scheduler::LaneUsage;
 use crate::coordinator::{ExecKind, Request, Response};
+use crate::obs::{Histogram, Stage, StageHists};
 use crate::ops::{PGemm, TensorOp, VectorKind, VectorOp};
 use crate::precision::Precision;
 use crate::runtime::HostTensor;
@@ -146,6 +147,11 @@ pub enum FrameType {
     /// answers with the same type/session carrying its final
     /// [`ServeSummary`].
     SessionClosed,
+    /// v3 client → server with an empty body: ask for live telemetry;
+    /// the server answers with the same type/id carrying the current
+    /// [`RackSnapshot`] (per-shard telemetry + exact per-stage latency
+    /// histograms + net gauges) WITHOUT draining or closing anything.
+    Stats,
 }
 
 impl FrameType {
@@ -162,6 +168,7 @@ impl FrameType {
             FrameType::ResponseBin => 9,
             FrameType::OpenSession => 10,
             FrameType::SessionClosed => 11,
+            FrameType::Stats => 12,
         }
     }
 
@@ -178,6 +185,7 @@ impl FrameType {
             9 => FrameType::ResponseBin,
             10 => FrameType::OpenSession,
             11 => FrameType::SessionClosed,
+            12 => FrameType::Stats,
             _ => return None,
         })
     }
@@ -1186,6 +1194,76 @@ fn encode_count_map<K: ToString>(m: &BTreeMap<K, u64>) -> Json {
     Json::Obj(m.iter().map(|(k, v)| (k.to_string(), ju64(*v))).collect())
 }
 
+/// Sparse wire form of one [`Histogram`]: only the non-empty buckets
+/// travel, keyed by bucket index, plus the exact count/sum/min/max.
+fn encode_hist(h: &Histogram) -> Json {
+    obj(vec![
+        (
+            "counts",
+            Json::Obj(h.to_sparse().into_iter().map(|(b, c)| (b.to_string(), ju64(c))).collect()),
+        ),
+        ("count", ju64(h.count())),
+        ("sum", ju64(h.sum())),
+        ("min", ju64(h.min())),
+        ("max", ju64(h.max())),
+    ])
+}
+
+fn decode_hist(j: &Json) -> Result<Histogram> {
+    let pairs = j
+        .get("counts")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("histogram without counts"))?
+        .iter()
+        .map(|(k, v)| {
+            Ok((k.parse::<usize>().map_err(|_| anyhow!("bad histogram bucket key"))?, get_u64_val(v)?))
+        })
+        .collect::<Result<Vec<(usize, u64)>>>()?;
+    Ok(Histogram::from_sparse(
+        &pairs,
+        get_u64(j, "count")?,
+        get_u64(j, "sum")?,
+        get_u64(j, "min")?,
+        get_u64(j, "max")?,
+    ))
+}
+
+/// Per-stage histograms, keyed by stage name; empty stages are omitted.
+fn encode_stage_hists(sh: &StageHists) -> Json {
+    Json::Obj(sh.non_empty().map(|(s, h)| (s.name().to_string(), encode_hist(h))).collect())
+}
+
+fn decode_stage_hists(j: &Json) -> Result<StageHists> {
+    let entries = j.as_obj().ok_or_else(|| anyhow!("stage histograms are not an object"))?;
+    let mut sh = StageHists::new();
+    for (k, v) in entries {
+        // Stage names a newer peer knows and we don't are skipped, not
+        // an error — same spirit as the version negotiation.
+        if let Some(stage) = Stage::from_name(k) {
+            *sh.get_mut(stage) = decode_hist(v)?;
+        }
+    }
+    Ok(sh)
+}
+
+fn encode_net_gauges(g: &NetGauges) -> Json {
+    obj(vec![
+        ("active_connections", ju64(g.active_connections)),
+        ("active_sessions", ju64(g.active_sessions)),
+        ("bytes_in", ju64(g.bytes_in)),
+        ("bytes_out", ju64(g.bytes_out)),
+    ])
+}
+
+fn decode_net_gauges(g: &Json) -> Result<NetGauges> {
+    Ok(NetGauges {
+        active_connections: get_u64(g, "active_connections")?,
+        active_sessions: get_u64(g, "active_sessions")?,
+        bytes_in: get_u64(g, "bytes_in")?,
+        bytes_out: get_u64(g, "bytes_out")?,
+    })
+}
+
 fn encode_snapshot(s: &Snapshot) -> Json {
     obj(vec![
         ("requests", ju64(s.requests)),
@@ -1212,6 +1290,8 @@ fn encode_snapshot(s: &Snapshot) -> Json {
         ("p95_us", ju64(s.p95_us)),
         ("p99_us", ju64(s.p99_us)),
         ("mean_us", Json::Num(s.mean_us)),
+        ("lat_hist", encode_hist(&s.lat_hist)),
+        ("stage_hist", encode_stage_hists(&s.stage_hist)),
     ])
 }
 
@@ -1255,6 +1335,16 @@ fn decode_snapshot(j: &Json) -> Result<Snapshot> {
         p95_us: get_u64(j, "p95_us")?,
         p99_us: get_u64(j, "p99_us")?,
         mean_us: get_f64(j, "mean_us")?,
+        // Absent/null from pre-obs peers: default to empty histograms
+        // so absorb falls back to the legacy max-of-percentiles merge.
+        lat_hist: match j.get("lat_hist") {
+            None | Some(Json::Null) => Histogram::default(),
+            Some(h) => decode_hist(h)?,
+        },
+        stage_hist: match j.get("stage_hist") {
+            None | Some(Json::Null) => StageHists::default(),
+            Some(h) => decode_stage_hists(h)?,
+        },
     })
 }
 
@@ -1313,12 +1403,7 @@ pub fn encode_summary(s: &ServeSummary) -> Json {
         (
             "net",
             match s.shards.as_ref().and_then(|rs| rs.net.as_ref()) {
-                Some(g) => obj(vec![
-                    ("active_connections", ju64(g.active_connections)),
-                    ("active_sessions", ju64(g.active_sessions)),
-                    ("bytes_in", ju64(g.bytes_in)),
-                    ("bytes_out", ju64(g.bytes_out)),
-                ]),
+                Some(g) => encode_net_gauges(g),
                 None => Json::Null,
             },
         ),
@@ -1340,12 +1425,7 @@ pub fn decode_summary(j: &Json) -> Result<ServeSummary> {
     // Optional network gauges (absent/null from pre-v3 or in-process
     // summaries — tolerated for compatibility in both directions).
     if let (Some(rs), Some(g @ Json::Obj(_))) = (shards.as_mut(), j.get("net")) {
-        rs.net = Some(NetGauges {
-            active_connections: get_u64(g, "active_connections")?,
-            active_sessions: get_u64(g, "active_sessions")?,
-            bytes_in: get_u64(g, "bytes_in")?,
-            bytes_out: get_u64(g, "bytes_out")?,
-        });
+        rs.net = Some(decode_net_gauges(g)?);
     }
     Ok(ServeSummary {
         requests: get_u64(j, "requests")?,
@@ -1363,6 +1443,39 @@ pub fn decode_summary(j: &Json) -> Result<ServeSummary> {
         total_sim_cycles: get_u64(j, "total_sim_cycles")?,
         metrics: decode_snapshot(j.get("metrics").ok_or_else(|| anyhow!("summary without metrics"))?)?,
     })
+}
+
+/// Encode a live [`RackSnapshot`] — the v3 `Stats` frame's body. Only
+/// the per-shard telemetry and optional net gauges travel: the decoder
+/// re-derives the aggregate from the shards, and because every shard
+/// snapshot carries its exact histograms the re-derived aggregate
+/// percentiles equal the sender's (see `RackSnapshot::absorb`).
+pub fn encode_stats(rs: &RackSnapshot) -> Json {
+    obj(vec![
+        ("schema", Json::Str("gta.stats/1".into())),
+        ("shards", Json::Arr(rs.shards.iter().map(encode_shard_telemetry).collect())),
+        (
+            "net",
+            match &rs.net {
+                Some(g) => encode_net_gauges(g),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+pub fn decode_stats(j: &Json) -> Result<RackSnapshot> {
+    let shards = match j.get("shards") {
+        Some(Json::Arr(items)) => {
+            items.iter().map(decode_shard_telemetry).collect::<Result<Vec<_>>>()?
+        }
+        _ => bail!("stats without a shards array"),
+    };
+    let mut rs = RackSnapshot::from_shards(shards);
+    if let Some(g @ Json::Obj(_)) = j.get("net") {
+        rs.net = Some(decode_net_gauges(g)?);
+    }
+    Ok(rs)
 }
 
 // ---------------------------------------------------------------------

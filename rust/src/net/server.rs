@@ -35,6 +35,7 @@ use crate::coordinator::{
     AdmissionPolicy, AdmitError, NetGauges, Rack, RackSession, Response, ServeOptions, SubmitError,
     WorkerPool,
 };
+use crate::obs;
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -84,10 +85,20 @@ fn response_frame(proto: u64, session: u32, resp: &Response) -> Frame {
 }
 
 fn send_response(w: &SharedWriter, proto: u64, resp: &Response) -> std::io::Result<()> {
+    let write_start = obs::now_us();
     let frame = response_frame(proto, 0, resp);
     let mut guard = lock_writer(w)?;
     write_frame_v(&mut *guard, &frame, proto)?;
-    guard.flush()
+    guard.flush()?;
+    obs::emit(&obs::SpanEvent {
+        trace_id: resp.id,
+        stage: obs::Stage::NetWrite,
+        shard: obs::NO_SHARD,
+        start_us: write_start,
+        dur_us: obs::now_us().saturating_sub(write_start),
+        extra: frame.bin.len() as u64,
+    });
+    Ok(())
 }
 
 /// A listening GTA server. Dropping it stops accepting new connections;
@@ -368,6 +379,7 @@ fn handle_connection(
                             "binary Submit on a v{proto} connection (negotiate v2 first)"
                         ));
                     }
+                    let decode_start = obs::now_us();
                     let decoded = if f.ty == FrameType::SubmitBin {
                         super::proto::decode_request_bin(f.id, &f.bin)
                     } else {
@@ -377,6 +389,14 @@ fn handle_connection(
                             req
                         })
                     };
+                    obs::emit(&obs::SpanEvent {
+                        trace_id: f.id,
+                        stage: obs::Stage::NetDecode,
+                        shard: obs::NO_SHARD,
+                        start_us: decode_start,
+                        dur_us: obs::now_us().saturating_sub(decode_start),
+                        extra: f.bin.len() as u64,
+                    });
                     match decoded {
                         Ok(req) => match session.try_submit(req) {
                             Ok(_ticket) => {}
@@ -413,6 +433,25 @@ fn handle_connection(
                     // client-side abort: log-free silent cleanup
                     let _ = error_message(&f.body);
                     break Exit::Disconnect;
+                }
+                FrameType::Stats => {
+                    if proto < 3 {
+                        break Exit::Fatal(format!(
+                            "Stats frame on a v{proto} connection (negotiate v3 first)"
+                        ));
+                    }
+                    let snap = rack.snapshot();
+                    if send_frame(
+                        &writer,
+                        proto,
+                        FrameType::Stats,
+                        f.id,
+                        super::proto::encode_stats(&snap),
+                    )
+                    .is_err()
+                    {
+                        break Exit::Disconnect;
+                    }
                 }
                 FrameType::OpenSession | FrameType::SessionClosed => {
                     break Exit::Fatal(
@@ -643,6 +682,23 @@ impl Conn {
     /// Write queued bytes until the socket would block or the queue
     /// empties. `Err` = the write side is gone.
     fn flush_writes(&mut self, stats: &NetStats) -> std::io::Result<()> {
+        let write_start = obs::now_us();
+        let before = self.bytes_out;
+        let res = self.flush_writes_inner(stats);
+        if self.bytes_out > before {
+            obs::emit(&obs::SpanEvent {
+                trace_id: self.id,
+                stage: obs::Stage::NetWrite,
+                shard: obs::NO_SHARD,
+                start_us: write_start,
+                dur_us: obs::now_us().saturating_sub(write_start),
+                extra: self.bytes_out - before,
+            });
+        }
+        res
+    }
+
+    fn flush_writes_inner(&mut self, stats: &NetStats) -> std::io::Result<()> {
         loop {
             let (len, n) = {
                 let Some(front) = self.wq.front() else { break };
@@ -860,7 +916,19 @@ impl EvLoop {
 
     fn service_read(&mut self, id: u64) {
         self.with_conn(id, |lp, conn| {
+            let read_start = obs::now_us();
+            let before = conn.bytes_in;
             let gone = conn.read_available(&lp.stats);
+            if conn.bytes_in > before {
+                obs::emit(&obs::SpanEvent {
+                    trace_id: conn.id,
+                    stage: obs::Stage::NetRead,
+                    shard: obs::NO_SHARD,
+                    start_us: read_start,
+                    dur_us: obs::now_us().saturating_sub(read_start),
+                    extra: conn.bytes_in - before,
+                });
+            }
             lp.parse_buffer(conn);
             if gone && !matches!(conn.phase, ConnPhase::Draining { .. } | ConnPhase::Closed) {
                 lp.begin_disconnect(conn);
@@ -941,6 +1009,7 @@ impl EvLoop {
                     return Ok(());
                 };
                 let session = Arc::clone(&slot.session);
+                let decode_start = obs::now_us();
                 let decoded = if f.ty == FrameType::SubmitBin {
                     super::proto::decode_request_bin(f.id, &f.bin)
                 } else {
@@ -949,6 +1018,14 @@ impl EvLoop {
                         req
                     })
                 };
+                obs::emit(&obs::SpanEvent {
+                    trace_id: f.id,
+                    stage: obs::Stage::NetDecode,
+                    shard: obs::NO_SHARD,
+                    start_us: decode_start,
+                    dur_us: obs::now_us().saturating_sub(decode_start),
+                    extra: f.bin.len() as u64,
+                });
                 let req = match decoded {
                     Ok(req) => req,
                     Err(e) => return Err(format!("undecodable request body: {e:#}")),
@@ -1021,6 +1098,21 @@ impl EvLoop {
                 }
                 conn.phase = ConnPhase::Draining { graceful: true };
                 self.settle_conn(conn);
+                Ok(())
+            }
+            FrameType::Stats => {
+                if conn.proto < 3 {
+                    return Err(format!(
+                        "Stats frame on a v{} connection (negotiate v3 first)",
+                        conn.proto
+                    ));
+                }
+                let mut snap = self.rack.snapshot();
+                snap.net = Some(self.stats.gauges());
+                conn.push_frame(
+                    &Frame::new(FrameType::Stats, f.id, super::proto::encode_stats(&snap))
+                        .with_session(f.session),
+                );
                 Ok(())
             }
             FrameType::Error => {

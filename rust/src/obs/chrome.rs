@@ -1,0 +1,135 @@
+//! Trace export: the span ring as Chrome `trace_event` JSON (openable
+//! in `chrome://tracing` / Perfetto) and as the `gta.obs.trace/1`
+//! machine schema (`gta trace`, see `docs/observability.md`).
+
+use super::{SpanEvent, NO_SHARD, NO_TRACE};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Chrome `trace_event` JSON (the "JSON Object Format": a top-level
+/// object with a `traceEvents` array of complete `"ph": "X"` events).
+/// Tracks: `pid` 1 is the request pipeline (one `tid` per trace id, so
+/// a request's admit → … → respond spans line up on one row); `pid` 2
+/// is the network layer (one `tid` per connection); `pid` 3 holds
+/// un-traced spans (scheduler sweeps from batch pre-passes).
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    let mut rows = Vec::with_capacity(events.len());
+    for ev in events {
+        let net = ev.stage.is_net();
+        let (pid, tid) = if ev.trace_id == NO_TRACE {
+            (3u64, 0u64)
+        } else if net {
+            (2, ev.trace_id)
+        } else {
+            (1, ev.trace_id)
+        };
+        let mut args = vec![("extra", Json::Num(ev.extra as f64))];
+        if ev.shard != NO_SHARD {
+            args.push(("shard", Json::Num(ev.shard as f64)));
+        }
+        rows.push(obj(vec![
+            ("name", Json::Str(ev.stage.name().to_string())),
+            ("cat", Json::Str(if net { "net" } else { "serve" }.to_string())),
+            ("ph", Json::Str("X".to_string())),
+            ("ts", Json::Num(ev.start_us as f64)),
+            ("dur", Json::Num(ev.dur_us.max(1) as f64)),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+            ("args", obj(args)),
+        ]));
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// The `gta.obs.trace/1` machine schema: every event with its raw
+/// fields, plus the exact count of ring-overwritten events.
+pub fn machine_trace_json(events: &[SpanEvent], dropped: u64) -> Json {
+    let rows = events
+        .iter()
+        .map(|ev| {
+            obj(vec![
+                ("trace", Json::Num(if ev.trace_id == NO_TRACE { -1.0 } else { ev.trace_id as f64 })),
+                ("stage", Json::Str(ev.stage.name().to_string())),
+                ("shard", Json::Num(if ev.shard == NO_SHARD { -1.0 } else { ev.shard as f64 })),
+                ("start_us", Json::Num(ev.start_us as f64)),
+                ("dur_us", Json::Num(ev.dur_us as f64)),
+                ("extra", Json::Num(ev.extra as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str("gta.obs.trace/1".to_string())),
+        ("dropped", Json::Num(dropped as f64)),
+        ("events", Json::Arr(rows)),
+    ])
+}
+
+/// Per-request span index: events grouped by trace id (un-traced
+/// events excluded), each group sorted by start time — the shape the
+/// property tests and `gta trace`'s per-request summary consume.
+pub fn by_trace(events: &[SpanEvent]) -> BTreeMap<u64, Vec<SpanEvent>> {
+    let mut map: BTreeMap<u64, Vec<SpanEvent>> = BTreeMap::new();
+    for ev in events {
+        if ev.trace_id != NO_TRACE {
+            map.entry(ev.trace_id).or_default().push(*ev);
+        }
+    }
+    for spans in map.values_mut() {
+        spans.sort_by_key(|e| (e.start_us, e.stage.as_u8()));
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Stage;
+
+    fn ev(trace: u64, stage: Stage, start: u64) -> SpanEvent {
+        SpanEvent { trace_id: trace, stage, shard: 0, start_us: start, dur_us: 5, extra: 0 }
+    }
+
+    #[test]
+    fn chrome_export_parses_back_and_keeps_every_event() {
+        let events = vec![
+            ev(1, Stage::Admit, 0),
+            ev(1, Stage::Execute, 10),
+            ev(2, Stage::NetRead, 3),
+            SpanEvent { trace_id: NO_TRACE, stage: Stage::Sweep, shard: NO_SHARD, start_us: 1, dur_us: 9, extra: 7 },
+        ];
+        let json = chrome_trace_json(&events);
+        let text = json.render();
+        let back = crate::util::json::parse(&text).expect("chrome export must be valid JSON");
+        let rows = back.get("traceEvents").and_then(|t| t.as_arr()).expect("traceEvents array");
+        assert_eq!(rows.len(), 4);
+        for row in rows {
+            assert_eq!(row.get("ph").and_then(|p| p.as_str()), Some("X"));
+            assert!(row.get("ts").is_some() && row.get("dur").is_some());
+            assert!(row.get("name").and_then(|n| n.as_str()).is_some());
+        }
+    }
+
+    #[test]
+    fn machine_export_carries_schema_and_drop_count() {
+        let json = machine_trace_json(&[ev(4, Stage::Respond, 2)], 17);
+        assert_eq!(json.get("schema").and_then(|s| s.as_str()), Some("gta.obs.trace/1"));
+        assert_eq!(json.get("dropped").and_then(|d| d.as_u64()), Some(17));
+        assert_eq!(json.get("events").and_then(|e| e.as_arr()).map(|a| a.len()), Some(1));
+    }
+
+    #[test]
+    fn by_trace_groups_and_sorts() {
+        let events = vec![ev(2, Stage::Execute, 9), ev(1, Stage::Admit, 0), ev(2, Stage::Admit, 1)];
+        let idx = by_trace(&events);
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx[&2][0].stage, Stage::Admit);
+        assert_eq!(idx[&2][1].stage, Stage::Execute);
+    }
+}

@@ -1,0 +1,316 @@
+//! Exact-merging log-bucketed latency histograms (HDR-style).
+//!
+//! The metrics reservoir gives exact per-shard percentiles but cannot
+//! be merged across shards without loss — `RackSnapshot::absorb` used
+//! to take the `.max()` of per-shard percentiles, which overstates
+//! every aggregate quantile. A [`Histogram`] trades per-value exactness
+//! for **exact mergeability**: 64 power-of-two buckets of `u64` counts,
+//! so merging two histograms is element-wise addition and the merged
+//! quantiles are correct *to bucket resolution* (a factor-of-two band)
+//! by construction, however many shards contributed.
+//!
+//! Bucketing: bucket 0 holds the value 0; bucket `b` (1..=63) holds
+//! values in `[2^(b-1), 2^b)`; the last bucket absorbs everything from
+//! `2^62` up. Recording is branch-light (`leading_zeros` + a clamp),
+//! allocation-free, and saturating — no input can panic or overflow.
+//!
+//! [`StageHists`] bundles one histogram per pipeline [`Stage`] — the
+//! per-stage latency breakdown that rides in metrics snapshots and the
+//! `Stats` wire frame (see `docs/observability.md`).
+
+use super::Stage;
+
+/// Number of log2 buckets. Covers the full `u64` range: with
+/// microsecond values, bucket 40 is already ~13 days.
+pub const BUCKETS: usize = 64;
+
+/// A fixed-size log2-bucketed histogram of `u64` samples (typically
+/// microseconds). `merge` is exact; quantiles are exact to bucket
+/// resolution and clamped into the observed `[min, max]` range.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    min_v: u64,
+    max_v: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { counts: [0; BUCKETS], count: 0, sum: 0, min_v: u64::MAX, max_v: 0 }
+    }
+}
+
+/// Bucket index for a value: 0 for 0, `b` for `[2^(b-1), 2^b)`,
+/// clamped into the last bucket.
+pub fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Largest value a bucket can hold (the resolution band's upper edge).
+fn upper_edge(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample. Allocation-free, saturating, never panics.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] = self.counts[bucket_of(v)].saturating_add(1);
+        self.count = self.count.saturating_add(1);
+        self.sum = self.sum.saturating_add(v);
+        self.min_v = self.min_v.min(v);
+        self.max_v = self.max_v.max(v);
+    }
+
+    /// Exact merge: element-wise count addition. `merge(a, b)` then
+    /// `value_at_quantile` equals recording all of `a`'s and `b`'s
+    /// samples into one histogram — no information is lost.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c = c.saturating_add(*o);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min_v = self.min_v.min(other.min_v);
+        self.max_v = self.max_v.max(other.max_v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_v
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max_v
+    }
+
+    /// Mean of the recorded samples (exact — from the running sum).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The value at quantile `q` in `[0, 1]`, exact to bucket
+    /// resolution: the true quantile lies in the same power-of-two
+    /// band as the returned value. Clamped into `[min, max]` so
+    /// single-bucket distributions report exactly.
+    pub fn value_at_quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum = cum.saturating_add(c);
+            if cum >= rank {
+                return upper_edge(b).min(self.max_v).max(self.min_v.min(self.max_v));
+            }
+        }
+        self.max_v
+    }
+
+    /// Sparse view: the non-empty `(bucket, count)` pairs — the wire
+    /// encoding (`docs/observability.md`, Stats frame grammar).
+    pub fn to_sparse(&self) -> Vec<(usize, u64)> {
+        self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(|(b, &c)| (b, c)).collect()
+    }
+
+    /// Rebuild from the sparse wire form. Out-of-range bucket indices
+    /// are clamped into the last bucket (never a panic on hostile
+    /// input); `count`/`sum`/`min`/`max` are trusted as decoded.
+    pub fn from_sparse(pairs: &[(usize, u64)], count: u64, sum: u64, min_v: u64, max_v: u64) -> Histogram {
+        let mut h = Histogram { counts: [0; BUCKETS], count, sum, min_v, max_v };
+        if count == 0 {
+            h.min_v = u64::MAX;
+            h.max_v = 0;
+        }
+        for &(b, c) in pairs {
+            let b = b.min(BUCKETS - 1);
+            h.counts[b] = h.counts[b].saturating_add(c);
+        }
+        h
+    }
+}
+
+/// One histogram per pipeline [`Stage`] — the per-stage latency
+/// breakdown carried in metrics snapshots and merged exactly across
+/// shards in `RackSnapshot::absorb`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageHists {
+    hists: [Histogram; Stage::COUNT],
+}
+
+impl Default for StageHists {
+    fn default() -> StageHists {
+        StageHists { hists: std::array::from_fn(|_| Histogram::default()) }
+    }
+}
+
+impl StageHists {
+    pub fn new() -> StageHists {
+        StageHists::default()
+    }
+
+    pub fn record(&mut self, stage: Stage, v: u64) {
+        self.hists[stage.as_u8() as usize].record(v);
+    }
+
+    pub fn get(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage.as_u8() as usize]
+    }
+
+    pub fn get_mut(&mut self, stage: Stage) -> &mut Histogram {
+        &mut self.hists[stage.as_u8() as usize]
+    }
+
+    /// Exact element-wise merge of every stage.
+    pub fn merge(&mut self, other: &StageHists) {
+        for (h, o) in self.hists.iter_mut().zip(other.hists.iter()) {
+            h.merge(o);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hists.iter().all(Histogram::is_empty)
+    }
+
+    /// The stages that saw at least one sample, in pipeline order.
+    pub fn non_empty(&self) -> impl Iterator<Item = (Stage, &Histogram)> {
+        Stage::ALL.iter().map(|&s| (s, self.get(s))).filter(|(_, h)| !h.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_merge_equals_recording_all() {
+        let mut whole = Histogram::new();
+        let mut left = Histogram::new();
+        let mut right = Histogram::new();
+        let mut rng = crate::util::rng::Rng::new(7);
+        for i in 0..10_000u64 {
+            let v = rng.range_u64(0, 1 << 20);
+            whole.record(v);
+            if i % 2 == 0 {
+                left.record(v);
+            } else {
+                right.record(v);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left, whole, "merge must be exactly record-all");
+    }
+
+    #[test]
+    fn quantiles_match_sorted_oracle_within_bucket_resolution() {
+        let mut h = Histogram::new();
+        let mut vals = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(2024);
+        for _ in 0..5_000u64 {
+            let v = rng.range_u64(1, 1 << 24);
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        for &q in &[0.0, 0.5, 0.95, 0.99, 1.0] {
+            let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let exact = vals[rank - 1];
+            let got = h.value_at_quantile(q);
+            assert_eq!(
+                bucket_of(got),
+                bucket_of(exact),
+                "q={q}: histogram {got} and oracle {exact} must share a bucket"
+            );
+            assert!(got >= exact, "q={q}: bucket upper edge {got} must bound the oracle {exact}");
+        }
+    }
+
+    #[test]
+    fn single_value_distributions_are_exact() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(37);
+        }
+        assert_eq!(h.value_at_quantile(0.5), 37);
+        assert_eq!(h.value_at_quantile(0.99), 37);
+        assert_eq!(h.min(), 37);
+        assert_eq!(h.max(), 37);
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..1_000u64 {
+            h.record(rng.range_u64(0, 1 << 30));
+        }
+        let back =
+            Histogram::from_sparse(&h.to_sparse(), h.count(), h.sum(), h.min(), h.max());
+        assert_eq!(back, h);
+        let empty = Histogram::from_sparse(&[], 0, 0, 0, 0);
+        assert_eq!(empty, Histogram::new());
+    }
+
+    #[test]
+    fn stage_hists_merge_per_stage() {
+        let mut a = StageHists::new();
+        let mut b = StageHists::new();
+        a.record(Stage::Admit, 10);
+        b.record(Stage::Admit, 20);
+        b.record(Stage::Execute, 500);
+        a.merge(&b);
+        assert_eq!(a.get(Stage::Admit).count(), 2);
+        assert_eq!(a.get(Stage::Execute).count(), 1);
+        assert_eq!(a.get(Stage::Route).count(), 0);
+        assert_eq!(a.non_empty().count(), 2);
+    }
+}

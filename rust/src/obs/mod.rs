@@ -1,0 +1,324 @@
+//! `obs` — the dependency-free observability layer: end-to-end request
+//! tracing (per-stage [`SpanEvent`]s in bounded per-shard rings) and
+//! exact-merging log-bucket latency [`Histogram`]s.
+//!
+//! **Span tracing** answers "where did request #4812 spend its 3ms?":
+//! every instrumentation point in the serving pipeline — admit/route in
+//! the session, the scheduler sweep, the coalescing dispatcher, the
+//! executor, the network server — pushes a fixed-size [`SpanEvent`]
+//! keyed by the request's ticket id into a [`ring::SpanRing`]. Tracing
+//! is compiled in but **gated by one atomic flag**: disabled, an
+//! instrumentation point costs one load and one branch ([`enabled`]);
+//! enabled, it costs one clock read and six atomic stores — never a
+//! lock, never an allocation. `gta trace` exports the rings as Chrome
+//! `trace_event` JSON and as `gta.obs.trace/1` machine JSON
+//! ([`chrome`]).
+//!
+//! **Histograms** ([`hist`]) are always on: they live inside the
+//! per-shard metrics (under the mutex those already take) and merge
+//! exactly in `RackSnapshot::absorb`, replacing the old lossy
+//! max-of-percentiles aggregation. The `Stats` wire frame returns them
+//! live from a running server (`gta stats --connect`).
+//!
+//! See `docs/observability.md` for the span model, ring semantics,
+//! bucketing, and the export workflow.
+
+pub mod chrome;
+pub mod hist;
+pub mod ring;
+
+pub use hist::{Histogram, StageHists};
+pub use ring::{SpanRing, RING_CAPACITY};
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// One pipeline stage a request (or connection) passes through. The
+/// `u8` values are stable: they ride in ring slots and wire frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// Admission end to end: routing + queue admission (incl. `Reject`
+    /// retries; `extra` = requeue attempts).
+    Admit = 0,
+    /// The routing decision alone (`extra` = chosen shard).
+    Route = 1,
+    /// Schedule lookup/search in the shard (`extra` = 1 on cache hit).
+    Schedule = 2,
+    /// The explorer's pruned sweep on a cache miss (`extra` =
+    /// candidates evaluated). Absent on cache hits.
+    Sweep = 3,
+    /// Coalescing wait: dispatcher enqueue → batch flush (`extra` =
+    /// batch size).
+    Coalesce = 4,
+    /// Backend batch execution (`extra` = batch size).
+    Execute = 5,
+    /// Response assembly after execution/simulation completes.
+    Respond = 6,
+    /// Network server socket read (`extra` = bytes; trace = conn id).
+    NetRead = 7,
+    /// Network server frame decode (`extra` = bytes consumed).
+    NetDecode = 8,
+    /// Network server socket write (`extra` = bytes).
+    NetWrite = 9,
+}
+
+impl Stage {
+    pub const COUNT: usize = 10;
+
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Admit,
+        Stage::Route,
+        Stage::Schedule,
+        Stage::Sweep,
+        Stage::Coalesce,
+        Stage::Execute,
+        Stage::Respond,
+        Stage::NetRead,
+        Stage::NetDecode,
+        Stage::NetWrite,
+    ];
+
+    /// The per-request pipeline in causal order — the order the span
+    /// property tests assert start times are monotone in. (`Sweep` is
+    /// nested inside `Schedule`; the net stages are per-connection.)
+    pub const PIPELINE: [Stage; 6] = [
+        Stage::Admit,
+        Stage::Route,
+        Stage::Schedule,
+        Stage::Coalesce,
+        Stage::Execute,
+        Stage::Respond,
+    ];
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Route => "route",
+            Stage::Schedule => "schedule",
+            Stage::Sweep => "sweep",
+            Stage::Coalesce => "coalesce",
+            Stage::Execute => "execute",
+            Stage::Respond => "respond",
+            Stage::NetRead => "net_read",
+            Stage::NetDecode => "net_decode",
+            Stage::NetWrite => "net_write",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Stage> {
+        Stage::ALL.iter().copied().find(|s| s.name() == name)
+    }
+
+    /// Whether this is a network-layer stage (traced per connection,
+    /// not per request).
+    pub fn is_net(self) -> bool {
+        matches!(self, Stage::NetRead | Stage::NetDecode | Stage::NetWrite)
+    }
+}
+
+/// Shard value for events not attributable to a shard.
+pub const NO_SHARD: u16 = u16::MAX;
+
+/// Trace id for events outside any request (batch-pre-pass sweeps).
+pub const NO_TRACE: u64 = u64::MAX;
+
+/// One completed span: fixed-size, `Copy`, exactly what a ring slot
+/// holds. Times are microseconds since the process-wide [`epoch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// The request's ticket id ([`NO_TRACE`] when un-attributed; the
+    /// connection id for net stages).
+    pub trace_id: u64,
+    pub stage: Stage,
+    /// Executing shard, [`NO_SHARD`] when not shard-bound.
+    pub shard: u16,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Stage-specific payload (batch size, cache-hit flag, bytes, …).
+    pub extra: u64,
+}
+
+/// Trace identity of one request as it moves through the pipeline:
+/// trace id = ticket id. `Copy`, 8 bytes — cheap to thread anywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub id: u64,
+}
+
+impl TraceCtx {
+    pub fn new(id: u64) -> TraceCtx {
+        TraceCtx { id }
+    }
+
+    /// Emit a span for this trace that started at `start_us` and ends
+    /// now. No-op (one load + branch) while tracing is disabled.
+    pub fn emit_since(self, stage: Stage, shard: u16, start_us: u64, extra: u64) {
+        if !enabled() {
+            return;
+        }
+        let end = now_us();
+        emit(&SpanEvent {
+            trace_id: self.id,
+            stage,
+            shard,
+            start_us,
+            dur_us: end.saturating_sub(start_us),
+            extra,
+        });
+    }
+}
+
+/// The master switch. All instrumentation points check this first, so
+/// the disabled cost is one `Relaxed` load and a branch.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+pub fn enabled() -> bool {
+    // lint: relaxed-ok independent on/off flag; nothing is ordered against it
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span collection on or off process-wide.
+pub fn set_enabled(on: bool) {
+    // lint: relaxed-ok independent on/off flag; nothing is ordered against it
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide time origin spans are measured against.
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide epoch — the span clock. Every
+/// instrumentation point shares it, so spans from different threads
+/// and shards are directly comparable.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Ring registry: one ring per shard slot plus slot 0 for un-sharded
+/// events. Shards beyond the table share the last ring (valid, just
+/// more contended) — the table is sized for any realistic rack.
+const SHARD_SLOTS: usize = 65;
+
+fn rings() -> &'static [SpanRing] {
+    static RINGS: OnceLock<Vec<SpanRing>> = OnceLock::new();
+    RINGS.get_or_init(|| (0..SHARD_SLOTS).map(|_| SpanRing::new(RING_CAPACITY)).collect())
+}
+
+fn ring_slot(shard: u16) -> usize {
+    if shard == NO_SHARD {
+        0
+    } else {
+        (shard as usize + 1).min(SHARD_SLOTS - 1)
+    }
+}
+
+/// Push one completed span into its shard's ring. No-op while tracing
+/// is disabled; never blocks or allocates when enabled.
+pub fn emit(ev: &SpanEvent) {
+    if !enabled() {
+        return;
+    }
+    rings()[ring_slot(ev.shard)].push(ev);
+}
+
+/// Collect every buffered span across all rings (oldest first within a
+/// ring, then sorted by start time) plus the exact total of events the
+/// rings overwrote before collection.
+pub fn drain() -> (Vec<SpanEvent>, u64) {
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for r in rings() {
+        events.extend(r.snapshot());
+        dropped += r.dropped();
+    }
+    events.sort_by_key(|e| (e.start_us, e.trace_id, e.stage.as_u8()));
+    (events, dropped)
+}
+
+/// Reset every ring (export/test bookkeeping).
+pub fn reset() {
+    for r in rings() {
+        r.clear();
+    }
+}
+
+thread_local! {
+    /// The request currently being handled on this thread — how code
+    /// without a request in its signature (the explorer's sweep)
+    /// attributes spans. [`NO_TRACE`] outside any request.
+    static CURRENT_TRACE: Cell<u64> = const { Cell::new(NO_TRACE) };
+}
+
+/// The trace id of the request this thread is currently handling.
+pub fn current_trace() -> u64 {
+    CURRENT_TRACE.with(Cell::get)
+}
+
+/// Scope guard: restores the previous thread-local trace id on drop.
+pub struct TraceGuard {
+    prev: u64,
+}
+
+/// Mark this thread as handling `trace_id` until the guard drops.
+pub fn with_trace(trace_id: u64) -> TraceGuard {
+    let prev = CURRENT_TRACE.with(|c| c.replace(trace_id));
+    TraceGuard { prev }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        CURRENT_TRACE.with(|c| c.set(prev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_codes_roundtrip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_u8(s.as_u8()), Some(s));
+            assert_eq!(Stage::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Stage::from_u8(200), None);
+        assert_eq!(Stage::ALL.len(), Stage::COUNT);
+    }
+
+    #[test]
+    fn trace_guard_nests_and_restores() {
+        assert_eq!(current_trace(), NO_TRACE);
+        {
+            let _a = with_trace(7);
+            assert_eq!(current_trace(), 7);
+            {
+                let _b = with_trace(9);
+                assert_eq!(current_trace(), 9);
+            }
+            assert_eq!(current_trace(), 7);
+        }
+        assert_eq!(current_trace(), NO_TRACE);
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

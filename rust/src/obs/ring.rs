@@ -1,0 +1,272 @@
+//! The lock-light bounded span ring: fixed capacity, overwrite-oldest,
+//! exact drop accounting, zero allocation on the hot path.
+//!
+//! Writers claim a monotonically increasing **ticket** with one
+//! `fetch_add` on the write cursor and publish the event into slot
+//! `ticket % capacity` under a per-slot sequence word (a seqlock): the
+//! sequence goes odd (`2*ticket + 1`) while the fields are being
+//! stored and even (`2*ticket + 2`) once they are complete. A writer
+//! therefore **never blocks, never allocates, and never waits on a
+//! reader** — two writers racing for the same slot simply means the
+//! older ticket's event is overwritten, which is the ring's contract.
+//!
+//! Readers ([`SpanRing::snapshot`]) validate each slot by reading the
+//! sequence before and after the fields: a torn or overwritten slot
+//! shows a mismatched sequence and is skipped, never mis-read. Dropped
+//! events are exactly `total - capacity` (clamped at zero): every push
+//! beyond capacity overwrites precisely one older event.
+//!
+//! Every atomic here is `Relaxed` except the publishing/validating
+//! sequence accesses: the per-slot seqlock is the only ordering that
+//! matters, and the cursor is a pure ticket counter.
+
+use super::{SpanEvent, Stage};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// `u64` words per slot: seq, trace, stage|shard, start, dur, extra.
+const WORDS: usize = 6;
+
+/// Default per-ring capacity (events). 4096 events × 48 bytes = 192 KiB
+/// per ring — a fixed budget chosen to hold several seconds of serving
+/// spans at typical rates; the ring overwrites beyond it by design, so
+/// a bigger burst costs dropped *old* events, never memory growth.
+pub const RING_CAPACITY: usize = 4096;
+
+/// A bounded multi-producer span ring. One instance per shard (plus
+/// one for un-sharded events) lives in the global registry
+/// (`obs::emit`); tests may construct private rings freely.
+pub struct SpanRing {
+    /// `capacity * WORDS` atomics, flat. Fixed at construction — the
+    /// hot path never allocates or reserves.
+    slots: Box<[AtomicU64]>,
+    capacity: usize,
+    /// Total events ever pushed (the next ticket).
+    cursor: AtomicU64,
+}
+
+impl SpanRing {
+    /// Allocate a ring of `capacity` slots (min 1). This is the ONLY
+    /// allocation the ring ever performs; pushes are allocation-free.
+    pub fn new(capacity: usize) -> SpanRing {
+        let capacity = capacity.max(1);
+        let slots: Vec<AtomicU64> =
+            (0..capacity * WORDS).map(|_| AtomicU64::new(0)).collect();
+        SpanRing { slots: slots.into_boxed_slice(), capacity, cursor: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total events ever pushed into this ring.
+    pub fn total(&self) -> u64 {
+        // lint: relaxed-ok pure monotone ticket counter; no data is ordered against it
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Events overwritten before any reader saw them: exactly
+    /// `total - capacity`, clamped at zero — each push past capacity
+    /// overwrites exactly one older slot.
+    pub fn dropped(&self) -> u64 {
+        self.total().saturating_sub(self.capacity as u64)
+    }
+
+    /// Publish one event. Never blocks, never allocates; overwrites the
+    /// oldest slot when full.
+    pub fn push(&self, ev: &SpanEvent) {
+        // lint: relaxed-ok ticket claim only orders the slot index; the slot's seqlock orders the payload
+        let t = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let base = (t as usize % self.capacity) * WORDS;
+        let seq = &self.slots[base];
+        // odd = write in progress; Release so a reader that saw the
+        // previous even value cannot see the new fields early
+        seq.store(2 * t + 1, Ordering::Release);
+        // lint: relaxed-ok payload stores are ordered by the slot seqlock, not individually
+        self.slots[base + 1].store(ev.trace_id, Ordering::Relaxed);
+        // lint: relaxed-ok payload stores are ordered by the slot seqlock, not individually
+        self.slots[base + 2].store(pack_stage_shard(ev.stage, ev.shard), Ordering::Relaxed);
+        // lint: relaxed-ok payload stores are ordered by the slot seqlock, not individually
+        self.slots[base + 3].store(ev.start_us, Ordering::Relaxed);
+        // lint: relaxed-ok payload stores are ordered by the slot seqlock, not individually
+        self.slots[base + 4].store(ev.dur_us, Ordering::Relaxed);
+        // lint: relaxed-ok payload stores are ordered by the slot seqlock, not individually
+        self.slots[base + 5].store(ev.extra, Ordering::Relaxed);
+        // even = complete, tagged with the ticket so readers can tell
+        // WHICH event occupies the slot (not just that one does)
+        fence(Ordering::Release);
+        seq.store(2 * t + 2, Ordering::Release);
+    }
+
+    /// Read one slot by ticket; `None` if it was torn or overwritten.
+    fn read_ticket(&self, t: u64) -> Option<SpanEvent> {
+        let base = (t as usize % self.capacity) * WORDS;
+        let seq = &self.slots[base];
+        let s1 = seq.load(Ordering::Acquire);
+        if s1 != 2 * t + 2 {
+            return None; // in-progress write, or a different ticket
+        }
+        // lint: relaxed-ok payload loads are fenced against the seq re-read below
+        let trace_id = self.slots[base + 1].load(Ordering::Relaxed);
+        // lint: relaxed-ok payload loads are fenced against the seq re-read below
+        let packed = self.slots[base + 2].load(Ordering::Relaxed);
+        // lint: relaxed-ok payload loads are fenced against the seq re-read below
+        let start_us = self.slots[base + 3].load(Ordering::Relaxed);
+        // lint: relaxed-ok payload loads are fenced against the seq re-read below
+        let dur_us = self.slots[base + 4].load(Ordering::Relaxed);
+        // lint: relaxed-ok payload loads are fenced against the seq re-read below
+        let extra = self.slots[base + 5].load(Ordering::Relaxed);
+        // the fence keeps the payload loads from drifting past the
+        // validating re-read; a concurrent overwrite flips seq first
+        fence(Ordering::Acquire);
+        if seq.load(Ordering::Acquire) != s1 {
+            return None;
+        }
+        let (stage, shard) = unpack_stage_shard(packed)?;
+        Some(SpanEvent { trace_id, stage, shard, start_us, dur_us, extra })
+    }
+
+    /// Collect every currently-valid event, oldest first. Runs
+    /// concurrently with writers: slots being overwritten mid-read are
+    /// skipped, never mis-read.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let end = self.total();
+        let start = end.saturating_sub(self.capacity as u64);
+        let mut out = Vec::with_capacity((end - start) as usize);
+        for t in start..end {
+            if let Some(ev) = self.read_ticket(t) {
+                out.push(ev);
+            }
+        }
+        out
+    }
+
+    /// Reset to empty (export/test bookkeeping — racing writers may
+    /// land events with stale tickets that then fail validation, which
+    /// is safe: they read as absent).
+    pub fn clear(&self) {
+        for w in self.slots.iter() {
+            // lint: relaxed-ok reset path; seq 0 never validates as any ticket's even value
+            w.store(0, Ordering::Relaxed);
+        }
+        // lint: relaxed-ok reset path; see above
+        self.cursor.store(0, Ordering::Relaxed);
+    }
+}
+
+fn pack_stage_shard(stage: Stage, shard: u16) -> u64 {
+    ((stage.as_u8() as u64) << 16) | shard as u64
+}
+
+fn unpack_stage_shard(packed: u64) -> Option<(Stage, u16)> {
+    let stage = Stage::from_u8((packed >> 16) as u8)?;
+    Some((stage, (packed & 0xFFFF) as u16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::NO_SHARD;
+
+    fn ev(trace: u64, start: u64) -> SpanEvent {
+        SpanEvent {
+            trace_id: trace,
+            stage: Stage::Execute,
+            shard: NO_SHARD,
+            start_us: start,
+            dur_us: 1,
+            extra: trace,
+        }
+    }
+
+    #[test]
+    fn holds_capacity_then_overwrites_oldest() {
+        let r = SpanRing::new(8);
+        for i in 0..8u64 {
+            r.push(&ev(i, i));
+        }
+        assert_eq!(r.total(), 8);
+        assert_eq!(r.dropped(), 0);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap[0].trace_id, 0);
+        assert_eq!(snap[7].trace_id, 7);
+
+        for i in 8..11u64 {
+            r.push(&ev(i, i));
+        }
+        assert_eq!(r.total(), 11);
+        assert_eq!(r.dropped(), 3, "drop count must be exactly total - capacity");
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap.first().map(|e| e.trace_id), Some(3), "oldest 3 overwritten");
+        assert_eq!(snap.last().map(|e| e.trace_id), Some(10));
+    }
+
+    #[test]
+    fn concurrent_pushes_keep_exact_drop_accounting() {
+        let r = std::sync::Arc::new(SpanRing::new(64));
+        let threads = 8u64;
+        let per = 1000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let r = std::sync::Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        r.push(&ev(t * per + i, i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.total(), threads * per);
+        assert_eq!(r.dropped(), threads * per - 64);
+        // quiescent now: every slot holds its final ticket, so the
+        // snapshot is complete and every event is one that was pushed
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 64);
+        for e in &snap {
+            assert!(e.trace_id < threads * per);
+            assert_eq!(e.dur_us, 1);
+        }
+    }
+
+    #[test]
+    fn snapshot_during_writes_never_tears() {
+        let r = std::sync::Arc::new(SpanRing::new(16));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let (r, stop) = (std::sync::Arc::clone(&r), std::sync::Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // trace_id and extra always match: a torn read would
+                    // break the pairing
+                    r.push(&ev(i, i));
+                    i += 1;
+                }
+            })
+        };
+        for _ in 0..200 {
+            for e in r.snapshot() {
+                assert_eq!(e.trace_id, e.extra, "torn slot surfaced in a snapshot");
+                assert_eq!(e.trace_id, e.start_us);
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn clear_resets_counts() {
+        let r = SpanRing::new(4);
+        for i in 0..10u64 {
+            r.push(&ev(i, i));
+        }
+        r.clear();
+        assert_eq!(r.total(), 0);
+        assert_eq!(r.dropped(), 0);
+        assert!(r.snapshot().is_empty());
+    }
+}

@@ -30,6 +30,7 @@ use super::cache::{EvalCache, ExploreCache, ScheduleCache};
 use super::pattern::{self, Coverage, TileDir, EARLY_FILL_RECOVERY};
 use super::{evaluate, select, Candidate, ScheduleConfig};
 use crate::arch::{Dataflow, GtaConfig};
+use crate::obs;
 use crate::ops::PGemm;
 use crate::sim::mpra;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -295,9 +296,22 @@ impl Explorer {
     /// Memoized pruned schedule. The flag is `true` iff this call ran the
     /// search (i.e. a cache miss), which keeps caller metrics exact even
     /// when concurrent requests race on the same operator.
+    ///
+    /// A cache miss emits a `Sweep` span on the ambient trace (the
+    /// request that paid for the search; racing requests that dedup onto
+    /// it get a `Schedule` span only), tagged with the survivor count.
     pub fn schedule(&self, g: &PGemm, gta: &GtaConfig) -> (Candidate, bool) {
         self.selected.get_or_compute((*g, *gta), || {
+            let sweep_start = obs::now_us();
             let (survivors, _) = explore_pruned_into(g, gta, Some(&self.evals));
+            obs::emit(&obs::SpanEvent {
+                trace_id: obs::current_trace(),
+                stage: obs::Stage::Sweep,
+                shard: obs::NO_SHARD,
+                start_us: sweep_start,
+                dur_us: obs::now_us().saturating_sub(sweep_start),
+                extra: survivors.len() as u64,
+            });
             select(&survivors)
         })
     }

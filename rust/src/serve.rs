@@ -25,6 +25,7 @@ use crate::coordinator::metrics::RackSnapshot;
 use crate::coordinator::rack::{policy_by_name, Rack, RoutePolicy};
 use crate::coordinator::{CoalesceConfig, Coordinator, ExecKind, Request, Response, ServeOptions};
 use crate::net::{ClientOptions, GtaClient};
+use crate::obs::StageHists;
 use crate::ops::{PGemm, TensorOp};
 use crate::precision::{limbs, Precision};
 use crate::runtime::{default_artifact_dir, Engine, ExecBackend, HostTensor, SoftBackend};
@@ -148,11 +149,38 @@ impl ServeSummary {
             self.total_sim_cycles,
             self.metrics.render()
         );
+        s.push_str(&render_stage_table(&self.metrics.stage_hist));
         if let Some(rack) = &self.shards {
             s.push_str(&rack.render());
         }
         s
     }
+}
+
+/// The per-stage latency breakdown table: one row per pipeline stage
+/// that saw samples, with percentiles taken from the exact-merging
+/// histograms (correct to bucket resolution however many shards
+/// contributed). Empty when stage recording never ran.
+pub fn render_stage_table(stage_hist: &StageHists) -> String {
+    if stage_hist.is_empty() {
+        return String::new();
+    }
+    let mut s = format!(
+        "  {:<10} {:>10} {:>9} {:>9} {:>9} {:>10}\n",
+        "stage", "samples", "p50(us)", "p95(us)", "p99(us)", "mean(us)"
+    );
+    for (stage, h) in stage_hist.non_empty() {
+        s.push_str(&format!(
+            "  {:<10} {:>10} {:>9} {:>9} {:>9} {:>10.1}\n",
+            stage.name(),
+            h.count(),
+            h.value_at_quantile(0.5),
+            h.value_at_quantile(0.95),
+            h.value_at_quantile(0.99),
+            h.mean()
+        ));
+    }
+    s
 }
 
 /// One functional request template: artifact + generated inputs + oracle.

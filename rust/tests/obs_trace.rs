@@ -1,0 +1,369 @@
+//! Observability acceptance gates (`docs/observability.md`):
+//!
+//! * per-request spans reconstruct the serving pipeline: every traced
+//!   request carries its stages in causal order, nested and
+//!   non-overlapping where the pipeline is sequential;
+//! * the span ring drops **exactly** `total - capacity` events under
+//!   overflow, never silently;
+//! * the log-bucketed histogram tracks a sorted-vector oracle to
+//!   bucket resolution, and merging is exact;
+//! * the v3 `Stats` frame serves a live `RackSnapshot` over the wire
+//!   (both servers), while v1/v2 peers keep working untouched.
+//!
+//! The span-trace test is the only test in the whole suite that flips
+//! the global obs gate (`obs::set_enabled`); every test here that
+//! drives a rack serializes on [`SERVE_LOCK`] so rack traffic from a
+//! neighbouring test cannot leak spans into the drained capture.
+//!
+//! All offline (soft rust-oracle backend), so these run in every build.
+
+use gta::coordinator::rack::policy_by_name;
+use gta::coordinator::{CoalesceConfig, Rack, ServeOptions};
+use gta::net::proto::{decode_stats, encode_stats};
+use gta::net::{EventServer, GtaClient, NetServer};
+use gta::obs::hist::bucket_of;
+use gta::obs::{self, chrome, Histogram, SpanEvent, Stage, SpanRing};
+use gta::serve::{mixed_stream, run_mixed_stream_soft_rack, soft_rack};
+use gta::GtaConfig;
+use std::sync::{Arc, Mutex};
+
+/// Serializes every rack-driving test in this binary: while the span
+/// test has tracing enabled, no other rack may emit into the global
+/// rings (trace ids would collide across racks).
+static SERVE_LOCK: Mutex<()> = Mutex::new(());
+
+fn hetero_rack(policy: &str) -> Arc<Rack> {
+    soft_rack(
+        vec![GtaConfig::lanes16(), GtaConfig::with_lanes(4)],
+        CoalesceConfig::default(),
+        policy_by_name(policy).unwrap(),
+    )
+    .unwrap()
+}
+
+fn end_of(e: &SpanEvent) -> u64 {
+    e.start_us + e.dur_us
+}
+
+/// The single span of `stage` in a trace (panics if absent or doubled).
+fn one(spans: &[SpanEvent], stage: Stage, id: u64) -> &SpanEvent {
+    let hits: Vec<&SpanEvent> = spans.iter().filter(|e| e.stage == stage).collect();
+    assert_eq!(hits.len(), 1, "trace {id}: exactly one {} span", stage.name());
+    hits[0]
+}
+
+// ---------------------------------------------------------------- spans
+
+#[test]
+fn spans_reconstruct_the_pipeline_in_causal_order() {
+    let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 48u64;
+    obs::reset();
+    obs::set_enabled(true);
+    let summary = run_mixed_stream_soft_rack(n, 4, 2, &[], "least").unwrap();
+    obs::set_enabled(false);
+    let (events, dropped) = obs::drain();
+    obs::reset();
+    assert_eq!(summary.requests, n);
+    assert_eq!(dropped, 0, "{n} requests cannot overflow the rings");
+
+    let traces = chrome::by_trace(&events);
+    let request_traces: Vec<_> = traces.iter().filter(|(id, _)| **id < n).collect();
+    assert_eq!(request_traces.len(), n as usize, "every request left a trace");
+
+    for (&id, spans) in request_traces {
+        let admit = one(spans, Stage::Admit, id);
+        let schedule = one(spans, Stage::Schedule, id);
+        let respond = one(spans, Stage::Respond, id);
+
+        // routing is nested inside admission (same clock origin; a
+        // Busy retry may route more than once, the admitted attempt
+        // must fit inside its Admit window)
+        let routes: Vec<_> = spans.iter().filter(|e| e.stage == Stage::Route).collect();
+        assert!(!routes.is_empty(), "trace {id}: no Route span");
+        assert!(
+            routes
+                .iter()
+                .any(|r| r.start_us >= admit.start_us && end_of(r) <= end_of(admit)),
+            "trace {id}: no Route span nested in its Admit window"
+        );
+
+        // the shard pipeline starts only after admission started
+        assert!(schedule.start_us >= admit.start_us, "trace {id}: Schedule before Admit");
+        assert!(respond.start_us >= end_of(schedule), "trace {id}: Respond overlaps Schedule");
+
+        // a cache-miss sweep is attributed to this trace and contained
+        // in its schedule phase
+        for sweep in spans.iter().filter(|e| e.stage == Stage::Sweep) {
+            assert!(sweep.start_us >= schedule.start_us, "trace {id}: Sweep before Schedule");
+            assert!(end_of(sweep) <= end_of(schedule), "trace {id}: Sweep outlives Schedule");
+        }
+
+        let coalesce: Vec<_> = spans.iter().filter(|e| e.stage == Stage::Coalesce).collect();
+        let execute: Vec<_> = spans.iter().filter(|e| e.stage == Stage::Execute).collect();
+        if id % 2 == 0 {
+            // mixed_stream: even ids are functional — they ride the
+            // dispatcher, so the sequential tail of the pipeline is
+            // Schedule -> Coalesce -> Execute -> Respond, non-overlapping
+            assert_eq!(coalesce.len(), 1, "trace {id}: functional requests coalesce once");
+            assert_eq!(execute.len(), 1, "trace {id}: functional requests execute once");
+            assert!(
+                coalesce[0].start_us >= end_of(schedule),
+                "trace {id}: Coalesce overlaps Schedule"
+            );
+            assert!(
+                execute[0].start_us >= end_of(coalesce[0]),
+                "trace {id}: Execute overlaps the coalescing window"
+            );
+            assert!(
+                respond.start_us >= end_of(execute[0]),
+                "trace {id}: Respond overlaps Execute"
+            );
+            assert!(execute[0].extra >= 1, "trace {id}: Execute carries its batch size");
+        } else {
+            // odd ids simulate only: no dispatch, no executor
+            assert!(coalesce.is_empty(), "trace {id}: simulate request coalesced");
+            assert!(execute.is_empty(), "trace {id}: simulate request executed");
+        }
+    }
+
+    // drained events come back in deterministic order
+    let mut sorted = events.clone();
+    sorted.sort_by_key(|e| (e.start_us, e.trace_id, e.stage.as_u8()));
+    assert_eq!(
+        events.iter().map(|e| (e.start_us, e.trace_id)).collect::<Vec<_>>(),
+        sorted.iter().map(|e| (e.start_us, e.trace_id)).collect::<Vec<_>>(),
+        "drain() returns spans sorted by start time"
+    );
+}
+
+#[test]
+fn disabled_tracing_emits_nothing() {
+    let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::reset();
+    assert!(!obs::enabled(), "tracing is off by default");
+    run_mixed_stream_soft_rack(8, 2, 1, &[], "rr").unwrap();
+    let (events, dropped) = obs::drain();
+    assert!(events.is_empty(), "disabled tracing captured {} spans", events.len());
+    assert_eq!(dropped, 0);
+}
+
+// ----------------------------------------------------------------- ring
+
+#[test]
+fn ring_overflow_drops_exactly_total_minus_capacity() {
+    let ring = SpanRing::new(32);
+    let ev = |i: u64| SpanEvent {
+        trace_id: i,
+        stage: Stage::Execute,
+        shard: obs::NO_SHARD,
+        start_us: i,
+        dur_us: 1,
+        extra: i,
+    };
+    for i in 0..32 {
+        ring.push(&ev(i));
+    }
+    assert_eq!(ring.dropped(), 0, "no drops until the ring is past capacity");
+    for i in 32..53 {
+        ring.push(&ev(i));
+    }
+    assert_eq!(ring.total(), 53);
+    assert_eq!(ring.dropped(), 21, "exactly total - capacity events dropped");
+    let snap = ring.snapshot();
+    assert_eq!(snap.len(), 32, "the newest capacity-many events survive");
+    assert_eq!(snap.first().unwrap().trace_id, 21, "oldest survivors are the dropped boundary");
+    assert_eq!(snap.last().unwrap().trace_id, 52);
+}
+
+// ------------------------------------------------------------ histogram
+
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+#[test]
+fn histogram_quantiles_track_a_sorted_vec_oracle() {
+    // deterministic mixed-magnitude samples: sub-µs spikes through
+    // multi-second stalls, the realistic latency spread
+    let mut state = 2024u64;
+    let mut values = Vec::with_capacity(4096);
+    for _ in 0..4096 {
+        let magnitude = lcg(&mut state) % 22; // up to ~4M µs
+        values.push(lcg(&mut state) % (1u64 << magnitude).max(1));
+    }
+
+    let mut h = Histogram::new();
+    for &v in &values {
+        h.record(v);
+    }
+    let mut sorted = values.clone();
+    sorted.sort_unstable();
+
+    assert_eq!(h.count(), values.len() as u64);
+    assert_eq!(h.sum(), values.iter().sum::<u64>());
+    assert_eq!(h.min(), sorted[0]);
+    assert_eq!(h.max(), *sorted.last().unwrap());
+
+    for &q in &[0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        let oracle = sorted[rank - 1];
+        let got = h.value_at_quantile(q);
+        assert!(got >= oracle, "q={q}: histogram {got} underestimates the oracle {oracle}");
+        assert_eq!(
+            bucket_of(got),
+            bucket_of(oracle),
+            "q={q}: histogram {got} left the oracle's power-of-two band ({oracle})"
+        );
+    }
+    assert_eq!(h.value_at_quantile(1.0), *sorted.last().unwrap(), "p100 is exact");
+}
+
+#[test]
+fn histogram_merge_is_exact() {
+    // recording everything into one histogram must equal merging
+    // arbitrary shardings of the same samples — the property that makes
+    // RackSnapshot::absorb exact however many shards contribute
+    let mut state = 7u64;
+    let values: Vec<u64> = (0..3000).map(|_| lcg(&mut state) % 1_000_000).collect();
+
+    let mut whole = Histogram::new();
+    for &v in &values {
+        whole.record(v);
+    }
+    let mut parts = [Histogram::new(), Histogram::new(), Histogram::new()];
+    for (i, &v) in values.iter().enumerate() {
+        parts[i % 3].record(v);
+    }
+    let mut merged = Histogram::new();
+    for p in &parts {
+        merged.merge(p);
+    }
+    assert_eq!(merged, whole, "element-wise merge lost information");
+}
+
+// ---------------------------------------------------------- stats frame
+
+#[test]
+fn stats_frame_serves_live_telemetry_on_the_threaded_server() {
+    let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 16u64;
+    let mut server =
+        NetServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(4)).unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+    assert!(client.server().proto >= 3, "default handshake negotiates v3");
+
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    // stats mid-stream: responses racing the Stats reply are stashed,
+    // not lost
+    let early = client.stats().unwrap();
+    assert_eq!(early.shards.len(), 2);
+    assert!(early.aggregate.requests <= n);
+
+    let responses = client.drain().unwrap();
+    assert_eq!(responses.len(), n as usize, "stats() mid-stream loses no responses");
+
+    let snap = client.stats().unwrap();
+    assert_eq!(snap.shards.len(), 2);
+    assert_eq!(snap.aggregate.requests, n, "live snapshot counts every served request");
+    assert_eq!(snap.shards.iter().map(|t| t.routed).sum::<u64>(), n);
+    assert_eq!(snap.aggregate.lat_hist.count(), n, "one latency sample per request");
+    assert!(!snap.aggregate.stage_hist.is_empty(), "per-stage histograms travel too");
+    assert!(
+        !snap.aggregate.stage_hist.get(Stage::Schedule).is_empty(),
+        "every request passed Schedule"
+    );
+    assert!(snap.net.is_none(), "the threaded server has no event-loop gauges");
+
+    let summary = client.close().unwrap();
+    assert_eq!(summary.requests, n, "stats polling never consumed the session");
+    server.shutdown();
+}
+
+#[test]
+fn stats_frame_serves_live_telemetry_on_the_event_loop_server() {
+    let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 16u64;
+    let mut server =
+        EventServer::spawn(hetero_rack("least"), "127.0.0.1:0", ServeOptions::with_workers(4))
+            .unwrap();
+    let mut client = GtaClient::connect(&server.addr().to_string()).unwrap();
+
+    let (reqs, _) = mixed_stream(n);
+    for req in &reqs {
+        client.submit(req).unwrap();
+    }
+    let responses = client.drain().unwrap();
+    assert_eq!(responses.len(), n as usize);
+
+    let snap = client.stats().unwrap();
+    assert_eq!(snap.shards.len(), 2);
+    assert_eq!(snap.aggregate.requests, n);
+    assert_eq!(snap.aggregate.lat_hist.count(), n);
+    let net = snap.net.expect("the event loop attaches live connection gauges");
+    assert!(net.bytes_in > 0, "the submits counted into bytes_in");
+    assert!(net.bytes_out > 0);
+
+    let summary = client.close().unwrap();
+    assert_eq!(summary.requests, n);
+    server.shutdown();
+}
+
+#[test]
+fn old_protocol_peers_serve_unaffected_and_stats_fails_closed() {
+    let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let n = 8u64;
+    let mut server =
+        EventServer::spawn(hetero_rack("rr"), "127.0.0.1:0", ServeOptions::with_workers(2))
+            .unwrap();
+    for proto_v in [1u64, 2u64] {
+        let mut client = GtaClient::connect_proto(&server.addr().to_string(), proto_v).unwrap();
+        assert_eq!(client.server().proto, proto_v);
+        let (reqs, _) = mixed_stream(n);
+        for req in &reqs {
+            client.submit(req).unwrap();
+        }
+        let responses = client.drain().unwrap();
+        assert_eq!(responses.len(), n as usize, "v{proto_v} peers serve exactly as before");
+
+        // the client refuses to put a v3-only frame on an old wire
+        let err = client.stats().unwrap_err().to_string();
+        assert!(err.contains("v3"), "v{proto_v} stats error names the needed version: {err}");
+
+        let summary = client.close().unwrap();
+        assert_eq!(summary.requests, n);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn stats_codec_round_trips_a_live_snapshot() {
+    let _serve = SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let rack = hetero_rack("rr");
+    let (reqs, _) = mixed_stream(24);
+    let responses = rack.serve(reqs, 4);
+    assert_eq!(responses.len(), 24);
+
+    let snap = rack.snapshot();
+    let decoded = decode_stats(&encode_stats(&snap)).unwrap();
+    assert_eq!(decoded.shards.len(), snap.shards.len());
+    for (a, b) in decoded.shards.iter().zip(&snap.shards) {
+        assert_eq!(a.shard, b.shard);
+        assert_eq!(a.routed, b.routed);
+    }
+    assert_eq!(decoded.aggregate.requests, snap.aggregate.requests);
+    assert_eq!(decoded.aggregate.functional_execs, snap.aggregate.functional_execs);
+    // the histograms survive the sparse wire form bit-exactly, so the
+    // decoder's re-derived aggregate percentiles equal the server's
+    assert_eq!(decoded.aggregate.lat_hist, snap.aggregate.lat_hist);
+    assert_eq!(decoded.aggregate.stage_hist, snap.aggregate.stage_hist);
+    assert_eq!(
+        decoded.aggregate.lat_hist.value_at_quantile(0.95),
+        snap.aggregate.lat_hist.value_at_quantile(0.95)
+    );
+    assert!(decoded.net.is_none(), "a bare rack has no net gauges");
+}

@@ -301,7 +301,7 @@ fn prop_simd_gain_formula_consistent() {
 use gta::net::proto::{self, DecodeError, Frame, FrameType};
 use gta::util::json::Json;
 
-const ALL_FRAME_TYPES: [FrameType; 9] = [
+const ALL_FRAME_TYPES: [FrameType; 10] = [
     FrameType::Hello,
     FrameType::Submit,
     FrameType::Response,
@@ -311,6 +311,7 @@ const ALL_FRAME_TYPES: [FrameType; 9] = [
     FrameType::Error,
     FrameType::OpenSession,
     FrameType::SessionClosed,
+    FrameType::Stats,
 ];
 
 fn random_string(rng: &mut Rng) -> String {
